@@ -1,0 +1,124 @@
+"""AOT lowering: JAX model → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts [--datasets tiny,cora,...]
+                          [--flavour pallas|ref]
+
+Emits per dataset:
+  * ``gcn_<name>.hlo.txt``  — the lowered 2-layer GCN-ABFT forward
+  * an entry in ``manifest.json`` with the exact shapes the Rust side
+    must feed (guards against shape drift between the two languages).
+
+The dataset *shapes* here must match ``rust/src/graph/datasets.rs``; the
+manifest is the cross-language contract and the Rust runtime refuses to
+run against a stale manifest.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, nodes, feat_dim, hidden, classes) — keep in sync with
+# rust/src/graph/datasets.rs. Only datasets whose dense adjacency fits
+# comfortably in CPU memory get an XLA artifact (DESIGN.md §4); PubMed
+# and Nell run on the Rust-native engine.
+DATASETS = {
+    "tiny": dict(n=64, f=32, hidden=8, classes=4),
+    "cora": dict(n=2708, f=1433, hidden=16, classes=7),
+    "citeseer": dict(n=3327, f=3703, hidden=16, classes=6),
+}
+
+# Pallas block shapes per dataset. On a real TPU, VMEM pressure caps tiles
+# near 128–512; under interpret=True (CPU PJRT) the grid is lowered to HLO
+# loops, so larger tiles amortize loop overhead — 1024² tiles run the Cora
+# artifact ~23× faster than 128² on this backend (EXPERIMENTS.md §Perf).
+TILES = {
+    "tiny": dict(bm=64, bk=64, bn=64),
+    "cora": dict(bm=1024, bk=1024, bn=64),
+    "citeseer": dict(bm=1024, bk=1024, bn=64),
+}
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_dataset(name: str, cfg: dict, flavour: str) -> str:
+    """Lower one dataset's forward to HLO text."""
+    n, f, h, c = cfg["n"], cfg["f"], cfg["hidden"], cfg["classes"]
+    specs = (
+        jax.ShapeDtypeStruct((n, f), jnp.float32),  # features
+        jax.ShapeDtypeStruct((n, n), jnp.float32),  # dense adjacency S
+        jax.ShapeDtypeStruct((f, h), jnp.float32),  # W1
+        jax.ShapeDtypeStruct((h, c), jnp.float32),  # W2
+    )
+    if flavour == "pallas":
+        tiles = TILES.get(name, {})
+
+        def fn(feats, s, w1, w2):
+            return model.gcn_forward(feats, s, w1, w2, **tiles)
+
+    else:
+        fn = model.gcn_forward_reference
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--datasets",
+        default=",".join(DATASETS),
+        help="comma-separated subset of: " + ",".join(DATASETS),
+    )
+    ap.add_argument(
+        "--flavour",
+        default="pallas",
+        choices=["pallas", "ref"],
+        help="pallas = L1 kernels (interpret-mode); ref = pure-jnp oracle",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "flavour": args.flavour, "models": {}}
+    for name in [d.strip() for d in args.datasets.split(",") if d.strip()]:
+        if name not in DATASETS:
+            raise SystemExit(f"unknown dataset {name!r}; have {list(DATASETS)}")
+        cfg = DATASETS[name]
+        print(f"lowering {name} {cfg} ({args.flavour}) ...", flush=True)
+        text = lower_dataset(name, cfg, args.flavour)
+        fname = f"gcn_{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["models"][name] = dict(file=fname, **cfg)
+        print(f"  wrote {len(text)} chars to {path}", flush=True)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    print(f"wrote manifest to {mpath}")
+
+
+if __name__ == "__main__":
+    main()

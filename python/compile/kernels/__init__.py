@@ -1,0 +1,4 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (checksum-augmented
+tiled matmuls) plus the pure-jnp correctness oracle (`ref`)."""
+
+from . import matmul_checksum, ref  # noqa: F401

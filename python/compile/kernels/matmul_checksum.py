@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: tiled matmul with a fused checksum column.
+
+This is the compute hot-spot of a GCN layer's combination phase under
+GCN-ABFT (paper Eq. 5): ``H · [W | w_r]`` — the check column ``w_r = W·e``
+rides the same MXU pass as the real product, so checksum prediction is
+(almost) free in the hot loop.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+platform is a systolic GCN accelerator streaming CSR operands. On a TPU
+we tile for VMEM and target the MXU instead: BlockSpec carves
+``(bm × bk) @ (bk × bn)`` tiles; the checksum column is appended to the
+weight tile so it occupies one extra lane group rather than a separate
+pass. Kernels run with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls), so their value here is (a) expressing the
+schedule that a real TPU would compile, and (b) lowering into the same
+HLO artifact the Rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """Grid cell (i, j, k): accumulate ``A[i,k] @ B[k,j]`` into ``O[i,j]``.
+
+    The k axis is the innermost grid dimension; the output tile is zeroed
+    at k == 0 and accumulated in place afterwards (the standard Pallas
+    matmul schedule — output tile stays resident in VMEM across the k
+    sweep, one HBM write per tile).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del n_k  # documented for symmetry; accumulation handles every k
+
+
+def matmul_tiled(a, b, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """Tiled Pallas matmul ``a @ b`` (shapes padded to tile multiples)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} @ {b.shape}"
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    a_p = jnp.pad(a, ((0, pm), (0, pk)))
+    b_p = jnp.pad(b, ((0, pk), (0, pn)))
+    gm, gk, gn = a_p.shape[0] // bm, a_p.shape[1] // bk, b_p.shape[1] // bn
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def matmul_with_check_col(h, w, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """Eq. (5) as one kernel launch: ``H·[W | w_r]`` → ``(X, x_r)``.
+
+    The augmented weight tile costs one extra output column (< 1/bn
+    overhead); no check state is attached to ``H``.
+    """
+    w_r = jnp.sum(w, axis=1, keepdims=True)
+    aug = jnp.concatenate([w, w_r], axis=1)
+    out = matmul_tiled(h, aug, bm=bm, bk=bk, bn=bn)
+    return out[:, :-1], out[:, -1]
+
+
+def aggregate_with_check_row(s, x, x_r, *, bm: int = 128, bk: int = 128,
+                             bn: int = 128):
+    """Eq. (6) as one kernel launch: ``[S; s_c]·[X | x_r]``.
+
+    Returns ``(H_out, s_xr, sc_x, predicted)`` — the true aggregation
+    output, the data-path check column ``S·x_r``, the localization row
+    ``s_c·X``, and the fused predicted checksum ``s_c·x_r`` (the corner
+    of the enhanced product).
+    """
+    n = s.shape[0]
+    s_c = jnp.sum(s, axis=0, keepdims=True)  # (1, N)
+    s_aug = jnp.concatenate([s, s_c], axis=0)  # (N+1, N)
+    x_aug = jnp.concatenate([x, x_r[:, None]], axis=1)  # (N, h+1)
+    out = matmul_tiled(s_aug, x_aug, bm=bm, bk=bk, bn=bn)  # (N+1, h+1)
+    h_out = out[:n, :-1]
+    s_xr = out[:n, -1]
+    sc_x = out[n, :-1]
+    predicted = out[n, -1]
+    return h_out, s_xr, sc_x, predicted
+
+
+def gcn_layer_fused(s, h, w, **tiles):
+    """One GCN-ABFT-checked layer (pre-activation) on the Pallas path.
+
+    Returns ``(H_out, predicted, actual)`` matching ``ref.gcn_layer_fused``.
+    """
+    x, x_r = matmul_with_check_col(h, w, **tiles)
+    h_out, _s_xr, _sc_x, predicted = aggregate_with_check_row(s, x, x_r, **tiles)
+    actual = jnp.sum(h_out)
+    return h_out, predicted, actual

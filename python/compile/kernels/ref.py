@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests``) sweeps shapes/dtypes with hypothesis and asserts
+allclose between kernel and oracle. This file is the single source of
+truth for the mathematical contract of the compile path.
+
+Notation follows the paper: a GCN layer computes ``H_out = S · H · W``;
+``w_r = W·e`` is the per-row checksum column of the weights, ``s_c = eᵀS``
+the per-column checksum row of the adjacency, and the fused GCN-ABFT
+checksum of a layer is ``s_c · H · w_r`` (Eq. 4).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain matrix product (f32 accumulation like the kernels)."""
+    return jnp.matmul(a, b)
+
+
+def matmul_with_check_col(h, w):
+    """Combination phase of GCN-ABFT, Eq. (5): ``H·[W | w_r]``.
+
+    Returns ``(X, x_r)`` where ``X = H·W`` and ``x_r = H·w_r = X·e``.
+    ``H`` carries no check state — that is the point of the fused scheme.
+    """
+    w_r = jnp.sum(w, axis=1, keepdims=True)  # (F, 1)
+    aug = jnp.concatenate([w, w_r], axis=1)  # (F, h+1)
+    out = jnp.matmul(h, aug)
+    return out[:, :-1], out[:, -1]
+
+
+def spmm_with_check_row(s, x, x_r):
+    """Aggregation phase of GCN-ABFT, Eq. (6): ``[S; s_c]·[X | x_r]``.
+
+    Returns ``(H_out, predicted)`` where ``H_out = S·X`` and
+    ``predicted = s_c·x_r`` is the fused checksum of Eq. (4).
+    ``s`` is a dense (VMEM-tiled) adjacency — see DESIGN.md
+    §Hardware-Adaptation for the CSR→dense-tile mapping.
+    """
+    s_c = jnp.sum(s, axis=0)  # (N,)
+    h_out = jnp.matmul(s, x)
+    predicted = jnp.dot(s_c, x_r)
+    return h_out, predicted
+
+
+def gcn_layer_fused(s, h, w):
+    """One full GCN-ABFT layer (pre-activation).
+
+    Returns ``(H_out, predicted, actual)``: the layer output, the fused
+    predicted checksum ``s_c·H·w_r``, and the actual checksum ``eᵀH_out·e``
+    accumulated from the computed output.
+    """
+    x, x_r = matmul_with_check_col(h, w)
+    h_out, predicted = spmm_with_check_row(s, x, x_r)
+    actual = jnp.sum(h_out)
+    return h_out, predicted, actual
+
+
+def gcn_two_layer_fused(s, h, w1, w2):
+    """The paper's 2-layer GCN with a fused check per layer.
+
+    Returns ``(logits, pred, actual)`` where ``pred``/``actual`` are
+    length-2 vectors of per-layer fused checksums (layer-2 actual is
+    redundant with ``sum(logits)`` but returned for symmetry with the
+    coordinator's online verification).
+    """
+    z1, p1, a1 = gcn_layer_fused(s, h, w1)
+    h1 = jnp.maximum(z1, 0.0)
+    z2, p2, a2 = gcn_layer_fused(s, h1, w2)
+    pred = jnp.stack([p1, p2])
+    actual = jnp.stack([a1, a2])
+    return z2, pred, actual
+
+
+def fused_checksum_identity(s, h, w):
+    """Direct evaluation of Eq. (4): ``eᵀ(S·H·W)e == s_c·H·w_r``.
+
+    Returns both sides; tests assert they agree to f32 rounding.
+    """
+    lhs = jnp.sum(jnp.matmul(s, jnp.matmul(h, w)))
+    s_c = jnp.sum(s, axis=0)
+    w_r = jnp.sum(w, axis=1)
+    rhs = jnp.dot(s_c, jnp.matmul(h, w_r))
+    return lhs, rhs

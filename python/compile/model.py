@@ -1,0 +1,43 @@
+"""L2: the JAX model of the paper's workload — a 2-layer GCN with the
+GCN-ABFT fused checksum computed in-graph.
+
+Built on the L1 Pallas kernels (``kernels.matmul_checksum``); lowered once
+by ``aot.py`` to HLO text and executed from Rust via PJRT. Python never
+runs at serving time.
+
+Signature (all f32):
+
+    gcn_forward(features [N,F], s [N,N], w1 [F,h], w2 [h,C])
+        -> (logits [N,C], pred [2], actual [2])
+
+* ``pred[ℓ]``  — fused predicted checksum ``s_c·H·w_r`` of layer ℓ (Eq. 4),
+* ``actual[ℓ]`` — checksum of the layer's computed pre-activation output.
+
+The Rust coordinator verifies ``|pred − actual| ≤ τ·scale`` per layer
+before releasing a response, and additionally re-sums the logits host-side
+against ``pred[1]`` to cover the output's journey out of the runtime.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matmul_checksum as mk
+
+
+def gcn_forward(features, s, w1, w2, *, bm: int = 128, bk: int = 128,
+                bn: int = 128):
+    """Two GCN-ABFT-checked layers with ReLU in between (paper Eq. 1)."""
+    tiles = dict(bm=bm, bk=bk, bn=bn)
+    z1, p1, a1 = mk.gcn_layer_fused(s, features, w1, **tiles)
+    h1 = jnp.maximum(z1, 0.0)
+    z2, p2, a2 = mk.gcn_layer_fused(s, h1, w2, **tiles)
+    pred = jnp.stack([p1, p2])
+    actual = jnp.stack([a1, a2])
+    return z2, pred, actual
+
+
+def gcn_forward_reference(features, s, w1, w2):
+    """Same contract on the pure-jnp oracle (used by tests and as a
+    fallback artifact flavour for A/B comparison)."""
+    from .kernels import ref
+
+    return ref.gcn_two_layer_fused(s, features, w1, w2)

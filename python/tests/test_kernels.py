@@ -1,0 +1,113 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and tile sizes; every property asserts allclose
+against ``kernels.ref``. This is the core correctness signal of the
+compile path (the Rust runtime executes exactly what these kernels lower
+to).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_checksum as mk
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+dims = st.integers(min_value=1, max_value=96)
+tiles = st.sampled_from([8, 16, 32, 128])
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@given(m=dims, k=dims, n=dims, bm=tiles, bk=tiles, bn=tiles, seed=st.integers(0, 2**31))
+def test_matmul_tiled_matches_jnp(m, k, n, bm, bk, bn, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = mk.matmul_tiled(a, b, bm=bm, bk=bk, bn=bn)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31))
+def test_check_col_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    h, w = rand(rng, m, k), rand(rng, k, n)
+    x_k, xr_k = mk.matmul_with_check_col(h, w, bm=32, bk=32, bn=32)
+    x_r, xr_r = ref.matmul_with_check_col(h, w)
+    np.testing.assert_allclose(x_k, x_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(xr_k, xr_r, rtol=1e-4, atol=1e-3)
+
+
+@given(n=dims, h=dims, seed=st.integers(0, 2**31))
+def test_aggregate_matches_ref(n, h, seed):
+    rng = np.random.default_rng(seed)
+    s, x = rand(rng, n, n), rand(rng, n, h)
+    x_r = jnp.sum(x, axis=1)
+    ho_k, s_xr, sc_x, pred_k = mk.aggregate_with_check_row(s, x, x_r, bm=32, bk=32, bn=32)
+    ho_r, pred_r = ref.spmm_with_check_row(s, x, x_r)
+    np.testing.assert_allclose(ho_k, ho_r, rtol=1e-4, atol=1e-3)
+    scale = max(1.0, abs(float(pred_r)))
+    assert abs(float(pred_k) - float(pred_r)) / scale < 1e-4
+    # localization row really is s_c·X
+    np.testing.assert_allclose(
+        sc_x, jnp.sum(s, axis=0) @ x, rtol=1e-4, atol=1e-3
+    )
+    # data-path check column really is S·x_r
+    np.testing.assert_allclose(s_xr, s @ x_r, rtol=1e-4, atol=1e-3)
+
+
+@given(n=st.integers(4, 64), f=st.integers(2, 64), h=st.integers(1, 16),
+       seed=st.integers(0, 2**31))
+def test_fused_checksum_identity_eq4(n, f, h, seed):
+    """Eq. (4): eᵀ(SHW)e == s_c·H·w_r up to f32 rounding."""
+    rng = np.random.default_rng(seed)
+    s, hm, w = rand(rng, n, n), rand(rng, n, f), rand(rng, f, h)
+    lhs, rhs = ref.fused_checksum_identity(s, hm, w)
+    scale = max(1.0, abs(float(lhs)))
+    assert abs(float(lhs) - float(rhs)) / scale < 1e-3
+
+
+@given(n=st.integers(4, 48), f=st.integers(2, 48), h=st.integers(1, 12),
+       seed=st.integers(0, 2**31))
+def test_layer_fused_pred_matches_actual_fault_free(n, f, h, seed):
+    rng = np.random.default_rng(seed)
+    s, hm, w = rand(rng, n, n), rand(rng, n, f), rand(rng, f, h)
+    out, pred, actual = mk.gcn_layer_fused(s, hm, w, bm=16, bk=16, bn=16)
+    assert out.shape == (n, h)
+    scale = max(1.0, abs(float(actual)))
+    assert abs(float(pred) - float(actual)) / scale < 1e-3
+
+
+def test_layer_fused_detects_corruption():
+    """Corrupting the output after the fact breaks pred≈actual."""
+    rng = np.random.default_rng(0)
+    s, hm, w = rand(rng, 32, 32), rand(rng, 32, 16), rand(rng, 16, 8)
+    out, pred, _ = mk.gcn_layer_fused(s, hm, w, bm=16, bk=16, bn=16)
+    corrupted = out.at[3, 4].add(100.0)
+    actual_corrupted = float(jnp.sum(corrupted))
+    assert abs(float(pred) - actual_corrupted) > 50.0
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (1, 128, 1), (128, 1, 128),
+                                   (129, 127, 130)])
+def test_matmul_awkward_shapes(m, k, n):
+    rng = np.random.default_rng(42)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = mk.matmul_tiled(a, b)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_zero_matrices():
+    a = jnp.zeros((16, 16), jnp.float32)
+    b = jnp.zeros((16, 16), jnp.float32)
+    out = mk.matmul_tiled(a, b, bm=8, bk=8, bn=8)
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+    x, x_r = mk.matmul_with_check_col(a, b, bm=8, bk=8, bn=8)
+    assert float(jnp.max(jnp.abs(x))) == 0.0
+    assert float(jnp.max(jnp.abs(x_r))) == 0.0

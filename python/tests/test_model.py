@@ -1,0 +1,90 @@
+"""L2 model tests: the 2-layer GCN-ABFT forward (Pallas path vs oracle),
+shape contracts, and the verification semantics the Rust coordinator
+relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def workload(rng, n, f, h, c):
+    feats = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32) * 0.1)
+    w1 = jnp.asarray(rng.normal(size=(f, h)).astype(np.float32) * 0.3)
+    w2 = jnp.asarray(rng.normal(size=(h, c)).astype(np.float32) * 0.3)
+    return feats, s, w1, w2
+
+
+@given(n=st.integers(4, 48), f=st.integers(2, 48), h=st.integers(1, 12),
+       c=st.integers(1, 8), seed=st.integers(0, 2**31))
+def test_pallas_model_matches_reference(n, f, h, c, seed):
+    rng = np.random.default_rng(seed)
+    feats, s, w1, w2 = workload(rng, n, f, h, c)
+    lk, pk, ak = model.gcn_forward(feats, s, w1, w2, bm=16, bk=16, bn=16)
+    lr, pr, ar = model.gcn_forward_reference(feats, s, w1, w2)
+    np.testing.assert_allclose(lk, lr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(pk, pr, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(ak, ar, rtol=1e-3, atol=1e-2)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_output_contract_shapes(seed):
+    rng = np.random.default_rng(seed)
+    feats, s, w1, w2 = workload(rng, 24, 12, 6, 3)
+    logits, pred, actual = model.gcn_forward(feats, s, w1, w2, bm=8, bk=8, bn=8)
+    assert logits.shape == (24, 3)
+    assert pred.shape == (2,)
+    assert actual.shape == (2,)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_fault_free_checks_agree_per_layer(seed):
+    rng = np.random.default_rng(seed)
+    feats, s, w1, w2 = workload(rng, 32, 16, 8, 4)
+    _, pred, actual = model.gcn_forward(feats, s, w1, w2, bm=16, bk=16, bn=16)
+    for layer in range(2):
+        scale = max(1.0, abs(float(actual[layer])))
+        resid = abs(float(pred[layer]) - float(actual[layer])) / scale
+        assert resid < 1e-3, f"layer {layer} residual {resid}"
+
+
+def test_layer2_actual_equals_logit_sum():
+    """The coordinator re-sums logits host-side and compares to pred[1];
+    the artifact's actual[1] must equal sum(logits)."""
+    rng = np.random.default_rng(7)
+    feats, s, w1, w2 = workload(rng, 40, 20, 8, 5)
+    logits, _, actual = model.gcn_forward(feats, s, w1, w2, bm=16, bk=16, bn=16)
+    assert abs(float(jnp.sum(logits)) - float(actual[1])) < 1e-2
+
+
+def test_relu_applied_between_layers():
+    """With weights forcing strongly negative pre-activations, layer-2
+    output must reflect ReLU clipping (differ from a no-ReLU model)."""
+    rng = np.random.default_rng(3)
+    feats, s, w1, w2 = workload(rng, 16, 8, 4, 2)
+    w1_neg = -jnp.abs(w1) * 10.0
+    logits, _, _ = model.gcn_forward(feats, jnp.abs(s), jnp.abs(w1_neg) * 0 - 1.0, w2,
+                                     bm=8, bk=8, bn=8)
+    # all-negative W1 + non-negative features/s ⇒ z1 ≤ 0 ⇒ h1 = 0 ⇒ logits = 0
+    feats_pos = jnp.abs(feats)
+    logits0, _, _ = model.gcn_forward(feats_pos, jnp.abs(s), w1_neg, w2,
+                                      bm=8, bk=8, bn=8)
+    np.testing.assert_allclose(logits0, jnp.zeros_like(logits0), atol=1e-5)
+
+
+def test_reference_two_layer_matches_manual_composition():
+    rng = np.random.default_rng(11)
+    feats, s, w1, w2 = workload(rng, 20, 10, 5, 3)
+    logits, pred, actual = ref.gcn_two_layer_fused(s, feats, w1, w2)
+    z1 = s @ (feats @ w1)
+    h1 = jnp.maximum(z1, 0.0)
+    z2 = s @ (h1 @ w2)
+    np.testing.assert_allclose(logits, z2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(actual[0], jnp.sum(z1), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(actual[1], jnp.sum(z2), rtol=1e-4, atol=1e-2)

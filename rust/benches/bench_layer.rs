@@ -1,0 +1,64 @@
+//! Microbenchmarks of the layer engines: unchecked (golden) vs split-
+//! checked vs GCN-ABFT-checked forward passes.
+//!
+//! The wall-clock ratio fused/split mirrors the paper's Table-II op
+//! savings on the native engine; the absolute numbers feed the §Perf log
+//! in EXPERIMENTS.md.
+
+use gcn_abft::abft::{fused_forward_checked, split_forward_checked, EngineModel};
+use gcn_abft::graph::DatasetId;
+use gcn_abft::report::{build_workload, ExperimentOpts};
+use gcn_abft::tensor::NopHook;
+use gcn_abft::util::bench::{bench_header, Bencher};
+
+fn main() {
+    bench_header("bench_layer — checked forward passes (native engine)");
+    let mut b = Bencher::default();
+    b.samples = 10;
+
+    for id in [DatasetId::Tiny, DatasetId::Cora] {
+        let opts = ExperimentOpts {
+            datasets: vec![id],
+            seed: 7,
+            scale: 1.0,
+            train_epochs: 0,
+        };
+        let (graph, model) = build_workload(id, &opts);
+        let engine = EngineModel::from_model(&model);
+        let h_c = graph.features.col_sums_f64();
+
+        let golden = b.bench(&format!("{}/golden_forward", graph.name), || {
+            engine.golden_forward(&graph.features)
+        });
+        let split = b.bench(&format!("{}/split_checked", graph.name), || {
+            let mut nop = NopHook;
+            split_forward_checked(&engine, &graph.features, &h_c, &mut nop)
+        });
+        let fused = b.bench(&format!("{}/fused_checked", graph.name), || {
+            let mut nop = NopHook;
+            fused_forward_checked(&engine, &graph.features, &mut nop)
+        });
+
+        // Use min (not median) for the overhead ratio: on a busy
+        // single-core host the minimum is the least noise-contaminated
+        // estimate of the true cost.
+        let split_overhead = split.min() / golden.min() - 1.0;
+        let fused_overhead = fused.min() / golden.min() - 1.0;
+        if split_overhead > 0.01 && fused_overhead > 0.0 {
+            println!(
+                "{}: checking overhead — split {:+.2}%, gcn-abft {:+.2}%, fused saves {:.1}% of check time\n",
+                graph.name,
+                split_overhead * 100.0,
+                fused_overhead * 100.0,
+                (1.0 - fused_overhead / split_overhead) * 100.0
+            );
+        } else {
+            println!(
+                "{}: overhead below timing noise on this host (split {:+.2}%, gcn-abft {:+.2}%)\n",
+                graph.name,
+                split_overhead * 100.0,
+                fused_overhead * 100.0
+            );
+        }
+    }
+}

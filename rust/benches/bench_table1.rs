@@ -1,0 +1,40 @@
+//! Table-I regeneration bench: runs a reduced fault-injection sweep on
+//! Cora and prints the table (the full recorded run lives in
+//! EXPERIMENTS.md; `gcn-abft table1` reproduces it at any scale). Also
+//! reports campaign throughput, the number that gates how large a sweep
+//! this host can afford.
+
+use gcn_abft::abft::Scheme;
+use gcn_abft::report::{render_table1, run_table1, ExperimentOpts};
+use gcn_abft::util::bench::bench_header;
+use std::time::Instant;
+
+fn main() {
+    bench_header("bench_table1 — fault-injection campaigns (paper Table I)");
+    let campaigns = 100;
+    let opts = ExperimentOpts {
+        datasets: vec![gcn_abft::graph::DatasetId::Cora],
+        seed: 7,
+        scale: 1.0,
+        train_epochs: 10,
+    };
+    let t0 = Instant::now();
+    let entries = run_table1(&opts, campaigns, 1, 1);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", render_table1(&entries));
+    let total_campaigns = campaigns * 2; // both schemes
+    println!(
+        "campaign throughput: {:.1} campaigns/s ({} campaigns in {:.1}s, single thread)",
+        total_campaigns as f64 / dt,
+        total_campaigns,
+        dt
+    );
+    // Shape assertions: detection high, fused no worse on false positives.
+    for e in &entries {
+        let s = &e.split.per_threshold.last().unwrap().1;
+        let f = &e.fused.per_threshold.last().unwrap().1;
+        assert!(s.detected_rate() > 0.5, "split detection collapsed");
+        assert!(f.detected_rate() > 0.5, "fused detection collapsed");
+        let _ = Scheme::Fused;
+    }
+}

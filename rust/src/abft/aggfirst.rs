@@ -1,0 +1,186 @@
+//! Aggregation-first GCN-ABFT: §III notes the fused checksum identity
+//! `eᵀ(SHW)e = s_c·H·w_r` holds "independent of the order of
+//! computations", so checking works unchanged when the accelerator
+//! aggregates first (`H̃ = S·H`, then `H_out = H̃·W`).
+//!
+//! Dataflow:
+//! * phase 1: `[S; s_c]·H` → true `H̃` plus check row `h̃_c = s_c·H`
+//!   (checker path — the s_c row rides the aggregation pass);
+//! * phase 2: `H̃·[W | w_r]` → true `H_out`, check column `H̃·w_r`
+//!   (data path), and the fused prediction `h̃_c·w_r = s_c·H·w_r`;
+//! * one compare at end of layer.
+//!
+//! Op profile differs from combination-first (that is *why* accelerators
+//! pick an order per workload), but the check stays one scalar per layer.
+
+use super::engine::{EngineInput, EngineModel};
+use super::outcome::{CheckPoint, CheckRecord};
+use crate::sparse::Csr;
+use crate::tensor::instrumented::{
+    block_checksum_hooked, dot_hooked, matmul_hooked, matvec_hooked, ExecHook,
+};
+use crate::tensor::Dense64;
+
+/// One aggregation-first GCN-ABFT-checked layer.
+pub fn fused_layer_checked_aggfirst<HK: ExecHook>(
+    s: &Csr,
+    s_c: &[f64],
+    h: &EngineInput,
+    w: &Dense64,
+    w_r: &[f64],
+    layer: usize,
+    hook: &mut HK,
+) -> (Dense64, CheckRecord) {
+    assert_eq!(h.cols(), w.rows(), "layer input dim mismatch");
+    assert_eq!(s_c.len(), s.rows(), "s_c length mismatch");
+
+    // --- phase 1: [S; s_c]·H — aggregate, with the s_c check row --------
+    let h_dense = match h {
+        EngineInput::Sparse(m) => Dense64::from_dense(&m.to_dense()),
+        EngineInput::Dense(m) => m.clone(),
+    };
+    let agg = crate::sparse::instrumented::spmm_hooked(s, &h_dense, hook);
+    // h̃_c = s_c·H (checker path): the aggregated input's column checksum,
+    // obtained without touching H's own state.
+    let agg_c = crate::tensor::instrumented::vecmat_hooked(s_c, &h_dense, hook);
+
+    // --- phase 2: H̃·[W | w_r] ------------------------------------------
+    let out = matmul_hooked(&agg, w, hook);
+    let _out_r = matvec_hooked(&agg, w_r, hook); // data-path check column
+    let predicted = dot_hooked(&agg_c, w_r, hook); // fused checksum
+    let actual = block_checksum_hooked(&out, out.cols(), hook);
+
+    (
+        out,
+        CheckRecord {
+            layer,
+            point: CheckPoint::EndOfLayer,
+            predicted,
+            actual,
+        },
+    )
+}
+
+/// Full aggregation-first GCN-ABFT-checked forward pass.
+pub fn fused_forward_checked_aggfirst<HK: ExecHook>(
+    model: &EngineModel,
+    features: &Csr,
+    hook: &mut HK,
+) -> (Vec<Dense64>, Vec<CheckRecord>) {
+    let mut checks = Vec::with_capacity(model.num_layers());
+    let mut preacts = Vec::with_capacity(model.num_layers());
+    let mut input = EngineInput::Sparse(features.clone());
+    for (i, w) in model.weights.iter().enumerate() {
+        let (pre, rec) = fused_layer_checked_aggfirst(
+            &model.adjacency,
+            &model.s_c,
+            &input,
+            w,
+            &model.w_r[i],
+            i,
+            hook,
+        );
+        checks.push(rec);
+        let mut act = pre.clone();
+        if model.activations[i] == crate::gcn::Activation::Relu {
+            act.relu_inplace();
+        }
+        input = EngineInput::Dense(act);
+        preacts.push(pre);
+    }
+    (preacts, checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::fused::fused_forward_checked;
+    use crate::abft::CheckPolicy;
+    use crate::gcn::GcnModel;
+    use crate::graph::DatasetId;
+    use crate::tensor::NopHook;
+
+    fn setup() -> (EngineModel, Csr) {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        (EngineModel::from_model(&m), g.features.clone())
+    }
+
+    #[test]
+    fn aggfirst_fault_free_checks_pass() {
+        let (em, feats) = setup();
+        let mut nop = NopHook;
+        let (_, checks) = fused_forward_checked_aggfirst(&em, &feats, &mut nop);
+        assert_eq!(checks.len(), 2);
+        for c in &checks {
+            assert!(
+                c.residual() / c.actual.abs().max(1.0) < 1e-10,
+                "aggfirst residual too large: {c:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn both_dataflows_compute_the_same_layer() {
+        // §III: the fused checksum — and the true output — are dataflow
+        // independent.
+        let (em, feats) = setup();
+        let mut nop = NopHook;
+        let (agg_out, agg_checks) = fused_forward_checked_aggfirst(&em, &feats, &mut nop);
+        let (comb_out, comb_checks) = fused_forward_checked(&em, &feats, &mut nop);
+        for (a, c) in agg_out.iter().zip(&comb_out) {
+            assert!(
+                a.max_abs_diff(c) / 1.0 < 1e-6,
+                "dataflows disagree by {}",
+                a.max_abs_diff(c)
+            );
+        }
+        for (a, c) in agg_checks.iter().zip(&comb_checks) {
+            let scale = c.predicted.abs().max(1.0);
+            assert!(
+                (a.predicted - c.predicted).abs() / scale < 1e-9,
+                "fused predictions differ across dataflows: {} vs {}",
+                a.predicted,
+                c.predicted
+            );
+        }
+    }
+
+    #[test]
+    fn aggfirst_detects_corruption() {
+        struct Corrupt {
+            countdown: i64,
+        }
+        impl ExecHook for Corrupt {
+            fn mul(&mut self, v: f64) -> f64 {
+                self.countdown -= 1;
+                if self.countdown == 0 {
+                    v + 500.0
+                } else {
+                    v
+                }
+            }
+            fn add(&mut self, v: f64) -> f64 {
+                self.countdown -= 1;
+                if self.countdown == 0 {
+                    v + 500.0
+                } else {
+                    v
+                }
+            }
+            fn csum(&mut self, v: f64) -> f64 {
+                v
+            }
+        }
+        let (em, feats) = setup();
+        let policy = CheckPolicy::new(1e-4);
+        for &at in &[50i64, 9000] {
+            let mut hook = Corrupt { countdown: at };
+            let (_, checks) = fused_forward_checked_aggfirst(&em, &feats, &mut hook);
+            assert!(
+                checks.iter().any(|c| policy.fires(c.predicted, c.actual)),
+                "aggfirst missed corruption at op {at}: {checks:?}"
+            );
+        }
+    }
+}

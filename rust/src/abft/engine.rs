@@ -1,0 +1,205 @@
+//! Shared plumbing for the two checked-layer executors: the f64 engine
+//! view of a model and the sparse/dense layer-input dispatch.
+
+use crate::gcn::{Activation, GcnModel};
+use crate::sparse::instrumented::{csr_col_sums_hooked, csr_matvec_hooked, spmm_hooked};
+use crate::sparse::Csr;
+use crate::tensor::instrumented::{col_sums_hooked, matmul_hooked, matvec_hooked, ExecHook};
+use crate::tensor::{Dense, Dense64};
+
+/// A GCN layer input in the f64 engine: sparse for layer 1 (the dataset's
+/// feature matrix), dense for deeper layers (previous activations).
+#[derive(Debug, Clone)]
+pub enum EngineInput {
+    Sparse(Csr),
+    Dense(Dense64),
+}
+
+impl EngineInput {
+    pub fn rows(&self) -> usize {
+        match self {
+            EngineInput::Sparse(m) => m.rows(),
+            EngineInput::Dense(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            EngineInput::Sparse(m) => m.cols(),
+            EngineInput::Dense(m) => m.cols(),
+        }
+    }
+
+    /// Scheduled nonzeros (dense operands schedule every element).
+    pub fn nnz(&self) -> usize {
+        match self {
+            EngineInput::Sparse(m) => m.nnz(),
+            EngineInput::Dense(m) => m.rows() * m.cols(),
+        }
+    }
+
+    /// Instrumented `H · W` on the data path.
+    pub fn matmul_hooked<HK: ExecHook>(&self, w: &Dense64, hook: &mut HK) -> Dense64 {
+        match self {
+            EngineInput::Sparse(m) => spmm_hooked(m, w, hook),
+            EngineInput::Dense(m) => matmul_hooked(m, w, hook),
+        }
+    }
+
+    /// Instrumented `H · w_r` (check column) on the data path.
+    pub fn matvec_hooked<HK: ExecHook>(&self, v: &[f64], hook: &mut HK) -> Vec<f64> {
+        match self {
+            EngineInput::Sparse(m) => csr_matvec_hooked(m, v, hook),
+            EngineInput::Dense(m) => matvec_hooked(m, v, hook),
+        }
+    }
+
+    /// Instrumented `h_c = eᵀH` on the checker path.
+    pub fn col_sums_hooked<HK: ExecHook>(&self, hook: &mut HK) -> Vec<f64> {
+        match self {
+            EngineInput::Sparse(m) => csr_col_sums_hooked(m, hook),
+            EngineInput::Dense(m) => col_sums_hooked(m, hook),
+        }
+    }
+
+    /// Uninstrumented `h_c` (offline precomputation — layer-1 inputs are
+    /// static, so the paper computes their check state offline).
+    pub fn col_sums_offline(&self) -> Vec<f64> {
+        match self {
+            EngineInput::Sparse(m) => m.col_sums_f64(),
+            EngineInput::Dense(m) => {
+                let mut nop = crate::tensor::NopHook;
+                col_sums_hooked(m, &mut nop)
+            }
+        }
+    }
+}
+
+/// The f64-engine view of a GCN model: widened weights plus the offline
+/// ABFT vectors (`s_c`, per-layer `w_r`).
+#[derive(Debug, Clone)]
+pub struct EngineModel {
+    pub adjacency: Csr,
+    pub weights: Vec<Dense64>,
+    pub activations: Vec<Activation>,
+    /// `s_c = eᵀS` (offline).
+    pub s_c: Vec<f64>,
+    /// `w_r = W·e` per layer (offline).
+    pub w_r: Vec<Vec<f64>>,
+}
+
+impl EngineModel {
+    pub fn from_model(m: &GcnModel) -> Self {
+        let weights: Vec<Dense64> = m
+            .layers
+            .iter()
+            .map(|l| Dense64::from_dense(&l.weights))
+            .collect();
+        let activations = m.layers.iter().map(|l| l.activation).collect();
+        let s_c = m.adjacency.col_sums_f64();
+        let w_r = weights
+            .iter()
+            .map(|w| (0..w.rows()).map(|r| w.row(r).iter().sum::<f64>()).collect())
+            .collect();
+        Self {
+            adjacency: m.adjacency.clone(),
+            weights,
+            activations,
+            s_c,
+            w_r,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Uninstrumented golden forward (f64), returning every layer's
+    /// pre-activation output. Ground truth for fault classification.
+    pub fn golden_forward(&self, features: &Csr) -> Vec<Dense64> {
+        let mut nop = crate::tensor::NopHook;
+        let mut input = EngineInput::Sparse(features.clone());
+        let mut preacts = Vec::with_capacity(self.num_layers());
+        for (w, act) in self.weights.iter().zip(&self.activations) {
+            let x = input.matmul_hooked(w, &mut nop);
+            let out = spmm_hooked(&self.adjacency, &x, &mut nop);
+            preacts.push(out.clone());
+            let mut a = out;
+            if *act == Activation::Relu {
+                a.relu_inplace();
+            }
+            input = EngineInput::Dense(a);
+        }
+        preacts
+    }
+}
+
+/// Convenience: widen an f32 matrix (re-exported for tests).
+pub fn widen(d: &Dense) -> Dense64 {
+    Dense64::from_dense(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gcn::Dataflow;
+    use crate::graph::DatasetId;
+
+    #[test]
+    fn engine_model_mirrors_f32_model() {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        let em = EngineModel::from_model(&m);
+        assert_eq!(em.num_layers(), 2);
+        assert_eq!(em.s_c.len(), 64);
+        assert_eq!(em.w_r[0].len(), g.feat_dim());
+        assert_eq!(em.w_r[1].len(), 8);
+
+        // Golden f64 forward matches the f32 reference forward closely.
+        let gold = em.golden_forward(&g.features);
+        let f32fwd = m.forward(&g.features, Dataflow::CombinationFirst);
+        let diff = gold[1].to_dense().max_abs_diff(&f32fwd.logits);
+        let scale = f32fwd
+            .logits
+            .data()
+            .iter()
+            .fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(
+            diff / scale.max(1.0) < 1e-4,
+            "relative diff {} too large",
+            diff / scale
+        );
+    }
+
+    #[test]
+    fn engine_input_dispatch() {
+        let g = DatasetId::Tiny.build(1);
+        let sp = EngineInput::Sparse(g.features.clone());
+        let de = EngineInput::Dense(Dense64::from_dense(&g.features.to_dense()));
+        assert_eq!(sp.rows(), de.rows());
+        assert_eq!(sp.cols(), de.cols());
+        assert!(sp.nnz() < de.nnz());
+
+        let mut nop = crate::tensor::NopHook;
+        let w = Dense64::from_dense(&Dense::from_fn(g.feat_dim(), 4, |r, c| {
+            ((r + c) % 5) as f32 * 0.1
+        }));
+        let a = sp.matmul_hooked(&w, &mut nop);
+        let b = de.matmul_hooked(&w, &mut nop);
+        assert!(a.max_abs_diff(&b) < 1e-9);
+
+        let v: Vec<f64> = (0..g.feat_dim()).map(|i| (i % 3) as f64).collect();
+        let mva = sp.matvec_hooked(&v, &mut nop);
+        let mvb = de.matvec_hooked(&v, &mut nop);
+        for (x, y) in mva.iter().zip(&mvb) {
+            assert!((x - y).abs() < 1e-9);
+        }
+
+        let ca = sp.col_sums_hooked(&mut nop);
+        let cb = de.col_sums_hooked(&mut nop);
+        for (x, y) in ca.iter().zip(&cb) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        assert_eq!(sp.col_sums_offline(), ca);
+    }
+}

@@ -1,0 +1,228 @@
+//! **GCN-ABFT**: the paper's contribution — one fused checksum for the
+//! whole three-matrix product of a GCN layer (§III, Eqs. (4)–(6), Fig. 2).
+//!
+//! Identity: `eᵀ·H_out·e = eᵀ(S·H·W)e = (eᵀS)·H·(W·e) = s_c·H·w_r`.
+//!
+//! Dataflow (combination-first, same as the baseline):
+//! * phase 1: `H·[W | w_r]` → true `X = H·W` plus check column
+//!   `x_r = H·w_r` (data path). **No `h_c` state, no phase-1 actual
+//!   checksum** — that is the saving.
+//! * phase 2: `[S; s_c]·[X | x_r]` → true `H_out`, column `S·x_r`,
+//!   check row `s_c·[X | x_r]` whose corner `s_c·x_r = s_c·H·w_r` is the
+//!   fused predicted checksum.
+//! * single compare at end of layer against the accumulated checksum of
+//!   `H_out`.
+
+use super::engine::{EngineInput, EngineModel};
+use super::outcome::{CheckPoint, CheckRecord};
+use crate::sparse::instrumented::spmm_with_check_col_hooked;
+use crate::sparse::Csr;
+use crate::tensor::instrumented::{block_checksum_hooked, dot_hooked, vecmat_hooked, ExecHook};
+use crate::tensor::Dense64;
+
+/// Execute one GCN-ABFT-checked layer: returns the pre-activation output
+/// and the single end-of-layer check record.
+pub fn fused_layer_checked<HK: ExecHook>(
+    s: &Csr,
+    s_c: &[f64],
+    h: &EngineInput,
+    w: &Dense64,
+    w_r: &[f64],
+    layer: usize,
+    hook: &mut HK,
+) -> (Dense64, CheckRecord) {
+    assert_eq!(h.cols(), w.rows(), "layer input dim mismatch");
+    assert_eq!(w_r.len(), w.rows(), "w_r length mismatch");
+    assert_eq!(s_c.len(), s.rows(), "s_c length mismatch");
+
+    // --- phase 1: H·[W | w_r] — H carries no check state (Eq. 5) ---------
+    let x = h.matmul_hooked(w, hook);
+    let x_r = h.matvec_hooked(w_r, hook); // x_r = H·w_r = X·e
+
+    // --- phase 2: [S; s_c]·[X | x_r] (Eq. 6) ------------------------------
+    let (out, _s_xr) = spmm_with_check_col_hooked(s, &x, &x_r, hook);
+    // Bottom check row s_c·[X | x_r] (checker path); its corner is the
+    // fused predicted checksum s_c·H·w_r of Eq. (4).
+    let _sc_x = vecmat_hooked(s_c, &x, hook);
+    let predicted = dot_hooked(s_c, &x_r, hook);
+    // Single actual checksum: only the final output is accumulated.
+    let actual = block_checksum_hooked(&out, out.cols(), hook);
+
+    (
+        out,
+        CheckRecord {
+            layer,
+            point: CheckPoint::EndOfLayer,
+            predicted,
+            actual,
+        },
+    )
+}
+
+/// Full GCN-ABFT-checked forward pass: every layer's pre-activation
+/// output + one check per layer.
+pub fn fused_forward_checked<HK: ExecHook>(
+    model: &EngineModel,
+    features: &Csr,
+    hook: &mut HK,
+) -> (Vec<Dense64>, Vec<CheckRecord>) {
+    let mut checks = Vec::with_capacity(model.num_layers());
+    let mut preacts = Vec::with_capacity(model.num_layers());
+    let mut input = EngineInput::Sparse(features.clone());
+    for (i, w) in model.weights.iter().enumerate() {
+        let (pre, rec) = fused_layer_checked(
+            &model.adjacency,
+            &model.s_c,
+            &input,
+            w,
+            &model.w_r[i],
+            i,
+            hook,
+        );
+        checks.push(rec);
+        let mut act = pre.clone();
+        if model.activations[i] == crate::gcn::Activation::Relu {
+            act.relu_inplace();
+        }
+        input = EngineInput::Dense(act);
+        preacts.push(pre);
+    }
+    (preacts, checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::split::split_forward_checked;
+    use crate::abft::CheckPolicy;
+    use crate::gcn::GcnModel;
+    use crate::graph::DatasetId;
+    use crate::tensor::{CountingHook, NopHook};
+
+    fn setup() -> (EngineModel, Csr) {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        (EngineModel::from_model(&m), g.features.clone())
+    }
+
+    #[test]
+    fn fault_free_checks_are_tight() {
+        let (em, feats) = setup();
+        let mut nop = NopHook;
+        let (_, checks) = fused_forward_checked(&em, &feats, &mut nop);
+        assert_eq!(checks.len(), 2); // one per layer
+        for c in &checks {
+            let scale = c.actual.abs().max(1.0);
+            assert!(
+                c.residual() / scale < 1e-10,
+                "fault-free residual too large: {:?}",
+                c
+            );
+        }
+    }
+
+    #[test]
+    fn output_identical_to_split_and_golden() {
+        let (em, feats) = setup();
+        let h_c: Vec<f64> = feats.col_sums_f64();
+        let mut nop = NopHook;
+        let (fused_out, _) = fused_forward_checked(&em, &feats, &mut nop);
+        let (split_out, _) = split_forward_checked(&em, &feats, &h_c, &mut nop);
+        // Both checkers compute the exact same true output ops.
+        assert!(fused_out.last().unwrap().max_abs_diff(split_out.last().unwrap()) < 1e-12);
+        let golden = em.golden_forward(&feats);
+        assert!(fused_out.last().unwrap().max_abs_diff(golden.last().unwrap()) < 1e-9);
+    }
+
+    #[test]
+    fn fused_prediction_equals_scHwr_identity() {
+        let (em, feats) = setup();
+        let mut nop = NopHook;
+        let (_, checks) = fused_forward_checked(&em, &feats, &mut nop);
+        // Direct identity evaluation for layer 1: s_c · (H · w_r).
+        let h_wr = EngineInput::Sparse(feats.clone()).matvec_hooked(&em.w_r[0], &mut nop);
+        let direct: f64 = em.s_c.iter().zip(&h_wr).map(|(a, b)| a * b).sum();
+        assert!(
+            (checks[0].predicted - direct).abs() / direct.abs().max(1.0) < 1e-12,
+            "fused prediction {} vs direct identity {}",
+            checks[0].predicted,
+            direct
+        );
+    }
+
+    #[test]
+    fn op_counts_match_analytic_model() {
+        let (em, feats) = setup();
+        let mut cnt = CountingHook::default();
+        fused_forward_checked(&em, &feats, &mut cnt);
+        let n = 64usize;
+        let (h1, c) = (8usize, 4usize);
+        let nnz_h = feats.nnz();
+        let nnz_s = em.adjacency.nnz();
+        let l1_data = 2 * nnz_h * h1 + 2 * nnz_h + 2 * nnz_s * (h1 + 1);
+        let nnz_h2 = n * h1;
+        let l2_data = 2 * nnz_h2 * c + 2 * nnz_h2 + 2 * nnz_s * (c + 1);
+        assert_eq!(cnt.data_ops, (l1_data + l2_data) as u64);
+        let l1_chk = 2 * n * (h1 + 1) + (n * h1 - 1);
+        let l2_chk = 2 * n * (c + 1) + (n * c - 1);
+        assert_eq!(cnt.checksum_ops, (l1_chk + l2_chk) as u64);
+    }
+
+    #[test]
+    fn fused_needs_fewer_check_ops_than_split() {
+        let (em, feats) = setup();
+        let h_c: Vec<f64> = feats.col_sums_f64();
+        let mut cf = CountingHook::default();
+        fused_forward_checked(&em, &feats, &mut cf);
+        let mut cs = CountingHook::default();
+        split_forward_checked(&em, &feats, &h_c, &mut cs);
+        assert_eq!(cf.data_ops, cs.data_ops, "true-output ops must match");
+        assert!(
+            cf.checksum_ops < cs.checksum_ops,
+            "fused {} should be < split {}",
+            cf.checksum_ops,
+            cs.checksum_ops
+        );
+    }
+
+    #[test]
+    fn detects_phase1_and_phase2_corruption_at_end_of_layer() {
+        struct Corrupt {
+            countdown: i64,
+        }
+        impl ExecHook for Corrupt {
+            fn mul(&mut self, v: f64) -> f64 {
+                self.countdown -= 1;
+                if self.countdown == 0 {
+                    v + 500.0
+                } else {
+                    v
+                }
+            }
+            fn add(&mut self, v: f64) -> f64 {
+                self.countdown -= 1;
+                if self.countdown == 0 {
+                    v + 500.0
+                } else {
+                    v
+                }
+            }
+            fn csum(&mut self, v: f64) -> f64 {
+                v
+            }
+        }
+        let (em, feats) = setup();
+        let policy = CheckPolicy::new(1e-4);
+        // Early op (phase 1) and a late op (phase 2) both detected.
+        for &at in &[10i64, 15_000] {
+            let mut hook = Corrupt { countdown: at };
+            let (_, checks) = fused_forward_checked(&em, &feats, &mut hook);
+            assert!(
+                checks
+                    .iter()
+                    .any(|c| policy.fires(c.predicted, c.actual)),
+                "corruption at op {at} undetected: {checks:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Column-level error localization — the capability the enhanced
+//! products' *full* check rows buy (Fig. 1/2 compute `s_c·X` and
+//! `h_c·W`, not just the corner scalar).
+//!
+//! When the scalar check fires, comparing the check row `s_c·X` against
+//! the actual per-column sums of `H_out` pinpoints which output
+//! column(s) an **aggregation-phase** fault corrupted — useful for
+//! selective recomputation (re-run one output column instead of the
+//! whole layer). Combination-phase (`X = H·W`) faults corrupt `X` itself,
+//! so the row `s_c·X` and the output column sums shift *together* and the
+//! per-column residuals cancel; such faults are still caught by the
+//! scalar check (whose prediction rides the independent `x_r = H·w_r`
+//! column) but cannot be column-localized — the same separability the
+//! fused scheme trades away per §III of the paper. The split checker's
+//! phase-1 check row (`h_c·W`) would localize them instead.
+
+use super::engine::EngineInput;
+use crate::sparse::instrumented::spmm_with_check_col_hooked;
+use crate::sparse::Csr;
+use crate::tensor::instrumented::{col_sums_hooked, dot_hooked, vecmat_hooked, ExecHook};
+use crate::tensor::Dense64;
+
+/// Per-column localization result for one layer.
+#[derive(Debug, Clone)]
+pub struct Localization {
+    /// Per-column |predicted − actual| residuals.
+    pub column_residuals: Vec<f64>,
+    /// Columns whose residual exceeds the threshold.
+    pub suspect_columns: Vec<usize>,
+    /// The scalar (corner) check residual.
+    pub scalar_residual: f64,
+}
+
+/// Execute one fused-checked layer keeping the full check row, and
+/// localize any corruption to output columns.
+///
+/// Cost: identical to `fused_layer_checked` (the check row `s_c·X` is
+/// already part of Eq. (6)'s enhanced product) **plus** per-column actual
+/// sums of the output (`N·h` checker adds, replacing the plain total) —
+/// localization is free at check time because `Σ_j colsum_j` *is* the
+/// actual checksum.
+pub fn fused_layer_localized<HK: ExecHook>(
+    s: &Csr,
+    s_c: &[f64],
+    h: &EngineInput,
+    w: &Dense64,
+    w_r: &[f64],
+    threshold: f64,
+    hook: &mut HK,
+) -> (Dense64, Localization) {
+    assert_eq!(h.cols(), w.rows(), "layer input dim mismatch");
+    let x = h.matmul_hooked(w, hook);
+    let x_r = h.matvec_hooked(w_r, hook);
+    let (out, _s_xr) = spmm_with_check_col_hooked(s, &x, &x_r, hook);
+
+    // Predicted per-column checksums: s_c·X (the Eq. (6) check row).
+    let predicted_cols = vecmat_hooked(s_c, &x, hook);
+    let scalar_pred = dot_hooked(s_c, &x_r, hook);
+
+    // Actual per-column sums of the computed output.
+    let actual_cols = col_sums_hooked(&out, hook);
+    let scalar_actual: f64 = actual_cols.iter().sum();
+
+    let column_residuals: Vec<f64> = predicted_cols
+        .iter()
+        .zip(&actual_cols)
+        .map(|(p, a)| (p - a).abs())
+        .collect();
+    let suspect_columns = column_residuals
+        .iter()
+        .enumerate()
+        .filter(|(_, &r)| !(r <= threshold))
+        .map(|(j, _)| j)
+        .collect();
+
+    (
+        out,
+        Localization {
+            column_residuals,
+            suspect_columns,
+            scalar_residual: (scalar_pred - scalar_actual).abs(),
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::EngineModel;
+    use crate::gcn::GcnModel;
+    use crate::graph::DatasetId;
+    use crate::tensor::NopHook;
+
+    fn setup() -> (EngineModel, Csr) {
+        let g = DatasetId::Tiny.build(2);
+        let m = GcnModel::two_layer(&g, 8, 2);
+        (EngineModel::from_model(&m), g.features.clone())
+    }
+
+    #[test]
+    fn fault_free_localization_is_empty() {
+        let (em, feats) = setup();
+        let mut nop = NopHook;
+        let (_, loc) = fused_layer_localized(
+            &em.adjacency,
+            &em.s_c,
+            &EngineInput::Sparse(feats),
+            &em.weights[0],
+            &em.w_r[0],
+            1e-6,
+            &mut nop,
+        );
+        assert_eq!(loc.column_residuals.len(), 8);
+        assert!(loc.suspect_columns.is_empty(), "{loc:?}");
+        assert!(loc.scalar_residual < 1e-6);
+    }
+
+    /// Hook corrupting one aggregation-phase (phase-2) result feeding a
+    /// chosen output column. Phase-2 data ops start after the combination
+    /// matmul (2·nnz_H·h) and the x_r matvec (2·nnz_H); within the
+    /// enhanced aggregation each S-nonzero does h (mul,add) pairs for the
+    /// output columns followed by one pair for the check column.
+    struct CorruptPhase2Col {
+        data_ops: u64,
+        phase2_start: u64,
+        h_cols: u64,
+        target_col: u64,
+        fired: bool,
+    }
+    impl ExecHook for CorruptPhase2Col {
+        fn mul(&mut self, v: f64) -> f64 {
+            let i = self.data_ops;
+            self.data_ops += 1;
+            if !self.fired && i >= self.phase2_start {
+                let within = (i - self.phase2_start) % (2 * (self.h_cols + 1));
+                if within / 2 == self.target_col && within % 2 == 0 {
+                    self.fired = true;
+                    return v + 1000.0;
+                }
+            }
+            v
+        }
+        fn add(&mut self, v: f64) -> f64 {
+            self.data_ops += 1;
+            v
+        }
+        fn csum(&mut self, v: f64) -> f64 {
+            v
+        }
+    }
+
+    #[test]
+    fn phase2_corruption_is_localized_to_the_right_column() {
+        let (em, feats) = setup();
+        let nnz_h = feats.nnz() as u64;
+        let h_cols = 8u64;
+        let mut hook = CorruptPhase2Col {
+            data_ops: 0,
+            phase2_start: 2 * nnz_h * h_cols + 2 * nnz_h,
+            h_cols,
+            target_col: 3,
+            fired: false,
+        };
+        let (_, loc) = fused_layer_localized(
+            &em.adjacency,
+            &em.s_c,
+            &EngineInput::Sparse(feats),
+            &em.weights[0],
+            &em.w_r[0],
+            1e-3,
+            &mut hook,
+        );
+        assert!(hook.fired, "corruption never injected");
+        assert_eq!(loc.suspect_columns, vec![3], "{loc:?}");
+        assert!(loc.scalar_residual > 100.0);
+    }
+
+    #[test]
+    fn phase1_corruption_fires_scalar_but_is_not_column_localizable() {
+        // The documented trade-off: a combination-phase fault shifts the
+        // s_c·X prediction and the output column sums together, so no
+        // column stands out — while the scalar check (via the independent
+        // x_r) still fires.
+        struct CorruptPhase1 {
+            n: u64,
+        }
+        impl ExecHook for CorruptPhase1 {
+            fn mul(&mut self, v: f64) -> f64 {
+                self.n += 1;
+                if self.n == 33 {
+                    v + 777.0
+                } else {
+                    v
+                }
+            }
+            fn add(&mut self, v: f64) -> f64 {
+                self.n += 1;
+                v
+            }
+            fn csum(&mut self, v: f64) -> f64 {
+                v
+            }
+        }
+        let (em, feats) = setup();
+        let mut hook = CorruptPhase1 { n: 0 };
+        let (_, loc) = fused_layer_localized(
+            &em.adjacency,
+            &em.s_c,
+            &EngineInput::Sparse(feats),
+            &em.weights[0],
+            &em.w_r[0],
+            1e-3,
+            &mut hook,
+        );
+        assert!(
+            loc.scalar_residual > 100.0,
+            "scalar check must still catch it: {loc:?}"
+        );
+        assert!(
+            loc.suspect_columns.is_empty(),
+            "phase-1 faults cancel in the column residuals: {loc:?}"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! ABFT checkers for GCN layers: the baseline **split** scheme (one check
+//! per matmul, §II-B) and the paper's **fused GCN-ABFT** scheme (one check
+//! per layer, §III).
+
+pub mod aggfirst;
+pub mod checksum;
+pub mod engine;
+pub mod fused;
+pub mod localize;
+pub mod outcome;
+pub mod split;
+
+pub use aggfirst::{fused_forward_checked_aggfirst, fused_layer_checked_aggfirst};
+pub use checksum::{CheckPolicy, OfflineChecksums};
+pub use localize::{fused_layer_localized, Localization};
+pub use engine::{EngineInput, EngineModel};
+pub use fused::{fused_forward_checked, fused_layer_checked};
+pub use outcome::{CheckPoint, CheckRecord, Scheme};
+pub use split::{split_forward_checked, split_layer_checked};

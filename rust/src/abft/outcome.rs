@@ -1,0 +1,86 @@
+//! Check records and scheme identifiers shared by the two checkers.
+
+/// Where in the layer a check is evaluated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckPoint {
+    /// After the combination matmul `X = H·W` (baseline split ABFT only —
+    /// this is the early-detection point GCN-ABFT trades away).
+    AfterCombination,
+    /// After the aggregation matmul, i.e. end of the GCN layer.
+    EndOfLayer,
+}
+
+/// One predicted-vs-actual checksum comparison produced while executing a
+/// checked layer. Thresholding is deferred so a single fault campaign can
+/// be classified under every τ at once.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckRecord {
+    pub layer: usize,
+    pub point: CheckPoint,
+    pub predicted: f64,
+    pub actual: f64,
+}
+
+impl CheckRecord {
+    /// Absolute residual — the quantity compared against τ.
+    pub fn residual(&self) -> f64 {
+        (self.predicted - self.actual).abs()
+    }
+}
+
+/// Which ABFT scheme a run used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Baseline: check each matmul separately (Eqs. 2–3, Fig. 1).
+    Split,
+    /// GCN-ABFT: one fused checksum per layer (Eqs. 5–6, Fig. 2).
+    Fused,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Split => "split",
+            Scheme::Fused => "gcn-abft",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s.to_ascii_lowercase().as_str() {
+            "split" | "baseline" => Some(Scheme::Split),
+            "fused" | "gcn-abft" | "gcnabft" => Some(Scheme::Fused),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_is_absolute() {
+        let r = CheckRecord {
+            layer: 0,
+            point: CheckPoint::EndOfLayer,
+            predicted: 1.0,
+            actual: 3.5,
+        };
+        assert_eq!(r.residual(), 2.5);
+        let r2 = CheckRecord {
+            predicted: 3.5,
+            actual: 1.0,
+            ..r
+        };
+        assert_eq!(r2.residual(), 2.5);
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("split"), Some(Scheme::Split));
+        assert_eq!(Scheme::parse("baseline"), Some(Scheme::Split));
+        assert_eq!(Scheme::parse("GCN-ABFT"), Some(Scheme::Fused));
+        assert_eq!(Scheme::parse("fused"), Some(Scheme::Fused));
+        assert_eq!(Scheme::parse("nope"), None);
+    }
+}

@@ -1,0 +1,250 @@
+//! Baseline **split ABFT**: check each of the two matmuls of a GCN layer
+//! independently (paper §II-B, Eqs. (2)–(3), Fig. 1).
+//!
+//! Phase 1 (combination, `X = H·W`):
+//! * online check state `h_c = eᵀH` (checker path) — except for layer 1,
+//!   whose input features are static so `h_c` is precomputed offline;
+//! * enhanced product `[H; h_c]·[W | w_r]` → true `X`, check column
+//!   `x_r = H·w_r` (data path), check row `h_c·[W|w_r]` (checker path);
+//! * compare predicted `h_c·w_r` against the accumulated checksum of `X`.
+//!
+//! Phase 2 (aggregation, `H_out = S·X`):
+//! * enhanced product `[S; s_c]·[X | x_r]` → true `H_out`, column `S·x_r`
+//!   (data path), row `s_c·[X|x_r]` (checker path);
+//! * compare predicted `s_c·x_r` against the accumulated checksum of
+//!   `H_out`.
+
+use super::engine::{EngineInput, EngineModel};
+use super::outcome::{CheckPoint, CheckRecord};
+use crate::sparse::instrumented::spmm_with_check_col_hooked;
+use crate::sparse::Csr;
+use crate::tensor::instrumented::{block_checksum_hooked, dot_hooked, vecmat_hooked, ExecHook};
+use crate::tensor::Dense64;
+
+/// Execute one split-checked GCN layer. `h_c_offline` supplies the input
+/// checksum when it is known statically (layer 1); otherwise it is
+/// computed online through the hook.
+pub fn split_layer_checked<HK: ExecHook>(
+    s: &Csr,
+    s_c: &[f64],
+    h: &EngineInput,
+    w: &Dense64,
+    w_r: &[f64],
+    h_c_offline: Option<&[f64]>,
+    layer: usize,
+    hook: &mut HK,
+) -> (Dense64, [CheckRecord; 2]) {
+    assert_eq!(h.cols(), w.rows(), "layer input dim mismatch");
+    assert_eq!(w_r.len(), w.rows(), "w_r length mismatch");
+    assert_eq!(s_c.len(), s.rows(), "s_c length mismatch");
+
+    // --- phase 1: combination with per-matmul check ----------------------
+    // Online h_c (the state GCN-ABFT later eliminates).
+    let h_c: Vec<f64> = match h_c_offline {
+        Some(v) => v.to_vec(),
+        None => h.col_sums_hooked(hook),
+    };
+    // True product and the data-path check column x_r = H·w_r.
+    let x = h.matmul_hooked(w, hook);
+    let x_r = h.matvec_hooked(w_r, hook);
+    // Check row h_c·[W | w_r] (checker path). The row over W provides
+    // per-column localization; the corner h_c·w_r is the scalar check.
+    let _hc_w = vecmat_hooked(&h_c, w, hook);
+    let pred_x = dot_hooked(&h_c, w_r, hook);
+    // Actual checksum of X, accumulated online.
+    let actual_x = block_checksum_hooked(&x, x.cols(), hook);
+    let check1 = CheckRecord {
+        layer,
+        point: CheckPoint::AfterCombination,
+        predicted: pred_x,
+        actual: actual_x,
+    };
+
+    // --- phase 2: aggregation with per-matmul check -----------------------
+    // Enhanced product [S; s_c]·[X | x_r]: true H_out plus S·x_r column.
+    let (out, _s_xr) = spmm_with_check_col_hooked(s, &x, &x_r, hook);
+    // Check row s_c·[X | x_r] (checker path); corner s_c·x_r is the check.
+    let _sc_x = vecmat_hooked(s_c, &x, hook);
+    let pred_out = dot_hooked(s_c, &x_r, hook);
+    let actual_out = block_checksum_hooked(&out, out.cols(), hook);
+    let check2 = CheckRecord {
+        layer,
+        point: CheckPoint::EndOfLayer,
+        predicted: pred_out,
+        actual: actual_out,
+    };
+
+    (out, [check1, check2])
+}
+
+/// Full split-checked forward pass over a model: returns every layer's
+/// pre-activation output (the values ABFT guards) and all 2·L check
+/// records.
+pub fn split_forward_checked<HK: ExecHook>(
+    model: &EngineModel,
+    features: &Csr,
+    features_h_c: &[f64],
+    hook: &mut HK,
+) -> (Vec<Dense64>, Vec<CheckRecord>) {
+    let mut checks = Vec::with_capacity(2 * model.num_layers());
+    let mut preacts = Vec::with_capacity(model.num_layers());
+    let mut input = EngineInput::Sparse(features.clone());
+    for (i, w) in model.weights.iter().enumerate() {
+        let h_c_offline = if i == 0 { Some(features_h_c) } else { None };
+        let (pre, recs) = split_layer_checked(
+            &model.adjacency,
+            &model.s_c,
+            &input,
+            w,
+            &model.w_r[i],
+            h_c_offline,
+            i,
+            hook,
+        );
+        checks.extend_from_slice(&recs);
+        let mut act = pre.clone();
+        if model.activations[i] == crate::gcn::Activation::Relu {
+            act.relu_inplace();
+        }
+        input = EngineInput::Dense(act);
+        preacts.push(pre);
+    }
+    (preacts, checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gcn::GcnModel;
+    use crate::graph::DatasetId;
+    use crate::tensor::{CountingHook, NopHook};
+
+    fn setup() -> (EngineModel, Csr, Vec<f64>) {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        let em = EngineModel::from_model(&m);
+        let h_c = g.features.col_sums_f64();
+        (em, g.features.clone(), h_c)
+    }
+
+    #[test]
+    fn fault_free_checks_are_tight() {
+        let (em, feats, h_c) = setup();
+        let mut nop = NopHook;
+        let (_, checks) = split_forward_checked(&em, &feats, &h_c, &mut nop);
+        assert_eq!(checks.len(), 4); // two layers × two checks
+        for c in &checks {
+            let scale = c.actual.abs().max(1.0);
+            assert!(
+                c.residual() / scale < 1e-10,
+                "fault-free residual too large: {:?}",
+                c
+            );
+        }
+    }
+
+    #[test]
+    fn output_matches_golden_forward() {
+        let (em, feats, h_c) = setup();
+        let mut nop = NopHook;
+        let (preacts, _) = split_forward_checked(&em, &feats, &h_c, &mut nop);
+        let golden = em.golden_forward(&feats);
+        for (p, g) in preacts.iter().zip(&golden) {
+            assert!(p.max_abs_diff(g) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn op_counts_match_analytic_model() {
+        let (em, feats, h_c) = setup();
+        let mut cnt = CountingHook::default();
+        split_forward_checked(&em, &feats, &h_c, &mut cnt);
+        let n = 64usize;
+        let (h1, c) = (8usize, 4usize);
+        let nnz_h = feats.nnz();
+        let nnz_s = em.adjacency.nnz();
+        let f = feats.cols();
+        // data ops: true matmuls + check columns
+        let l1_data = 2 * nnz_h * h1 + 2 * nnz_h + 2 * nnz_s * (h1 + 1);
+        let nnz_h2 = n * h1;
+        let l2_data = 2 * nnz_h2 * c + 2 * nnz_h2 + 2 * nnz_s * (c + 1);
+        assert_eq!(cnt.data_ops, (l1_data + l2_data) as u64);
+        // checker ops: (layer-1 h_c offline ⇒ not counted)
+        let l1_chk = 2 * f * (h1 + 1) + (n * h1 - 1) + 2 * n * (h1 + 1) + (n * h1 - 1);
+        let l2_chk = nnz_h2 + 2 * h1 * (c + 1) + (n * c - 1) + 2 * n * (c + 1) + (n * c - 1);
+        assert_eq!(cnt.checksum_ops, (l1_chk + l2_chk) as u64);
+    }
+
+    #[test]
+    fn layer1_offline_hc_skips_checker_ops() {
+        let (em, feats, h_c) = setup();
+        let mut with_offline = CountingHook::default();
+        split_layer_checked(
+            &em.adjacency,
+            &em.s_c,
+            &EngineInput::Sparse(feats.clone()),
+            &em.weights[0],
+            &em.w_r[0],
+            Some(&h_c),
+            0,
+            &mut with_offline,
+        );
+        let mut online = CountingHook::default();
+        split_layer_checked(
+            &em.adjacency,
+            &em.s_c,
+            &EngineInput::Sparse(feats.clone()),
+            &em.weights[0],
+            &em.w_r[0],
+            None,
+            0,
+            &mut online,
+        );
+        assert_eq!(
+            online.checksum_ops - with_offline.checksum_ops,
+            feats.nnz() as u64
+        );
+        assert_eq!(online.data_ops, with_offline.data_ops);
+    }
+
+    #[test]
+    fn detects_a_corrupted_product() {
+        // Corrupt one data-path result mid-phase-1 and verify check 1 fires.
+        struct Corrupt {
+            countdown: i64,
+        }
+        impl ExecHook for Corrupt {
+            fn mul(&mut self, v: f64) -> f64 {
+                self.countdown -= 1;
+                if self.countdown == 0 {
+                    v + 1000.0
+                } else {
+                    v
+                }
+            }
+            fn add(&mut self, v: f64) -> f64 {
+                self.countdown -= 1;
+                if self.countdown == 0 {
+                    v + 1000.0
+                } else {
+                    v
+                }
+            }
+            fn csum(&mut self, v: f64) -> f64 {
+                v
+            }
+        }
+        let (em, feats, h_c) = setup();
+        let mut hook = Corrupt { countdown: 99 };
+        let (_, checks) = split_forward_checked(&em, &feats, &h_c, &mut hook);
+        let policy = crate::abft::CheckPolicy::new(1e-4);
+        let fired: Vec<bool> = checks
+            .iter()
+            .map(|c| policy.fires(c.predicted, c.actual))
+            .collect();
+        assert!(
+            fired[0],
+            "phase-1 check should fire on a phase-1 corruption: {checks:?}"
+        );
+    }
+}

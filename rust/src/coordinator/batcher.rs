@@ -1,0 +1,129 @@
+//! Dynamic batcher: coalesce concurrent inference requests into one
+//! accelerator pass, bounded by batch size and a latency deadline —
+//! the standard continuous-batching control loop of serving systems.
+
+use super::request::InferenceRequest;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Close a batch at this many requests.
+    pub max_batch: usize,
+    /// ... or when the oldest member has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A closed batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<InferenceRequest>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Pull one batch from `rx` under `policy`. Returns `None` when the
+/// channel is closed and drained. Blocks for the first request, then
+/// fills greedily until size or deadline.
+pub fn next_batch(rx: &Receiver<InferenceRequest>, policy: &BatchPolicy) -> Option<Batch> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut requests = vec![first];
+    while requests.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => requests.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(Batch { requests })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> InferenceRequest {
+        InferenceRequest {
+            id,
+            query_nodes: vec![0],
+            perturbations: vec![],
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+        };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 4);
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_channel_yields_none() {
+        let (tx, rx) = mpsc::channel::<InferenceRequest>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        tx.send(req(1)).unwrap();
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(next_batch(&rx, &policy).is_none());
+    }
+}

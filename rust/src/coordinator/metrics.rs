@@ -1,0 +1,124 @@
+//! Serving metrics: latency histogram + counters.
+
+/// Log-bucketed latency histogram (microsecond resolution, powers of √2).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [√2^i, √2^(i+1)) microseconds.
+    buckets: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: vec![0; 64],
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        let us = (secs * 1e6).max(1.0);
+        let idx = (us.log2() * 2.0).floor().clamp(0.0, 63.0) as usize;
+        self.buckets[idx] += 1;
+        self.samples.push(secs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Exact percentile from retained samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub executions: u64,
+    pub checks_fired: u64,
+    pub retries: u64,
+    pub failures: u64,
+    pub injected_faults: u64,
+    pub exec_secs: f64,
+    pub verify_secs: f64,
+    pub wall_secs: f64,
+}
+
+impl ServeMetrics {
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.requests as f64 / self.batches.max(1) as f64
+    }
+
+    /// Verification overhead as a fraction of execution time — the
+    /// serving-path analogue of the paper's "checking cost".
+    pub fn verify_overhead(&self) -> f64 {
+        self.verify_secs / self.exec_secs.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile(50.0) - 0.05).abs() < 0.002);
+        assert!((h.percentile(99.0) - 0.099).abs() < 0.002);
+        assert!((h.mean() - 0.0505).abs() < 0.001);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let h = LatencyHistogram::new();
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn metrics_derived_quantities() {
+        let m = ServeMetrics {
+            requests: 100,
+            batches: 25,
+            executions: 26,
+            exec_secs: 2.0,
+            verify_secs: 0.1,
+            wall_secs: 4.0,
+            ..Default::default()
+        };
+        assert!((m.throughput_rps() - 25.0).abs() < 1e-9);
+        assert!((m.mean_batch() - 4.0).abs() < 1e-9);
+        assert!((m.verify_overhead() - 0.05).abs() < 1e-9);
+    }
+}

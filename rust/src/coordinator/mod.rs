@@ -1,0 +1,199 @@
+//! L3 serving coordinator: request routing, dynamic batching, worker
+//! pool over PJRT executables, and **online GCN-ABFT verification** of
+//! every response — the deployment shape the paper's checker is built
+//! for (detect-before-release, re-execute on transient faults).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+pub mod verify;
+
+pub use batcher::{Batch, BatchPolicy};
+pub use metrics::{LatencyHistogram, ServeMetrics};
+pub use request::{InferenceRequest, InferenceResponse, Perturbation, VerifyStatus};
+pub use server::{run_server, ModelState, ServerConfig};
+pub use verify::{ServePolicy, VerifyReport};
+
+use crate::graph::DatasetId;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Synthetic client driver + server, used by `gcn-abft serve` and the
+/// `serve_inference` example. Returns a human-readable summary.
+pub fn serve_cli(args: &Args) -> Result<String> {
+    let dataset = DatasetId::parse(&args.get_str("dataset", "tiny"))
+        .ok_or_else(|| anyhow!("unknown dataset (XLA artifacts exist for tiny/cora/citeseer)"))?;
+    let requests = args.get_usize("requests", 64).map_err(|e| anyhow!("{e}"))?;
+    let batch = args.get_usize("batch", 8).map_err(|e| anyhow!("{e}"))?;
+    let workers = args.get_usize("workers", 2).map_err(|e| anyhow!("{e}"))?;
+    let seed = args.get_u64("seed", 7).map_err(|e| anyhow!("{e}"))?;
+    let inject_every = match args.get("inject-every") {
+        Some(v) => Some(v.parse::<u64>().map_err(|e| anyhow!("inject-every: {e}"))?),
+        None => None,
+    };
+    let cfg = ServerConfig {
+        dataset,
+        artifacts_dir: args.get_str("artifacts", "artifacts").into(),
+        batch: BatchPolicy {
+            max_batch: batch,
+            ..Default::default()
+        },
+        workers,
+        inject_every,
+        seed,
+        ..Default::default()
+    };
+    let summary = serve_synthetic(&cfg, requests)?;
+    if args.has_flag("json") {
+        Ok(summary.json().to_pretty())
+    } else {
+        Ok(summary.render())
+    }
+}
+
+/// Outcome of a synthetic serving run.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub dataset: String,
+    pub metrics: ServeMetrics,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub responses: usize,
+    pub clean: usize,
+    pub recovered: usize,
+    pub failed: usize,
+}
+
+impl ServeSummary {
+    pub fn render(&self) -> String {
+        let m = &self.metrics;
+        format!(
+            "SERVE {} — {} requests in {:.2}s ({:.1} req/s)\n\
+             batches {} (mean size {:.1}) | executions {} | p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
+             verification: {:.3}% of execute time | checks fired {} | injected {} | retries {} | failures {}\n\
+             responses: {} clean, {} recovered-after-retry, {} failed",
+            self.dataset,
+            m.requests,
+            m.wall_secs,
+            m.throughput_rps(),
+            m.batches,
+            m.mean_batch(),
+            m.executions,
+            self.p50 * 1e3,
+            self.p95 * 1e3,
+            self.p99 * 1e3,
+            m.verify_overhead() * 100.0,
+            m.checks_fired,
+            m.injected_faults,
+            m.retries,
+            m.failures,
+            self.clean,
+            self.recovered,
+            self.failed,
+        )
+    }
+
+    pub fn json(&self) -> Json {
+        let m = &self.metrics;
+        Json::obj(vec![
+            ("dataset", Json::from(self.dataset.clone())),
+            ("requests", Json::from(m.requests)),
+            ("wall_secs", Json::Num(m.wall_secs)),
+            ("throughput_rps", Json::Num(m.throughput_rps())),
+            ("batches", Json::from(m.batches)),
+            ("mean_batch", Json::Num(m.mean_batch())),
+            ("p50_ms", Json::Num(self.p50 * 1e3)),
+            ("p95_ms", Json::Num(self.p95 * 1e3)),
+            ("p99_ms", Json::Num(self.p99 * 1e3)),
+            ("verify_overhead", Json::Num(m.verify_overhead())),
+            ("checks_fired", Json::from(m.checks_fired)),
+            ("injected_faults", Json::from(m.injected_faults)),
+            ("retries", Json::from(m.retries)),
+            ("failures", Json::from(m.failures)),
+            ("clean", Json::from(self.clean)),
+            ("recovered", Json::from(self.recovered)),
+            ("failed", Json::from(self.failed)),
+        ])
+    }
+}
+
+/// Drive the server with `n_requests` synthetic what-if queries.
+pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSummary> {
+    let state = ModelState::build(cfg);
+    let feat_dim = state.features.cols();
+    let n_nodes = state.features.rows();
+
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+
+    // Client driver thread: bursty request arrivals with random what-if
+    // perturbations and query sets. Held back until every worker has
+    // compiled so latencies measure steady-state serving, not PJRT
+    // warm-up.
+    let seed = cfg.seed;
+    let driver = std::thread::spawn(move || {
+        let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
+        let mut rng = Pcg64::from_seed(seed ^ 0xD21u64);
+        for id in 0..n_requests {
+            let n_pert = rng.gen_index(3);
+            let perturbations = (0..n_pert)
+                .map(|_| Perturbation {
+                    node: rng.gen_index(n_nodes),
+                    features: (0..feat_dim)
+                        .map(|_| if rng.gen_bool(0.05) { 16.0 } else { 0.0 })
+                        .collect(),
+                })
+                .collect();
+            let k = 1 + rng.gen_index(4);
+            let query_nodes = rng.sample_indices(n_nodes, k);
+            let req = InferenceRequest {
+                id: id as u64,
+                query_nodes,
+                perturbations,
+                submitted: Instant::now(),
+            };
+            if req_tx.send(req).is_err() {
+                return;
+            }
+            // Bursty arrivals: small jitter between sends.
+            if rng.gen_bool(0.3) {
+                std::thread::sleep(std::time::Duration::from_micros(rng.gen_range(400)));
+            }
+        }
+    });
+
+    let metrics =
+        server::run_server_with_ready(cfg, &state, req_rx, resp_tx, Some(ready_tx))?;
+    driver.join().expect("driver panicked");
+
+    let (p50, p95, p99) = server::last_latency_percentiles();
+    let mut clean = 0;
+    let mut recovered = 0;
+    let mut failed = 0;
+    let mut responses = 0;
+    while let Ok(r) = resp_rx.recv() {
+        responses += 1;
+        match r.status {
+            VerifyStatus::Clean => clean += 1,
+            VerifyStatus::RecoveredAfterRetry => recovered += 1,
+            VerifyStatus::Failed => failed += 1,
+        }
+    }
+    Ok(ServeSummary {
+        dataset: cfg.dataset.name().to_string(),
+        metrics,
+        p50,
+        p95,
+        p99,
+        responses,
+        clean,
+        recovered,
+        failed,
+    })
+}

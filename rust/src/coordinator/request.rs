@@ -1,0 +1,77 @@
+//! Request/response types for the serving coordinator.
+//!
+//! The serving model (DESIGN.md §3): the graph and weights are resident;
+//! a request carries an optional *feature perturbation overlay* (a
+//! what-if query: "reclassify with these nodes' features changed") plus
+//! the node ids whose classes the caller wants. The batcher coalesces
+//! concurrent requests into one accelerator pass.
+
+use std::time::Instant;
+
+/// A feature overwrite for one node (length must equal feat_dim).
+#[derive(Debug, Clone)]
+pub struct Perturbation {
+    pub node: usize,
+    pub features: Vec<f32>,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// Nodes whose predicted class the caller wants.
+    pub query_nodes: Vec<usize>,
+    /// Feature overlay applied for this request's batch.
+    pub perturbations: Vec<Perturbation>,
+    pub submitted: Instant,
+}
+
+/// Verification status attached to every response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyStatus {
+    /// All checks passed on the first execution.
+    Clean,
+    /// A check fired; the batch was re-executed and then passed.
+    RecoveredAfterRetry,
+    /// A check fired on every attempt; response withheld as faulty.
+    Failed,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    /// (node, predicted class) for each query node.
+    pub classes: Vec<(usize, usize)>,
+    pub status: VerifyStatus,
+    /// End-to-end latency in seconds (submit → respond).
+    pub latency_secs: f64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = InferenceRequest {
+            id: 1,
+            query_nodes: vec![0, 5],
+            perturbations: vec![Perturbation {
+                node: 3,
+                features: vec![0.0; 8],
+            }],
+            submitted: Instant::now(),
+        };
+        assert_eq!(r.query_nodes.len(), 2);
+        assert_eq!(r.perturbations[0].node, 3);
+    }
+
+    #[test]
+    fn verify_status_equality() {
+        assert_eq!(VerifyStatus::Clean, VerifyStatus::Clean);
+        assert_ne!(VerifyStatus::Clean, VerifyStatus::Failed);
+    }
+}

@@ -1,0 +1,369 @@
+//! The serving coordinator: batcher + executor workers + online
+//! verification + metrics.
+//!
+//! Topology (all std threads; the `xla` handles are not `Send`, so each
+//! worker owns its own PJRT client and compiled executable — the
+//! realistic analogue of one accelerator per worker):
+//!
+//! ```text
+//!   client driver ──► request ch ──► batcher ──► batch ch ─┬─► worker 0 ─┐
+//!                                                          ├─► worker 1 ─┼─► response ch
+//!                                                          └─► worker W ─┘
+//! ```
+//!
+//! Every worker pass is verified with GCN-ABFT before its responses are
+//! released; a fired check triggers a bounded re-execution (transient
+//! fault recovery), and a persistently failing batch is answered with
+//! `VerifyStatus::Failed` rather than silently wrong logits.
+
+use super::batcher::{next_batch, Batch, BatchPolicy};
+use super::metrics::{LatencyHistogram, ServeMetrics};
+use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
+use super::verify::ServePolicy;
+use crate::graph::DatasetId;
+use crate::runtime::{GcnOutputs, Manifest, Runtime};
+use crate::tensor::Dense;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub dataset: DatasetId,
+    pub artifacts_dir: PathBuf,
+    pub batch: BatchPolicy,
+    pub workers: usize,
+    pub policy: ServePolicy,
+    /// Inject a bit flip into the logits of every K-th batch (testing the
+    /// online checker's end-to-end coverage). `None` = no injection.
+    pub inject_every: Option<u64>,
+    pub seed: u64,
+    pub max_retries: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetId::Tiny,
+            artifacts_dir: PathBuf::from("artifacts"),
+            batch: BatchPolicy::default(),
+            workers: 2,
+            policy: ServePolicy::default(),
+            inject_every: None,
+            seed: 7,
+            max_retries: 1,
+        }
+    }
+}
+
+/// Resident model state shared (read-only) by all workers.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub features: Dense,
+    pub s: Dense,
+    pub w1: Dense,
+    pub w2: Dense,
+}
+
+impl ModelState {
+    /// Build the state from the synthetic dataset + trained weights —
+    /// the same workload the native engine uses, densified for XLA.
+    pub fn build(cfg: &ServerConfig) -> ModelState {
+        let opts = crate::report::ExperimentOpts {
+            datasets: vec![cfg.dataset],
+            seed: cfg.seed,
+            scale: 1.0,
+            train_epochs: 10,
+        };
+        let (graph, model) = crate::report::build_workload(cfg.dataset, &opts);
+        ModelState {
+            features: graph.features.to_dense(),
+            s: model.adjacency.to_dense(),
+            w1: model.layers[0].weights.clone(),
+            w2: model.layers[1].weights.clone(),
+        }
+    }
+
+    /// Apply a batch's perturbation overlay to a copy of the features.
+    pub fn overlay(&self, batch: &Batch) -> Dense {
+        let mut f = self.features.clone();
+        for req in &batch.requests {
+            for p in &req.perturbations {
+                assert_eq!(
+                    p.features.len(),
+                    f.cols(),
+                    "perturbation width mismatch for node {}",
+                    p.node
+                );
+                f.row_mut(p.node).copy_from_slice(&p.features);
+            }
+        }
+        f
+    }
+}
+
+/// Run the serving pipeline until the request channel closes; returns
+/// aggregated metrics. Spawns `workers` executor threads plus a batcher.
+pub fn run_server(
+    cfg: &ServerConfig,
+    state: &ModelState,
+    requests: Receiver<InferenceRequest>,
+    responses: Sender<InferenceResponse>,
+) -> Result<ServeMetrics> {
+    run_server_with_ready(cfg, state, requests, responses, None)
+}
+
+/// As [`run_server`], additionally signalling on `ready` once every worker
+/// has compiled its executable — callers use it to hold the client driver
+/// back so measured latencies reflect steady-state serving rather than
+/// one-time PJRT compilation (§Perf in EXPERIMENTS.md).
+pub fn run_server_with_ready(
+    cfg: &ServerConfig,
+    state: &ModelState,
+    requests: Receiver<InferenceRequest>,
+    responses: Sender<InferenceResponse>,
+    ready: Option<Sender<()>>,
+) -> Result<ServeMetrics> {
+    let wall_start = Instant::now();
+    let (batch_tx, batch_rx) = std::sync::mpsc::channel::<Batch>();
+    let batch_rx = Mutex::new(batch_rx);
+    let metrics = Mutex::new(ServeMetrics::default());
+    let latency = Mutex::new(LatencyHistogram::new());
+    let batch_counter = std::sync::atomic::AtomicU64::new(0);
+    let n_workers = cfg.workers.max(1);
+    let compiled = std::sync::atomic::AtomicUsize::new(0);
+    let ready = Mutex::new(ready);
+
+    std::thread::scope(|scope| -> Result<()> {
+        // Batcher.
+        let bp = cfg.batch;
+        scope.spawn(move || {
+            while let Some(b) = next_batch(&requests, &bp) {
+                if batch_tx.send(b).is_err() {
+                    break;
+                }
+            }
+            // dropping batch_tx closes the workers' queue
+        });
+
+        // Workers.
+        let compiled = &compiled;
+        let ready = &ready;
+        let mut handles = Vec::new();
+        for worker_id in 0..n_workers {
+            let batch_rx = &batch_rx;
+            let metrics = &metrics;
+            let latency = &latency;
+            let responses = responses.clone();
+            let batch_counter = &batch_counter;
+            let cfg = cfg.clone();
+            let state = state;
+            handles.push(scope.spawn(move || -> Result<()> {
+                // Each worker owns a PJRT client + executable (xla
+                // handles are not Send).
+                let rt = Runtime::cpu()
+                    .with_context(|| format!("worker {worker_id}: PJRT client"))?;
+                let manifest = Manifest::load(&cfg.artifacts_dir)?;
+                let exe = rt.load_model(&manifest, cfg.dataset.name())?;
+                if compiled.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 == n_workers
+                {
+                    if let Some(tx) = ready.lock().unwrap().take() {
+                        let _ = tx.send(());
+                    }
+                }
+                loop {
+                    let batch = {
+                        let rx = batch_rx.lock().unwrap();
+                        match rx.recv() {
+                            Ok(b) => b,
+                            Err(_) => break,
+                        }
+                    };
+                    let bidx =
+                        batch_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let features = state.overlay(&batch);
+
+                    // Execute + verify with bounded retry.
+                    let mut status = VerifyStatus::Failed;
+                    let mut outputs: Option<GcnOutputs> = None;
+                    let mut attempts = 0usize;
+                    while attempts <= cfg.max_retries {
+                        let t0 = Instant::now();
+                        let mut out =
+                            exe.run(&features, &state.s, &state.w1, &state.w2)?;
+                        let exec_dt = t0.elapsed().as_secs_f64();
+
+                        // Optional fault injection into the response
+                        // payload (first attempt only — models a
+                        // transient corruption the retry clears).
+                        let inject = attempts == 0
+                            && cfg
+                                .inject_every
+                                .map(|k| k > 0 && bidx % k == 0)
+                                .unwrap_or(false);
+                        if inject {
+                            let v = out.logits.get(0, 0);
+                            out.logits
+                                .set(0, 0, f32::from_bits(v.to_bits() ^ (1 << 30)));
+                            metrics.lock().unwrap().injected_faults += 1;
+                        }
+
+                        let t1 = Instant::now();
+                        let report = cfg.policy.verify(&out);
+                        let verify_dt = t1.elapsed().as_secs_f64();
+                        {
+                            let mut m = metrics.lock().unwrap();
+                            m.executions += 1;
+                            m.exec_secs += exec_dt;
+                            m.verify_secs += verify_dt;
+                            if !report.ok {
+                                m.checks_fired += 1;
+                            }
+                        }
+                        if report.ok {
+                            status = if attempts == 0 {
+                                VerifyStatus::Clean
+                            } else {
+                                VerifyStatus::RecoveredAfterRetry
+                            };
+                            outputs = Some(out);
+                            break;
+                        }
+                        attempts += 1;
+                        if attempts <= cfg.max_retries {
+                            metrics.lock().unwrap().retries += 1;
+                        }
+                    }
+                    if status == VerifyStatus::Failed {
+                        metrics.lock().unwrap().failures += 1;
+                    }
+
+                    // Respond per request.
+                    let classes: Vec<usize> = outputs
+                        .as_ref()
+                        .map(|o| crate::tensor::ops::argmax_rows(&o.logits))
+                        .unwrap_or_default();
+                    let bsize = batch.len();
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.batches += 1;
+                        m.requests += bsize as u64;
+                    }
+                    for req in batch.requests {
+                        let lat = req.submitted.elapsed().as_secs_f64();
+                        latency.lock().unwrap().record(lat);
+                        let resp = InferenceResponse {
+                            id: req.id,
+                            classes: req
+                                .query_nodes
+                                .iter()
+                                .map(|&n| (n, classes.get(n).copied().unwrap_or(usize::MAX)))
+                                .collect(),
+                            status,
+                            latency_secs: lat,
+                            batch_size: bsize,
+                        };
+                        let _ = responses.send(resp);
+                    }
+                }
+                Ok(())
+            }));
+        }
+        drop(responses);
+        for h in handles {
+            h.join().expect("worker panicked")?;
+        }
+        Ok(())
+    })?;
+
+    let mut m = metrics.into_inner().unwrap();
+    m.wall_secs = wall_start.elapsed().as_secs_f64();
+    let lat = latency.into_inner().unwrap();
+    // Stash percentiles into the summary string via ServeSummary below.
+    Ok(finalize(m, lat))
+}
+
+/// Attach latency percentiles to metrics (kept in one struct for JSON).
+fn finalize(m: ServeMetrics, lat: LatencyHistogram) -> ServeMetrics {
+    // percentiles are reported by the caller via summary(); retaining
+    // the histogram would make ServeMetrics non-Clone-friendly for the
+    // channel-free API, so we fold the three headline numbers into the
+    // struct by extension below.
+    LAT_P50.with(|c| c.set(lat.percentile(50.0)));
+    LAT_P95.with(|c| c.set(lat.percentile(95.0)));
+    LAT_P99.with(|c| c.set(lat.percentile(99.0)));
+    m
+}
+
+thread_local! {
+    static LAT_P50: std::cell::Cell<f64> = const { std::cell::Cell::new(f64::NAN) };
+    static LAT_P95: std::cell::Cell<f64> = const { std::cell::Cell::new(f64::NAN) };
+    static LAT_P99: std::cell::Cell<f64> = const { std::cell::Cell::new(f64::NAN) };
+}
+
+/// Latency percentiles of the last `run_server` call on this thread.
+pub fn last_latency_percentiles() -> (f64, f64, f64) {
+    (
+        LAT_P50.with(|c| c.get()),
+        LAT_P95.with(|c| c.get()),
+        LAT_P99.with(|c| c.get()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Perturbation;
+
+    #[test]
+    fn overlay_applies_perturbations() {
+        let state = ModelState {
+            features: Dense::zeros(4, 3),
+            s: Dense::eye(4),
+            w1: Dense::zeros(3, 2),
+            w2: Dense::zeros(2, 2),
+        };
+        let batch = Batch {
+            requests: vec![InferenceRequest {
+                id: 0,
+                query_nodes: vec![1],
+                perturbations: vec![Perturbation {
+                    node: 2,
+                    features: vec![1.0, 2.0, 3.0],
+                }],
+                submitted: Instant::now(),
+            }],
+        };
+        let f = state.overlay(&batch);
+        assert_eq!(f.row(2), &[1.0, 2.0, 3.0]);
+        assert_eq!(f.row(1), &[0.0, 0.0, 0.0]);
+        // base untouched
+        assert_eq!(state.features.row(2), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "perturbation width mismatch")]
+    fn overlay_rejects_bad_width() {
+        let state = ModelState {
+            features: Dense::zeros(2, 3),
+            s: Dense::eye(2),
+            w1: Dense::zeros(3, 1),
+            w2: Dense::zeros(1, 1),
+        };
+        let batch = Batch {
+            requests: vec![InferenceRequest {
+                id: 0,
+                query_nodes: vec![],
+                perturbations: vec![Perturbation {
+                    node: 0,
+                    features: vec![1.0],
+                }],
+                submitted: Instant::now(),
+            }],
+        };
+        state.overlay(&batch);
+    }
+}

@@ -1,0 +1,142 @@
+//! Online GCN-ABFT verification of runtime outputs.
+//!
+//! Every accelerator pass returns, alongside the logits, the per-layer
+//! fused predicted checksums (`s_c·H·w_r`, computed in-graph) and the
+//! in-graph actual checksums. The coordinator checks:
+//!
+//! 1. per layer: `|pred[ℓ] − actual[ℓ]| ≤ τ·scale` — the GCN-ABFT check
+//!    proper, covering the accelerator's matmul datapath;
+//! 2. end-to-end: `|pred[1] − Σ logits(host)| ≤ τ·scale` — re-summing the
+//!    logits *after* they crossed the runtime boundary extends coverage
+//!    to transfer/memory corruption of the response payload.
+//!
+//! The XLA data path is f32, so τ here is a relative tolerance sized to
+//! f32 accumulation noise (default 1e-3 relative) — unlike the f64
+//! fault-injection engine where the paper's absolute thresholds apply
+//! (DESIGN.md §6).
+
+use crate::runtime::GcnOutputs;
+
+/// Verification policy for the f32 serving path.
+#[derive(Debug, Clone, Copy)]
+pub struct ServePolicy {
+    /// Relative tolerance: a check fires when
+    /// `|pred − actual| > rel_tol · max(1, |actual|)`.
+    pub rel_tol: f64,
+}
+
+impl Default for ServePolicy {
+    fn default() -> Self {
+        Self { rel_tol: 1e-3 }
+    }
+}
+
+/// Result of verifying one accelerator pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyReport {
+    /// Per-layer in-graph check residuals (relative).
+    pub layer_residuals: Vec<f64>,
+    /// Host-side logits checksum residual (relative).
+    pub host_residual: f64,
+    /// Overall verdict.
+    pub ok: bool,
+}
+
+impl ServePolicy {
+    fn fires(&self, predicted: f64, actual: f64) -> bool {
+        let scale = actual.abs().max(1.0);
+        !((predicted - actual).abs() <= self.rel_tol * scale)
+    }
+
+    fn residual(&self, predicted: f64, actual: f64) -> f64 {
+        let scale = actual.abs().max(1.0);
+        (predicted - actual).abs() / scale
+    }
+
+    /// Verify one pass.
+    pub fn verify(&self, out: &GcnOutputs) -> VerifyReport {
+        let mut ok = true;
+        let mut layer_residuals = Vec::with_capacity(out.predicted.len());
+        for (p, a) in out.predicted.iter().zip(&out.actual) {
+            layer_residuals.push(self.residual(*p as f64, *a as f64));
+            if self.fires(*p as f64, *a as f64) {
+                ok = false;
+            }
+        }
+        // Host-side re-sum of the logits against the final layer's
+        // prediction (f64 accumulation host-side).
+        let host_sum: f64 = out.logits.data().iter().map(|&x| x as f64).sum();
+        let pred_last = *out.predicted.last().unwrap_or(&0.0) as f64;
+        let host_residual = self.residual(pred_last, host_sum);
+        if self.fires(pred_last, host_sum) {
+            ok = false;
+        }
+        VerifyReport {
+            layer_residuals,
+            host_residual,
+            ok,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dense;
+
+    fn clean_outputs() -> GcnOutputs {
+        let logits = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        GcnOutputs {
+            predicted: vec![5.0, 10.0],
+            actual: vec![5.0, 10.0],
+            logits,
+        }
+    }
+
+    #[test]
+    fn clean_pass_verifies() {
+        let r = ServePolicy::default().verify(&clean_outputs());
+        assert!(r.ok, "{r:?}");
+        assert!(r.layer_residuals.iter().all(|&x| x < 1e-6));
+        assert!(r.host_residual < 1e-6);
+    }
+
+    #[test]
+    fn layer_mismatch_fails() {
+        let mut o = clean_outputs();
+        o.actual[0] = 5.2;
+        let r = ServePolicy::default().verify(&o);
+        assert!(!r.ok);
+    }
+
+    #[test]
+    fn host_corruption_detected() {
+        let mut o = clean_outputs();
+        // Corrupt a logit after the in-graph checksums were computed:
+        // in-graph pred/actual still agree, but the host re-sum breaks.
+        o.logits.set(0, 0, 100.0);
+        let r = ServePolicy::default().verify(&o);
+        assert!(!r.ok);
+        assert!(r.host_residual > 0.5);
+    }
+
+    #[test]
+    fn tolerance_scales_with_magnitude() {
+        let p = ServePolicy { rel_tol: 1e-3 };
+        let logits = Dense::from_vec(1, 1, vec![10_000.0]);
+        let o = GcnOutputs {
+            predicted: vec![0.0, 10_000.0],
+            actual: vec![0.0, 10_003.0], // 3e-4 relative — inside tol
+            logits,
+        };
+        let r = p.verify(&o);
+        assert!(r.ok, "{r:?}");
+    }
+
+    #[test]
+    fn nan_outputs_fail() {
+        let mut o = clean_outputs();
+        o.actual[1] = f32::NAN;
+        assert!(!ServePolicy::default().verify(&o).ok);
+    }
+}

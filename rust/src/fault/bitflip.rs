@@ -1,0 +1,112 @@
+//! Single-bit flips in arithmetic results — the paper's fault model
+//! (§IV-A): "we introduce random single-bit flips into the results of
+//! arithmetic operations within matrix multiplication (multiply and add)
+//! or checksum accumulation, at randomly selected time points. The
+//! affected arithmetic operations for matrix multiplications involve
+//! single-precision floats, while checksum accumulation uses
+//! double-precision floats. All bits of every arithmetic operation output
+//! can be flipped with equal probability."
+
+/// Flip bit `bit` (0 = LSB) of the **f32 image** of a data-path value.
+///
+/// The engine's baseline arithmetic is f64 (so the fault-free residual is
+/// pure f64 rounding — DESIGN.md §6); the accelerator's data path is f32.
+/// The fault is therefore applied to the value as the accelerator would
+/// hold it: round to f32, flip one of its 32 bits, and carry the *delta*
+/// forward. Preserving only the delta (rather than the re-rounded value)
+/// keeps a faulty run bit-identical to the golden run everywhere except
+/// the injected corruption.
+#[inline]
+pub fn flip_f32_image(v: f64, bit: u32) -> f64 {
+    debug_assert!(bit < 32);
+    let v32 = v as f32;
+    let flipped = f32::from_bits(v32.to_bits() ^ (1u32 << bit));
+    v + (flipped as f64 - v32 as f64)
+}
+
+/// Flip bit `bit` (0 = LSB) of an f64 checksum-accumulator value.
+#[inline]
+pub fn flip_f64(v: f64, bit: u32) -> f64 {
+    debug_assert!(bit < 64);
+    f64::from_bits(v.to_bits() ^ (1u64 << bit))
+}
+
+/// Which datapath a fault landed in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// fp32 multiply result in a matmul.
+    DataMul,
+    /// fp32 accumulate result in a matmul.
+    DataAdd,
+    /// fp64 checksum-accumulation result.
+    ChecksumAcc,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_image_flip_changes_value() {
+        let v = 3.25f64;
+        for bit in [0u32, 10, 22, 23, 30, 31] {
+            let f = flip_f32_image(v, bit);
+            assert_ne!(f, v, "bit {bit} produced no change");
+        }
+    }
+
+    #[test]
+    fn f32_image_flip_delta_matches_f32_semantics() {
+        let v = 1.0f64;
+        // Sign bit: 1.0 -> -1.0, delta -2.
+        assert_eq!(flip_f32_image(v, 31), -1.0);
+        // Mantissa LSB of 1.0f32: delta = 2^-23.
+        let d = flip_f32_image(v, 0) - v;
+        assert!((d - 2f64.powi(-23)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_flip_is_involution_for_mantissa_and_sign() {
+        // Applying the same flip twice to an exact-f32 value restores it,
+        // for flips whose delta stays within f64's relative range of the
+        // original (mantissa + sign bits). Exponent flips produce huge
+        // deltas whose round trip loses the original — acceptable, since
+        // the fault model never needs to "un-flip".
+        let v = 7.5f64; // representable exactly in f32
+        for bit in (0..23).chain([31]) {
+            let once = flip_f32_image(v, bit);
+            let twice = flip_f32_image(once, bit);
+            assert!(
+                (twice - v).abs() < 1e-6,
+                "bit {bit}: {v} -> {once} -> {twice}"
+            );
+        }
+    }
+
+    #[test]
+    fn f64_flip_exact_involution() {
+        let v = -123.456f64;
+        for bit in 0..64 {
+            let once = flip_f64(v, bit);
+            assert_ne!(once.to_bits(), v.to_bits());
+            assert_eq!(flip_f64(once, bit).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn exponent_flip_can_produce_nonfinite() {
+        // 1.5f32 has exponent 0111_1111; setting bit 30 makes it
+        // 1111_1111 → NaN (non-zero mantissa), which must propagate.
+        let v = 1.5f64;
+        let f = flip_f32_image(v, 30);
+        assert!(!f.is_finite(), "expected non-finite, got {f}");
+    }
+
+    #[test]
+    fn low_mantissa_flip_is_small() {
+        let v = 100.0f64;
+        let d = (flip_f32_image(v, 0) - v).abs();
+        // ulp of 100f32 is 2^-23 * 2^6 ≈ 7.6e-6
+        assert!(d > 0.0 && d < 1e-4, "delta {d}");
+    }
+}

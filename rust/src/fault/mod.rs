@@ -1,0 +1,10 @@
+//! Fault injection: single-bit flips in arithmetic results, fault plans
+//! over the op timeline, and the campaign runner behind Table I.
+
+pub mod bitflip;
+pub mod campaign;
+pub mod plan;
+
+pub use bitflip::{flip_f32_image, flip_f64, FaultSite};
+pub use campaign::{run_campaigns, CampaignConfig, CampaignReport, Tally};
+pub use plan::{FaultPlan, InjectHook, PlannedFault};

@@ -1,0 +1,248 @@
+//! Fault plans and the injecting execution hook.
+//!
+//! A plan schedules one or more bit flips at absolute positions on the
+//! layer-execution op timeline (every data-path and checker-path result,
+//! in program order). Uniform sampling over the timeline reproduces the
+//! paper's premise that "faults are more likely to occur during the matrix
+//! multiplication step that lasts longer" (§IV-A).
+
+use super::bitflip::{flip_f32_image, flip_f64, FaultSite};
+use crate::tensor::instrumented::ExecHook;
+use crate::util::rng::Pcg64;
+
+/// One scheduled bit flip.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannedFault {
+    /// Absolute index on the op timeline (0-based).
+    pub op_index: u64,
+    /// Bit to flip if the op is a data-path f32 result (0..32).
+    pub bit32: u32,
+    /// Bit to flip if the op is a checker-path f64 result (0..64).
+    pub bit64: u32,
+}
+
+/// A set of faults for one campaign, sorted by op index.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub faults: Vec<PlannedFault>,
+}
+
+impl FaultPlan {
+    /// Sample `k` distinct op indices uniformly from `[0, total_ops)`,
+    /// each with an independently uniform bit choice.
+    pub fn sample(rng: &mut Pcg64, total_ops: u64, k: usize) -> Self {
+        assert!(total_ops >= k as u64, "timeline shorter than fault count");
+        let mut idxs = std::collections::BTreeSet::new();
+        while idxs.len() < k {
+            idxs.insert(rng.gen_range(total_ops));
+        }
+        let faults = idxs
+            .into_iter()
+            .map(|op_index| PlannedFault {
+                op_index,
+                bit32: rng.gen_range(32) as u32,
+                bit64: rng.gen_range(64) as u32,
+            })
+            .collect();
+        Self { faults }
+    }
+}
+
+/// Execution hook that injects the planned flips. After the run,
+/// [`InjectHook::hits`] reports which site each fault actually landed on
+/// (used for the paper's data-vs-checksum fault-share statistics).
+#[derive(Debug, Clone)]
+pub struct InjectHook {
+    plan: Vec<PlannedFault>,
+    /// Next fault to fire (plan is sorted by op_index).
+    next: usize,
+    /// Global op counter.
+    counter: u64,
+    /// Site actually hit per fired fault.
+    pub hits: Vec<FaultSite>,
+}
+
+impl InjectHook {
+    pub fn new(plan: &FaultPlan) -> Self {
+        Self {
+            plan: plan.faults.clone(),
+            next: 0,
+            counter: 0,
+            hits: Vec::with_capacity(plan.faults.len()),
+        }
+    }
+
+    /// Number of ops seen so far.
+    pub fn ops_seen(&self) -> u64 {
+        self.counter
+    }
+
+    /// True if every planned fault fired.
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.plan.len()
+    }
+
+    /// A fault is due when its scheduled index has been reached
+    /// (`<=` rather than `==` so a deferred fault stays armed).
+    #[inline(always)]
+    fn due(&mut self, value_is_zero: bool) -> Option<PlannedFault> {
+        if self.next < self.plan.len() && self.plan[self.next].op_index <= self.counter {
+            // Defer past exact-zero data values: the paper flips bits of
+            // *stored results*, which are (near-)always nonzero — a flip
+            // on a 0.0 product yields a denormal delta that rounds away
+            // in the accumulator and models nothing physical. The fault
+            // slides to the next op instead.
+            if value_is_zero {
+                return None;
+            }
+            let f = self.plan[self.next];
+            self.next += 1;
+            Some(f)
+        } else {
+            None
+        }
+    }
+}
+
+impl ExecHook for InjectHook {
+    #[inline(always)]
+    fn mul(&mut self, v: f64) -> f64 {
+        let out = match self.due(v as f32 == 0.0) {
+            Some(f) => {
+                self.hits.push(FaultSite::DataMul);
+                flip_f32_image(v, f.bit32)
+            }
+            None => v,
+        };
+        self.counter += 1;
+        out
+    }
+
+    #[inline(always)]
+    fn add(&mut self, v: f64) -> f64 {
+        let out = match self.due(v as f32 == 0.0) {
+            Some(f) => {
+                self.hits.push(FaultSite::DataAdd);
+                flip_f32_image(v, f.bit32)
+            }
+            None => v,
+        };
+        self.counter += 1;
+        out
+    }
+
+    #[inline(always)]
+    fn csum(&mut self, v: f64) -> f64 {
+        let out = match self.due(v == 0.0) {
+            Some(f) => {
+                self.hits.push(FaultSite::ChecksumAcc);
+                flip_f64(v, f.bit64)
+            }
+            None => v,
+        };
+        self.counter += 1;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::instrumented::{matmul_hooked, CountingHook, NopHook};
+    use crate::tensor::{Dense, Dense64};
+
+    #[test]
+    fn plan_sampling_is_sorted_distinct_in_range() {
+        let mut rng = Pcg64::from_seed(1);
+        let p = FaultPlan::sample(&mut rng, 1000, 5);
+        assert_eq!(p.faults.len(), 5);
+        for w in p.faults.windows(2) {
+            assert!(w[0].op_index < w[1].op_index);
+        }
+        for f in &p.faults {
+            assert!(f.op_index < 1000);
+            assert!(f.bit32 < 32);
+            assert!(f.bit64 < 64);
+        }
+    }
+
+    #[test]
+    fn hook_counts_like_counting_hook() {
+        let a = Dense64::from_dense(&Dense::from_fn(5, 4, |r, c| (r + c) as f32));
+        let b = Dense64::from_dense(&Dense::from_fn(4, 3, |r, c| (r * c) as f32 + 1.0));
+        let mut cnt = CountingHook::default();
+        matmul_hooked(&a, &b, &mut cnt);
+        let plan = FaultPlan {
+            faults: vec![],
+        };
+        let mut inj = InjectHook::new(&plan);
+        matmul_hooked(&a, &b, &mut inj);
+        assert_eq!(inj.ops_seen(), cnt.total());
+        assert!(inj.exhausted());
+        assert!(inj.hits.is_empty());
+    }
+
+    #[test]
+    fn injection_fires_exactly_once_at_scheduled_op() {
+        let a = Dense64::from_dense(&Dense::from_fn(6, 6, |_, _| 1.0));
+        let b = a.clone();
+        let mut nop = NopHook;
+        let golden = matmul_hooked(&a, &b, &mut nop);
+        let plan = FaultPlan {
+            faults: vec![PlannedFault {
+                op_index: 37,
+                bit32: 31, // sign flip: guaranteed visible
+                bit64: 0,
+            }],
+        };
+        let mut inj = InjectHook::new(&plan);
+        let faulty = matmul_hooked(&a, &b, &mut inj);
+        assert!(inj.exhausted());
+        assert_eq!(inj.hits.len(), 1);
+        assert!(!faulty.identical(&golden));
+    }
+
+    #[test]
+    fn site_classification_matches_callback() {
+        let plan = FaultPlan {
+            faults: vec![
+                PlannedFault {
+                    op_index: 0,
+                    bit32: 1,
+                    bit64: 1,
+                },
+                PlannedFault {
+                    op_index: 1,
+                    bit32: 1,
+                    bit64: 1,
+                },
+                PlannedFault {
+                    op_index: 2,
+                    bit32: 1,
+                    bit64: 1,
+                },
+            ],
+        };
+        let mut inj = InjectHook::new(&plan);
+        inj.mul(1.0);
+        inj.add(1.0);
+        inj.csum(1.0);
+        assert_eq!(
+            inj.hits,
+            vec![FaultSite::DataMul, FaultSite::DataAdd, FaultSite::ChecksumAcc]
+        );
+    }
+
+    #[test]
+    fn deterministic_given_same_rng_seed() {
+        let mut r1 = Pcg64::from_seed(9);
+        let mut r2 = Pcg64::from_seed(9);
+        let p1 = FaultPlan::sample(&mut r1, 500, 3);
+        let p2 = FaultPlan::sample(&mut r2, 500, 3);
+        for (a, b) in p1.faults.iter().zip(&p2.faults) {
+            assert_eq!(a.op_index, b.op_index);
+            assert_eq!(a.bit32, b.bit32);
+            assert_eq!(a.bit64, b.bit64);
+        }
+    }
+}

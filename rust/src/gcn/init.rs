@@ -1,0 +1,43 @@
+//! Weight initialization (Glorot/Xavier uniform, the Kipf–Welling GCN
+//! default) from the repo's seeded PRNG.
+
+use crate::tensor::Dense;
+use crate::util::rng::Pcg64;
+
+/// Glorot-uniform init: U(-a, a) with a = sqrt(6 / (fan_in + fan_out)).
+pub fn glorot_uniform(rng: &mut Pcg64, fan_in: usize, fan_out: usize) -> Dense {
+    let a = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+    Dense::from_fn(fan_in, fan_out, |_, _| rng.gen_f32_range(-a, a))
+}
+
+/// Small-normal init (used by ablations).
+pub fn normal(rng: &mut Pcg64, rows: usize, cols: usize, std: f32) -> Dense {
+    Dense::from_fn(rows, cols, |_, _| (rng.gen_normal() as f32) * std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_bounds_and_determinism() {
+        let mut r1 = Pcg64::from_seed(1);
+        let mut r2 = Pcg64::from_seed(1);
+        let w1 = glorot_uniform(&mut r1, 100, 50);
+        let w2 = glorot_uniform(&mut r2, 100, 50);
+        assert_eq!(w1, w2);
+        let a = (6.0f64 / 150.0).sqrt() as f32;
+        assert!(w1.data().iter().all(|&v| v >= -a && v < a));
+        // Not degenerate: mean near zero, spread non-trivial.
+        let mean: f64 = w1.data().iter().map(|&v| v as f64).sum::<f64>() / 5000.0;
+        assert!(mean.abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_scales_with_std() {
+        let mut rng = Pcg64::from_seed(2);
+        let w = normal(&mut rng, 50, 50, 0.1);
+        let var: f64 = w.data().iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / 2500.0;
+        assert!((var.sqrt() - 0.1).abs() < 0.02, "std {}", var.sqrt());
+    }
+}

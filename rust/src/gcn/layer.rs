@@ -1,0 +1,197 @@
+//! A single GCN layer: `H_out = σ(S · H · W)`.
+//!
+//! Two dataflows, as discussed in §II of the paper:
+//! * **combination-first** (`X = H·W`, then `H_out = S·X`) — the preferred
+//!   order in recent accelerators [9] and the default everywhere in this
+//!   repo (lowest arithmetic intensity when `feat_dim > hidden`);
+//! * **aggregation-first** (`H̃ = S·H`, then `H_out = H̃·W`) — provided
+//!   because GCN-ABFT's fused checksum is dataflow-independent (§III) and
+//!   the test suite verifies that.
+
+use crate::sparse::Csr;
+use crate::tensor::{ops, Dense};
+
+/// Layer input: the first layer sees the sparse feature matrix, deeper
+/// layers see the dense activations of the previous layer.
+#[derive(Debug, Clone)]
+pub enum LayerInput {
+    Sparse(Csr),
+    Dense(Dense),
+}
+
+impl LayerInput {
+    pub fn rows(&self) -> usize {
+        match self {
+            LayerInput::Sparse(m) => m.rows(),
+            LayerInput::Dense(m) => m.rows(),
+        }
+    }
+    pub fn cols(&self) -> usize {
+        match self {
+            LayerInput::Sparse(m) => m.cols(),
+            LayerInput::Dense(m) => m.cols(),
+        }
+    }
+    /// Nonzero count (dense inputs count every element, matching how the
+    /// accelerator would schedule a dense operand).
+    pub fn nnz(&self) -> usize {
+        match self {
+            LayerInput::Sparse(m) => m.nnz(),
+            LayerInput::Dense(m) => m.len(),
+        }
+    }
+    /// `M · v` with the natural engine for the storage format.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        match self {
+            LayerInput::Sparse(m) => m.matvec(v),
+            LayerInput::Dense(m) => ops::matvec_f64(m, v),
+        }
+    }
+    /// Per-column sums (`eᵀM`).
+    pub fn col_sums(&self) -> Vec<f32> {
+        match self {
+            LayerInput::Sparse(m) => m.col_sums(),
+            LayerInput::Dense(m) => m.col_sums(),
+        }
+    }
+    /// `M · B` with the natural engine.
+    pub fn matmul(&self, b: &Dense) -> Dense {
+        match self {
+            LayerInput::Sparse(m) => m.spmm(b),
+            LayerInput::Dense(m) => ops::matmul(m, b),
+        }
+    }
+}
+
+/// Dataflow order for the two matmuls of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    CombinationFirst,
+    AggregationFirst,
+}
+
+/// Activation applied at the end of a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// Final layers emit raw logits.
+    None,
+}
+
+/// One GCN layer's parameters.
+#[derive(Debug, Clone)]
+pub struct GcnLayer {
+    pub weights: Dense,
+    pub activation: Activation,
+}
+
+impl GcnLayer {
+    pub fn new(weights: Dense, activation: Activation) -> Self {
+        Self {
+            weights,
+            activation,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.weights.rows()
+    }
+    pub fn out_dim(&self) -> usize {
+        self.weights.cols()
+    }
+
+    /// Pre-activation output `S·H·W` with the given dataflow (clean
+    /// reference path, no instrumentation). Returns the pre-activation
+    /// matrix — the value ABFT checks (§II-B: "before the application of
+    /// the activation function").
+    pub fn forward_preact(&self, s: &Csr, h: &LayerInput, dataflow: Dataflow) -> Dense {
+        assert_eq!(h.cols(), self.in_dim(), "layer input dim mismatch");
+        assert_eq!(s.cols(), h.rows(), "adjacency/input dim mismatch");
+        match dataflow {
+            Dataflow::CombinationFirst => {
+                let x = h.matmul(&self.weights); // X = H W
+                s.spmm(&x) // H_out = S X
+            }
+            Dataflow::AggregationFirst => {
+                let agg = match h {
+                    LayerInput::Sparse(m) => s.spmm(&m.to_dense()),
+                    LayerInput::Dense(m) => s.spmm(m),
+                };
+                ops::matmul(&agg, &self.weights)
+            }
+        }
+    }
+
+    /// Apply this layer's activation in place.
+    pub fn activate(&self, m: &mut Dense) {
+        if self.activation == Activation::Relu {
+            ops::relu_inplace(m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetId;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Csr, LayerInput, GcnLayer) {
+        let g = DatasetId::Tiny.build(3);
+        let s = g.normalized_adjacency();
+        let mut rng = Pcg64::from_seed(5);
+        let w = crate::gcn::init::glorot_uniform(&mut rng, g.feat_dim(), 8);
+        (
+            s,
+            LayerInput::Sparse(g.features),
+            GcnLayer::new(w, Activation::Relu),
+        )
+    }
+
+    #[test]
+    fn dataflows_agree() {
+        let (s, h, layer) = setup();
+        let comb = layer.forward_preact(&s, &h, Dataflow::CombinationFirst);
+        let agg = layer.forward_preact(&s, &h, Dataflow::AggregationFirst);
+        assert!(
+            comb.max_abs_diff(&agg) < 1e-4,
+            "dataflow order changed the result by {}",
+            comb.max_abs_diff(&agg)
+        );
+    }
+
+    #[test]
+    fn output_shape() {
+        let (s, h, layer) = setup();
+        let out = layer.forward_preact(&s, &h, Dataflow::CombinationFirst);
+        assert_eq!(out.shape(), (64, 8));
+    }
+
+    #[test]
+    fn relu_applied() {
+        let (s, h, layer) = setup();
+        let mut out = layer.forward_preact(&s, &h, Dataflow::CombinationFirst);
+        layer.activate(&mut out);
+        assert!(out.data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn dense_input_layer() {
+        let (s, _, _) = setup();
+        let mut rng = Pcg64::from_seed(6);
+        let h = LayerInput::Dense(crate::gcn::init::normal(&mut rng, 64, 8, 0.5));
+        let w = crate::gcn::init::glorot_uniform(&mut rng, 8, 4);
+        let layer = GcnLayer::new(w, Activation::None);
+        let out = layer.forward_preact(&s, &h, Dataflow::CombinationFirst);
+        assert_eq!(out.shape(), (64, 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "input dim mismatch")]
+    fn dim_mismatch_panics() {
+        let (s, h, _) = setup();
+        let w = Dense::zeros(3, 4); // wrong in_dim
+        let layer = GcnLayer::new(w, Activation::None);
+        layer.forward_preact(&s, &h, Dataflow::CombinationFirst);
+    }
+}

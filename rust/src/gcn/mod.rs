@@ -1,0 +1,11 @@
+//! GCN substrate: layers, models, initialization, and a tiny trainer used
+//! to produce meaningful class margins for fault-criticality analysis.
+
+pub mod init;
+pub mod layer;
+pub mod model;
+pub mod train;
+
+pub use layer::{Activation, Dataflow, GcnLayer, LayerInput};
+pub use model::{ForwardResult, GcnModel};
+pub use train::{train_two_layer, EpochStats, TrainConfig};

@@ -1,0 +1,155 @@
+//! Multi-layer GCN model: the paper's workload is the canonical 2-layer
+//! node-classification GCN (`softmax(S·relu(S·H·W¹)·W²)`), but the model
+//! container supports arbitrary depth.
+
+use super::init::glorot_uniform;
+use super::layer::{Activation, Dataflow, GcnLayer, LayerInput};
+use crate::graph::Graph;
+use crate::sparse::Csr;
+use crate::tensor::{ops, Dense};
+use crate::util::rng::Pcg64;
+
+/// A GCN model: normalized adjacency + a stack of layers.
+#[derive(Debug, Clone)]
+pub struct GcnModel {
+    pub adjacency: Csr,
+    pub layers: Vec<GcnLayer>,
+}
+
+/// Result of a full forward pass.
+#[derive(Debug, Clone)]
+pub struct ForwardResult {
+    /// Final pre-activation logits (N × num_classes).
+    pub logits: Dense,
+    /// Pre-activation output of every layer (for checker tests).
+    pub preacts: Vec<Dense>,
+}
+
+impl GcnModel {
+    /// Build a 2-layer model for a dataset graph with Glorot weights.
+    pub fn two_layer(graph: &Graph, hidden: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::from_seed(seed);
+        let adjacency = graph.normalized_adjacency();
+        let layers = vec![
+            GcnLayer::new(
+                glorot_uniform(&mut rng, graph.feat_dim(), hidden),
+                Activation::Relu,
+            ),
+            GcnLayer::new(
+                glorot_uniform(&mut rng, hidden, graph.num_classes),
+                Activation::None,
+            ),
+        ];
+        Self { adjacency, layers }
+    }
+
+    /// Build an arbitrary-depth model (`dims = [in, h1, h2, …, out]`).
+    pub fn with_dims(graph: &Graph, dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        assert_eq!(dims[0], graph.feat_dim(), "dims[0] must be feat_dim");
+        let mut rng = Pcg64::from_seed(seed);
+        let adjacency = graph.normalized_adjacency();
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let act = if i + 2 == dims.len() {
+                    Activation::None
+                } else {
+                    Activation::Relu
+                };
+                GcnLayer::new(glorot_uniform(&mut rng, w[0], w[1]), act)
+            })
+            .collect();
+        Self { adjacency, layers }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Clean (uninstrumented) forward pass. This is the golden run used as
+    /// ground truth for fault-criticality classification.
+    pub fn forward(&self, features: &Csr, dataflow: Dataflow) -> ForwardResult {
+        let mut preacts = Vec::with_capacity(self.layers.len());
+        let mut input = LayerInput::Sparse(features.clone());
+        for layer in &self.layers {
+            let pre = layer.forward_preact(&self.adjacency, &input, dataflow);
+            preacts.push(pre.clone());
+            let mut act = pre;
+            layer.activate(&mut act);
+            input = LayerInput::Dense(act);
+        }
+        let logits = match input {
+            LayerInput::Dense(d) => d,
+            LayerInput::Sparse(_) => unreachable!("model has at least one layer"),
+        };
+        ForwardResult { logits, preacts }
+    }
+
+    /// Predicted class per node.
+    pub fn predict(&self, features: &Csr, dataflow: Dataflow) -> Vec<usize> {
+        ops::argmax_rows(&self.forward(features, dataflow).logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetId;
+
+    #[test]
+    fn two_layer_shapes() {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        let fr = m.forward(&g.features, Dataflow::CombinationFirst);
+        assert_eq!(fr.logits.shape(), (64, 4));
+        assert_eq!(fr.preacts.len(), 2);
+        assert_eq!(fr.preacts[0].shape(), (64, 8));
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        let a = m.forward(&g.features, Dataflow::CombinationFirst);
+        let b = m.forward(&g.features, Dataflow::CombinationFirst);
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn dataflow_equivalence_full_model() {
+        let g = DatasetId::Tiny.build(2);
+        let m = GcnModel::two_layer(&g, 8, 3);
+        let comb = m.forward(&g.features, Dataflow::CombinationFirst);
+        let agg = m.forward(&g.features, Dataflow::AggregationFirst);
+        assert!(comb.logits.max_abs_diff(&agg.logits) < 1e-4);
+    }
+
+    #[test]
+    fn deep_model() {
+        let g = DatasetId::Tiny.build(4);
+        let m = GcnModel::with_dims(&g, &[32, 16, 8, 4], 5);
+        assert_eq!(m.num_layers(), 3);
+        assert_eq!(m.layers[0].activation, Activation::Relu);
+        assert_eq!(m.layers[2].activation, Activation::None);
+        let fr = m.forward(&g.features, Dataflow::CombinationFirst);
+        assert_eq!(fr.logits.shape(), (64, 4));
+    }
+
+    #[test]
+    fn predictions_in_range() {
+        let g = DatasetId::Tiny.build(5);
+        let m = GcnModel::two_layer(&g, 8, 6);
+        let preds = m.predict(&g.features, Dataflow::CombinationFirst);
+        assert_eq!(preds.len(), 64);
+        assert!(preds.iter().all(|&p| p < 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "dims[0] must be feat_dim")]
+    fn wrong_input_dim_panics() {
+        let g = DatasetId::Tiny.build(0);
+        GcnModel::with_dims(&g, &[99, 4], 0);
+    }
+}

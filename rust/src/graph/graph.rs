@@ -1,0 +1,122 @@
+//! Graph container: topology + node features + labels, plus the derived
+//! normalized adjacency used by GCN layers.
+
+use crate::sparse::{normalized_adjacency, Csr};
+
+/// A node-classification graph dataset instance.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Human-readable name ("cora", "citeseer", …).
+    pub name: String,
+    /// Number of nodes.
+    pub num_nodes: usize,
+    /// Undirected edge list (deduplicated, u < v canonical order).
+    pub edges: Vec<(usize, usize)>,
+    /// Sparse node features, `num_nodes × feat_dim`.
+    pub features: Csr,
+    /// Class label per node.
+    pub labels: Vec<usize>,
+    /// Number of classes.
+    pub num_classes: usize,
+}
+
+impl Graph {
+    /// Feature dimensionality.
+    pub fn feat_dim(&self) -> usize {
+        self.features.cols()
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the GCN propagation matrix `S = D^{-1/2}(A+I)D^{-1/2}`.
+    pub fn normalized_adjacency(&self) -> Csr {
+        normalized_adjacency(self.num_nodes, &self.edges)
+    }
+
+    /// nnz of `S` (each undirected edge contributes 2 plus N self-loops,
+    /// minus any explicit self-loop duplicates).
+    pub fn adjacency_nnz(&self) -> usize {
+        self.normalized_adjacency().nnz()
+    }
+
+    /// Basic structural sanity checks; returns an error string on the
+    /// first violation (used by tests and dataset loaders).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.labels.len() != self.num_nodes {
+            return Err(format!(
+                "labels len {} != num_nodes {}",
+                self.labels.len(),
+                self.num_nodes
+            ));
+        }
+        if self.features.rows() != self.num_nodes {
+            return Err(format!(
+                "feature rows {} != num_nodes {}",
+                self.features.rows(),
+                self.num_nodes
+            ));
+        }
+        for &(u, v) in &self.edges {
+            if u >= self.num_nodes || v >= self.num_nodes {
+                return Err(format!("edge ({u},{v}) out of bounds"));
+            }
+        }
+        if let Some(&l) = self.labels.iter().find(|&&l| l >= self.num_classes) {
+            return Err(format!("label {l} >= num_classes {}", self.num_classes));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csr;
+
+    fn tiny() -> Graph {
+        Graph {
+            name: "tiny".into(),
+            num_nodes: 3,
+            edges: vec![(0, 1), (1, 2)],
+            features: Csr::from_coo(3, 4, vec![(0, 0, 1.), (1, 2, 1.), (2, 3, 1.)]),
+            labels: vec![0, 1, 0],
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let g = tiny();
+        assert_eq!(g.feat_dim(), 4);
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn adjacency_shape_and_nnz() {
+        let g = tiny();
+        let s = g.normalized_adjacency();
+        assert_eq!(s.shape(), (3, 3));
+        // path graph: 3 self loops + 2*2 edge entries = 7
+        assert_eq!(s.nnz(), 7);
+        assert_eq!(g.adjacency_nnz(), 7);
+    }
+
+    #[test]
+    fn validation_catches_errors() {
+        let mut g = tiny();
+        g.labels = vec![0, 1];
+        assert!(g.validate().is_err());
+
+        let mut g = tiny();
+        g.edges.push((0, 9));
+        assert!(g.validate().is_err());
+
+        let mut g = tiny();
+        g.labels[0] = 5;
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Graph substrate: dataset container, synthetic generator, and the
+//! paper's four evaluation dataset specs.
+
+pub mod datasets;
+pub mod graph;
+pub mod synth;
+
+pub use datasets::DatasetId;
+pub use graph::Graph;
+pub use synth::{generate, SynthSpec};

@@ -1,0 +1,306 @@
+//! `gcn-abft` — CLI for the GCN-ABFT reproduction.
+//!
+//! Subcommands (per-experiment index in DESIGN.md §8):
+//! * `table1`  — fault-injection campaign sweep (paper Table I);
+//! * `table2`  — operation-count accounting (paper Table II);
+//! * `fig3`    — phase-runtime split (paper Fig. 3);
+//! * `serve`   — end-to-end serving demo: PJRT/XLA inference with online
+//!   GCN-ABFT verification (requires `make artifacts`);
+//! * `train`   — train the synthetic workloads and print the curves;
+//! * `info`    — dataset statistics.
+
+use gcn_abft::graph::DatasetId;
+use gcn_abft::report::{self, ExperimentOpts};
+use gcn_abft::util::cli::{Args, Spec};
+use gcn_abft::util::json::Json;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd.as_str() {
+        "table1" => cmd_table1(rest),
+        "table2" => cmd_table2(rest),
+        "fig3" => cmd_fig3(rest),
+        "serve" => cmd_serve(rest),
+        "train" => cmd_train(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand: {other}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "gcn-abft — low-cost online error checking for GCNs (paper reproduction)
+
+USAGE: gcn-abft <subcommand> [options]
+
+SUBCOMMANDS
+  table1   fault-detection accuracy sweep (paper Table I)
+           --datasets cora,citeseer,pubmed,nell|tiny  --campaigns N (500)
+           --faults K (1)  --seed S (7)  --scale F (dataset scale, 1.0)
+           --threads T  --train-epochs E (20)  --json
+  table2   operation counts for executing + validating (paper Table II)
+           --datasets ...  --seed S  --scale F  --json
+  fig3     runtime split across the two matmul phases (paper Fig. 3)
+           --datasets ...  --seed S  --scale F  --reps R (5)
+  serve    serve inference with online GCN-ABFT verification over the
+           AOT XLA artifacts (build them with `make artifacts`)
+           --dataset tiny|cora|citeseer  --requests N (64)  --batch B (8)
+           --workers W (2)  --artifacts DIR (artifacts)  --inject-every K
+  train    train the synthetic 2-layer GCNs, print loss/accuracy curves
+           --datasets ...  --epochs E (30)  --seed S
+  info     dataset statistics (nodes/edges/features/classes/nnz)
+"
+    );
+}
+
+fn common_opts(a: &Args) -> Result<ExperimentOpts, String> {
+    let names = a.get_list("datasets", &["cora", "citeseer", "pubmed", "nell"]);
+    let mut datasets = Vec::new();
+    for n in &names {
+        match DatasetId::parse(n) {
+            Some(d) => datasets.push(d),
+            None => return Err(format!("unknown dataset: {n}")),
+        }
+    }
+    Ok(ExperimentOpts {
+        datasets,
+        seed: a.get_u64("seed", 7).map_err(|e| e.to_string())?,
+        scale: a.get_f64("scale", 1.0).map_err(|e| e.to_string())?,
+        train_epochs: a
+            .get_usize("train-epochs", 20)
+            .map_err(|e| e.to_string())?,
+    })
+}
+
+fn parse_or_die(rest: Vec<String>, spec: &Spec) -> Args {
+    match Args::parse(rest, spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_table1(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec![
+            "datasets",
+            "campaigns",
+            "faults",
+            "seed",
+            "scale",
+            "threads",
+            "train-epochs",
+        ],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    let opts = match common_opts(&a) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let campaigns = a.get_usize("campaigns", 500).unwrap_or(500);
+    let faults = a.get_usize("faults", 1).unwrap_or(1);
+    let threads = a
+        .get_usize("threads", gcn_abft::fault::campaign::default_threads())
+        .unwrap_or(8);
+    eprintln!(
+        "table1: datasets={:?} campaigns={campaigns} faults={faults} scale={} threads={threads}",
+        opts.datasets.iter().map(|d| d.name()).collect::<Vec<_>>(),
+        opts.scale
+    );
+    let entries = report::run_table1(&opts, campaigns, faults, threads);
+    if a.has_flag("json") {
+        println!("{}", report::experiments::table1_json(&entries).to_pretty());
+    } else {
+        println!("{}", report::render_table1(&entries));
+    }
+    0
+}
+
+fn cmd_table2(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec!["datasets", "seed", "scale", "train-epochs"],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    let opts = match common_opts(&a) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let entries = report::run_table2(&opts);
+    if a.has_flag("json") {
+        println!("{}", report::experiments::table2_json(&entries).to_pretty());
+    } else {
+        println!("{}", report::render_table2(&entries));
+    }
+    0
+}
+
+fn cmd_fig3(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec!["datasets", "seed", "scale", "reps", "train-epochs"],
+        flags: vec![],
+    };
+    let a = parse_or_die(rest, &spec);
+    let opts = match common_opts(&a) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let reps = a.get_usize("reps", 5).unwrap_or(5);
+    let rows = report::run_fig3(&opts, reps);
+    println!("{}", report::render_fig3(&rows));
+    0
+}
+
+fn cmd_train(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec!["datasets", "seed", "scale", "epochs"],
+        flags: vec![],
+    };
+    let a = parse_or_die(rest, &spec);
+    let opts = match common_opts(&a) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let epochs = a.get_usize("epochs", 30).unwrap_or(30);
+    for &id in &opts.datasets {
+        let graph = if opts.scale < 1.0 {
+            id.build_scaled(opts.seed, opts.scale)
+        } else {
+            id.build(opts.seed)
+        };
+        let mut model = gcn_abft::gcn::GcnModel::two_layer(&graph, id.hidden_dim(), opts.seed);
+        let log = gcn_abft::gcn::train_two_layer(
+            &mut model,
+            &graph.features,
+            &graph.labels,
+            &gcn_abft::gcn::TrainConfig {
+                epochs,
+                ..Default::default()
+            },
+        );
+        println!("== {} ==", graph.name);
+        for e in log.iter().step_by((epochs / 10).max(1)) {
+            println!(
+                "  epoch {:>3}  loss {:>8.4}  acc {:>6.2}%",
+                e.epoch,
+                e.loss,
+                e.accuracy * 100.0
+            );
+        }
+        let last = log.last().unwrap();
+        println!(
+            "  final     loss {:>8.4}  acc {:>6.2}%",
+            last.loss,
+            last.accuracy * 100.0
+        );
+    }
+    0
+}
+
+fn cmd_info(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec!["datasets", "seed", "scale"],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    let mut opts = match common_opts(&a) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    opts.train_epochs = 0;
+    let mut t = gcn_abft::report::Table::new(vec![
+        "dataset", "nodes", "edges", "feat dim", "feat nnz", "classes", "S nnz",
+    ]);
+    let mut items = Vec::new();
+    for &id in &opts.datasets {
+        let g = if opts.scale < 1.0 {
+            id.build_scaled(opts.seed, opts.scale)
+        } else {
+            id.build(opts.seed)
+        };
+        t.row(vec![
+            g.name.clone(),
+            g.num_nodes.to_string(),
+            g.num_edges().to_string(),
+            g.feat_dim().to_string(),
+            g.features.nnz().to_string(),
+            g.num_classes.to_string(),
+            g.adjacency_nnz().to_string(),
+        ]);
+        items.push(Json::obj(vec![
+            ("dataset", Json::from(g.name.clone())),
+            ("nodes", Json::from(g.num_nodes)),
+            ("edges", Json::from(g.num_edges())),
+            ("feat_dim", Json::from(g.feat_dim())),
+            ("feat_nnz", Json::from(g.features.nnz())),
+            ("classes", Json::from(g.num_classes)),
+            ("adjacency_nnz", Json::from(g.adjacency_nnz())),
+        ]));
+    }
+    if a.has_flag("json") {
+        println!("{}", Json::Arr(items).to_pretty());
+    } else {
+        println!("{}", t.render());
+    }
+    0
+}
+
+fn cmd_serve(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec![
+            "dataset",
+            "requests",
+            "batch",
+            "workers",
+            "artifacts",
+            "seed",
+            "inject-every",
+        ],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    match gcn_abft::coordinator::serve_cli(&a) {
+        Ok(summary) => {
+            println!("{summary}");
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Analytic operation-count accounting for execution + checking
+//! (regenerates the paper's Table II).
+
+pub mod model;
+
+pub use model::{LayerShape, ModelOps, TableRow};

@@ -1,0 +1,132 @@
+//! Fig. 3 reproduction: runtime split between the two matmul phases of
+//! each GCN layer.
+//!
+//! The paper's point: the first (combination) step dominates each layer's
+//! runtime, so GCN-ABFT's end-of-layer (rather than end-of-phase) error
+//! report costs almost no detection latency. We measure wall-clock of the
+//! two phases on the native engine and report per-phase fractions of the
+//! total 2-layer runtime, mirroring the stacked bars of the figure.
+
+use crate::gcn::GcnModel;
+use crate::sparse::Csr;
+use crate::tensor::{ops, Dense};
+use std::time::Instant;
+
+/// Phase timing for one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPhaseTimes {
+    pub combination_secs: f64,
+    pub aggregation_secs: f64,
+}
+
+/// Full measurement for a 2-layer model.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub dataset: String,
+    pub layers: Vec<LayerPhaseTimes>,
+}
+
+impl Fig3Row {
+    pub fn total_secs(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.combination_secs + l.aggregation_secs)
+            .sum()
+    }
+
+    /// Fraction of total runtime spent in combination (phase 1), summed
+    /// over layers — the paper's headline number per application
+    /// (e.g. ≥ 90 % for PubMed, ≈ 95 % for Nell).
+    pub fn combination_fraction(&self) -> f64 {
+        let comb: f64 = self.layers.iter().map(|l| l.combination_secs).sum();
+        comb / self.total_secs().max(1e-12)
+    }
+
+    /// Per-segment fractions in paper order:
+    /// [comb L1, agg L1, comb L2, agg L2].
+    pub fn segment_fractions(&self) -> Vec<f64> {
+        let total = self.total_secs().max(1e-12);
+        self.layers
+            .iter()
+            .flat_map(|l| [l.combination_secs / total, l.aggregation_secs / total])
+            .collect()
+    }
+}
+
+/// Measure phase times of a model on a dataset (median of `reps` runs).
+pub fn measure(name: &str, model: &GcnModel, features: &Csr, reps: usize) -> Fig3Row {
+    let reps = reps.max(1);
+    let mut all: Vec<Vec<LayerPhaseTimes>> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let mut layers = Vec::with_capacity(model.num_layers());
+        let mut dense_input: Option<Dense> = None;
+        for (i, layer) in model.layers.iter().enumerate() {
+            // Phase 1: combination X = H·W.
+            let t0 = Instant::now();
+            let x = match &dense_input {
+                None => features.spmm(&layer.weights),
+                Some(h) => ops::matmul(h, &layer.weights),
+            };
+            let combination_secs = t0.elapsed().as_secs_f64();
+            // Phase 2: aggregation H_out = S·X.
+            let t1 = Instant::now();
+            let mut out = model.adjacency.spmm(&x);
+            let aggregation_secs = t1.elapsed().as_secs_f64();
+            if i + 1 < model.num_layers() {
+                layer.activate(&mut out);
+                dense_input = Some(out);
+            }
+            layers.push(LayerPhaseTimes {
+                combination_secs,
+                aggregation_secs,
+            });
+        }
+        all.push(layers);
+    }
+    // Median per phase.
+    let num_layers = all[0].len();
+    let med = |mut xs: Vec<f64>| -> f64 {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    let layers = (0..num_layers)
+        .map(|l| LayerPhaseTimes {
+            combination_secs: med(all.iter().map(|r| r[l].combination_secs).collect()),
+            aggregation_secs: med(all.iter().map(|r| r[l].aggregation_secs).collect()),
+        })
+        .collect();
+    Fig3Row {
+        dataset: name.to_string(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetId;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        let row = measure("tiny", &m, &g.features, 3);
+        assert_eq!(row.layers.len(), 2);
+        let sum: f64 = row.segment_fractions().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "fractions sum to {sum}");
+        assert!(row.total_secs() > 0.0);
+    }
+
+    #[test]
+    fn combination_dominates_when_features_are_wide() {
+        // Cora-like shape: F=1433 ≫ h=16 means phase 1 does far more work.
+        let g = DatasetId::Cora.build(0);
+        let m = GcnModel::two_layer(&g, 16, 1);
+        let row = measure("cora", &m, &g.features, 3);
+        assert!(
+            row.combination_fraction() > 0.5,
+            "combination fraction {} unexpectedly small",
+            row.combination_fraction()
+        );
+    }
+}

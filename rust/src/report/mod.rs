@@ -1,0 +1,12 @@
+//! Rendering and orchestration of the paper's evaluation artifacts
+//! (Table I, Table II, Fig. 3).
+
+pub mod experiments;
+pub mod fig3;
+pub mod table;
+
+pub use experiments::{
+    build_workload, render_fig3, render_table1, render_table2, run_fig3, run_table1, run_table2,
+    ExperimentOpts,
+};
+pub use table::Table;

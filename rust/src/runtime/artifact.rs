@@ -1,0 +1,155 @@
+//! Artifact manifest: the cross-language contract between
+//! `python/compile/aot.py` (producer) and the Rust runtime (consumer).
+//!
+//! The manifest records, per model, the exact input shapes the lowered
+//! HLO expects; the runtime validates every buffer against it before
+//! execution so a drift between the Python dataset table and
+//! `graph::datasets` fails loudly instead of producing garbage.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest schema version this runtime understands.
+pub const SUPPORTED_VERSION: i64 = 1;
+
+/// One lowered model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+    pub f: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub flavour: String,
+    pub models: Vec<ModelEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("manifest missing version"))? as i64;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} unsupported (want {SUPPORTED_VERSION})");
+        }
+        let flavour = j
+            .get("flavour")
+            .and_then(|v| v.as_str())
+            .unwrap_or("pallas")
+            .to_string();
+        let models_obj = j
+            .get("models")
+            .and_then(|m| m.entries())
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        let mut models = Vec::new();
+        for (name, entry) in models_obj {
+            let field = |k: &str| -> Result<usize> {
+                entry
+                    .get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("model {name}: missing field {k}"))
+            };
+            models.push(ModelEntry {
+                name: name.clone(),
+                file: entry
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("model {name}: missing file"))?
+                    .to_string(),
+                n: field("n")?,
+                f: field("f")?,
+                hidden: field("hidden")?,
+                classes: field("classes")?,
+            });
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+        Ok(Manifest {
+            flavour,
+            models,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Absolute path of a model's HLO text.
+    pub fn hlo_path(&self, entry: &ModelEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "flavour": "pallas",
+      "models": {
+        "tiny": {"classes": 4, "f": 32, "file": "gcn_tiny.hlo.txt",
+                  "hidden": 8, "n": 64}
+      },
+      "version": 1
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.flavour, "pallas");
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.n, 64);
+        assert_eq!(tiny.classes, 4);
+        assert_eq!(m.hlo_path(tiny), PathBuf::from("/art/gcn_tiny.hlo.txt"));
+        assert!(m.model("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace("\"n\": 64", "\"m\": 64");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+        assert!(Manifest::parse("{}", Path::new("/a")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn agrees_with_rust_dataset_specs() {
+        // The contract check mirrored on the Python side
+        // (tests/test_aot.py::test_dataset_table_matches_rust_side).
+        use crate::graph::DatasetId;
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let tiny = m.model("tiny").unwrap();
+        let spec = DatasetId::Tiny.spec();
+        assert_eq!(tiny.n, spec.num_nodes);
+        assert_eq!(tiny.f, spec.feat_dim);
+        assert_eq!(tiny.classes, spec.num_classes);
+        assert_eq!(tiny.hidden, DatasetId::Tiny.hidden_dim());
+    }
+}

@@ -1,0 +1,122 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `execute`. Text is the interchange format because jax ≥ 0.5 emits
+//! 64-bit instruction ids that this XLA rejects in proto form (see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+use super::artifact::{Manifest, ModelEntry};
+use crate::tensor::Dense;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one model from a manifest.
+    pub fn load_model(&self, manifest: &Manifest, name: &str) -> Result<GcnExecutable> {
+        let entry = manifest
+            .model(name)
+            .with_context(|| format!("model {name:?} not in manifest"))?
+            .clone();
+        let path = manifest.hlo_path(&entry);
+        self.load_hlo(&path, entry)
+    }
+
+    /// Load + compile an HLO-text file with a known shape entry.
+    pub fn load_hlo(&self, path: &Path, entry: ModelEntry) -> Result<GcnExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(GcnExecutable { exe, entry })
+    }
+}
+
+/// Outputs of one GCN forward on the XLA path.
+#[derive(Debug, Clone)]
+pub struct GcnOutputs {
+    /// Logits, N×C.
+    pub logits: Dense,
+    /// Per-layer fused predicted checksums (Eq. 4), length 2.
+    pub predicted: Vec<f32>,
+    /// Per-layer actual checksums accumulated in-graph, length 2.
+    pub actual: Vec<f32>,
+}
+
+/// A compiled 2-layer GCN-ABFT forward for one dataset.
+pub struct GcnExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ModelEntry,
+}
+
+impl GcnExecutable {
+    /// Execute the forward: `(features [N,F], s [N,N], w1 [F,h], w2 [h,C])`
+    /// → logits + per-layer checksums. Shapes are validated against the
+    /// manifest entry before anything is handed to XLA.
+    pub fn run(&self, features: &Dense, s: &Dense, w1: &Dense, w2: &Dense) -> Result<GcnOutputs> {
+        let e = &self.entry;
+        let want = [
+            ("features", features.shape(), (e.n, e.f)),
+            ("s", s.shape(), (e.n, e.n)),
+            ("w1", w1.shape(), (e.f, e.hidden)),
+            ("w2", w2.shape(), (e.hidden, e.classes)),
+        ];
+        for (name, got, expect) in want {
+            if got != expect {
+                bail!(
+                    "{name} shape {got:?} != manifest {expect:?} for model {}",
+                    e.name
+                );
+            }
+        }
+
+        let lit = |d: &Dense| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(d.data())
+                .reshape(&[d.rows() as i64, d.cols() as i64])?)
+        };
+        let inputs = [lit(features)?, lit(s)?, lit(w1)?, lit(w2)?];
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // return_tuple=True → 3-tuple (logits, pred, actual).
+        let (logits_l, pred_l, actual_l) = result.to_tuple3().context("untupling outputs")?;
+        let logits = Dense::from_vec(e.n, e.classes, logits_l.to_vec::<f32>()?);
+        let predicted = pred_l.to_vec::<f32>()?;
+        let actual = actual_l.to_vec::<f32>()?;
+        if predicted.len() != 2 || actual.len() != 2 {
+            bail!(
+                "unexpected checksum arity: pred {} actual {}",
+                predicted.len(),
+                actual.len()
+            );
+        }
+        Ok(GcnOutputs {
+            logits,
+            predicted,
+            actual,
+        })
+    }
+}
+
+// Runtime tests that need built artifacts live in
+// rust/tests/integration_runtime.rs (they skip gracefully when
+// `make artifacts` has not run). Manifest validation is covered in
+// `artifact.rs`.

@@ -1,0 +1,9 @@
+//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python never runs at serving time.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Manifest, ModelEntry};
+pub use client::{GcnExecutable, GcnOutputs, Runtime};

@@ -1,0 +1,304 @@
+//! Compressed Sparse Row matrices.
+//!
+//! The paper's accelerator stores `S` (normalized adjacency) and `H`
+//! (features) in CSR [8]. We mirror that: the combination phase is a
+//! CSR(H)·dense(W) SpMM and the aggregation phase is a CSR(S)·dense(X)
+//! SpMM, so arithmetic-op counts are proportional to nnz — which is what
+//! makes the paper's Table II op model (and the fault-timeline weighting)
+//! come out right.
+
+use crate::tensor::Dense;
+
+/// CSR matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// len rows+1; row r occupies indices[row_ptr[r]..row_ptr[r+1]].
+    row_ptr: Vec<usize>,
+    col_idx: Vec<usize>,
+    values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from COO triplets (row, col, value). Duplicate coordinates are
+    /// summed; zero values are kept out; triplets need not be sorted.
+    pub fn from_coo(rows: usize, cols: usize, mut coo: Vec<(usize, usize, f32)>) -> Self {
+        for &(r, c, _) in &coo {
+            assert!(r < rows && c < cols, "coo entry ({r},{c}) out of bounds");
+        }
+        coo.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // Merge duplicates.
+        let mut merged: Vec<(usize, usize, f32)> = Vec::with_capacity(coo.len());
+        for (r, c, v) in coo {
+            match merged.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+        merged.retain(|&(_, _, v)| v != 0.0);
+
+        let mut row_ptr = vec![0usize; rows + 1];
+        for &(r, _, _) in &merged {
+            row_ptr[r + 1] += 1;
+        }
+        for r in 0..rows {
+            row_ptr[r + 1] += row_ptr[r];
+        }
+        let col_idx = merged.iter().map(|&(_, c, _)| c).collect();
+        let values = merged.iter().map(|&(_, _, v)| v).collect();
+        Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(d: &Dense) -> Self {
+        let mut coo = Vec::new();
+        for r in 0..d.rows() {
+            for c in 0..d.cols() {
+                let v = d.get(r, c);
+                if v != 0.0 {
+                    coo.push((r, c, v));
+                }
+            }
+        }
+        Self::from_coo(d.rows(), d.cols(), coo)
+    }
+
+    /// Materialize to dense.
+    pub fn to_dense(&self) -> Dense {
+        let mut out = Dense::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                out.set(r, self.col_idx[i], self.values[i]);
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+    pub fn values_mut(&mut self) -> &mut [f32] {
+        &mut self.values
+    }
+
+    /// Non-zeros of row r as (col, value) pairs.
+    pub fn row_iter(&self, r: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.row_ptr[r];
+        let hi = self.row_ptr[r + 1];
+        self.col_idx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&c, &v)| (c, v))
+    }
+
+    /// Number of nonzeros in row r.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.row_ptr[r + 1] - self.row_ptr[r]
+    }
+
+    /// SpMM: `self · B` (CSR × dense → dense), f32 data path, matching the
+    /// accelerator's combination/aggregation engines.
+    pub fn spmm(&self, b: &Dense) -> Dense {
+        assert_eq!(
+            self.cols,
+            b.rows(),
+            "spmm shape mismatch: {:?} x {:?}",
+            self.shape(),
+            b.shape()
+        );
+        let n = b.cols();
+        let mut out = Dense::zeros(self.rows, n);
+        for r in 0..self.rows {
+            let lo = self.row_ptr[r];
+            let hi = self.row_ptr[r + 1];
+            let out_row = out.row_mut(r);
+            for i in lo..hi {
+                let v = self.values[i];
+                let b_row = b.row(self.col_idx[i]);
+                for (o, &bx) in out_row.iter_mut().zip(b_row).take(n) {
+                    *o += v * bx;
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-column sums `eᵀM` with f64 accumulation (offline `s_c`).
+    pub fn col_sums(&self) -> Vec<f32> {
+        self.col_sums_f64().into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Per-column sums at full f64 precision — required wherever the
+    /// result participates in checksum comparisons (an f32 round-off of
+    /// `s_c` would put a ~1e-8-relative floor under every residual).
+    pub fn col_sums_f64(&self) -> Vec<f64> {
+        let mut acc = vec![0f64; self.cols];
+        for (&c, &v) in self.col_idx.iter().zip(&self.values) {
+            acc[c] += v as f64;
+        }
+        acc
+    }
+
+    /// Per-row sums `M·e` with f64 accumulation.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                self.row_iter(r)
+                    .map(|(_, v)| v as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    /// Sum of all elements (f64 accumulation).
+    pub fn checksum_f64(&self) -> f64 {
+        self.values.iter().map(|&v| v as f64).sum()
+    }
+
+    /// `M · v` with f64 accumulation.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.cols, "matvec shape mismatch");
+        (0..self.rows)
+            .map(|r| {
+                self.row_iter(r)
+                    .map(|(c, x)| x as f64 * v[c] as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    /// Transpose (CSR → CSR of the transpose).
+    pub fn transpose(&self) -> Csr {
+        let mut coo = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for (c, v) in self.row_iter(r) {
+                coo.push((c, r, v));
+            }
+        }
+        Csr::from_coo(self.cols, self.rows, coo)
+    }
+
+    /// Columns that contain no nonzero at all — the degenerate case in
+    /// which GCN-ABFT can miss a phase-1 fault (§III: an all-zero column of
+    /// `S` nullifies any fault in the corresponding row of `HW`).
+    pub fn zero_columns(&self) -> Vec<usize> {
+        let mut seen = vec![false; self.cols];
+        for &c in &self.col_idx {
+            seen[c] = true;
+        }
+        seen.iter()
+            .enumerate()
+            .filter(|(_, &s)| !s)
+            .map(|(c, _)| c)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        Csr::from_coo(3, 3, vec![(0, 0, 1.), (0, 2, 2.), (2, 0, 3.), (2, 1, 4.)])
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 2), 2.0);
+        assert_eq!(d.get(1, 1), 0.0);
+        assert_eq!(Csr::from_dense(&d), m);
+    }
+
+    #[test]
+    fn duplicates_summed_zeros_dropped() {
+        let m = Csr::from_coo(2, 2, vec![(0, 0, 1.), (0, 0, 2.), (1, 1, 5.), (1, 1, -5.)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.to_dense().get(0, 0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_coo_panics() {
+        Csr::from_coo(2, 2, vec![(2, 0, 1.)]);
+    }
+
+    #[test]
+    fn spmm_matches_dense_matmul() {
+        let m = sample();
+        let b = Dense::from_fn(3, 4, |r, c| (r * 4 + c) as f32 * 0.5 - 1.0);
+        let sparse_out = m.spmm(&b);
+        let dense_out = crate::tensor::ops::matmul(&m.to_dense(), &b);
+        assert!(sparse_out.max_abs_diff(&dense_out) < 1e-6);
+    }
+
+    #[test]
+    fn sums_and_checksum() {
+        let m = sample();
+        assert_eq!(m.col_sums(), vec![4., 4., 2.]);
+        assert_eq!(m.row_sums(), vec![3., 0., 7.]);
+        assert_eq!(m.checksum_f64(), 10.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 3));
+        assert_eq!(t.to_dense(), m.to_dense().transpose());
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn zero_columns_detected() {
+        // column 2 of the transpose sample: row 1 of sample is empty
+        let m = Csr::from_coo(3, 4, vec![(0, 0, 1.), (1, 3, 2.)]);
+        assert_eq!(m.zero_columns(), vec![1, 2]);
+        // sample() touches every column, so none are zero.
+        assert!(sample().zero_columns().is_empty());
+    }
+
+    #[test]
+    fn row_iter_and_nnz() {
+        let m = sample();
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(1), 0);
+        let row2: Vec<_> = m.row_iter(2).collect();
+        assert_eq!(row2, vec![(0, 3.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn abft_identity_on_sparse() {
+        // eᵀ(SB)e == (eᵀS)(Be) with S sparse.
+        let s = sample();
+        let b = Dense::from_fn(3, 3, |r, c| ((r + c) as f32) - 1.5);
+        let out = s.spmm(&b);
+        let lhs = out.checksum_f64();
+        let rhs = crate::tensor::ops::dot_f64(&s.col_sums(), &b.row_sums());
+        assert!((lhs - rhs).abs() < 1e-4);
+    }
+}

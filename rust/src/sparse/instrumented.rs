@@ -1,0 +1,187 @@
+//! Instrumented SpMM: the fault-injectable version of CSR × dense.
+//!
+//! Same hook protocol as [`crate::tensor::instrumented`] — every multiply
+//! result and every accumulate result on the data path is observable, so
+//! the fault-injection timeline covers sparse phases with weight
+//! proportional to `2·nnz·cols`, exactly like the paper's op accounting.
+//! CSR values (f32 storage) are widened to f64 at use; see DESIGN.md §6
+//! for the precision model.
+
+use crate::sparse::Csr;
+use crate::tensor::dense64::Dense64;
+use crate::tensor::instrumented::ExecHook;
+
+/// Instrumented `S · B` (CSR × dense → dense).
+pub fn spmm_hooked<H: ExecHook>(s: &Csr, b: &Dense64, hook: &mut H) -> Dense64 {
+    assert_eq!(
+        s.cols(),
+        b.rows(),
+        "spmm shape mismatch: {:?} x {:?}",
+        s.shape(),
+        b.shape()
+    );
+    let n = b.cols();
+    let mut out = Dense64::zeros(s.rows(), n);
+    for r in 0..s.rows() {
+        let out_row = out.row_mut(r);
+        for (c, v) in s.row_iter(r) {
+            let v = v as f64;
+            let b_row = b.row(c);
+            for j in 0..n {
+                let p = hook.mul(v * b_row[j]);
+                out_row[j] = hook.add(out_row[j] + p);
+            }
+        }
+    }
+    out
+}
+
+/// Instrumented per-column sums of a CSR matrix (checker path):
+/// the online `h_c = eᵀH` computation over sparse features that the
+/// baseline split checker performs on every layer-1 input.
+pub fn csr_col_sums_hooked<H: ExecHook>(m: &Csr, hook: &mut H) -> Vec<f64> {
+    let mut acc = vec![0f64; m.cols()];
+    for r in 0..m.rows() {
+        for (c, v) in m.row_iter(r) {
+            acc[c] = hook.csum(acc[c] + v as f64);
+        }
+    }
+    acc
+}
+
+/// Instrumented `M · v` over CSR (data path): the `H·w_r` check-column
+/// ride-along of Eq. (5) when `H` is sparse — computed by the same MAC
+/// array as the rest of the combination phase, one multiply + one
+/// accumulate per nonzero.
+pub fn csr_matvec_hooked<H: ExecHook>(m: &Csr, v: &[f64], hook: &mut H) -> Vec<f64> {
+    assert_eq!(v.len(), m.cols(), "matvec shape mismatch");
+    (0..m.rows())
+        .map(|r| {
+            let mut acc = 0f64;
+            for (c, x) in m.row_iter(r) {
+                let p = hook.mul(x as f64 * v[c]);
+                acc = hook.add(acc + p);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Instrumented CSR × dense where the dense operand is enhanced with an
+/// extra check column appended logically (avoids materializing `[B | b_r]`):
+/// returns `(S·B, S·b_r)` in one sweep, matching how the accelerator's
+/// aggregation engine would stream the widened operand.
+pub fn spmm_with_check_col_hooked<H: ExecHook>(
+    s: &Csr,
+    b: &Dense64,
+    b_r: &[f64],
+    hook: &mut H,
+) -> (Dense64, Vec<f64>) {
+    assert_eq!(s.cols(), b.rows());
+    assert_eq!(b_r.len(), b.rows());
+    let n = b.cols();
+    let mut out = Dense64::zeros(s.rows(), n);
+    let mut out_col = vec![0f64; s.rows()];
+    for r in 0..s.rows() {
+        let out_row = out.row_mut(r);
+        let oc = &mut out_col[r];
+        for (c, v) in s.row_iter(r) {
+            let v = v as f64;
+            let b_row = b.row(c);
+            for j in 0..n {
+                let p = hook.mul(v * b_row[j]);
+                out_row[j] = hook.add(out_row[j] + p);
+            }
+            let p = hook.mul(v * b_r[c]);
+            *oc = hook.add(*oc + p);
+        }
+    }
+    (out, out_col)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::instrumented::{CountingHook, NopHook};
+    use crate::tensor::Dense;
+
+    fn sample() -> Csr {
+        Csr::from_coo(
+            3,
+            3,
+            vec![(0, 0, 1.), (0, 2, 2.), (1, 1, -1.5), (2, 0, 3.), (2, 1, 4.)],
+        )
+    }
+
+    fn d64(rows: usize, cols: usize, f: impl FnMut(usize, usize) -> f32) -> Dense64 {
+        Dense64::from_dense(&Dense::from_fn(rows, cols, f))
+    }
+
+    #[test]
+    fn hooked_spmm_matches_plain() {
+        let s = sample();
+        let b = d64(3, 5, |r, c| (r * 5 + c) as f32 * 0.3 - 1.0);
+        let mut nop = NopHook;
+        let hooked = spmm_hooked(&s, &b, &mut nop);
+        let plain = s.spmm(&b.to_dense());
+        assert!(hooked.to_dense().max_abs_diff(&plain) < 1e-5);
+    }
+
+    #[test]
+    fn spmm_op_count_is_2_nnz_cols() {
+        let s = sample();
+        let b = Dense64::zeros(3, 7);
+        let mut c = CountingHook::default();
+        spmm_hooked(&s, &b, &mut c);
+        assert_eq!(c.data_ops, 2 * s.nnz() as u64 * 7);
+        assert_eq!(c.checksum_ops, 0);
+    }
+
+    #[test]
+    fn csr_col_sums_hooked_matches_and_counts_nnz() {
+        let s = sample();
+        let mut c = CountingHook::default();
+        let sums = csr_col_sums_hooked(&s, &mut c);
+        let want = s.col_sums();
+        for (g, w) in sums.iter().zip(&want) {
+            assert!((g - *w as f64).abs() < 1e-6);
+        }
+        assert_eq!(c.checksum_ops, s.nnz() as u64);
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense_and_counts() {
+        let s = sample();
+        let v = vec![1.0f64, 2.0, 3.0];
+        let mut c = CountingHook::default();
+        let got = csr_matvec_hooked(&s, &v, &mut c);
+        let d = s.to_dense();
+        for (r, g) in got.iter().enumerate() {
+            let want: f64 = (0..3).map(|j| d.get(r, j) as f64 * v[j]).sum();
+            assert!((g - want).abs() < 1e-12);
+        }
+        assert_eq!(c.data_ops, 2 * s.nnz() as u64);
+    }
+
+    #[test]
+    fn spmm_with_check_col_matches_separate_ops() {
+        let s = sample();
+        let b = d64(3, 4, |r, c| (r + 2 * c) as f32 * 0.5);
+        let b_r = vec![1.0f64, -2.0, 0.5];
+        let mut nop = NopHook;
+        let (out, col) = spmm_with_check_col_hooked(&s, &b, &b_r, &mut nop);
+        let out_sep = spmm_hooked(&s, &b, &mut nop);
+        let col_sep = csr_matvec_hooked(&s, &b_r, &mut nop);
+        assert!(out.max_abs_diff(&out_sep) < 1e-12);
+        for (a, b) in col.iter().zip(&col_sep) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // Fused sweep counts the same ops as the two separate passes.
+        let mut c1 = CountingHook::default();
+        spmm_with_check_col_hooked(&s, &b, &b_r, &mut c1);
+        let mut c2 = CountingHook::default();
+        spmm_hooked(&s, &b, &mut c2);
+        csr_matvec_hooked(&s, &b_r, &mut c2);
+        assert_eq!(c1.data_ops, c2.data_ops);
+    }
+}

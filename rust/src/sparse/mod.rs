@@ -1,0 +1,9 @@
+//! Sparse matrix substrate (CSR), graph normalization, and the
+//! fault-injectable SpMM engine.
+
+pub mod csr;
+pub mod instrumented;
+pub mod norm;
+
+pub use csr::Csr;
+pub use norm::normalized_adjacency;

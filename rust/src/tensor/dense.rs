@@ -1,0 +1,269 @@
+//! Dense row-major matrices.
+//!
+//! The data path of the simulated accelerator is fp32 (matching the paper's
+//! "single-precision floats for matrix multiplication"); checksum
+//! accumulation is fp64 (`abft::checksum`). `Dense` is deliberately simple —
+//! a shape + contiguous `Vec<f32>` — because the fault-injection engine
+//! needs full control over every multiply-accumulate.
+
+use std::fmt;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Dense {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Dense {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Dense({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 64 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Dense {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from a row-major data vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "data length {} != {rows}x{cols}",
+            data.len()
+        );
+        Self { rows, cols, data }
+    }
+
+    /// Build by evaluating `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose into a new matrix.
+    pub fn transpose(&self) -> Dense {
+        let mut out = Dense::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Append a column (used to enhance `W` with `w_r`). Returns a new
+    /// `(rows, cols+1)` matrix.
+    pub fn with_appended_col(&self, col: &[f32]) -> Dense {
+        assert_eq!(col.len(), self.rows, "appended column length mismatch");
+        let mut out = Dense::zeros(self.rows, self.cols + 1);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.set(r, self.cols, col[r]);
+        }
+        out
+    }
+
+    /// Append a row (used to enhance `H` with `h_c` in the baseline split
+    /// checker). Returns a new `(rows+1, cols)` matrix.
+    pub fn with_appended_row(&self, row: &[f32]) -> Dense {
+        assert_eq!(row.len(), self.cols, "appended row length mismatch");
+        let mut data = self.data.clone();
+        data.extend_from_slice(row);
+        Dense::from_vec(self.rows + 1, self.cols, data)
+    }
+
+    /// Slice out the top-left `(rows, cols)` block.
+    pub fn block(&self, rows: usize, cols: usize) -> Dense {
+        assert!(rows <= self.rows && cols <= self.cols);
+        Dense::from_fn(rows, cols, |r, c| self.get(r, c))
+    }
+
+    /// Column `c` as a vector.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Sum of all elements, accumulated in f64 (the "actual checksum" of
+    /// ABFT — accumulation precision matches the paper's fp64 checksums).
+    pub fn checksum_f64(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Per-column sums (`eᵀM`), f64 accumulation, returned as f32 check row.
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut acc = vec![0f64; self.cols];
+        for r in 0..self.rows {
+            for (a, &x) in acc.iter_mut().zip(self.row(r)) {
+                *a += x as f64;
+            }
+        }
+        acc.into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Per-row sums (`M·e`), f64 accumulation, returned as f32 check column.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|&x| x as f64).sum::<f64>() as f32)
+            .collect()
+    }
+
+    /// Max |a - b| over all elements (matrices must be the same shape).
+    pub fn max_abs_diff(&self, other: &Dense) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Dense::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn bad_shape_panics() {
+        Dense::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let i = Dense::eye(3);
+        assert_eq!(i.get(1, 1), 1.0);
+        assert_eq!(i.get(0, 1), 0.0);
+        let m = Dense::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn append_col_row() {
+        let m = Dense::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let mc = m.with_appended_col(&[9., 8.]);
+        assert_eq!(mc.shape(), (2, 3));
+        assert_eq!(mc.get(0, 2), 9.0);
+        assert_eq!(mc.get(1, 0), 3.0);
+        let mr = m.with_appended_row(&[7., 6.]);
+        assert_eq!(mr.shape(), (3, 2));
+        assert_eq!(mr.get(2, 0), 7.0);
+    }
+
+    #[test]
+    fn sums_and_checksum() {
+        let m = Dense::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.col_sums(), vec![5., 7., 9.]);
+        assert_eq!(m.row_sums(), vec![6., 15.]);
+        assert_eq!(m.checksum_f64(), 21.0);
+    }
+
+    #[test]
+    fn checksum_identity_col_then_total() {
+        // Σ col_sums == Σ row_sums == checksum
+        let m = Dense::from_fn(7, 5, |r, c| (r * 5 + c) as f32 * 0.25 - 3.0);
+        let by_cols: f64 = m.col_sums().iter().map(|&x| x as f64).sum();
+        let by_rows: f64 = m.row_sums().iter().map(|&x| x as f64).sum();
+        assert!((by_cols - m.checksum_f64()).abs() < 1e-4);
+        assert!((by_rows - m.checksum_f64()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn block_extraction() {
+        let m = Dense::from_fn(4, 4, |r, c| (r * 4 + c) as f32);
+        let b = m.block(2, 3);
+        assert_eq!(b.shape(), (2, 3));
+        assert_eq!(b.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Dense::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Dense::from_vec(1, 3, vec![1., 2.5, 3.]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,186 @@
+//! f64 dense matrices for the instrumented (fault-injection) engine.
+//!
+//! The fault-injection simulation runs its *baseline* arithmetic in f64 so
+//! that the predicted-vs-actual checksum residual of a fault-free run is
+//! pure rounding noise at the 1e-13 relative level — far below the
+//! paper's tightest threshold (1e-7). Injected faults then flip one bit of
+//! the **f32 image** of a matmul result (the accelerator's single-precision
+//! data path) or of the f64 checksum accumulator, so the residual measures
+//! the fault effect alone, matching the paper's methodology (§IV-A, and
+//! see DESIGN.md §6).
+
+use super::dense::Dense;
+
+/// Row-major dense matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense64 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Dense64 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Widen an f32 matrix.
+    pub fn from_dense(d: &Dense) -> Self {
+        Self {
+            rows: d.rows(),
+            cols: d.cols(),
+            data: d.data().iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Narrow to f32 (for handing results back to the serving-path types).
+    pub fn to_dense(&self) -> Dense {
+        Dense::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().map(|&x| x as f32).collect(),
+        )
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Row-wise argmax.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut best = 0;
+                let mut best_v = row[0];
+                for (j, &v) in row.iter().enumerate().skip(1) {
+                    if v > best_v {
+                        best_v = v;
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Sum of all elements.
+    pub fn checksum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Sum of |elements| — the magnitude scale used by relative thresholds.
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    /// Max |a - b|.
+    pub fn max_abs_diff(&self, other: &Dense64) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Exact elementwise equality (golden-vs-faulty corruption test).
+    pub fn identical(&self, other: &Dense64) -> bool {
+        self.shape() == other.shape()
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widen_narrow_roundtrip() {
+        let d = Dense::from_vec(2, 2, vec![1.5, -2.0, 0.0, 4.25]);
+        let w = Dense64::from_dense(&d);
+        assert_eq!(w.get(1, 1), 4.25);
+        assert_eq!(w.to_dense(), d);
+    }
+
+    #[test]
+    fn checksum_and_abs_sum() {
+        let m = Dense64::from_vec(1, 3, vec![1.0, -2.0, 3.0]);
+        assert_eq!(m.checksum(), 2.0);
+        assert_eq!(m.abs_sum(), 6.0);
+    }
+
+    #[test]
+    fn relu_and_argmax() {
+        let mut m = Dense64::from_vec(2, 2, vec![-1.0, 2.0, 3.0, -4.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+        m.relu_inplace();
+        assert_eq!(m.data(), &[0.0, 2.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn identical_detects_bit_level_change() {
+        let a = Dense64::from_vec(1, 2, vec![1.0, 2.0]);
+        let mut b = a.clone();
+        assert!(a.identical(&b));
+        b.set(0, 1, 2.0 + 1e-15);
+        assert!(!a.identical(&b));
+        assert!(a.max_abs_diff(&b) > 0.0);
+    }
+}

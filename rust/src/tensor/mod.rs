@@ -1,0 +1,12 @@
+//! Dense tensor substrate: f32 row-major matrices for the serving path,
+//! f64 matrices + the MAC-level instrumented engine for fault injection
+//! and op counting.
+
+pub mod dense;
+pub mod dense64;
+pub mod instrumented;
+pub mod ops;
+
+pub use dense::Dense;
+pub use dense64::Dense64;
+pub use instrumented::{CountingHook, ExecHook, NopHook};

@@ -1,0 +1,250 @@
+//! Dense matrix operations: the clean (uninstrumented, fast) reference
+//! implementations used for golden runs and by the coordinator's native
+//! fallback path. The fault-injectable variants live in
+//! [`crate::tensor::instrumented`].
+
+use super::dense::Dense;
+
+/// `A · B`, fp32 data path with per-element f32 accumulation — matches the
+/// simulated accelerator (MAC results are fp32, which is what the fault
+/// model flips bits in).
+pub fn matmul(a: &Dense, b: &Dense) -> Dense {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul shape mismatch: {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut out = Dense::zeros(m, n);
+    // i-k-j loop order: streams B rows, writes the output row hot in cache.
+    for i in 0..m {
+        let a_row = a.row(i);
+        for (kk, &aik) in a_row.iter().enumerate().take(k) {
+            if aik == 0.0 {
+                continue;
+            }
+            let b_row = b.row(kk);
+            let out_row = out.row_mut(i);
+            for (o, &bkj) in out_row.iter_mut().zip(b_row).take(n) {
+                *o += aik * bkj;
+            }
+        }
+    }
+    out
+}
+
+/// ReLU, elementwise, in place.
+pub fn relu_inplace(m: &mut Dense) {
+    for v in m.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU into a new matrix.
+pub fn relu(m: &Dense) -> Dense {
+    let mut out = m.clone();
+    relu_inplace(&mut out);
+    out
+}
+
+/// Row-wise argmax (predicted class per node).
+pub fn argmax_rows(m: &Dense) -> Vec<usize> {
+    (0..m.rows())
+        .map(|r| {
+            let row = m.row(r);
+            let mut best = 0;
+            let mut best_v = row[0];
+            for (j, &v) in row.iter().enumerate().skip(1) {
+                if v > best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Row-wise log-softmax (used by the tiny trainer; numerically stabilized).
+pub fn log_softmax_rows(m: &Dense) -> Dense {
+    let mut out = m.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f64;
+        for v in row.iter() {
+            sum += ((v - max) as f64).exp();
+        }
+        let lse = max as f64 + sum.ln();
+        for v in row.iter_mut() {
+            *v = (*v as f64 - lse) as f32;
+        }
+    }
+    out
+}
+
+/// `a + b` elementwise.
+pub fn add(a: &Dense, b: &Dense) -> Dense {
+    assert_eq!(a.shape(), b.shape());
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| x + y)
+        .collect();
+    Dense::from_vec(a.rows(), a.cols(), data)
+}
+
+/// `a - b` elementwise.
+pub fn sub(a: &Dense, b: &Dense) -> Dense {
+    assert_eq!(a.shape(), b.shape());
+    let data = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| x - y)
+        .collect();
+    Dense::from_vec(a.rows(), a.cols(), data)
+}
+
+/// `s * m` scalar scale.
+pub fn scale(m: &Dense, s: f32) -> Dense {
+    let data = m.data().iter().map(|x| x * s).collect();
+    Dense::from_vec(m.rows(), m.cols(), data)
+}
+
+/// Row-vector (`1×n` as slice) times matrix: `v · M` with f64 accumulation
+/// — this is how checksum vectors propagate (`h_c·W`, `s_c·X`), and the
+/// paper accumulates checksums in double precision.
+pub fn vecmat_f64(v: &[f32], m: &Dense) -> Vec<f32> {
+    assert_eq!(v.len(), m.rows(), "vecmat shape mismatch");
+    let mut acc = vec![0f64; m.cols()];
+    for (r, &vr) in v.iter().enumerate() {
+        if vr == 0.0 {
+            continue;
+        }
+        for (a, &x) in acc.iter_mut().zip(m.row(r)) {
+            *a += vr as f64 * x as f64;
+        }
+    }
+    acc.into_iter().map(|x| x as f32).collect()
+}
+
+/// Matrix times column vector: `M · v` with f64 accumulation.
+pub fn matvec_f64(m: &Dense, v: &[f32]) -> Vec<f32> {
+    assert_eq!(v.len(), m.cols(), "matvec shape mismatch");
+    (0..m.rows())
+        .map(|r| {
+            m.row(r)
+                .iter()
+                .zip(v)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m23() -> Dense {
+        Dense::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.])
+    }
+    fn m32() -> Dense {
+        Dense::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.])
+    }
+
+    #[test]
+    fn matmul_known() {
+        let c = matmul(&m23(), &m32());
+        assert_eq!(c.shape(), (2, 2));
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = m23();
+        let i2 = Dense::eye(2);
+        let i3 = Dense::eye(3);
+        assert_eq!(matmul(&i2, &m), m);
+        assert_eq!(matmul(&m, &i3), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        matmul(&m23(), &m23());
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let m = Dense::from_vec(1, 4, vec![-1., 0., 2., -0.5]);
+        assert_eq!(relu(&m).data(), &[0., 0., 2., 0.]);
+    }
+
+    #[test]
+    fn argmax_picks_first_max() {
+        let m = Dense::from_vec(2, 3, vec![1., 3., 3., -1., -2., -3.]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn log_softmax_rows_sum_to_one() {
+        let m = Dense::from_vec(2, 4, vec![1., 2., 3., 4., -10., 0., 10., 20.]);
+        let ls = log_softmax_rows(&m);
+        for r in 0..2 {
+            let s: f64 = ls.row(r).iter().map(|&x| (x as f64).exp()).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Dense::from_vec(1, 2, vec![1., 2.]);
+        let b = Dense::from_vec(1, 2, vec![10., 20.]);
+        assert_eq!(add(&a, &b).data(), &[11., 22.]);
+        assert_eq!(sub(&b, &a).data(), &[9., 18.]);
+        assert_eq!(scale(&a, 3.0).data(), &[3., 6.]);
+    }
+
+    #[test]
+    fn vecmat_matvec_agree_with_matmul() {
+        let m = m32();
+        let v = vec![1., 2., 3.];
+        let vm = vecmat_f64(&v, &m);
+        // (1,2,3) · m32 = [7+18+33, 8+20+36] = [58, 64]
+        assert_eq!(vm, vec![58., 64.]);
+        let mv = matvec_f64(&m, &[1., 1.]);
+        assert_eq!(mv, vec![15., 19., 23.]);
+    }
+
+    #[test]
+    fn dot_accumulates() {
+        assert_eq!(dot_f64(&[1., 2.], &[3., 4.]), 11.0);
+    }
+
+    #[test]
+    fn checksum_identity_through_matmul() {
+        // eᵀ(AB)e == (eᵀA)(Be): the core ABFT identity on dense data.
+        let a = Dense::from_fn(5, 4, |r, c| ((r + 2 * c) as f32) * 0.5 - 1.0);
+        let b = Dense::from_fn(4, 6, |r, c| ((3 * r + c) as f32) * 0.25 - 2.0);
+        let ab = matmul(&a, &b);
+        let lhs = ab.checksum_f64();
+        let ac = a.col_sums();
+        let br = b.row_sums();
+        let rhs = dot_f64(&ac, &br);
+        assert!((lhs - rhs).abs() < 1e-3, "lhs {lhs} rhs {rhs}");
+    }
+}

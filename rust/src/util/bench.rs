@@ -1,0 +1,227 @@
+//! A tiny benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + repeated timed runs, robust statistics (median, mean,
+//! stddev, min), and a stable one-line report format that the repo's
+//! `cargo bench` targets (all `harness = false`) use. Measurements are
+//! wall-clock; each sample runs the closure enough times to exceed a
+//! minimum sample duration so short closures are still measurable.
+
+use std::time::{Duration, Instant};
+
+/// Result of a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Per-iteration time for every sample, seconds.
+    pub samples: Vec<f64>,
+    /// Iterations folded into each sample.
+    pub iters_per_sample: u64,
+}
+
+impl BenchStats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Render one stable report line:
+    /// `bench_name                     median 12.345 µs  mean 12.5 µs ±0.4  min 12.1 µs  (20 samples x 64 iters)`
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12} ±{:<10}  min {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_time(self.median()),
+            fmt_time(self.mean()),
+            fmt_time(self.stddev()),
+            fmt_time(self.min()),
+            self.samples.len(),
+            self.iters_per_sample
+        )
+    }
+}
+
+/// Human-friendly time formatting.
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".to_string();
+    }
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 15,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            min_sample_time: Duration::from_millis(5),
+        }
+    }
+
+    /// Run `f` repeatedly and collect per-iteration timings.
+    /// `f` must perform one unit of work per call; its result is
+    /// black-boxed to prevent the optimizer from deleting the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchStats {
+        // Warmup + calibration: figure out how many iterations fit in
+        // min_sample_time.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.min_sample_time.as_secs_f64() / per_iter.max(1e-9)).ceil() as u64)
+            .max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        BenchStats {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        }
+    }
+
+    /// Run and print the report line; returns the stats for further use.
+    pub fn bench<T, F: FnMut() -> T>(&self, name: &str, f: F) -> BenchStats {
+        let stats = self.run(name, f);
+        println!("{}", stats.report_line());
+        stats
+    }
+}
+
+/// Opaque value sink — prevents dead-code elimination of benchmark work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header printed at the top of each bench binary.
+pub fn bench_header(title: &str) {
+    println!("=== {title} ===");
+    println!(
+        "(custom harness: criterion unavailable in the offline registry; \
+         median/mean/min over repeated samples)"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = BenchStats {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0],
+            iters_per_sample: 1,
+        };
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!(s.stddev() > 0.0);
+    }
+
+    #[test]
+    fn median_odd() {
+        let s = BenchStats {
+            name: "t".into(),
+            samples: vec![3.0, 1.0, 2.0],
+            iters_per_sample: 1,
+        };
+        assert!((s.median() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            min_sample_time: Duration::from_millis(1),
+        };
+        let mut acc = 0u64;
+        let stats = b.run("noop", || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        assert_eq!(stats.samples.len(), 3);
+        assert!(stats.median() >= 0.0);
+        let line = stats.report_line();
+        assert!(line.contains("noop"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2e-3), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+}

@@ -1,0 +1,201 @@
+//! Hand-rolled CLI argument parsing (`clap` is not available offline).
+//!
+//! Supports the forms the `gcn-abft` binary needs:
+//! `--flag`, `--key value`, `--key=value`, plus positional arguments.
+//! Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional args + `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Specification of what a subcommand accepts.
+#[derive(Debug, Clone, Default)]
+pub struct Spec {
+    /// Option names (expect a value).
+    pub options: Vec<&'static str>,
+    /// Boolean flag names (no value).
+    pub flags: Vec<&'static str>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    UnknownOption(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value} ({reason})")]
+    InvalidValue {
+        key: String,
+        value: String,
+        reason: String,
+    },
+}
+
+impl Args {
+    /// Parse raw argv (not including the program/subcommand names) against
+    /// a spec.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, spec: &Spec) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                // --key=value form.
+                if let Some((k, v)) = stripped.split_once('=') {
+                    if spec.options.contains(&k) {
+                        out.options.insert(k.to_string(), v.to_string());
+                    } else {
+                        return Err(CliError::UnknownOption(k.to_string()));
+                    }
+                    continue;
+                }
+                if spec.flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if spec.options.contains(&stripped) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError::MissingValue(stripped.to_string()))?;
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    return Err(CliError::UnknownOption(stripped.to_string()));
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| CliError::InvalidValue {
+                key: name.to_string(),
+                value: v.clone(),
+                reason: format!("{e}"),
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| CliError::InvalidValue {
+                key: name.to_string(),
+                value: v.clone(),
+                reason: format!("{e}"),
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| CliError::InvalidValue {
+                key: name.to_string(),
+                value: v.clone(),
+                reason: format!("{e}"),
+            }),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.options.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec {
+            options: vec!["campaigns", "seed", "datasets", "threshold"],
+            flags: vec!["json", "verbose"],
+        }
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, CliError> {
+        Args::parse(args.iter().map(|s| s.to_string()), &spec())
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse(&["--campaigns", "500", "--json", "pos1"]).unwrap();
+        assert_eq!(a.get_usize("campaigns", 0).unwrap(), 500);
+        assert!(a.has_flag("json"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&["--seed=42"]).unwrap();
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(
+            parse(&["--bogus", "1"]),
+            Err(CliError::UnknownOption(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            parse(&["--campaigns"]),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_number_rejected() {
+        let a = parse(&["--campaigns", "many"]).unwrap();
+        assert!(matches!(
+            a.get_usize("campaigns", 0),
+            Err(CliError::InvalidValue { .. })
+        ));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--datasets", "cora, nell"]).unwrap();
+        assert_eq!(a.get_list("datasets", &[]), vec!["cora", "nell"]);
+        let b = parse(&[]).unwrap();
+        assert_eq!(b.get_list("datasets", &["all"]), vec!["all"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("campaigns", 123).unwrap(), 123);
+        assert_eq!(a.get_f64("threshold", 1e-7).unwrap(), 1e-7);
+        assert_eq!(a.get_str("datasets", "all"), "all");
+        assert!(!a.has_flag("json"));
+    }
+}

@@ -1,0 +1,529 @@
+//! Minimal JSON emitter (and a tiny value model) used for machine-readable
+//! experiment outputs (`--json` flags, metrics dumps).
+//!
+//! `serde`/`serde_json` are not available in the offline registry for this
+//! build, so the repo carries its own small, allocation-light writer. Only
+//! what the experiment reports need: objects, arrays, strings, numbers,
+//! booleans and null — always emitted with stable key order (insertion
+//! order) so outputs diff cleanly between runs.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value. Objects preserve insertion order via a Vec of pairs
+/// (experiment reports want stable, meaningful ordering, not alphabetical).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience: build an object from pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Convenience: array from an iterator of values.
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Serialize with 2-space indentation.
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, level: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // Shortest roundtrip representation.
+                    let _ = write!(out, "{x}");
+                } else {
+                    // JSON has no Inf/NaN; emit null like serde_json does.
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, level + 1);
+                    item.write(out, indent, level + 1);
+                }
+                if !items.is_empty() {
+                    newline_indent(out, indent, level);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, indent, level + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write(out, indent, level + 1);
+                }
+                if !pairs.is_empty() {
+                    newline_indent(out, indent, level);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, indent: Option<usize>, level: usize) {
+    if let Some(w) = indent {
+        out.push('\n');
+        for _ in 0..(w * level) {
+            out.push(' ');
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Self {
+        Json::Int(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Int(x as i64)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Self {
+        Json::Int(x as i64)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+
+impl Json {
+    /// Parse a JSON document (full recursive grammar; used for the
+    /// artifact manifest written by `python/compile/aot.py`).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes: Vec<char> = text.chars().collect();
+        let mut p = Parser { c: &bytes, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.c.len() {
+            return Err(format!("trailing input at {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Int(i) if *i >= 0 => Some(*i as usize),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn entries(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(pairs) => Some(pairs),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    c: &'a [char],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.c.len() && self.c[self.i].is_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.c.get(self.i).copied()
+    }
+
+    fn expect(&mut self, ch: char) -> Result<(), String> {
+        if self.peek() == Some(ch) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{ch}' at {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.ws();
+        match self.peek() {
+            Some('{') => self.object(),
+            Some('[') => self.array(),
+            Some('"') => Ok(Json::Str(self.string()?)),
+            Some('t') => self.lit("true", Json::Bool(true)),
+            Some('f') => self.lit("false", Json::Bool(false)),
+            Some('n') => self.lit("null", Json::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at {}", self.i)),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        for ch in word.chars() {
+            self.expect(ch)?;
+        }
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect('{')?;
+        let mut pairs = Vec::new();
+        self.ws();
+        if self.peek() == Some('}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(':')?;
+            let v = self.value()?;
+            pairs.push((k, v));
+            self.ws();
+            match self.peek() {
+                Some(',') => {
+                    self.i += 1;
+                }
+                Some('}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect('[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek() == Some(']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(',') => {
+                    self.i += 1;
+                }
+                Some(']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => return Err(format!("expected ',' or ']', got {other:?}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        while let Some(c) = self.peek() {
+            self.i += 1;
+            match c {
+                '"' => return Ok(out),
+                '\\' => {
+                    let esc = self.peek().ok_or("eof in escape")?;
+                    self.i += 1;
+                    match esc {
+                        '"' => out.push('"'),
+                        '\\' => out.push('\\'),
+                        '/' => out.push('/'),
+                        'n' => out.push('\n'),
+                        't' => out.push('\t'),
+                        'r' => out.push('\r'),
+                        'b' => out.push('\u{8}'),
+                        'f' => out.push('\u{c}'),
+                        'u' => {
+                            let mut code = 0u32;
+                            for _ in 0..4 {
+                                let h = self.peek().ok_or("eof in \\u")?;
+                                self.i += 1;
+                                code = code * 16
+                                    + h.to_digit(16).ok_or("bad hex in \\u")?;
+                            }
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        o => return Err(format!("bad escape \\{o}")),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some('-') {
+            self.i += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() {
+                self.i += 1;
+            } else if c == '.' || c == 'e' || c == 'E' || c == '+' || c == '-' {
+                is_float = true;
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s: String = self.c[start..self.i].iter().collect();
+        if is_float {
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|e| format!("bad number {s}: {e}"))
+        } else {
+            s.parse::<i64>()
+                .map(Json::Int)
+                .map_err(|e| format!("bad number {s}: {e}"))
+        }
+    }
+}
+
+/// Parse a small subset of JSON back (flat objects of numbers/strings —
+/// enough to read experiment configs). Returns key → value maps.
+pub fn parse_flat_object(text: &str) -> Option<BTreeMap<String, String>> {
+    let t = text.trim();
+    let inner = t.strip_prefix('{')?.strip_suffix('}')?;
+    let mut map = BTreeMap::new();
+    if inner.trim().is_empty() {
+        return Some(map);
+    }
+    // Split on commas not inside strings — configs are flat, so this is safe.
+    let mut depth_str = false;
+    let mut cur = String::new();
+    let mut parts = Vec::new();
+    let mut prev = '\0';
+    for c in inner.chars() {
+        if c == '"' && prev != '\\' {
+            depth_str = !depth_str;
+        }
+        if c == ',' && !depth_str {
+            parts.push(cur.clone());
+            cur.clear();
+        } else {
+            cur.push(c);
+        }
+        prev = c;
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    for p in parts {
+        let mut kv = p.splitn(2, ':');
+        let k = kv.next()?.trim().trim_matches('"').to_string();
+        let v = kv.next()?.trim().trim_matches('"').to_string();
+        map.insert(k, v);
+    }
+    Some(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::Bool(true).to_string(), "true");
+        assert_eq!(Json::Int(-3).to_string(), "-3");
+        assert_eq!(Json::Num(1.5).to_string(), "1.5");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::from("hi").to_string(), "\"hi\"");
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(
+            Json::from("a\"b\\c\nd").to_string(),
+            "\"a\\\"b\\\\c\\nd\""
+        );
+        assert_eq!(Json::from("\u{1}").to_string(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn nested_structures() {
+        let v = Json::obj(vec![
+            ("name", Json::from("cora")),
+            ("nodes", Json::from(2708usize)),
+            ("rates", Json::arr(vec![Json::Num(0.95), Json::Num(0.03)])),
+        ]);
+        assert_eq!(
+            v.to_string(),
+            r#"{"name":"cora","nodes":2708,"rates":[0.95,0.03]}"#
+        );
+    }
+
+    #[test]
+    fn pretty_has_newlines() {
+        let v = Json::obj(vec![("a", Json::Int(1))]);
+        let p = v.to_pretty();
+        assert!(p.contains('\n'));
+        assert!(p.contains("\"a\": 1"));
+    }
+
+    #[test]
+    fn key_order_is_insertion_order() {
+        let v = Json::obj(vec![("z", Json::Int(1)), ("a", Json::Int(2))]);
+        let s = v.to_string();
+        assert!(s.find("\"z\"").unwrap() < s.find("\"a\"").unwrap());
+    }
+
+    #[test]
+    fn full_parser_roundtrips() {
+        let src = Json::obj(vec![
+            ("version", Json::Int(1)),
+            ("flavour", Json::from("pallas")),
+            (
+                "models",
+                Json::obj(vec![(
+                    "tiny",
+                    Json::obj(vec![
+                        ("classes", Json::Int(4)),
+                        ("f", Json::Int(32)),
+                        ("file", Json::from("gcn_tiny.hlo.txt")),
+                        ("hidden", Json::Int(8)),
+                        ("n", Json::Int(64)),
+                    ]),
+                )]),
+            ),
+            ("rates", Json::arr(vec![Json::Num(0.5), Json::Null, Json::Bool(true)])),
+        ]);
+        let parsed = Json::parse(&src.to_pretty()).unwrap();
+        assert_eq!(parsed, src);
+        let tiny = parsed.get("models").unwrap().get("tiny").unwrap();
+        assert_eq!(tiny.get("n").unwrap().as_usize(), Some(64));
+        assert_eq!(tiny.get("file").unwrap().as_str(), Some("gcn_tiny.hlo.txt"));
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("hello").is_err());
+        assert!(Json::parse("{}extra").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_numbers() {
+        let v = Json::parse(r#"{"s": "a\nb\u0041", "x": -1.5e2, "i": -7}"#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\nbA"));
+        assert_eq!(v.get("x").unwrap().as_f64(), Some(-150.0));
+        assert_eq!(v.get("i").unwrap().as_f64(), Some(-7.0));
+    }
+
+    #[test]
+    fn parse_flat_roundtrip() {
+        let m = parse_flat_object(r#"{"a": "x", "b": 3}"#).unwrap();
+        assert_eq!(m["a"], "x");
+        assert_eq!(m["b"], "3");
+        assert!(parse_flat_object("{}").unwrap().is_empty());
+        assert!(parse_flat_object("nope").is_none());
+    }
+}

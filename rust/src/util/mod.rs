@@ -1,0 +1,58 @@
+//! Infrastructure substrates built in-repo because the offline registry
+//! lacks the usual crates: PRNG (`rand`), JSON (`serde_json`), bench
+//! harness (`criterion`), property testing (`proptest`), CLI (`clap`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Format a large count with thousands separators for table output.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let bytes = s.as_bytes();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Format an op count in millions with 2 decimals (Table II style).
+pub fn fmt_millions(n: u64) -> String {
+    format!("{:.2}", n as f64 / 1e6)
+}
+
+/// Format a ratio as a percentage with one decimal.
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn millions_formatting() {
+        assert_eq!(fmt_millions(2_800_000), "2.80");
+        assert_eq!(fmt_millions(84_300_000), "84.30");
+    }
+
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(fmt_pct(0.2), "20.0%");
+        assert_eq!(fmt_pct(0.0334), "3.3%");
+    }
+}

@@ -1,0 +1,320 @@
+//! Deterministic, seedable pseudo-random number generation.
+//!
+//! The offline crate registry for this build environment does not carry the
+//! `rand` crate, so the repo ships its own small PRNG substrate:
+//!
+//! * [`SplitMix64`] — the classic 64-bit mixer, used for seeding.
+//! * [`Pcg64`] — PCG-XSH-RR 64/32 folded into a 64-bit output helper; the
+//!   workhorse generator used everywhere (dataset synthesis, weight init,
+//!   fault-plan sampling).
+//!
+//! Every consumer takes an explicit seed so that *all* experiments in the
+//! repo are bit-reproducible: `gcn-abft table1 --seed 7` prints the same
+//! table on every machine.
+
+/// SplitMix64: tiny, high-quality 64-bit mixer (Steele et al., "Fast
+/// splittable pseudorandom number generators", OOPSLA 2014).
+///
+/// Used to expand a single user seed into independent stream seeds.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new mixer from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32 (O'Neill 2014) with two 32-bit draws fused into a
+/// 64-bit output. Small state, good statistical quality, very fast — and
+/// deterministic across platforms (pure integer arithmetic).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg64 {
+    /// Seed the generator. `seed` selects the starting point, `stream`
+    /// selects one of 2^63 distinct sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a generator from a single seed via SplitMix64 (seed and
+    /// stream drawn independently).
+    pub fn from_seed(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = sm.next_u64();
+        let inc = sm.next_u64();
+        Self::new(s, inc)
+    }
+
+    /// Split off an independent child generator (used to give each
+    /// fault-injection campaign its own stream).
+    pub fn split(&mut self) -> Pcg64 {
+        let s = self.next_u64();
+        let inc = self.next_u64();
+        Pcg64::new(s, inc)
+    }
+
+    /// Next 32 uniformly random bits.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniformly random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire's method).
+    pub fn gen_range(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "gen_range bound must be positive");
+        // 128-bit multiply rejection sampling.
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, bound)`.
+    pub fn gen_index(&mut self, bound: usize) -> usize {
+        self.gen_range(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` (53 random mantissa bits).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn gen_f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.gen_f64()
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn gen_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.gen_f32()
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (cached second draw omitted for
+    /// simplicity; weight init is not on the hot path).
+    pub fn gen_normal(&mut self) -> f64 {
+        // Avoid log(0).
+        let u1 = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let u1 = if u1 <= f64::MIN_POSITIVE { f64::MIN_POSITIVE } else { u1 };
+        let u2 = self.gen_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm for
+    /// small k, partial shuffle otherwise). Result order is unspecified.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        if k * 4 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            // Partial Fisher–Yates: first k slots become the sample.
+            for i in 0..k {
+                let j = i + self.gen_index(n - i);
+                all.swap(i, j);
+            }
+            all.truncate(k);
+            return all;
+        }
+        // Floyd's: O(k) expected, dedup via sorted insert.
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_index(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.push(pick);
+        }
+        chosen
+    }
+
+    /// Weighted index sampling: returns i with probability w[i]/Σw.
+    pub fn gen_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must sum to a positive value");
+        let mut x = self.gen_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if x < w {
+                return i;
+            }
+            x -= w;
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_known_vector() {
+        // Reference values for seed 1234567 (from the published algorithm).
+        let mut sm = SplitMix64::new(0);
+        let first = sm.next_u64();
+        // seed 0 first output of splitmix64 is 0xE220A8397B1DCDAF
+        assert_eq!(first, 0xE220_A839_7B1D_CDAF);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_distinct() {
+        let mut a = Pcg64::from_seed(7);
+        let mut b = Pcg64::from_seed(7);
+        let mut c = Pcg64::from_seed(8);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Pcg64::from_seed(1);
+        for _ in 0..10_000 {
+            let x = r.gen_range(17);
+            assert!(x < 17);
+        }
+        // All residues reachable.
+        let mut seen = [false; 17];
+        for _ in 0..10_000 {
+            seen[r.gen_range(17) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gen_f64_unit_interval() {
+        let mut r = Pcg64::from_seed(2);
+        let mut sum = 0.0;
+        for _ in 0..100_000 {
+            let x = r.gen_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::from_seed(3);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Pcg64::from_seed(4);
+        for &(n, k) in &[(10usize, 3usize), (100, 90), (5, 5), (1000, 10)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates for n={n} k={k}");
+            assert!(sorted.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Pcg64::from_seed(5);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn weighted_sampling_respects_weights() {
+        let mut r = Pcg64::from_seed(6);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.gen_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio {ratio}");
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut parent = Pcg64::from_seed(9);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let v1: Vec<u64> = (0..4).map(|_| c1.next_u64()).collect();
+        let v2: Vec<u64> = (0..4).map(|_| c2.next_u64()).collect();
+        assert_ne!(v1, v2);
+    }
+}

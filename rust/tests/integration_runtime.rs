@@ -1,0 +1,108 @@
+//! Runtime integration: HLO-text artifact → PJRT compile → execute →
+//! numerics match the native engine. Skips gracefully when artifacts are
+//! absent (`make artifacts` builds them).
+
+use gcn_abft::graph::DatasetId;
+use gcn_abft::report::{build_workload, ExperimentOpts};
+use gcn_abft::runtime::{Manifest, Runtime};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_matches_dataset_specs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
+    for entry in &m.models {
+        let id = DatasetId::parse(&entry.name).expect("manifest names a known dataset");
+        let spec = id.spec();
+        assert_eq!(entry.n, spec.num_nodes, "{}", entry.name);
+        assert_eq!(entry.f, spec.feat_dim, "{}", entry.name);
+        assert_eq!(entry.classes, spec.num_classes, "{}", entry.name);
+        assert_eq!(entry.hidden, id.hidden_dim(), "{}", entry.name);
+        assert!(m.hlo_path(entry).exists());
+    }
+}
+
+#[test]
+fn tiny_artifact_executes_and_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    let exe = rt.load_model(&manifest, "tiny").unwrap();
+
+    let opts = ExperimentOpts {
+        datasets: vec![DatasetId::Tiny],
+        seed: 7,
+        scale: 1.0,
+        train_epochs: 10,
+    };
+    let (graph, model) = build_workload(DatasetId::Tiny, &opts);
+    let features = graph.features.to_dense();
+    let s = model.adjacency.to_dense();
+    let out = exe
+        .run(
+            &features,
+            &s,
+            &model.layers[0].weights,
+            &model.layers[1].weights,
+        )
+        .unwrap();
+
+    // Shape contract.
+    assert_eq!(out.logits.shape(), (64, 4));
+    assert_eq!(out.predicted.len(), 2);
+    assert_eq!(out.actual.len(), 2);
+
+    // Checksums agree in-graph (fault-free run).
+    for (p, a) in out.predicted.iter().zip(&out.actual) {
+        let scale = a.abs().max(1.0);
+        assert!(
+            (p - a).abs() / scale < 1e-3,
+            "in-graph checksum mismatch: {p} vs {a}"
+        );
+    }
+
+    // Logits match the Rust-native f32 forward within f32 tolerance.
+    let native = model.forward(&graph.features, gcn_abft::gcn::Dataflow::CombinationFirst);
+    let max_native = native
+        .logits
+        .data()
+        .iter()
+        .fold(0f32, |m, &v| m.max(v.abs()));
+    let diff = out.logits.max_abs_diff(&native.logits);
+    assert!(
+        diff / max_native.max(1.0) < 1e-3,
+        "XLA vs native logits diverge: {diff} (scale {max_native})"
+    );
+}
+
+#[test]
+fn shape_validation_rejects_wrong_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    let exe = rt.load_model(&manifest, "tiny").unwrap();
+    let bad = gcn_abft::tensor::Dense::zeros(10, 10);
+    let ok = gcn_abft::tensor::Dense::zeros(64, 64);
+    let w1 = gcn_abft::tensor::Dense::zeros(32, 8);
+    let w2 = gcn_abft::tensor::Dense::zeros(8, 4);
+    let err = exe.run(&bad, &ok, &w1, &w2).unwrap_err();
+    assert!(format!("{err}").contains("shape"), "{err}");
+}
+
+#[test]
+fn missing_model_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    assert!(rt.load_model(&manifest, "nope").is_err());
+}

@@ -1,0 +1,303 @@
+//! Property-based invariant tests (using the in-repo `util::proptest`
+//! substrate; the `proptest` crate is unavailable offline).
+//!
+//! The properties are the mathematical heart of the paper:
+//! * the checksum identity eᵀ(SHW)e = s_c·H·w_r on random matrices;
+//! * split and fused checkers compute identical true outputs;
+//! * fused check-op count < split check-op count for every shape;
+//! * any single non-trivial data corruption is caught at end of layer
+//!   unless annihilated by a zero column of S;
+//! * CSR algebra matches dense algebra on random sparse patterns.
+
+use gcn_abft::abft::{fused_layer_checked, split_layer_checked, CheckPolicy, EngineInput};
+use gcn_abft::sparse::Csr;
+use gcn_abft::tensor::instrumented::{matmul_hooked, CountingHook};
+use gcn_abft::tensor::{Dense, Dense64, NopHook};
+use gcn_abft::util::proptest::{check, gen_dim, gen_matrix, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+
+/// Random layer shapes: (n, f, h) with sparse-ish S and dense H, W.
+#[derive(Clone, Debug)]
+struct LayerCase {
+    s: Csr,
+    h: Dense64,
+    w: Dense64,
+}
+
+fn gen_layer_case(rng: &mut Pcg64) -> LayerCase {
+    let n = gen_dim(rng, 24).max(2);
+    let f = gen_dim(rng, 20);
+    let h = gen_dim(rng, 12);
+    // Sparse S: each row gets 1..=3 entries (self-loop always present so
+    // no zero columns in this generator).
+    let mut coo = Vec::new();
+    for r in 0..n {
+        coo.push((r, r, rng.gen_f32_range(0.2, 1.0)));
+        for _ in 0..rng.gen_index(3) {
+            coo.push((r, rng.gen_index(n), rng.gen_f32_range(-1.0, 1.0)));
+        }
+    }
+    let s = Csr::from_coo(n, n, coo);
+    let hm = Dense64::from_dense(&Dense::from_vec(n, f, gen_matrix(rng, n, f, 4.0)));
+    let w = Dense64::from_dense(&Dense::from_vec(f, h, gen_matrix(rng, f, h, 1.0)));
+    LayerCase { s, h: hm, w }
+}
+
+fn offline(case: &LayerCase) -> (Vec<f64>, Vec<f64>) {
+    let s_c = case.s.col_sums_f64();
+    let w_r: Vec<f64> = (0..case.w.rows())
+        .map(|r| case.w.row(r).iter().sum::<f64>())
+        .collect();
+    (s_c, w_r)
+}
+
+#[test]
+fn prop_fused_checksum_identity() {
+    check(
+        &Config {
+            cases: 80,
+            seed: 0xE401,
+            ..Default::default()
+        },
+        gen_layer_case,
+        |case| {
+            let (s_c, w_r) = offline(case);
+            let mut nop = NopHook;
+            let (out, rec) = fused_layer_checked(
+                &case.s,
+                &s_c,
+                &EngineInput::Dense(case.h.clone()),
+                &case.w,
+                &w_r,
+                0,
+                &mut nop,
+            );
+            // (1) predicted == actual to rounding, (2) actual == eᵀ·out·e.
+            let scale = rec.actual.abs().max(1.0);
+            if rec.residual() / scale > 1e-9 {
+                return Err(format!("identity violated: {rec:?}"));
+            }
+            let direct = out.checksum();
+            if (direct - rec.actual).abs() / scale > 1e-9 {
+                return Err(format!(
+                    "actual checksum {} != block sum {}",
+                    rec.actual, direct
+                ));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_split_and_fused_outputs_identical() {
+    check(
+        &Config {
+            cases: 60,
+            seed: 0xE402,
+            ..Default::default()
+        },
+        gen_layer_case,
+        |case| {
+            let (s_c, w_r) = offline(case);
+            let mut nop = NopHook;
+            let (fused_out, _) = fused_layer_checked(
+                &case.s,
+                &s_c,
+                &EngineInput::Dense(case.h.clone()),
+                &case.w,
+                &w_r,
+                0,
+                &mut nop,
+            );
+            let (split_out, recs) = split_layer_checked(
+                &case.s,
+                &s_c,
+                &EngineInput::Dense(case.h.clone()),
+                &case.w,
+                &w_r,
+                None,
+                0,
+                &mut nop,
+            );
+            if !fused_out.identical(&split_out) {
+                return Err("true outputs differ between checkers".into());
+            }
+            // Split's own checks hold fault-free.
+            for r in &recs {
+                if r.residual() / r.actual.abs().max(1.0) > 1e-9 {
+                    return Err(format!("split check violated: {r:?}"));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_fused_always_cheaper_to_check() {
+    check(
+        &Config {
+            cases: 60,
+            seed: 0xE403,
+            ..Default::default()
+        },
+        gen_layer_case,
+        |case| {
+            let (s_c, w_r) = offline(case);
+            let mut cf = CountingHook::default();
+            fused_layer_checked(
+                &case.s,
+                &s_c,
+                &EngineInput::Dense(case.h.clone()),
+                &case.w,
+                &w_r,
+                0,
+                &mut cf,
+            );
+            let mut cs = CountingHook::default();
+            split_layer_checked(
+                &case.s,
+                &s_c,
+                &EngineInput::Dense(case.h.clone()),
+                &case.w,
+                &w_r,
+                None,
+                0,
+                &mut cs,
+            );
+            if cf.data_ops != cs.data_ops {
+                return Err(format!(
+                    "true-output data ops differ: {} vs {}",
+                    cf.data_ops, cs.data_ops
+                ));
+            }
+            if cf.checksum_ops >= cs.checksum_ops {
+                return Err(format!(
+                    "fused checker not cheaper: {} vs {}",
+                    cf.checksum_ops, cs.checksum_ops
+                ));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_single_corruption_detected_when_s_has_no_zero_columns() {
+    check(
+        &Config {
+            cases: 60,
+            seed: 0xE404,
+            ..Default::default()
+        },
+        |rng| {
+            let case = gen_layer_case(rng);
+            // A corruption magnitude comfortably above threshold and an
+            // op somewhere in the layer's data path.
+            let op = rng.gen_range(1_000_000) as u64;
+            (case, op)
+        },
+        |(case, op_seed)| {
+            let (s_c, w_r) = offline(case);
+            // Count data ops to place the corruption on the true-output
+            // path (phase-1 matmul region only, where S-annihilation via
+            // zero columns is impossible by construction).
+            let mut cnt = CountingHook::default();
+            matmul_hooked(&case.h, &case.w, &mut cnt);
+            let phase1_ops = cnt.data_ops;
+            let target = op_seed % phase1_ops;
+
+            struct Corrupt {
+                at: u64,
+                n: u64,
+            }
+            impl gcn_abft::tensor::ExecHook for Corrupt {
+                fn mul(&mut self, v: f64) -> f64 {
+                    let out = if self.n == self.at { v + 1e6 } else { v };
+                    self.n += 1;
+                    out
+                }
+                fn add(&mut self, v: f64) -> f64 {
+                    let out = if self.n == self.at { v + 1e6 } else { v };
+                    self.n += 1;
+                    out
+                }
+                fn csum(&mut self, v: f64) -> f64 {
+                    v
+                }
+            }
+            let mut hook = Corrupt { at: target, n: 0 };
+            let (_, rec) = fused_layer_checked(
+                &case.s,
+                &s_c,
+                &EngineInput::Dense(case.h.clone()),
+                &case.w,
+                &w_r,
+                0,
+                &mut hook,
+            );
+            let policy = CheckPolicy::new(1e-4);
+            // The +1e6 corruption must surface in the end-of-layer check:
+            // every X row is read by S (self-loops ⇒ no zero columns).
+            if !policy.fires(rec.predicted, rec.actual) {
+                return Err(format!("corruption at op {target} missed: {rec:?}"));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_csr_matches_dense_algebra() {
+    check(
+        &Config {
+            cases: 80,
+            seed: 0xE405,
+            ..Default::default()
+        },
+        |rng| {
+            let rows = gen_dim(rng, 20);
+            let cols = gen_dim(rng, 20);
+            let inner = gen_dim(rng, 16);
+            let density = rng.gen_f64_range(0.05, 0.6);
+            let mut coo = Vec::new();
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.gen_bool(density) {
+                        coo.push((r, c, rng.gen_f32_range(-2.0, 2.0)));
+                    }
+                }
+            }
+            let m = Csr::from_coo(rows, cols, coo);
+            let b = Dense::from_vec(cols, inner, gen_matrix(rng, cols, inner, 2.0));
+            (m, b)
+        },
+        |(m, b)| {
+            let sparse = m.spmm(b);
+            let dense = gcn_abft::tensor::ops::matmul(&m.to_dense(), b);
+            if sparse.max_abs_diff(&dense) > 1e-4 {
+                return Err(format!(
+                    "spmm diverges from dense matmul by {}",
+                    sparse.max_abs_diff(&dense)
+                ));
+            }
+            // Checksum identity on the sparse product.
+            let lhs = sparse.checksum_f64();
+            let rhs = gcn_abft::tensor::ops::dot_f64(&m.col_sums(), &b.row_sums());
+            if (lhs - rhs).abs() / lhs.abs().max(1.0) > 1e-5 {
+                return Err(format!("sparse checksum identity violated: {lhs} vs {rhs}"));
+            }
+            // Transpose involution.
+            if m.transpose().transpose() != *m {
+                return Err("transpose not an involution".into());
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
