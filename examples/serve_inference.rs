@@ -1,13 +1,11 @@
 //! End-to-end driver (the repo's headline integration proof): serve
-//! batched GCN inference over the AOT-compiled XLA artifacts with online
-//! GCN-ABFT verification on every response, and report
-//! latency/throughput — all three layers composing:
+//! batched GCN inference with online GCN-ABFT verification on every
+//! response, and report latency/throughput. Runs on the native runtime
+//! backend out of the box; when `python -m compile.aot` has produced
+//! artifacts, worker shapes are validated against its manifest (the
+//! L1 Pallas kernels → L2 JAX model → HLO-text contract).
 //!
-//!   L1 Pallas kernels → L2 JAX model → HLO text (`make artifacts`)
-//!   → L3 Rust coordinator (this binary): PJRT load/compile/execute,
-//!     dynamic batching, fused-checksum verification, fault recovery.
-//!
-//! Run: `make artifacts && cargo run --release --example serve_inference`
+//! Run: `cargo run --release --example serve_inference`
 //! Optional args: `-- [dataset] [requests] [workers]` (default tiny 96 2).
 //! The run injects a bit flip into every 7th batch's response payload to
 //! demonstrate detection + re-execution.
@@ -38,7 +36,7 @@ fn main() {
     };
 
     eprintln!(
-        "serving {} with {workers} PJRT worker(s), {requests} requests, \
+        "serving {} with {workers} worker(s), {requests} requests, \
          fault injection every 7th batch ...",
         dataset.name()
     );
@@ -53,10 +51,7 @@ fn main() {
             println!("\nserve_inference OK — all injected faults detected and recovered");
         }
         Err(e) => {
-            eprintln!(
-                "serve_inference failed: {e:#}\n\
-                 (did you run `make artifacts` first?)"
-            );
+            eprintln!("serve_inference failed: {e:#}");
             std::process::exit(1);
         }
     }

@@ -1,52 +1,63 @@
 //! Serving-path bench: end-to-end latency/throughput of the coordinator
-//! over the XLA artifacts, with and without online verification cost
-//! isolation. Skips gracefully when `make artifacts` has not run.
+//! (native runtime backend), sweeping batch size and worker count. The
+//! worker sweep is the tentpole proof that `gcn-abft serve` throughput
+//! scales with `--workers` on the row-parallel kernels.
 
 use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig};
 use gcn_abft::graph::DatasetId;
 use gcn_abft::util::bench::bench_header;
-use std::path::Path;
+use gcn_abft::util::parallel::default_threads;
+
+fn run(dataset: DatasetId, requests: usize, batch: usize, workers: usize) {
+    let cfg = ServerConfig {
+        dataset,
+        artifacts_dir: "artifacts".into(),
+        batch: BatchPolicy {
+            max_batch: batch,
+            ..Default::default()
+        },
+        workers,
+        inject_every: None,
+        seed: 7,
+        ..Default::default()
+    };
+    match serve_synthetic(&cfg, requests) {
+        Ok(s) => {
+            println!(
+                "{:<9} batch={batch:<2} workers={workers:<2} {:>7.1} req/s  \
+                 p50 {:>8.2} ms  p95 {:>8.2} ms  verify-overhead {:.4}%",
+                dataset.name(),
+                s.metrics.throughput_rps(),
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.metrics.verify_overhead() * 100.0
+            );
+        }
+        Err(e) => println!("{}: FAILED ({e:#})", dataset.name()),
+    }
+}
 
 fn main() {
-    bench_header("bench_coordinator — serving throughput/latency (XLA path)");
-    if !Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
-        return;
-    }
+    bench_header("bench_coordinator — serving throughput/latency (native runtime)");
 
-    for (dataset, requests) in [(DatasetId::Tiny, 128), (DatasetId::Cora, 16)] {
+    println!("-- batch-size sweep (2 workers) --");
+    for (dataset, requests) in [(DatasetId::Tiny, 256), (DatasetId::Cora, 24)] {
         for batch in [1usize, 8] {
-            let cfg = ServerConfig {
-                dataset,
-                artifacts_dir: "artifacts".into(),
-                batch: BatchPolicy {
-                    max_batch: batch,
-                    ..Default::default()
-                },
-                workers: 1,
-                inject_every: None,
-                seed: 7,
-                ..Default::default()
-            };
-            match serve_synthetic(&cfg, requests) {
-                Ok(s) => {
-                    println!(
-                        "{:<9} batch={batch:<2} {:>6.1} req/s  p50 {:>8.2} ms  p95 {:>8.2} ms  verify-overhead {:.4}%",
-                        dataset.name(),
-                        s.metrics.throughput_rps(),
-                        s.p50 * 1e3,
-                        s.p95 * 1e3,
-                        s.metrics.verify_overhead() * 100.0
-                    );
-                }
-                Err(e) => {
-                    println!("{}: SKIP ({e})", dataset.name());
-                    break;
-                }
-            }
+            run(dataset, requests, batch, 2);
         }
     }
+
+    println!("\n-- worker sweep (batch 8) --");
+    let max_workers = default_threads().min(8);
+    let mut workers = 1;
+    while workers <= max_workers {
+        run(DatasetId::Cora, 24, 8, workers);
+        workers *= 2;
+    }
+
     println!(
-        "\n(batching amortizes the per-pass cost; verification stays <0.1% of execute time)"
+        "\n(batching amortizes the per-pass cost; verification stays a tiny \
+         fraction of execute time; the worker sweep should show req/s rising \
+         until the worker pool saturates the host's cores)"
     );
 }

@@ -8,8 +8,10 @@
 use gcn_abft::abft::{fused_forward_checked, split_forward_checked, EngineModel};
 use gcn_abft::graph::DatasetId;
 use gcn_abft::report::{build_workload, ExperimentOpts};
-use gcn_abft::tensor::NopHook;
+use gcn_abft::runtime::{ModelEntry, Runtime};
+use gcn_abft::tensor::{ops, NopHook};
 use gcn_abft::util::bench::{bench_header, Bencher};
+use gcn_abft::util::parallel::default_threads;
 
 fn main() {
     bench_header("bench_layer — checked forward passes (native engine)");
@@ -60,5 +62,62 @@ fn main() {
                 fused_overhead * 100.0
             );
         }
+    }
+
+    // ---- parallel hot-path kernels: serial bring-up baseline vs the
+    // cache-blocked row-parallel kernels on the Cora-sized workload -------
+    let threads = default_threads();
+    println!("== parallel kernels (host has {threads} worker threads) ==");
+    let opts = ExperimentOpts {
+        datasets: vec![DatasetId::Cora],
+        seed: 7,
+        scale: 1.0,
+        train_epochs: 0,
+    };
+    let (graph, model) = build_workload(DatasetId::Cora, &opts);
+    let dense_features = graph.features.to_dense();
+    let w1 = &model.layers[0].weights;
+
+    let spmm_1 = b.bench("cora/spmm(HxW1) threads=1", || {
+        graph.features.spmm_par(w1, 1)
+    });
+    let spmm_n = b.bench(&format!("cora/spmm(HxW1) threads={threads}"), || {
+        graph.features.spmm_par(w1, threads)
+    });
+    let mm_1 = b.bench("cora/matmul(HxW1) threads=1", || {
+        ops::matmul_par(&dense_features, w1, 1)
+    });
+    let mm_n = b.bench(&format!("cora/matmul(HxW1) threads={threads}"), || {
+        ops::matmul_par(&dense_features, w1, threads)
+    });
+    println!(
+        "kernel speedup at {threads} threads: spmm {:.2}x, dense matmul {:.2}x\n",
+        spmm_1.min() / spmm_n.min(),
+        mm_1.min() / mm_n.min()
+    );
+
+    // ---- serving executable end-to-end (the `gcn-abft serve` hot path) --
+    let s = model.adjacency.to_dense();
+    let entry = ModelEntry::for_dataset(DatasetId::Cora);
+    let exe_1 = Runtime::native(1).load_entry(entry.clone());
+    let exe_n = Runtime::native(threads).load_entry(entry);
+    let w2 = &model.layers[1].weights;
+    let run_1 = b.bench("cora/serve_forward threads=1", || {
+        exe_1.run(&dense_features, &s, w1, w2).unwrap()
+    });
+    let run_n = b.bench(&format!("cora/serve_forward threads={threads}"), || {
+        exe_n.run(&dense_features, &s, w1, w2).unwrap()
+    });
+    println!(
+        "serve-path forward speedup at {threads} threads: {:.2}x",
+        run_1.min() / run_n.min()
+    );
+    if threads > 1 {
+        assert!(
+            run_n.min() <= run_1.min() * 1.05,
+            "parallel serve path slower than serial: {} vs {}",
+            run_n.min(),
+            run_1.min()
+        );
     }
 }

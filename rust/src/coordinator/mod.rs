@@ -26,7 +26,16 @@ use std::time::Instant;
 /// `serve_inference` example. Returns a human-readable summary.
 pub fn serve_cli(args: &Args) -> Result<String> {
     let dataset = DatasetId::parse(&args.get_str("dataset", "tiny"))
-        .ok_or_else(|| anyhow!("unknown dataset (XLA artifacts exist for tiny/cora/citeseer)"))?;
+        .ok_or_else(|| anyhow!("unknown dataset (serving supports tiny, cora, citeseer)"))?;
+    if matches!(dataset, DatasetId::Pubmed | DatasetId::Nell) {
+        // The serving path densifies S (N×N f32): ~1.5 GB for PubMed and
+        // ~17 GB for Nell. Refuse up front instead of OOMing mid-serve;
+        // ROADMAP "Sparse-aware serving" lifts this.
+        return Err(anyhow!(
+            "dataset {} is too large for the dense serving path (use tiny, cora or citeseer)",
+            dataset.name()
+        ));
+    }
     let requests = args.get_usize("requests", 64).map_err(|e| anyhow!("{e}"))?;
     let batch = args.get_usize("batch", 8).map_err(|e| anyhow!("{e}"))?;
     let workers = args.get_usize("workers", 2).map_err(|e| anyhow!("{e}"))?;

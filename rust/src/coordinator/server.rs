@@ -1,9 +1,9 @@
 //! The serving coordinator: batcher + executor workers + online
 //! verification + metrics.
 //!
-//! Topology (all std threads; the `xla` handles are not `Send`, so each
-//! worker owns its own PJRT client and compiled executable — the
-//! realistic analogue of one accelerator per worker):
+//! Topology (all std threads; each worker owns its own runtime handle and
+//! executable — the realistic analogue of one accelerator per worker, and
+//! a hard requirement on the PJRT backend whose handles are not `Send`):
 //!
 //! ```text
 //!   client driver ──► request ch ──► batcher ──► batch ch ─┬─► worker 0 ─┐
@@ -21,9 +21,9 @@ use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
 use super::verify::ServePolicy;
 use crate::graph::DatasetId;
-use crate::runtime::{GcnOutputs, Manifest, Runtime};
+use crate::runtime::{GcnOutputs, Manifest, ModelEntry, Runtime};
 use crate::tensor::Dense;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Mutex;
@@ -134,6 +134,11 @@ pub fn run_server_with_ready(
     let latency = Mutex::new(LatencyHistogram::new());
     let batch_counter = std::sync::atomic::AtomicU64::new(0);
     let n_workers = cfg.workers.max(1);
+    // Split the host's cores between inter-batch parallelism (the worker
+    // pool) and intra-op parallelism (row-parallel kernels inside each
+    // worker's executable), so total thread pressure stays ≈ core count
+    // while `--workers` keeps scaling throughput on both axes.
+    let intra_threads = (crate::util::parallel::default_threads() / n_workers).max(1);
     let compiled = std::sync::atomic::AtomicUsize::new(0);
     let ready = Mutex::new(ready);
 
@@ -153,7 +158,7 @@ pub fn run_server_with_ready(
         let compiled = &compiled;
         let ready = &ready;
         let mut handles = Vec::new();
-        for worker_id in 0..n_workers {
+        for _worker_id in 0..n_workers {
             let batch_rx = &batch_rx;
             let metrics = &metrics;
             let latency = &latency;
@@ -162,12 +167,21 @@ pub fn run_server_with_ready(
             let cfg = cfg.clone();
             let state = state;
             handles.push(scope.spawn(move || -> Result<()> {
-                // Each worker owns a PJRT client + executable (xla
-                // handles are not Send).
-                let rt = Runtime::cpu()
-                    .with_context(|| format!("worker {worker_id}: PJRT client"))?;
-                let manifest = Manifest::load(&cfg.artifacts_dir)?;
-                let exe = rt.load_model(&manifest, cfg.dataset.name())?;
+                // Each worker owns its own runtime + executable (one
+                // accelerator per worker; required on the PJRT backend).
+                let rt = Runtime::native(intra_threads);
+                // Validate against the AOT manifest when one exists; fall
+                // back to the dataset's canonical shape entry only when no
+                // manifest file is present (fresh checkout before
+                // `python -m compile.aot`). A manifest that exists but is
+                // corrupt or version-skewed must still fail loudly — that
+                // is the Python↔Rust contract check.
+                let exe = if cfg.artifacts_dir.join("manifest.json").exists() {
+                    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+                    rt.load_model(&manifest, cfg.dataset.name())?
+                } else {
+                    rt.load_entry(ModelEntry::for_dataset(cfg.dataset))
+                };
                 if compiled.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 == n_workers
                 {
                     if let Some(tx) = ready.lock().unwrap().take() {
@@ -205,9 +219,35 @@ pub fn run_server_with_ready(
                                 .map(|k| k > 0 && bidx % k == 0)
                                 .unwrap_or(false);
                         if inject {
-                            let v = out.logits.get(0, 0);
+                            // Flip the top exponent bit of the logit where
+                            // that flip perturbs the checksum the most
+                            // (|v| < 2 explodes by 2^128, |v| ≥ 2 collapses
+                            // to ~0), so detection does not depend on one
+                            // element's magnitude versus the batch-wide
+                            // checksum scale. Non-finite results rank
+                            // highest — the verifier always flags those.
+                            let delta = |v: f32| -> f64 {
+                                let flipped = f32::from_bits(v.to_bits() ^ (1 << 30));
+                                if flipped.is_finite() {
+                                    (flipped as f64 - v as f64).abs()
+                                } else {
+                                    f64::INFINITY
+                                }
+                            };
+                            let idx = out
+                                .logits
+                                .data()
+                                .iter()
+                                .enumerate()
+                                .max_by(|a, b| {
+                                    delta(*a.1).partial_cmp(&delta(*b.1)).unwrap()
+                                })
+                                .map(|(i, _)| i)
+                                .unwrap_or(0);
+                            let (r, c) = (idx / out.logits.cols(), idx % out.logits.cols());
+                            let v = out.logits.get(r, c);
                             out.logits
-                                .set(0, 0, f32::from_bits(v.to_bits() ^ (1 << 30)));
+                                .set(r, c, f32::from_bits(v.to_bits() ^ (1 << 30)));
                             metrics.lock().unwrap().injected_faults += 1;
                         }
 

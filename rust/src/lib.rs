@@ -22,13 +22,25 @@
 //! | [`abft`] | split (baseline) and fused (GCN-ABFT) checkers |
 //! | [`opcount`] | analytic op-count model (Table II) |
 //! | [`fault`] | bit-flip fault injection + campaign runner (Table I) |
-//! | [`runtime`] | PJRT/XLA artifact loading & execution (AOT from JAX) |
+//! | [`runtime`] | serving executables: native backend + optional PJRT (`pjrt` feature) |
 //! | [`coordinator`] | serving layer: batcher + workers + online verification |
 //! | [`report`] | table/figure rendering (Table I/II, Fig. 3) |
 //!
 //! The Python side (`python/compile/`) authors the L1 Pallas kernels and
-//! the L2 JAX model and AOT-lowers them to HLO text consumed by
-//! [`runtime`]; Python never runs at serving time.
+//! the L2 JAX model and AOT-lowers them to HLO text whose shape manifest
+//! [`runtime`] validates against; Python never runs at serving time. The
+//! offline build environment has no `xla` crate, so the default runtime
+//! backend executes natively on the repo's own row-parallel kernels.
+
+// Style lints that fight the codebase's explicit-index numeric-kernel
+// idiom; correctness lints stay on (CI runs clippy with -D warnings).
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::inherent_to_string,
+    clippy::manual_range_contains,
+    clippy::type_complexity
+)]
 
 pub mod abft;
 pub mod opcount;

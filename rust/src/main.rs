@@ -4,8 +4,8 @@
 //! * `table1`  — fault-injection campaign sweep (paper Table I);
 //! * `table2`  — operation-count accounting (paper Table II);
 //! * `fig3`    — phase-runtime split (paper Fig. 3);
-//! * `serve`   — end-to-end serving demo: PJRT/XLA inference with online
-//!   GCN-ABFT verification (requires `make artifacts`);
+//! * `serve`   — end-to-end serving demo: batched inference with online
+//!   GCN-ABFT verification (native runtime backend, no artifacts needed);
 //! * `train`   — train the synthetic workloads and print the curves;
 //! * `info`    — dataset statistics.
 
@@ -58,8 +58,8 @@ SUBCOMMANDS
            --datasets ...  --seed S  --scale F  --json
   fig3     runtime split across the two matmul phases (paper Fig. 3)
            --datasets ...  --seed S  --scale F  --reps R (5)
-  serve    serve inference with online GCN-ABFT verification over the
-           AOT XLA artifacts (build them with `make artifacts`)
+  serve    serve inference with online GCN-ABFT verification (native
+           runtime; shapes validated against artifacts/ when present)
            --dataset tiny|cora|citeseer  --requests N (64)  --batch B (8)
            --workers W (2)  --artifacts DIR (artifacts)  --inject-every K
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves

@@ -24,6 +24,25 @@ pub struct ModelEntry {
     pub classes: usize,
 }
 
+impl ModelEntry {
+    /// Synthesize the entry the AOT pipeline would write for a dataset —
+    /// used by the native backend when no artifact manifest exists yet
+    /// (the shape contract is identical either way, and a later
+    /// `python -m compile.aot` run must agree with it; see
+    /// `tests/integration_runtime.rs`).
+    pub fn for_dataset(id: crate::graph::DatasetId) -> ModelEntry {
+        let spec = id.spec();
+        ModelEntry {
+            name: id.name().to_string(),
+            file: format!("gcn_{}.hlo.txt", id.name()),
+            n: spec.num_nodes,
+            f: spec.feat_dim,
+            hidden: id.hidden_dim(),
+            classes: spec.num_classes,
+        }
+    }
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -37,7 +56,9 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+            .with_context(|| {
+                format!("reading {path:?} — run `python -m compile.aot` to build artifacts")
+            })?;
         Self::parse(&text, dir)
     }
 

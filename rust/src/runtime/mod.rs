@@ -1,6 +1,11 @@
-//! XLA/PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the request path.
-//! Python never runs at serving time.
+//! Serving runtime: executes the 2-layer GCN-ABFT forward on the request
+//! path and validates shapes against the artifact manifest produced by
+//! `python/compile/aot.py`. Python never runs at serving time.
+//!
+//! The default backend is native (the repo's own row-parallel f32
+//! kernels); the original PJRT/XLA path is kept behind the `pjrt`
+//! feature because the `xla` crate is absent from the offline registry —
+//! see [`client`] for the full story.
 
 pub mod artifact;
 pub mod client;

@@ -116,8 +116,17 @@ impl Csr {
     }
 
     /// SpMM: `self · B` (CSR × dense → dense), f32 data path, matching the
-    /// accelerator's combination/aggregation engines.
+    /// accelerator's combination/aggregation engines. Serial entry point;
+    /// see [`Csr::spmm_par`].
     pub fn spmm(&self, b: &Dense) -> Dense {
+        self.spmm_par(b, 1)
+    }
+
+    /// Row-parallel SpMM over `threads` scoped workers: the output rows
+    /// are partitioned into contiguous bands (CSR rows are independent),
+    /// each band written by one worker. Per-row accumulation order is
+    /// unchanged, so the result is bit-identical at any thread count.
+    pub fn spmm_par(&self, b: &Dense, threads: usize) -> Dense {
         assert_eq!(
             self.cols,
             b.rows(),
@@ -127,18 +136,21 @@ impl Csr {
         );
         let n = b.cols();
         let mut out = Dense::zeros(self.rows, n);
-        for r in 0..self.rows {
-            let lo = self.row_ptr[r];
-            let hi = self.row_ptr[r + 1];
-            let out_row = out.row_mut(r);
-            for i in lo..hi {
-                let v = self.values[i];
-                let b_row = b.row(self.col_idx[i]);
-                for (o, &bx) in out_row.iter_mut().zip(b_row).take(n) {
-                    *o += v * bx;
+        if self.rows == 0 || n == 0 || self.nnz() == 0 {
+            return out;
+        }
+        crate::util::parallel::par_row_chunks_mut(out.data_mut(), n, threads, |first_row, band| {
+            for (dr, out_row) in band.chunks_mut(n).enumerate() {
+                let r = first_row + dr;
+                for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                    let v = self.values[i];
+                    let b_row = b.row(self.col_idx[i]);
+                    for (o, &bx) in out_row.iter_mut().zip(b_row) {
+                        *o += v * bx;
+                    }
                 }
             }
-        }
+        });
         out
     }
 
@@ -254,6 +266,27 @@ mod tests {
         let sparse_out = m.spmm(&b);
         let dense_out = crate::tensor::ops::matmul(&m.to_dense(), &b);
         assert!(sparse_out.max_abs_diff(&dense_out) < 1e-6);
+    }
+
+    #[test]
+    fn spmm_par_bit_identical_to_serial() {
+        // Random-pattern CSR with empty rows mixed in; 1500×6 output so
+        // the parallel runs really split into multiple bands.
+        let mut coo = Vec::new();
+        for r in 0..1500 {
+            if r % 7 == 3 {
+                continue; // empty row
+            }
+            for j in 0..(r % 5) {
+                coo.push((r, (r * 3 + j * 11) % 40, (r + j) as f32 * 0.3 - 1.0));
+            }
+        }
+        let m = Csr::from_coo(1500, 40, coo);
+        let b = Dense::from_fn(40, 6, |r, c| ((r * 6 + c) % 9) as f32 * 0.5 - 2.0);
+        let serial = m.spmm(&b);
+        for threads in [2, 4, 16, 100] {
+            assert_eq!(serial, m.spmm_par(&b, threads), "threads={threads}");
+        }
     }
 
     #[test]

@@ -4,11 +4,29 @@
 //! [`crate::tensor::instrumented`].
 
 use super::dense::Dense;
+use crate::util::parallel::par_row_chunks_mut;
+
+/// Rows of B (each `n` f32 wide) kept hot per k-block. 128 rows × up to
+/// ~1 K columns ≈ 512 KB worst case, sized for a typical L2; for the
+/// repo's layer shapes (n ≤ 16 output columns) a block is a few KB and
+/// lives in L1 across the whole row band.
+const MATMUL_K_BLOCK: usize = 128;
 
 /// `A · B`, fp32 data path with per-element f32 accumulation — matches the
 /// simulated accelerator (MAC results are fp32, which is what the fault
-/// model flips bits in).
+/// model flips bits in). Serial entry point; see [`matmul_par`].
 pub fn matmul(a: &Dense, b: &Dense) -> Dense {
+    matmul_par(a, b, 1)
+}
+
+/// Cache-blocked, row-parallel `A · B` over `threads` scoped workers.
+///
+/// The output rows are partitioned into contiguous bands (one per
+/// worker); within a band the k dimension is blocked so the touched rows
+/// of `B` stay cache-resident while the band's output rows are swept.
+/// Per-row evaluation order is identical to the serial kernel, so the
+/// result is bit-identical at any thread count.
+pub fn matmul_par(a: &Dense, b: &Dense, threads: usize) -> Dense {
     assert_eq!(
         a.cols(),
         b.rows(),
@@ -19,20 +37,28 @@ pub fn matmul(a: &Dense, b: &Dense) -> Dense {
     let (m, k) = a.shape();
     let n = b.cols();
     let mut out = Dense::zeros(m, n);
-    // i-k-j loop order: streams B rows, writes the output row hot in cache.
-    for i in 0..m {
-        let a_row = a.row(i);
-        for (kk, &aik) in a_row.iter().enumerate().take(k) {
-            if aik == 0.0 {
-                continue;
-            }
-            let b_row = b.row(kk);
-            let out_row = out.row_mut(i);
-            for (o, &bkj) in out_row.iter_mut().zip(b_row).take(n) {
-                *o += aik * bkj;
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    par_row_chunks_mut(out.data_mut(), n, threads, |first_row, band| {
+        // k-blocked i-k-j order: the MATMUL_K_BLOCK rows of B are reused
+        // by every output row of the band before the next block loads.
+        for kb in (0..k).step_by(MATMUL_K_BLOCK) {
+            let kb_end = (kb + MATMUL_K_BLOCK).min(k);
+            for (r, out_row) in band.chunks_mut(n).enumerate() {
+                let a_row = a.row(first_row + r);
+                for (kk, &aik) in a_row[kb..kb_end].iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = b.row(kb + kk);
+                    for (o, &bkj) in out_row.iter_mut().zip(b_row) {
+                        *o += aik * bkj;
+                    }
+                }
             }
         }
-    }
+    });
     out
 }
 
@@ -186,6 +212,29 @@ mod tests {
     #[should_panic(expected = "matmul shape mismatch")]
     fn matmul_shape_mismatch_panics() {
         matmul(&m23(), &m23());
+    }
+
+    #[test]
+    fn matmul_par_bit_identical_to_serial() {
+        // Shapes chosen to exercise k-blocking (k > MATMUL_K_BLOCK) and a
+        // multi-band output (rows·cols above the min-work threshold).
+        let a = Dense::from_fn(600, 200, |r, c| ((r * 7 + c * 3) % 13) as f32 * 0.37 - 2.0);
+        let b = Dense::from_fn(200, 9, |r, c| ((r + 5 * c) % 11) as f32 * 0.21 - 1.0);
+        let serial = matmul(&a, &b);
+        for threads in [2, 3, 8, 64] {
+            let par = matmul_par(&a, &b, threads);
+            assert_eq!(serial, par, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn matmul_par_degenerate_shapes() {
+        let a = Dense::zeros(0, 5);
+        let b = Dense::zeros(5, 3);
+        assert_eq!(matmul_par(&a, &b, 4).shape(), (0, 3));
+        let a = Dense::from_vec(1, 1, vec![2.0]);
+        let b = Dense::from_vec(1, 1, vec![3.0]);
+        assert_eq!(matmul_par(&a, &b, 8).data(), &[6.0]);
     }
 
     #[test]

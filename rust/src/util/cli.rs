@@ -23,19 +23,32 @@ pub struct Spec {
     pub flags: Vec<&'static str>,
 }
 
-#[derive(Debug, thiserror::Error)]
+/// Argument-parsing errors. `thiserror` is not available in the offline
+/// registry, so `Display`/`Error` are implemented by hand.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     UnknownOption(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value} ({reason})")]
     InvalidValue {
         key: String,
         value: String,
         reason: String,
     },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownOption(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::InvalidValue { key, value, reason } => {
+                write!(f, "invalid value for --{key}: {value} ({reason})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw argv (not including the program/subcommand names) against

@@ -1,0 +1,118 @@
+//! Scoped-thread helpers for row-parallel kernels.
+//!
+//! The dense/sparse hot paths (`tensor::ops::matmul_par`,
+//! `sparse::Csr::spmm_par`) partition their *output* rows into contiguous
+//! bands and process each band on its own `std::thread::scope` worker.
+//! Because every band owns a disjoint `&mut` slice of the output and the
+//! per-row floating-point evaluation order is unchanged, the parallel
+//! kernels are **bit-identical** to their serial counterparts at any
+//! thread count — determinism the ABFT checkers and the reproducibility
+//! tests rely on.
+
+/// A sensible worker count for data-parallel kernels on this host.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
+}
+
+/// Below this many output elements per band, thread-spawn overhead
+/// (~10–20 µs each) rivals the band's compute, so the worker count is
+/// capped to keep every band at least this large. Small kernels (e.g.
+/// the 64×8 tiny-dataset layers) therefore run inline regardless of the
+/// requested thread count.
+const MIN_BAND_ELEMS: usize = 2048;
+
+/// Split `data` (a row-major buffer of rows of width `row_width`) into at
+/// most `threads` contiguous whole-row bands and run `f(first_row, band)`
+/// on each band from a scoped thread. Runs inline when `threads <= 1` or
+/// when the buffer is too small for multiple bands of [`MIN_BAND_ELEMS`]
+/// to be worth a spawn.
+pub fn par_row_chunks_mut<T, F>(data: &mut [T], row_width: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_width > 0, "row_width must be positive");
+    debug_assert_eq!(data.len() % row_width, 0, "buffer is not whole rows");
+    let rows = data.len() / row_width;
+    let threads = threads
+        .min(data.len() / MIN_BAND_ELEMS)
+        .clamp(1, rows.max(1));
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let band_rows = (rows + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let f = &f;
+        for (band, chunk) in data.chunks_mut(band_rows * row_width).enumerate() {
+            scope.spawn(move || f(band * band_rows, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_threads_positive_and_bounded() {
+        let t = default_threads();
+        assert!((1..=16).contains(&t));
+    }
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        // Small cases run inline (below MIN_BAND_ELEMS); the 2048-row
+        // cases genuinely split into multiple spawned bands.
+        for &(rows, width, threads) in &[
+            (1usize, 3usize, 4usize),
+            (7, 2, 3),
+            (16, 5, 4),
+            (5, 1, 8),
+            (9, 4, 1),
+            (2048, 4, 4),
+            (2050, 3, 3),
+        ] {
+            let mut data = vec![0u32; rows * width];
+            par_row_chunks_mut(&mut data, width, threads, |first_row, band| {
+                for (r, row) in band.chunks_mut(width).enumerate() {
+                    for v in row {
+                        *v += (first_row + r + 1) as u32;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..width {
+                    assert_eq!(
+                        data[r * width + c],
+                        (r + 1) as u32,
+                        "rows={rows} width={width} threads={threads} r={r} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        // Big enough that the threads=6 run really spawns several bands.
+        let rows = 1200;
+        let width = 8;
+        let work = |first_row: usize, band: &mut [f64]| {
+            for (r, row) in band.chunks_mut(width).enumerate() {
+                let i = first_row + r;
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = (i * width + c) as f64 * 0.5 - 3.0;
+                }
+            }
+        };
+        let mut serial = vec![0f64; rows * width];
+        par_row_chunks_mut(&mut serial, width, 1, work);
+        let mut parallel = vec![0f64; rows * width];
+        par_row_chunks_mut(&mut parallel, width, 6, work);
+        assert_eq!(serial, parallel);
+    }
+}

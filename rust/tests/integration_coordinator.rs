@@ -1,18 +1,11 @@
-//! Coordinator integration: full serving pipeline over the XLA artifacts
-//! — batching, verification, fault injection + recovery, metrics.
-//! Skips when artifacts are absent.
+//! Coordinator integration: full serving pipeline — batching,
+//! verification, fault injection + recovery, metrics. Runs on the native
+//! runtime backend, so no artifacts are required; when
+//! `artifacts/manifest.json` exists the same path additionally validates
+//! shapes against it.
 
 use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig, VerifyStatus};
 use gcn_abft::graph::DatasetId;
-use std::path::Path;
-
-fn have_artifacts() -> bool {
-    let ok = Path::new("artifacts/manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: run `make artifacts` first");
-    }
-    ok
-}
 
 fn base_cfg() -> ServerConfig {
     ServerConfig {
@@ -31,9 +24,6 @@ fn base_cfg() -> ServerConfig {
 
 #[test]
 fn clean_serving_answers_every_request() {
-    if !have_artifacts() {
-        return;
-    }
     let s = serve_synthetic(&base_cfg(), 40).unwrap();
     assert_eq!(s.responses, 40);
     assert_eq!(s.metrics.requests, 40);
@@ -46,9 +36,6 @@ fn clean_serving_answers_every_request() {
 
 #[test]
 fn injected_faults_are_detected_and_recovered() {
-    if !have_artifacts() {
-        return;
-    }
     let mut cfg = base_cfg();
     cfg.inject_every = Some(2); // every 2nd batch corrupted
     let s = serve_synthetic(&cfg, 32).unwrap();
@@ -65,9 +52,6 @@ fn injected_faults_are_detected_and_recovered() {
 
 #[test]
 fn single_worker_is_deterministic_in_counts() {
-    if !have_artifacts() {
-        return;
-    }
     let mut cfg = base_cfg();
     cfg.workers = 1;
     let a = serve_synthetic(&cfg, 24).unwrap();
@@ -78,9 +62,6 @@ fn single_worker_is_deterministic_in_counts() {
 
 #[test]
 fn verify_status_taxonomy_is_consistent() {
-    if !have_artifacts() {
-        return;
-    }
     let mut cfg = base_cfg();
     cfg.inject_every = Some(3);
     let s = serve_synthetic(&cfg, 30).unwrap();

@@ -1,10 +1,10 @@
-//! Runtime integration: HLO-text artifact → PJRT compile → execute →
-//! numerics match the native engine. Skips gracefully when artifacts are
-//! absent (`make artifacts` builds them).
+//! Runtime integration: the native serving backend against the reference
+//! engine, plus the artifact-manifest contract checks (which skip
+//! gracefully until `python -m compile.aot` has produced artifacts).
 
 use gcn_abft::graph::DatasetId;
 use gcn_abft::report::{build_workload, ExperimentOpts};
-use gcn_abft::runtime::{Manifest, Runtime};
+use gcn_abft::runtime::{Manifest, ModelEntry, Runtime};
 use std::path::Path;
 
 fn artifacts_dir() -> Option<&'static Path> {
@@ -12,7 +12,7 @@ fn artifacts_dir() -> Option<&'static Path> {
     if p.join("manifest.json").exists() {
         Some(p)
     } else {
-        eprintln!("SKIP: run `make artifacts` first");
+        eprintln!("SKIP: run `python -m compile.aot` to build artifacts first");
         None
     }
 }
@@ -33,12 +33,41 @@ fn manifest_loads_and_matches_dataset_specs() {
 }
 
 #[test]
-fn tiny_artifact_executes_and_matches_native_engine() {
+fn native_runtime_executes_without_artifacts() {
+    // The serving path must work on a fresh checkout: synthesize the
+    // shape entry the AOT pipeline would have written and run natively.
+    let exe = Runtime::native(2).load_entry(ModelEntry::for_dataset(DatasetId::Tiny));
+    run_and_check_against_engine(&exe);
+}
+
+#[test]
+fn synthesized_entry_matches_dataset_specs() {
+    for id in [DatasetId::Tiny, DatasetId::Cora, DatasetId::Nell] {
+        let e = ModelEntry::for_dataset(id);
+        let spec = id.spec();
+        assert_eq!(e.name, id.name());
+        assert_eq!(e.n, spec.num_nodes);
+        assert_eq!(e.f, spec.feat_dim);
+        assert_eq!(e.hidden, id.hidden_dim());
+        assert_eq!(e.classes, spec.num_classes);
+    }
+}
+
+#[test]
+fn manifest_entry_drives_native_executable() {
+    // Exercises the manifest → executable path. Note: without the `pjrt`
+    // feature the HLO text itself is never parsed or executed — only the
+    // manifest's shape contract is consumed; the native backend computes
+    // the forward. Executing the artifact requires a vendored `xla`
+    // crate (see runtime::client::pjrt).
     let Some(dir) = artifacts_dir() else { return };
     let rt = Runtime::cpu().unwrap();
     let manifest = Manifest::load(dir).unwrap();
     let exe = rt.load_model(&manifest, "tiny").unwrap();
+    run_and_check_against_engine(&exe);
+}
 
+fn run_and_check_against_engine(exe: &gcn_abft::runtime::GcnExecutable) {
     let opts = ExperimentOpts {
         datasets: vec![DatasetId::Tiny],
         seed: 7,

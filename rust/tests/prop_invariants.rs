@@ -9,7 +9,13 @@
 //!   unless annihilated by a zero column of S;
 //! * CSR algebra matches dense algebra on random sparse patterns.
 
-use gcn_abft::abft::{fused_layer_checked, split_layer_checked, CheckPolicy, EngineInput};
+use gcn_abft::abft::{
+    fused_forward_checked, fused_layer_checked, split_forward_checked, split_layer_checked,
+    CheckPolicy, EngineInput, EngineModel,
+};
+use gcn_abft::fault::{FaultPlan, InjectHook, PlannedFault};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::synth::{generate, SynthSpec};
 use gcn_abft::sparse::Csr;
 use gcn_abft::tensor::instrumented::{matmul_hooked, CountingHook};
 use gcn_abft::tensor::{Dense, Dense64, NopHook};
@@ -245,6 +251,114 @@ fn prop_single_corruption_detected_when_s_has_no_zero_columns() {
             // every X row is read by S (self-loops ⇒ no zero columns).
             if !policy.fires(rec.predicted, rec.actual) {
                 return Err(format!("corruption at op {target} missed: {rec:?}"));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+/// The paper's core identity on *whole random synthetic graphs*: the
+/// fused checksum `s_c·H·w_r` equals the split scheme's end-of-layer
+/// `eᵀ(S·H·W)e` on every layer; fault-free runs raise zero alarms under
+/// all four paper thresholds; and a single injected bit flip on the data
+/// path is detected by both schemes.
+#[test]
+fn prop_fused_equals_split_on_random_synthetic_graphs() {
+    check(
+        &Config {
+            cases: 24,
+            seed: 0xE406,
+            ..Default::default()
+        },
+        |rng| {
+            let n = 20 + rng.gen_index(40);
+            let classes = 2 + rng.gen_index(4);
+            let spec = SynthSpec {
+                name: "prop".into(),
+                num_nodes: n,
+                num_edges: 2 * n,
+                feat_dim: 8 + rng.gen_index(24),
+                feat_nnz: 4 * n,
+                num_classes: classes,
+                homophily: 0.8,
+                binary_features: rng.gen_bool(0.5),
+                feature_scale: 1.0,
+            };
+            let graph_seed = rng.next_u64();
+            let model_seed = rng.next_u64();
+            let flip_seed = rng.next_u64();
+            (spec, graph_seed, model_seed, flip_seed)
+        },
+        |(spec, graph_seed, model_seed, flip_seed)| {
+            let graph = generate(spec, *graph_seed);
+            let model = GcnModel::two_layer(&graph, 8, *model_seed);
+            let em = EngineModel::from_model(&model);
+            let h_c = graph.features.col_sums_f64();
+
+            // --- fault-free: identical outputs, matching checksums, no
+            // alarms at any paper threshold --------------------------------
+            let mut nop = NopHook;
+            let (fused_out, fused_checks) = fused_forward_checked(&em, &graph.features, &mut nop);
+            let (split_out, split_checks) =
+                split_forward_checked(&em, &graph.features, &h_c, &mut nop);
+            for (f, s) in fused_out.iter().zip(&split_out) {
+                if !f.identical(s) {
+                    return Err("checkers computed different true outputs".into());
+                }
+            }
+            // Fused end-of-layer records coincide with split's (the same
+            // ops in the same order): layer ℓ fused == split[2ℓ+1].
+            for (l, f) in fused_checks.iter().enumerate() {
+                let s = &split_checks[2 * l + 1];
+                if f.predicted != s.predicted || f.actual != s.actual {
+                    return Err(format!(
+                        "fused/split end-of-layer checksums diverge at layer {l}: \
+                         {f:?} vs {s:?}"
+                    ));
+                }
+            }
+            for &tau in &CheckPolicy::PAPER_THRESHOLDS {
+                let policy = CheckPolicy::new(tau);
+                for c in fused_checks.iter().chain(&split_checks) {
+                    if policy.fires(c.predicted, c.actual) {
+                        return Err(format!("fault-free alarm at tau={tau:.0e}: {c:?}"));
+                    }
+                }
+            }
+
+            // --- one injected bit flip on the data path is detected by
+            // both schemes -------------------------------------------------
+            // Target an op inside the layer-1 combination matmul (the
+            // first 2·nnz(H)·h data ops of either scheme's timeline) and
+            // flip the top exponent bit, which is visible at any operand
+            // magnitude (value shrinks or explodes by 2^128).
+            let phase1_ops = 2 * graph.features.nnz() as u64 * 8;
+            let target = flip_seed % phase1_ops;
+            let policy = CheckPolicy::new(1e-4);
+            for scheme_is_fused in [true, false] {
+                let plan = FaultPlan {
+                    faults: vec![PlannedFault {
+                        op_index: target,
+                        bit32: 30,
+                        bit64: 62,
+                    }],
+                };
+                let mut hook = InjectHook::new(&plan);
+                let checks = if scheme_is_fused {
+                    fused_forward_checked(&em, &graph.features, &mut hook).1
+                } else {
+                    split_forward_checked(&em, &graph.features, &h_c, &mut hook).1
+                };
+                if !hook.exhausted() {
+                    return Err(format!("planned fault at op {target} never fired"));
+                }
+                if !checks.iter().any(|c| policy.fires(c.predicted, c.actual)) {
+                    let scheme = if scheme_is_fused { "fused" } else { "split" };
+                    return Err(format!(
+                        "{scheme} missed an exponent-bit flip at op {target}: {checks:?}"
+                    ));
+                }
             }
             Ok(())
         },
