@@ -1,14 +1,25 @@
 //! Serving-path bench: end-to-end latency/throughput of the coordinator
-//! (native runtime backend), sweeping batch size and worker count. The
-//! worker sweep is the tentpole proof that `gcn-abft serve` throughput
-//! scales with `--workers` on the row-parallel kernels.
+//! (native runtime backend), sweeping batch size, worker count and the
+//! operand representation. The worker sweep shows `gcn-abft serve`
+//! throughput scaling with `--workers`; the sparse-vs-dense sweep puts
+//! the CSR row-band-sharded path next to the dense path on the graphs
+//! that can run both (Cora/Citeseer), plus a reduced-scale PubMed run
+//! that only the sparse path can serve at paper shape.
 
 use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig};
 use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::ExecMode;
 use gcn_abft::util::bench::bench_header;
 use gcn_abft::util::parallel::default_threads;
 
-fn run(dataset: DatasetId, requests: usize, batch: usize, workers: usize) {
+fn run(
+    dataset: DatasetId,
+    requests: usize,
+    batch: usize,
+    workers: usize,
+    mode: ExecMode,
+    scale: f64,
+) {
     let cfg = ServerConfig {
         dataset,
         artifacts_dir: "artifacts".into(),
@@ -19,17 +30,20 @@ fn run(dataset: DatasetId, requests: usize, batch: usize, workers: usize) {
         workers,
         inject_every: None,
         seed: 7,
+        mode,
+        scale,
         ..Default::default()
     };
     match serve_synthetic(&cfg, requests) {
         Ok(s) => {
             println!(
-                "{:<9} batch={batch:<2} workers={workers:<2} {:>7.1} req/s  \
+                "{:<12} {:<6} batch={batch:<2} workers={workers:<2} {:>7.1} req/s  \
                  p50 {:>8.2} ms  p95 {:>8.2} ms  verify-overhead {:.4}%",
-                dataset.name(),
+                s.dataset,
+                if s.sparse { "sparse" } else { "dense" },
                 s.metrics.throughput_rps(),
-                s.p50 * 1e3,
-                s.p95 * 1e3,
+                s.metrics.p50_secs * 1e3,
+                s.metrics.p95_secs * 1e3,
                 s.metrics.verify_overhead() * 100.0
             );
         }
@@ -40,24 +54,36 @@ fn run(dataset: DatasetId, requests: usize, batch: usize, workers: usize) {
 fn main() {
     bench_header("bench_coordinator — serving throughput/latency (native runtime)");
 
-    println!("-- batch-size sweep (2 workers) --");
+    println!("-- batch-size sweep (2 workers, auto operands) --");
     for (dataset, requests) in [(DatasetId::Tiny, 256), (DatasetId::Cora, 24)] {
         for batch in [1usize, 8] {
-            run(dataset, requests, batch, 2);
+            run(dataset, requests, batch, 2, ExecMode::Auto, 1.0);
         }
     }
 
-    println!("\n-- worker sweep (batch 8) --");
+    println!("\n-- worker sweep (batch 8, auto operands) --");
     let max_workers = default_threads().min(8);
     let mut workers = 1;
     while workers <= max_workers {
-        run(DatasetId::Cora, 24, 8, workers);
+        run(DatasetId::Cora, 24, 8, workers, ExecMode::Auto, 1.0);
         workers *= 2;
     }
+
+    println!("\n-- sparse (row-band sharded CSR) vs dense operands (batch 8, 2 workers) --");
+    for dataset in [DatasetId::Cora, DatasetId::Citeseer] {
+        run(dataset, 24, 8, 2, ExecMode::Dense, 1.0);
+        run(dataset, 24, 8, 2, ExecMode::Sparse, 1.0);
+    }
+    // PubMed at paper shape only fits the sparse path (dense S ≈ 1.5 GB);
+    // a reduced-scale run keeps the bench quick while still exercising
+    // the CSR + row-band machinery end to end.
+    run(DatasetId::Pubmed, 24, 8, 2, ExecMode::Sparse, 0.25);
 
     println!(
         "\n(batching amortizes the per-pass cost; verification stays a tiny \
          fraction of execute time; the worker sweep should show req/s rising \
-         until the worker pool saturates the host's cores)"
+         until the worker pool saturates the host's cores; sparse operands \
+         trade peak dense-kernel throughput for an operand footprint that \
+         scales with nnz — the only way PubMed/Nell serve at all)"
     );
 }

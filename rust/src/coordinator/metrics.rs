@@ -50,9 +50,21 @@ impl LatencyHistogram {
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+
+    /// Fold another histogram into this one — used to aggregate the
+    /// per-worker (or per-row-band) histograms into the serve-wide one
+    /// without a shared lock on the request path.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.samples.extend_from_slice(&other.samples);
+    }
 }
 
-/// Aggregate serving metrics.
+/// Aggregate serving metrics. The latency percentiles live here
+/// directly (filled from the merged per-worker histograms when a serve
+/// run finishes), not in a side channel.
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
     pub requests: u64,
@@ -65,9 +77,20 @@ pub struct ServeMetrics {
     pub exec_secs: f64,
     pub verify_secs: f64,
     pub wall_secs: f64,
+    /// Request-latency percentiles in seconds (NaN when the finalized
+    /// run had no responses; 0 on a default-constructed value).
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub p99_secs: f64,
 }
 
 impl ServeMetrics {
+    /// Fill the percentile fields from an aggregated histogram.
+    pub fn set_latency_percentiles(&mut self, lat: &LatencyHistogram) {
+        self.p50_secs = lat.percentile(50.0);
+        self.p95_secs = lat.percentile(95.0);
+        self.p99_secs = lat.percentile(99.0);
+    }
     pub fn throughput_rps(&self) -> f64 {
         self.requests as f64 / self.wall_secs.max(1e-9)
     }
@@ -104,6 +127,42 @@ mod tests {
         let h = LatencyHistogram::new();
         assert!(h.percentile(50.0).is_nan());
         assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn merge_combines_histograms() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 1..=50 {
+            a.record(i as f64 * 1e-3);
+        }
+        for i in 51..=100 {
+            b.record(i as f64 * 1e-3);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert!((a.percentile(50.0) - 0.05).abs() < 0.002);
+        // Merging into an empty histogram is a copy.
+        let mut c = LatencyHistogram::new();
+        c.merge(&a);
+        assert_eq!(c.count(), 100);
+    }
+
+    #[test]
+    fn percentiles_surface_in_metrics() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let mut m = ServeMetrics::default();
+        m.set_latency_percentiles(&h);
+        assert!((m.p50_secs - 0.05).abs() < 0.002);
+        assert!((m.p99_secs - 0.099).abs() < 0.002);
+        assert!(m.p95_secs <= m.p99_secs);
+        // No samples -> NaN, matching LatencyHistogram::percentile.
+        let mut empty = ServeMetrics::default();
+        empty.set_latency_percentiles(&LatencyHistogram::new());
+        assert!(empty.p50_secs.is_nan());
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! L3 serving coordinator: request routing, dynamic batching, worker
-//! pool over PJRT executables, and **online GCN-ABFT verification** of
+//! pool over runtime executables, and **online GCN-ABFT verification** of
 //! every response — the deployment shape the paper's checker is built
 //! for (detect-before-release, re-execute on transient faults).
 
@@ -16,6 +16,7 @@ pub use server::{run_server, ModelState, ServerConfig};
 pub use verify::{ServePolicy, VerifyReport};
 
 use crate::graph::DatasetId;
+use crate::runtime::ExecMode;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -25,21 +26,25 @@ use std::time::Instant;
 /// Synthetic client driver + server, used by `gcn-abft serve` and the
 /// `serve_inference` example. Returns a human-readable summary.
 pub fn serve_cli(args: &Args) -> Result<String> {
-    let dataset = DatasetId::parse(&args.get_str("dataset", "tiny"))
-        .ok_or_else(|| anyhow!("unknown dataset (serving supports tiny, cora, citeseer)"))?;
-    if matches!(dataset, DatasetId::Pubmed | DatasetId::Nell) {
-        // The serving path densifies S (N×N f32): ~1.5 GB for PubMed and
-        // ~17 GB for Nell. Refuse up front instead of OOMing mid-serve;
-        // ROADMAP "Sparse-aware serving" lifts this.
-        return Err(anyhow!(
-            "dataset {} is too large for the dense serving path (use tiny, cora or citeseer)",
-            dataset.name()
-        ));
-    }
+    let dataset = DatasetId::parse(&args.get_str("dataset", "tiny")).ok_or_else(|| {
+        anyhow!("unknown dataset (serving supports tiny, cora, citeseer, pubmed, nell)")
+    })?;
     let requests = args.get_usize("requests", 64).map_err(|e| anyhow!("{e}"))?;
     let batch = args.get_usize("batch", 8).map_err(|e| anyhow!("{e}"))?;
     let workers = args.get_usize("workers", 2).map_err(|e| anyhow!("{e}"))?;
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!("{e}"))?;
+    let scale = args.get_f64("scale", 1.0).map_err(|e| anyhow!("{e}"))?;
+    if !(scale > 0.0 && scale <= 1.0) {
+        return Err(anyhow!("--scale must be in (0, 1], got {scale}"));
+    }
+    let mode = ExecMode::parse(&args.get_str("mode", "auto"))
+        .ok_or_else(|| anyhow!("unknown --mode (auto, dense, sparse)"))?;
+    let mem_budget_mb = args
+        .get_usize("mem-budget-mb", 512)
+        .map_err(|e| anyhow!("{e}"))?;
+    let train_epochs = args
+        .get_usize("train-epochs", 10)
+        .map_err(|e| anyhow!("{e}"))?;
     let inject_every = match args.get("inject-every") {
         Some(v) => Some(v.parse::<u64>().map_err(|e| anyhow!("inject-every: {e}"))?),
         None => None,
@@ -54,6 +59,10 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         workers,
         inject_every,
         seed,
+        scale,
+        mode,
+        mem_budget_mb,
+        train_epochs,
         ..Default::default()
     };
     let summary = serve_synthetic(&cfg, requests)?;
@@ -68,14 +77,19 @@ pub fn serve_cli(args: &Args) -> Result<String> {
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
     pub dataset: String,
+    /// Aggregated serving metrics (latency percentiles included:
+    /// `p50_secs`/`p95_secs`/`p99_secs` — the single source of truth).
     pub metrics: ServeMetrics,
-    pub p50: f64,
-    pub p95: f64,
-    pub p99: f64,
     pub responses: usize,
     pub clean: usize,
     pub recovered: usize,
     pub failed: usize,
+    /// Whether the run used CSR operands (row-band sharded aggregation).
+    pub sparse: bool,
+    /// Row bands of `S` (1 for dense).
+    pub bands: usize,
+    /// Resident graph-operand footprint (S + features) in bytes.
+    pub operand_bytes: usize,
 }
 
 impl ServeSummary {
@@ -83,6 +97,7 @@ impl ServeSummary {
         let m = &self.metrics;
         format!(
             "SERVE {} — {} requests in {:.2}s ({:.1} req/s)\n\
+             operands: {} ({:.1} MB resident{})\n\
              batches {} (mean size {:.1}) | executions {} | p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
              verification: {:.3}% of execute time | checks fired {} | injected {} | retries {} | failures {}\n\
              responses: {} clean, {} recovered-after-retry, {} failed",
@@ -90,12 +105,19 @@ impl ServeSummary {
             m.requests,
             m.wall_secs,
             m.throughput_rps(),
+            if self.sparse { "sparse (CSR)" } else { "dense" },
+            self.operand_bytes as f64 / (1u64 << 20) as f64,
+            if self.sparse {
+                format!(", {} row bands", self.bands)
+            } else {
+                String::new()
+            },
             m.batches,
             m.mean_batch(),
             m.executions,
-            self.p50 * 1e3,
-            self.p95 * 1e3,
-            self.p99 * 1e3,
+            m.p50_secs * 1e3,
+            m.p95_secs * 1e3,
+            m.p99_secs * 1e3,
             m.verify_overhead() * 100.0,
             m.checks_fired,
             m.injected_faults,
@@ -111,14 +133,17 @@ impl ServeSummary {
         let m = &self.metrics;
         Json::obj(vec![
             ("dataset", Json::from(self.dataset.clone())),
+            ("sparse", Json::Bool(self.sparse)),
+            ("bands", Json::from(self.bands)),
+            ("operand_bytes", Json::from(self.operand_bytes)),
             ("requests", Json::from(m.requests)),
             ("wall_secs", Json::Num(m.wall_secs)),
             ("throughput_rps", Json::Num(m.throughput_rps())),
             ("batches", Json::from(m.batches)),
             ("mean_batch", Json::Num(m.mean_batch())),
-            ("p50_ms", Json::Num(self.p50 * 1e3)),
-            ("p95_ms", Json::Num(self.p95 * 1e3)),
-            ("p99_ms", Json::Num(self.p99 * 1e3)),
+            ("p50_ms", Json::Num(m.p50_secs * 1e3)),
+            ("p95_ms", Json::Num(m.p95_secs * 1e3)),
+            ("p99_ms", Json::Num(m.p99_secs * 1e3)),
             ("verify_overhead", Json::Num(m.verify_overhead())),
             ("checks_fired", Json::from(m.checks_fired)),
             ("injected_faults", Json::from(m.injected_faults)),
@@ -133,9 +158,9 @@ impl ServeSummary {
 
 /// Drive the server with `n_requests` synthetic what-if queries.
 pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSummary> {
-    let state = ModelState::build(cfg);
-    let feat_dim = state.features.cols();
-    let n_nodes = state.features.rows();
+    let state = ModelState::build(cfg)?;
+    let feat_dim = state.ops.feat_dim();
+    let n_nodes = state.ops.n_nodes();
 
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
@@ -143,7 +168,7 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
 
     // Client driver thread: bursty request arrivals with random what-if
     // perturbations and query sets. Held back until every worker has
-    // compiled so latencies measure steady-state serving, not PJRT
+    // compiled so latencies measure steady-state serving, not executable
     // warm-up.
     let seed = cfg.seed;
     let driver = std::thread::spawn(move || {
@@ -181,7 +206,6 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
         server::run_server_with_ready(cfg, &state, req_rx, resp_tx, Some(ready_tx))?;
     driver.join().expect("driver panicked");
 
-    let (p50, p95, p99) = server::last_latency_percentiles();
     let mut clean = 0;
     let mut recovered = 0;
     let mut failed = 0;
@@ -194,15 +218,20 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
             VerifyStatus::Failed => failed += 1,
         }
     }
+    let dataset = if cfg.scale < 1.0 {
+        format!("{}@{:.2}", cfg.dataset.name(), cfg.scale)
+    } else {
+        cfg.dataset.name().to_string()
+    };
     Ok(ServeSummary {
-        dataset: cfg.dataset.name().to_string(),
-        metrics,
-        p50,
-        p95,
-        p99,
+        dataset,
         responses,
         clean,
         recovered,
         failed,
+        sparse: state.ops.is_sparse(),
+        bands: state.ops.band_count(),
+        operand_bytes: state.ops.operand_bytes(),
+        metrics,
     })
 }

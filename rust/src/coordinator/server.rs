@@ -11,7 +11,16 @@
 //!                                                          └─► worker W ─┘
 //! ```
 //!
-//! Every worker pass is verified with GCN-ABFT before its responses are
+//! With **dense** operands the workers replicate the model and batches
+//! run batch-parallel (the layout above). With **sparse** operands the
+//! propagation matrix is sharded into `--workers` row bands instead:
+//! one executor loop pulls batches, each band aggregates on its own
+//! worker, and the logits + fused-checksum partials are stitched back
+//! together (`runtime::operands`) — the paper's check is exact under
+//! that stitching because both `eᵀ·Z·e` and `s_c` are additive over a
+//! row partition.
+//!
+//! Every pass is verified with GCN-ABFT before its responses are
 //! released; a fired check triggers a bounded re-execution (transient
 //! fault recovery), and a persistently failing batch is answered with
 //! `VerifyStatus::Failed` rather than silently wrong logits.
@@ -21,8 +30,9 @@ use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
 use super::verify::ServePolicy;
 use crate::graph::DatasetId;
-use crate::runtime::{GcnOutputs, Manifest, ModelEntry, Runtime};
-use crate::tensor::Dense;
+use crate::runtime::{
+    ExecMode, GcnOperands, GcnOutputs, Manifest, ModelEntry, OperandPlan, Runtime,
+};
 use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
@@ -42,6 +52,16 @@ pub struct ServerConfig {
     pub inject_every: Option<u64>,
     pub seed: u64,
     pub max_retries: usize,
+    /// Proportional dataset shrink (1.0 = paper scale) — lets the big
+    /// datasets serve quickly in smokes and tests.
+    pub scale: f64,
+    /// Operand representation: dense, CSR, or auto (memory-planned).
+    pub mode: ExecMode,
+    /// Budget for the graph operands (S + features) in MiB; the planner
+    /// refuses representations that exceed it instead of OOMing.
+    pub mem_budget_mb: usize,
+    /// Brief training at model build so logits have realistic margins.
+    pub train_epochs: usize,
 }
 
 impl Default for ServerConfig {
@@ -55,58 +75,111 @@ impl Default for ServerConfig {
             inject_every: None,
             seed: 7,
             max_retries: 1,
+            scale: 1.0,
+            mode: ExecMode::Auto,
+            mem_budget_mb: 512,
+            train_epochs: 10,
         }
     }
 }
 
-/// Resident model state shared (read-only) by all workers.
+/// Resident model state shared (read-only) by all workers: the operand
+/// set in its memory-planned representation plus the shape entry the
+/// executables validate against.
 #[derive(Debug, Clone)]
 pub struct ModelState {
-    pub features: Dense,
-    pub s: Dense,
-    pub w1: Dense,
-    pub w2: Dense,
+    pub ops: GcnOperands,
+    pub entry: ModelEntry,
 }
 
 impl ModelState {
-    /// Build the state from the synthetic dataset + trained weights —
-    /// the same workload the native engine uses, densified for XLA.
-    pub fn build(cfg: &ServerConfig) -> ModelState {
+    /// Build the state from the synthetic dataset + trained weights.
+    /// The operand representation (dense vs CSR, [`OperandPlan`]) is
+    /// chosen from the memory budget; a sparse `S` is sharded into
+    /// `cfg.workers` row bands. Errors when even the CSR footprint
+    /// exceeds the budget — never OOMs mid-serve.
+    pub fn build(cfg: &ServerConfig) -> Result<ModelState> {
+        // Plan from the dataset's published statistics (the same numbers
+        // the synthesizer targets) BEFORE building anything, so a refusal
+        // costs nothing — the old hard-coded PubMed/Nell refusal must not
+        // come back as "build and train the whole graph, then refuse".
+        let spec = cfg.dataset.spec();
+        let sc = |x: usize| ((x as f64 * cfg.scale).round() as usize).max(1);
+        let (n_est, edges_est, feat_nnz_est) = if cfg.scale < 1.0 {
+            (
+                sc(spec.num_nodes).max(spec.num_classes),
+                sc(spec.num_edges),
+                sc(spec.feat_nnz),
+            )
+        } else {
+            (spec.num_nodes, spec.num_edges, spec.feat_nnz)
+        };
+        let plan = OperandPlan::choose(
+            n_est,
+            spec.feat_dim,
+            2 * edges_est + n_est, // S nnz: every edge twice + self-loops
+            feat_nnz_est,
+            cfg.mode,
+            cfg.mem_budget_mb.saturating_mul(1 << 20),
+        )?;
+
         let opts = crate::report::ExperimentOpts {
             datasets: vec![cfg.dataset],
             seed: cfg.seed,
-            scale: 1.0,
-            train_epochs: 10,
+            scale: cfg.scale,
+            train_epochs: cfg.train_epochs,
         };
         let (graph, model) = crate::report::build_workload(cfg.dataset, &opts);
-        ModelState {
-            features: graph.features.to_dense(),
-            s: model.adjacency.to_dense(),
-            w1: model.layers[0].weights.clone(),
-            w2: model.layers[1].weights.clone(),
-        }
+        let w1 = model.layers[0].weights.clone();
+        let w2 = model.layers[1].weights.clone();
+        let entry = ModelEntry {
+            name: cfg.dataset.name().to_string(),
+            file: format!("gcn_{}.hlo.txt", cfg.dataset.name()),
+            n: graph.num_nodes,
+            f: graph.feat_dim(),
+            hidden: w1.cols(),
+            classes: w2.cols(),
+        };
+        let ops = if plan.sparse {
+            GcnOperands::sparse(graph.features, &model.adjacency, w1, w2, cfg.workers.max(1))?
+        } else {
+            GcnOperands::dense(
+                graph.features.to_dense(),
+                model.adjacency.to_dense(),
+                w1,
+                w2,
+            )?
+        };
+        Ok(ModelState { ops, entry })
     }
 
-    /// Apply a batch's perturbation overlay to a copy of the features.
-    pub fn overlay(&self, batch: &Batch) -> Dense {
-        let mut f = self.features.clone();
+    /// Collect a batch's perturbations as feature-row overlays, in
+    /// request order (later overlays of the same node win, matching the
+    /// historical copy-and-patch semantics). The base feature matrix is
+    /// no longer cloned per batch — the executable applies these
+    /// algebraically.
+    pub fn overlays<'a>(&self, batch: &'a Batch) -> Vec<(usize, &'a [f32])> {
+        let f = self.ops.feat_dim();
+        let n = self.ops.n_nodes();
+        let mut out = Vec::new();
         for req in &batch.requests {
             for p in &req.perturbations {
                 assert_eq!(
                     p.features.len(),
-                    f.cols(),
+                    f,
                     "perturbation width mismatch for node {}",
                     p.node
                 );
-                f.row_mut(p.node).copy_from_slice(&p.features);
+                assert!(p.node < n, "perturbation node {} out of range", p.node);
+                out.push((p.node, p.features.as_slice()));
             }
         }
-        f
+        out
     }
 }
 
 /// Run the serving pipeline until the request channel closes; returns
-/// aggregated metrics. Spawns `workers` executor threads plus a batcher.
+/// aggregated metrics. Spawns the executor thread(s) plus a batcher.
 pub fn run_server(
     cfg: &ServerConfig,
     state: &ModelState,
@@ -116,10 +189,10 @@ pub fn run_server(
     run_server_with_ready(cfg, state, requests, responses, None)
 }
 
-/// As [`run_server`], additionally signalling on `ready` once every worker
-/// has compiled its executable — callers use it to hold the client driver
-/// back so measured latencies reflect steady-state serving rather than
-/// one-time PJRT compilation (§Perf in EXPERIMENTS.md).
+/// As [`run_server`], additionally signalling on `ready` once every
+/// executor has built its executable — callers use it to hold the client
+/// driver back so measured latencies reflect steady-state serving rather
+/// than one-time setup/compilation (§Perf in EXPERIMENTS.md).
 pub fn run_server_with_ready(
     cfg: &ServerConfig,
     state: &ModelState,
@@ -134,11 +207,22 @@ pub fn run_server_with_ready(
     let latency = Mutex::new(LatencyHistogram::new());
     let batch_counter = std::sync::atomic::AtomicU64::new(0);
     let n_workers = cfg.workers.max(1);
-    // Split the host's cores between inter-batch parallelism (the worker
-    // pool) and intra-op parallelism (row-parallel kernels inside each
-    // worker's executable), so total thread pressure stays ≈ core count
-    // while `--workers` keeps scaling throughput on both axes.
-    let intra_threads = (crate::util::parallel::default_threads() / n_workers).max(1);
+    // Dense (replicated) operands: split the host's cores between
+    // inter-batch parallelism (the worker pool) and intra-op parallelism
+    // (row-parallel kernels inside each worker's executable). Sparse
+    // (sharded) operands: the `--workers` axis became the row bands of
+    // `S`, so a single executor loop pulls batches and each batch's
+    // aggregation fans out across the band workers inside the
+    // executable; combination kernels get the full intra-op width.
+    let sharded = state.ops.is_sparse();
+    let (pool, intra_threads) = if sharded {
+        (1usize, crate::util::parallel::default_threads())
+    } else {
+        (
+            n_workers,
+            (crate::util::parallel::default_threads() / n_workers).max(1),
+        )
+    };
     let compiled = std::sync::atomic::AtomicUsize::new(0);
     let ready = Mutex::new(ready);
 
@@ -154,11 +238,11 @@ pub fn run_server_with_ready(
             // dropping batch_tx closes the workers' queue
         });
 
-        // Workers.
+        // Executors.
         let compiled = &compiled;
         let ready = &ready;
         let mut handles = Vec::new();
-        for _worker_id in 0..n_workers {
+        for _worker_id in 0..pool {
             let batch_rx = &batch_rx;
             let metrics = &metrics;
             let latency = &latency;
@@ -167,27 +251,32 @@ pub fn run_server_with_ready(
             let cfg = cfg.clone();
             let state = state;
             handles.push(scope.spawn(move || -> Result<()> {
-                // Each worker owns its own runtime + executable (one
+                // Each executor owns its own runtime + executable (one
                 // accelerator per worker; required on the PJRT backend).
                 let rt = Runtime::native(intra_threads);
-                // Validate against the AOT manifest when one exists; fall
-                // back to the dataset's canonical shape entry only when no
-                // manifest file is present (fresh checkout before
-                // `python -m compile.aot`). A manifest that exists but is
-                // corrupt or version-skewed must still fail loudly — that
-                // is the Python↔Rust contract check.
-                let exe = if cfg.artifacts_dir.join("manifest.json").exists() {
+                // Validate against the AOT manifest when one exists and
+                // the graph is at manifest scale; fall back to the shape
+                // entry derived from the operands otherwise (fresh
+                // checkout, or a --scale run whose dims intentionally
+                // differ from the full-scale manifest). A manifest that
+                // exists but is corrupt or version-skewed must still fail
+                // loudly — that is the Python↔Rust contract check.
+                let full_scale = cfg.scale >= 1.0;
+                let exe = if full_scale && cfg.artifacts_dir.join("manifest.json").exists() {
                     let manifest = Manifest::load(&cfg.artifacts_dir)?;
                     rt.load_model(&manifest, cfg.dataset.name())?
                 } else {
-                    rt.load_entry(ModelEntry::for_dataset(cfg.dataset))
+                    rt.load_entry(state.entry.clone())
                 };
-                if compiled.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 == n_workers
-                {
+                if compiled.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 == pool {
                     if let Some(tx) = ready.lock().unwrap().take() {
                         let _ = tx.send(());
                     }
                 }
+                // Request latencies are recorded locally and merged into
+                // the serve-wide histogram at executor exit (no shared
+                // lock on the response path).
+                let mut local_lat = LatencyHistogram::new();
                 loop {
                     let batch = {
                         let rx = batch_rx.lock().unwrap();
@@ -198,7 +287,7 @@ pub fn run_server_with_ready(
                     };
                     let bidx =
                         batch_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let features = state.overlay(&batch);
+                    let overlays = state.overlays(&batch);
 
                     // Execute + verify with bounded retry.
                     let mut status = VerifyStatus::Failed;
@@ -206,8 +295,7 @@ pub fn run_server_with_ready(
                     let mut attempts = 0usize;
                     while attempts <= cfg.max_retries {
                         let t0 = Instant::now();
-                        let mut out =
-                            exe.run(&features, &state.s, &state.w1, &state.w2)?;
+                        let mut out = exe.run_operands(&state.ops, &overlays)?;
                         let exec_dt = t0.elapsed().as_secs_f64();
 
                         // Optional fault injection into the response
@@ -292,9 +380,9 @@ pub fn run_server_with_ready(
                         m.batches += 1;
                         m.requests += bsize as u64;
                     }
-                    for req in batch.requests {
+                    for req in &batch.requests {
                         let lat = req.submitted.elapsed().as_secs_f64();
-                        latency.lock().unwrap().record(lat);
+                        local_lat.record(lat);
                         let resp = InferenceResponse {
                             id: req.id,
                             classes: req
@@ -309,6 +397,7 @@ pub fn run_server_with_ready(
                         let _ = responses.send(resp);
                     }
                 }
+                latency.lock().unwrap().merge(&local_lat);
                 Ok(())
             }));
         }
@@ -321,89 +410,111 @@ pub fn run_server_with_ready(
 
     let mut m = metrics.into_inner().unwrap();
     m.wall_secs = wall_start.elapsed().as_secs_f64();
-    let lat = latency.into_inner().unwrap();
-    // Stash percentiles into the summary string via ServeSummary below.
-    Ok(finalize(m, lat))
-}
-
-/// Attach latency percentiles to metrics (kept in one struct for JSON).
-fn finalize(m: ServeMetrics, lat: LatencyHistogram) -> ServeMetrics {
-    // percentiles are reported by the caller via summary(); retaining
-    // the histogram would make ServeMetrics non-Clone-friendly for the
-    // channel-free API, so we fold the three headline numbers into the
-    // struct by extension below.
-    LAT_P50.with(|c| c.set(lat.percentile(50.0)));
-    LAT_P95.with(|c| c.set(lat.percentile(95.0)));
-    LAT_P99.with(|c| c.set(lat.percentile(99.0)));
-    m
-}
-
-thread_local! {
-    static LAT_P50: std::cell::Cell<f64> = const { std::cell::Cell::new(f64::NAN) };
-    static LAT_P95: std::cell::Cell<f64> = const { std::cell::Cell::new(f64::NAN) };
-    static LAT_P99: std::cell::Cell<f64> = const { std::cell::Cell::new(f64::NAN) };
-}
-
-/// Latency percentiles of the last `run_server` call on this thread.
-pub fn last_latency_percentiles() -> (f64, f64, f64) {
-    (
-        LAT_P50.with(|c| c.get()),
-        LAT_P95.with(|c| c.get()),
-        LAT_P99.with(|c| c.get()),
-    )
+    m.set_latency_percentiles(&latency.into_inner().unwrap());
+    Ok(m)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::request::Perturbation;
+    use crate::tensor::Dense;
+    use std::time::Instant;
 
-    #[test]
-    fn overlay_applies_perturbations() {
-        let state = ModelState {
-            features: Dense::zeros(4, 3),
-            s: Dense::eye(4),
-            w1: Dense::zeros(3, 2),
-            w2: Dense::zeros(2, 2),
+    fn tiny_state() -> ModelState {
+        let ops = GcnOperands::dense(
+            Dense::zeros(4, 3),
+            Dense::eye(4),
+            Dense::zeros(3, 2),
+            Dense::zeros(2, 2),
+        )
+        .unwrap();
+        let entry = ModelEntry {
+            name: "test".into(),
+            file: "none".into(),
+            n: 4,
+            f: 3,
+            hidden: 2,
+            classes: 2,
         };
-        let batch = Batch {
+        ModelState { ops, entry }
+    }
+
+    fn batch_with(perturbations: Vec<Perturbation>) -> Batch {
+        Batch {
             requests: vec![InferenceRequest {
                 id: 0,
                 query_nodes: vec![1],
-                perturbations: vec![Perturbation {
-                    node: 2,
-                    features: vec![1.0, 2.0, 3.0],
-                }],
+                perturbations,
                 submitted: Instant::now(),
             }],
-        };
-        let f = state.overlay(&batch);
-        assert_eq!(f.row(2), &[1.0, 2.0, 3.0]);
-        assert_eq!(f.row(1), &[0.0, 0.0, 0.0]);
-        // base untouched
-        assert_eq!(state.features.row(2), &[0.0, 0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn overlays_collect_in_request_order() {
+        let state = tiny_state();
+        let batch = batch_with(vec![
+            Perturbation {
+                node: 2,
+                features: vec![1.0, 2.0, 3.0],
+            },
+            Perturbation {
+                node: 2,
+                features: vec![4.0, 5.0, 6.0],
+            },
+        ]);
+        let overlays = state.overlays(&batch);
+        assert_eq!(overlays.len(), 2);
+        assert_eq!(overlays[0], (2, &[1.0f32, 2.0, 3.0][..]));
+        // Later overlays of the same node come later — the executable
+        // applies them in order, so the last one wins.
+        assert_eq!(overlays[1], (2, &[4.0f32, 5.0, 6.0][..]));
     }
 
     #[test]
     #[should_panic(expected = "perturbation width mismatch")]
-    fn overlay_rejects_bad_width() {
-        let state = ModelState {
-            features: Dense::zeros(2, 3),
-            s: Dense::eye(2),
-            w1: Dense::zeros(3, 1),
-            w2: Dense::zeros(1, 1),
+    fn overlays_reject_bad_width() {
+        let state = tiny_state();
+        let batch = batch_with(vec![Perturbation {
+            node: 0,
+            features: vec![1.0],
+        }]);
+        state.overlays(&batch);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn overlays_reject_bad_node() {
+        let state = tiny_state();
+        let batch = batch_with(vec![Perturbation {
+            node: 9,
+            features: vec![1.0, 2.0, 3.0],
+        }]);
+        state.overlays(&batch);
+    }
+
+    #[test]
+    fn build_plans_dense_for_tiny_and_bands_when_forced_sparse() {
+        let st = ModelState::build(&ServerConfig::default()).unwrap();
+        assert!(!st.ops.is_sparse(), "tiny fits dense under the default budget");
+        assert_eq!(st.entry.n, 64);
+
+        let cfg = ServerConfig {
+            mode: ExecMode::Sparse,
+            workers: 3,
+            ..Default::default()
         };
-        let batch = Batch {
-            requests: vec![InferenceRequest {
-                id: 0,
-                query_nodes: vec![],
-                perturbations: vec![Perturbation {
-                    node: 0,
-                    features: vec![1.0],
-                }],
-                submitted: Instant::now(),
-            }],
+        let st = ModelState::build(&cfg).unwrap();
+        assert!(st.ops.is_sparse());
+        assert_eq!(st.ops.band_count(), 3);
+
+        // Forcing dense under an impossible budget refuses up front.
+        let cfg = ServerConfig {
+            mode: ExecMode::Dense,
+            mem_budget_mb: 0,
+            ..Default::default()
         };
-        state.overlay(&batch);
+        assert!(ModelState::build(&cfg).is_err());
     }
 }

@@ -22,7 +22,7 @@
 //! | [`abft`] | split (baseline) and fused (GCN-ABFT) checkers |
 //! | [`opcount`] | analytic op-count model (Table II) |
 //! | [`fault`] | bit-flip fault injection + campaign runner (Table I) |
-//! | [`runtime`] | serving executables: native backend + optional PJRT (`pjrt` feature) |
+//! | [`runtime`] | serving executables: native backend over dense/CSR operands (row-band sharding) + optional PJRT (`pjrt` feature) |
 //! | [`coordinator`] | serving layer: batcher + workers + online verification |
 //! | [`report`] | table/figure rendering (Table I/II, Fig. 3) |
 //!

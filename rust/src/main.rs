@@ -59,9 +59,13 @@ SUBCOMMANDS
   fig3     runtime split across the two matmul phases (paper Fig. 3)
            --datasets ...  --seed S  --scale F  --reps R (5)
   serve    serve inference with online GCN-ABFT verification (native
-           runtime; shapes validated against artifacts/ when present)
-           --dataset tiny|cora|citeseer  --requests N (64)  --batch B (8)
-           --workers W (2)  --artifacts DIR (artifacts)  --inject-every K
+           runtime; shapes validated against artifacts/ when present).
+           Operands are memory-planned: small graphs densify, PubMed/Nell
+           serve on CSR with S row-band-sharded across the workers.
+           --dataset tiny|cora|citeseer|pubmed|nell  --requests N (64)
+           --batch B (8)  --workers W (2)  --artifacts DIR (artifacts)
+           --inject-every K  --scale F (1.0)  --mode auto|dense|sparse
+           --mem-budget-mb M (512)  --train-epochs E (10)
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves
            --datasets ...  --epochs E (30)  --seed S
   info     dataset statistics (nodes/edges/features/classes/nnz)
@@ -289,6 +293,10 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "artifacts",
             "seed",
             "inject-every",
+            "scale",
+            "mode",
+            "mem-budget-mb",
+            "train-epochs",
         ],
         flags: vec!["json"],
     };

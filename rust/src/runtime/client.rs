@@ -4,7 +4,9 @@
 //!
 //! * **native** (default, always available) — the 2-layer GCN-ABFT
 //!   forward implemented on the repo's own f32 kernels
-//!   ([`crate::tensor::ops::matmul_par`]), with the fused per-layer
+//!   ([`crate::tensor::ops::matmul_par`] for dense operands,
+//!   [`crate::sparse::Csr::spmm_par`] + row-band sharding for CSR
+//!   operands, see [`super::operands`]), with the fused per-layer
 //!   checksums (`s_c·H·w_r` predicted, `eᵀ·H_out·e` actual) computed in
 //!   f64 alongside. Shapes are still validated against the artifact
 //!   manifest when one is present, so the Python↔Rust contract keeps
@@ -21,6 +23,7 @@
 //! instruction ids that xla_extension 0.5.1 rejects in proto form.
 
 use super::artifact::{Manifest, ModelEntry};
+use super::operands::GcnOperands;
 use crate::tensor::{ops, Dense};
 use anyhow::{bail, Result};
 
@@ -87,9 +90,17 @@ pub struct GcnExecutable {
 }
 
 impl GcnExecutable {
-    /// Execute the forward: `(features [N,F], s [N,N], w1 [F,h], w2 [h,C])`
-    /// → logits + per-layer checksums. Shapes are validated against the
-    /// manifest entry before any arithmetic runs.
+    /// Execute the forward on dense inputs: `(features [N,F], s [N,N],
+    /// w1 [F,h], w2 [h,C])` → logits + per-layer checksums. Shapes are
+    /// validated against the manifest entry before any arithmetic runs.
+    ///
+    /// This is the PJRT-shaped contract, kept for parity with
+    /// [`pjrt::PjrtExecutable::run`]. It borrows its inputs and stays a
+    /// pure function of them, recomputing the offline check state per
+    /// call — the serving path instead keeps a resident [`GcnOperands`]
+    /// (cached check state, optional CSR + row bands) and calls
+    /// [`GcnExecutable::run_operands`]. The arithmetic here is
+    /// step-for-step identical to `run_operands` on dense operands.
     pub fn run(&self, features: &Dense, s: &Dense, w1: &Dense, w2: &Dense) -> Result<GcnOutputs> {
         let e = &self.entry;
         let want = [
@@ -107,32 +118,104 @@ impl GcnExecutable {
             }
         }
 
-        // Offline check state: s_c = eᵀS, w_r = W·e per layer. Weights and
-        // graph are resident, so a production deployment would hoist this
-        // out of the request path; it is linear-cost and kept here so the
-        // executable stays a pure function of its inputs.
-        let s_c = s.col_sums();
+        // Offline check state, recomputed per call (see doc above).
+        let s_c = s.col_sums_f64();
 
-        // Layer 1: X₁ = H·W₁ (combination), Z₁ = S·X₁ (aggregation).
+        // Layer 1: X₁ = H·W₁ (combination), Z₁ = S·X₁ (aggregation),
+        // fused checksum Eq. (4): s_c·H·w_r vs eᵀ·Z₁·e.
         let x1 = ops::matmul_par(features, w1, self.threads);
         let z1 = ops::matmul_par(s, &x1, self.threads);
-        // Fused checksum, Eq. (4): s_c·H·w_r vs eᵀ·Z₁·e.
         let x_r1 = ops::matvec_f64(features, &w1.row_sums());
-        let pred1 = ops::dot_f64(&s_c, &x_r1) as f32;
-        let actual1 = z1.checksum_f64() as f32;
+        let pred1 = ops::dot_mixed(&s_c, &x_r1);
+        let actual1 = z1.checksum_f64();
 
         // Layer 2 input: ReLU(Z₁).
         let h1 = ops::relu(&z1);
         let x2 = ops::matmul_par(&h1, w2, self.threads);
         let logits = ops::matmul_par(s, &x2, self.threads);
         let x_r2 = ops::matvec_f64(&h1, &w2.row_sums());
-        let pred2 = ops::dot_f64(&s_c, &x_r2) as f32;
-        let actual2 = logits.checksum_f64() as f32;
+        let pred2 = ops::dot_mixed(&s_c, &x_r2);
+        let actual2 = logits.checksum_f64();
 
         Ok(GcnOutputs {
             logits,
-            predicted: vec![pred1, pred2],
-            actual: vec![actual1, actual2],
+            predicted: vec![pred1 as f32, pred2 as f32],
+            actual: vec![actual1 as f32, actual2 as f32],
+        })
+    }
+
+    /// Execute the forward on a resident operand set (dense or CSR, see
+    /// [`GcnOperands`]), applying per-request feature-row overlays
+    /// algebraically: an overlaid row patches the corresponding row of
+    /// the combination product `X₁ = H·W₁` and entry of the online
+    /// checksum column `x_r = H·w_r` — the base feature matrix is never
+    /// copied on the request path.
+    ///
+    /// The offline check state (`s_c`, `w_r`, base `x_r`) comes cached
+    /// from the operands; only layer-dependent quantities are computed
+    /// here. With a banded `S`, each row band aggregates on its own
+    /// worker and the fused checksums are stitched from the band
+    /// partials (exact by additivity over row bands).
+    pub fn run_operands(
+        &self,
+        model: &GcnOperands,
+        overlays: &[(usize, &[f32])],
+    ) -> Result<GcnOutputs> {
+        let e = &self.entry;
+        let want = [
+            ("features", model.features.shape(), (e.n, e.f)),
+            ("s", (model.s.rows(), model.s.cols()), (e.n, e.n)),
+            ("w1", model.w1.shape(), (e.f, e.hidden)),
+            ("w2", model.w2.shape(), (e.hidden, e.classes)),
+        ];
+        for (name, got, expect) in want {
+            if got != expect {
+                bail!(
+                    "{name} shape {got:?} != manifest {expect:?} for model {}",
+                    e.name
+                );
+            }
+        }
+        for (node, row) in overlays {
+            if *node >= e.n {
+                bail!("overlay node {node} out of range for {} nodes", e.n);
+            }
+            if row.len() != e.f {
+                bail!(
+                    "overlay width {} != feature dim {} for node {node}",
+                    row.len(),
+                    e.f
+                );
+            }
+        }
+
+        // Layer 1 combination: X₁ = H·W₁ on the representation's kernel,
+        // then patch the overlaid rows (and their x_r entries).
+        let mut x1 = model.features.matmul(&model.w1, self.threads);
+        let mut x_r1 = model.check.x_r1.clone();
+        for &(node, row) in overlays {
+            x1.row_mut(node)
+                .copy_from_slice(&ops::vecmat_f64(row, &model.w1));
+            x_r1[node] = ops::dot_f64(row, &model.check.w_r1) as f32;
+        }
+
+        // Layer 1 aggregation + fused checksum, Eq. (4):
+        // s_c·H·w_r vs eᵀ·Z₁·e (band-stitched when S is sharded).
+        let (mut z1, pred1, actual1) =
+            model.s.aggregate(&x1, &x_r1, &model.check.s_c, self.threads);
+
+        // Layer 2: H₁ = ReLU(Z₁), X₂ = H₁·W₂, logits = S·X₂.
+        ops::relu_inplace(&mut z1);
+        let h1 = z1;
+        let x2 = ops::matmul_par(&h1, &model.w2, self.threads);
+        let x_r2 = ops::matvec_f64(&h1, &model.check.w_r2);
+        let (logits, pred2, actual2) =
+            model.s.aggregate(&x2, &x_r2, &model.check.s_c, self.threads);
+
+        Ok(GcnOutputs {
+            logits,
+            predicted: vec![pred1 as f32, pred2 as f32],
+            actual: vec![actual1 as f32, actual2 as f32],
         })
     }
 }
@@ -229,8 +312,17 @@ mod tests {
     use crate::graph::DatasetId;
     use crate::report::{build_workload, ExperimentOpts};
 
-    fn tiny_state() -> (GcnExecutable, Dense, Dense, Dense, Dense, crate::gcn::GcnModel, crate::graph::Graph)
-    {
+    type TinyState = (
+        GcnExecutable,
+        Dense,
+        Dense,
+        Dense,
+        Dense,
+        crate::gcn::GcnModel,
+        crate::graph::Graph,
+    );
+
+    fn tiny_state() -> TinyState {
         let opts = ExperimentOpts {
             datasets: vec![DatasetId::Tiny],
             seed: 7,
@@ -282,6 +374,67 @@ mod tests {
         let bad = Dense::zeros(10, 10);
         let err = exe.run(&bad, &s, &w1, &w2).unwrap_err();
         assert!(format!("{err}").contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn sparse_operands_match_dense_run() {
+        let (exe, features, s, w1, w2, model, graph) = tiny_state();
+        let dense_out = exe.run(&features, &s, &w1, &w2).unwrap();
+        for bands in [1, 3] {
+            let ops = crate::runtime::GcnOperands::sparse(
+                graph.features.clone(),
+                &model.adjacency,
+                w1.clone(),
+                w2.clone(),
+                bands,
+            )
+            .unwrap();
+            let sparse_out = exe.run_operands(&ops, &[]).unwrap();
+            // Same nonzeros in the same per-row order ⇒ identical logits.
+            assert_eq!(sparse_out.logits, dense_out.logits, "bands={bands}");
+            for (a, b) in sparse_out.predicted.iter().zip(&dense_out.predicted) {
+                assert!((a - b).abs() <= 1e-5 * b.abs().max(1.0), "{a} vs {b}");
+            }
+            let report = crate::coordinator::ServePolicy::default().verify(&sparse_out);
+            assert!(report.ok, "fault-free sparse pass failed: {report:?}");
+        }
+    }
+
+    #[test]
+    fn overlays_patch_combination_and_checksum() {
+        let (exe, features, s, w1, w2, _, _) = tiny_state();
+        // Reference: overlay applied the old-fashioned way, by editing a
+        // copy of the dense feature matrix.
+        let overlay_row: Vec<f32> = (0..features.cols())
+            .map(|c| if c % 5 == 0 { 8.0 } else { 0.0 })
+            .collect();
+        let mut patched = features.clone();
+        patched.row_mut(9).copy_from_slice(&overlay_row);
+        let reference = exe.run(&patched, &s, &w1, &w2).unwrap();
+
+        // Overlay applied algebraically on resident operands.
+        let ops = crate::runtime::GcnOperands::dense(features, s, w1, w2).unwrap();
+        let out = exe
+            .run_operands(&ops, &[(9, overlay_row.as_slice())])
+            .unwrap();
+        let scale = reference
+            .logits
+            .data()
+            .iter()
+            .fold(0f32, |m, &v| m.max(v.abs()))
+            .max(1.0);
+        assert!(
+            out.logits.max_abs_diff(&reference.logits) / scale < 1e-5,
+            "algebraic overlay diverges from feature-matrix patch"
+        );
+        let report = crate::coordinator::ServePolicy::default().verify(&out);
+        assert!(report.ok, "overlaid fault-free pass failed: {report:?}");
+
+        // Bad overlays are rejected before any arithmetic.
+        let err = exe.run_operands(&ops, &[(999, overlay_row.as_slice())]);
+        assert!(err.is_err());
+        let short = [1.0f32];
+        assert!(exe.run_operands(&ops, &[(0, &short[..])]).is_err());
     }
 
     #[test]

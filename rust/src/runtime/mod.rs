@@ -3,12 +3,19 @@
 //! `python/compile/aot.py`. Python never runs at serving time.
 //!
 //! The default backend is native (the repo's own row-parallel f32
-//! kernels); the original PJRT/XLA path is kept behind the `pjrt`
-//! feature because the `xla` crate is absent from the offline registry —
-//! see [`client`] for the full story.
+//! kernels); it consumes either dense or CSR operands (see
+//! [`operands`] — sparse operands are what let PubMed/Nell serve at
+//! all, and row-band sharding is the multi-node blueprint). The
+//! original PJRT/XLA path is kept behind the `pjrt` feature because the
+//! `xla` crate is absent from the offline registry — see [`client`] for
+//! the full story.
 
 pub mod artifact;
 pub mod client;
+pub mod operands;
 
 pub use artifact::{Manifest, ModelEntry};
 pub use client::{GcnExecutable, GcnOutputs, Runtime};
+pub use operands::{
+    CheckState, ExecMode, GcnOperands, Operand, OperandPlan, RowBand, SOperand,
+};

@@ -1,0 +1,615 @@
+//! Serving-path operands: dense *or* CSR inputs for the
+//! [`crate::runtime::GcnExecutable`], plus the cached offline check
+//! state and the row-band sharding of the propagation matrix.
+//!
+//! The paper's cost argument (one fused `s_c·H·w_r` checksum for the
+//! whole `S·H·W` product, Eq. 4) is most valuable exactly where `S` is
+//! huge and sparse — PubMed's dense `S` is ~1.5 GB and Nell's ~17 GB,
+//! while their CSR footprints are a few MB. This module lets the
+//! serving path keep `S` (and the features) in CSR, so those datasets
+//! serve instead of being refused, while the dense representation stays
+//! available behind the same [`GcnOperands`] type for the PJRT
+//! contract and for small graphs where dense kernels win.
+//!
+//! Sharding: a sparse `S` is split into contiguous **row bands**, one
+//! per worker. Each worker aggregates only its band (`z[band] =
+//! S[band]·X`) and reports a partial fused checksum pair; the
+//! coordinator stitches the logits by concatenation and the checksums
+//! by addition — exact, because both `eᵀ·Z·e` and `s_c = eᵀS`
+//! decompose additively over a row partition. This is the single-node
+//! blueprint for multi-node sharding (ROADMAP).
+
+use crate::sparse::Csr;
+use crate::tensor::{ops, Dense};
+use anyhow::{bail, Result};
+
+/// How the serving path should represent its graph operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Pick dense or sparse from the operand-memory estimate (default).
+    Auto,
+    /// Force dense operands (errors if they exceed the memory budget).
+    Dense,
+    /// Force CSR operands (errors if even CSR exceeds the budget).
+    Sparse,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(ExecMode::Auto),
+            "dense" => Some(ExecMode::Dense),
+            "sparse" | "csr" => Some(ExecMode::Sparse),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Auto => "auto",
+            ExecMode::Dense => "dense",
+            ExecMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// Bytes of a dense `rows × cols` f32 matrix.
+pub fn dense_bytes(rows: usize, cols: usize) -> usize {
+    rows * cols * std::mem::size_of::<f32>()
+}
+
+/// Bytes of a CSR matrix with `rows` rows and `nnz` stored entries.
+pub fn csr_bytes(rows: usize, nnz: usize) -> usize {
+    nnz * (std::mem::size_of::<f32>() + std::mem::size_of::<usize>())
+        + (rows + 1) * std::mem::size_of::<usize>()
+}
+
+/// The operand-memory decision for one dataset: how many bytes the
+/// graph operands (`S` N×N plus features N×F) need in each
+/// representation, and which one the budget admits.
+#[derive(Debug, Clone, Copy)]
+pub struct OperandPlan {
+    /// Chosen representation.
+    pub sparse: bool,
+    /// Dense footprint of S + features.
+    pub dense_bytes: usize,
+    /// CSR footprint of S + features.
+    pub csr_bytes: usize,
+}
+
+impl OperandPlan {
+    /// Decide the representation for a graph with `n` nodes, `f`-wide
+    /// features, `s_nnz` propagation-matrix nonzeros and `feat_nnz`
+    /// feature nonzeros, under `budget` bytes. `Auto` prefers dense
+    /// (fastest kernels at small N) and falls back to CSR; an explicit
+    /// mode errors when its representation does not fit — in
+    /// particular, even a forced-sparse run is refused when the CSR
+    /// footprint itself exceeds the budget.
+    pub fn choose(
+        n: usize,
+        f: usize,
+        s_nnz: usize,
+        feat_nnz: usize,
+        mode: ExecMode,
+        budget: usize,
+    ) -> Result<OperandPlan> {
+        let dense = dense_bytes(n, n) + dense_bytes(n, f);
+        let csr = csr_bytes(n, s_nnz) + csr_bytes(n, feat_nnz);
+        let fits_dense = dense <= budget;
+        let fits_csr = csr <= budget;
+        let sparse = match mode {
+            ExecMode::Dense if !fits_dense => bail!(
+                "dense operands need {} MB but the budget is {} MB \
+                 (use --mode sparse or raise --mem-budget-mb)",
+                dense / (1 << 20),
+                budget / (1 << 20)
+            ),
+            ExecMode::Dense => false,
+            ExecMode::Sparse if !fits_csr => bail!(
+                "even the CSR operand footprint ({} MB) exceeds the {} MB \
+                 budget (raise --mem-budget-mb or lower --scale)",
+                csr / (1 << 20),
+                budget / (1 << 20)
+            ),
+            ExecMode::Sparse => true,
+            ExecMode::Auto if fits_dense => false,
+            ExecMode::Auto if fits_csr => true,
+            ExecMode::Auto => bail!(
+                "operands fit neither dense ({} MB) nor CSR ({} MB) under the \
+                 {} MB budget (raise --mem-budget-mb or lower --scale)",
+                dense / (1 << 20),
+                csr / (1 << 20),
+                budget / (1 << 20)
+            ),
+        };
+        Ok(OperandPlan {
+            sparse,
+            dense_bytes: dense,
+            csr_bytes: csr,
+        })
+    }
+}
+
+/// A serving-path matrix operand: dense or CSR behind one interface, so
+/// the executable's layer code is representation-agnostic.
+#[derive(Debug, Clone)]
+pub enum Operand {
+    Dense(Dense),
+    Sparse(Csr),
+}
+
+impl Operand {
+    pub fn rows(&self) -> usize {
+        match self {
+            Operand::Dense(d) => d.rows(),
+            Operand::Sparse(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Operand::Dense(d) => d.cols(),
+            Operand::Sparse(m) => m.cols(),
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Operand::Sparse(_))
+    }
+
+    /// Heap footprint in bytes.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Operand::Dense(d) => dense_bytes(d.rows(), d.cols()),
+            Operand::Sparse(m) => m.heap_bytes(),
+        }
+    }
+
+    /// `self · B` on the representation's kernel: row-parallel dense
+    /// matmul or row-parallel SpMM. Both are bit-identical to their
+    /// serial versions at any thread count.
+    pub fn matmul(&self, b: &Dense, threads: usize) -> Dense {
+        match self {
+            Operand::Dense(d) => ops::matmul_par(d, b, threads),
+            Operand::Sparse(m) => m.spmm_par(b, threads),
+        }
+    }
+
+    /// `self · v` with f64 accumulation (checksum-column propagation).
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        match self {
+            Operand::Dense(d) => ops::matvec_f64(d, v),
+            Operand::Sparse(m) => m.matvec(v),
+        }
+    }
+}
+
+/// One contiguous row band of the propagation matrix — the unit of
+/// worker sharding. `s_c` is the band's own column-sum vector; the band
+/// vectors sum to the global `s_c` exactly.
+#[derive(Debug, Clone)]
+pub struct RowBand {
+    /// First global row this band covers.
+    pub row0: usize,
+    /// The band's rows of `S` (columns still span all N nodes).
+    pub s: Csr,
+    /// `eᵀ·S[band]`, length N, f64.
+    pub s_c: Vec<f64>,
+}
+
+impl RowBand {
+    /// Aggregate this band: `out = S[band]·x` (into the band's slice of
+    /// the stitched output, `s.rows()·x.cols()` f32s, assumed zeroed),
+    /// returning the band's partial fused checksum pair
+    /// `(s_c[band]·x_r, eᵀ·out·e)`. The per-row accumulation order
+    /// matches [`Csr::spmm`], so stitched outputs are bit-identical to
+    /// an unsharded aggregation.
+    pub fn aggregate_into(&self, x: &Dense, x_r: &[f32], out: &mut [f32]) -> (f64, f64) {
+        let width = x.cols();
+        debug_assert_eq!(out.len(), self.s.rows() * width);
+        for r in 0..self.s.rows() {
+            let out_row = &mut out[r * width..(r + 1) * width];
+            for (c, v) in self.s.row_iter(r) {
+                for (o, &b) in out_row.iter_mut().zip(x.row(c)) {
+                    *o += v * b;
+                }
+            }
+        }
+        let pred = ops::dot_mixed(&self.s_c, x_r);
+        let actual = out.iter().map(|&v| v as f64).sum();
+        (pred, actual)
+    }
+}
+
+/// The propagation matrix `S`: dense, or a row-band partition of a CSR.
+#[derive(Debug, Clone)]
+pub enum SOperand {
+    Dense(Dense),
+    Banded(Vec<RowBand>),
+}
+
+impl SOperand {
+    /// Partition a sparse `S` into at most `nbands` contiguous row
+    /// bands (one per worker), precomputing each band's `s_c`.
+    pub fn banded(s: &Csr, nbands: usize) -> SOperand {
+        let n = s.rows();
+        let nbands = nbands.clamp(1, n.max(1));
+        let band_rows = n.div_ceil(nbands);
+        let mut bands = Vec::with_capacity(nbands);
+        let mut row0 = 0;
+        while row0 < n {
+            let hi = (row0 + band_rows).min(n);
+            let band = s.row_band(row0, hi);
+            let s_c = band.col_sums_f64();
+            bands.push(RowBand { row0, s: band, s_c });
+            row0 = hi;
+        }
+        SOperand::Banded(bands)
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            SOperand::Dense(d) => d.rows(),
+            SOperand::Banded(bands) => bands.iter().map(|b| b.s.rows()).sum(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SOperand::Dense(d) => d.cols(),
+            SOperand::Banded(bands) => bands.first().map(|b| b.s.cols()).unwrap_or(0),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, SOperand::Banded(_))
+    }
+
+    pub fn band_count(&self) -> usize {
+        match self {
+            SOperand::Dense(_) => 1,
+            SOperand::Banded(bands) => bands.len(),
+        }
+    }
+
+    /// Heap footprint in bytes.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            SOperand::Dense(d) => dense_bytes(d.rows(), d.cols()),
+            SOperand::Banded(bands) => bands
+                .iter()
+                .map(|b| b.s.heap_bytes() + b.s_c.len() * std::mem::size_of::<f64>())
+                .sum(),
+        }
+    }
+
+    /// Global `s_c = eᵀS` in f64. For the banded form this is the
+    /// element-wise sum of the band vectors in band order, which is
+    /// bit-identical to the unsharded column sums (each column's entries
+    /// are folded in the same row order either way).
+    pub fn col_sums_f64(&self) -> Vec<f64> {
+        match self {
+            SOperand::Dense(d) => d.col_sums_f64(),
+            SOperand::Banded(bands) => {
+                let cols = self.cols();
+                let mut acc = vec![0f64; cols];
+                for band in bands {
+                    for (a, &v) in acc.iter_mut().zip(&band.s_c) {
+                        *a += v;
+                    }
+                }
+                acc
+            }
+        }
+    }
+
+    /// One aggregation phase with its fused checksum: `z = S·x`,
+    /// `pred = s_c·x_r`, `actual = eᵀ·z·e`.
+    ///
+    /// Dense: the row-parallel matmul kernel plus global checksums.
+    /// Banded: every row band runs on its own scoped worker, writing its
+    /// slice of `z` and returning a partial `(pred, actual)` pair; the
+    /// stitched logits are the band concatenation and the stitched
+    /// checksums are the band-partial sums.
+    pub fn aggregate(
+        &self,
+        x: &Dense,
+        x_r: &[f32],
+        s_c: &[f64],
+        threads: usize,
+    ) -> (Dense, f64, f64) {
+        match self {
+            SOperand::Dense(s) => {
+                let z = ops::matmul_par(s, x, threads);
+                let pred = ops::dot_mixed(s_c, x_r);
+                let actual = z.checksum_f64();
+                (z, pred, actual)
+            }
+            SOperand::Banded(bands) => {
+                let width = x.cols();
+                let mut out = Dense::zeros(self.rows(), width);
+                let mut partials = vec![(0f64, 0f64); bands.len()];
+                if bands.len() <= 1 {
+                    if let Some(band) = bands.first() {
+                        partials[0] = band.aggregate_into(x, x_r, out.data_mut());
+                    }
+                } else {
+                    std::thread::scope(|scope| {
+                        let mut rest: &mut [f32] = out.data_mut();
+                        for (band, slot) in bands.iter().zip(partials.iter_mut()) {
+                            let (chunk, tail) =
+                                std::mem::take(&mut rest).split_at_mut(band.s.rows() * width);
+                            rest = tail;
+                            scope.spawn(move || *slot = band.aggregate_into(x, x_r, chunk));
+                        }
+                    });
+                }
+                let pred = partials.iter().map(|p| p.0).sum();
+                let actual = partials.iter().map(|p| p.1).sum();
+                (out, pred, actual)
+            }
+        }
+    }
+}
+
+/// Offline GCN-ABFT check state, computed once at model-load time and
+/// refreshed on weight swap — never on the request path (the paper
+/// assumes `s_c`/`w_r` are precomputed and protected).
+#[derive(Debug, Clone)]
+pub struct CheckState {
+    /// `s_c = eᵀS`, length N, f64.
+    pub s_c: Vec<f64>,
+    /// `w_r = W₁·e`, length F.
+    pub w_r1: Vec<f32>,
+    /// `w_r = W₂·e`, length h.
+    pub w_r2: Vec<f32>,
+    /// `x_r = H·w_r1`, length N — the layer-1 online checksum column for
+    /// the *base* features. Per-request feature overlays patch a clone
+    /// of this vector (one dot product per overlaid row) instead of
+    /// recomputing the full product.
+    pub x_r1: Vec<f32>,
+}
+
+impl CheckState {
+    pub fn build(features: &Operand, s: &SOperand, w1: &Dense, w2: &Dense) -> CheckState {
+        let w_r1 = w1.row_sums();
+        let w_r2 = w2.row_sums();
+        let x_r1 = features.matvec(&w_r1);
+        CheckState {
+            s_c: s.col_sums_f64(),
+            w_r1,
+            w_r2,
+            x_r1,
+        }
+    }
+}
+
+/// The resident operand set of one served model: graph operands in
+/// their chosen representation, the two weight matrices, and the cached
+/// offline check state.
+#[derive(Debug, Clone)]
+pub struct GcnOperands {
+    pub features: Operand,
+    pub s: SOperand,
+    pub w1: Dense,
+    pub w2: Dense,
+    pub check: CheckState,
+}
+
+impl GcnOperands {
+    /// Assemble and validate an operand set; computes the offline check
+    /// state.
+    pub fn from_parts(features: Operand, s: SOperand, w1: Dense, w2: Dense) -> Result<GcnOperands> {
+        let n = features.rows();
+        if s.rows() != n || s.cols() != n {
+            bail!(
+                "S shape {:?} is not {n}×{n}",
+                (s.rows(), s.cols())
+            );
+        }
+        if w1.rows() != features.cols() {
+            bail!(
+                "W1 rows {} != feature dim {}",
+                w1.rows(),
+                features.cols()
+            );
+        }
+        if w2.rows() != w1.cols() {
+            bail!("W2 rows {} != W1 cols {}", w2.rows(), w1.cols());
+        }
+        let check = CheckState::build(&features, &s, &w1, &w2);
+        Ok(GcnOperands {
+            features,
+            s,
+            w1,
+            w2,
+            check,
+        })
+    }
+
+    /// All-dense operand set (the PJRT-shaped contract).
+    pub fn dense(features: Dense, s: Dense, w1: Dense, w2: Dense) -> Result<GcnOperands> {
+        Self::from_parts(Operand::Dense(features), SOperand::Dense(s), w1, w2)
+    }
+
+    /// Sparse operand set with `S` sharded into `bands` row bands.
+    pub fn sparse(
+        features: Csr,
+        s: &Csr,
+        w1: Dense,
+        w2: Dense,
+        bands: usize,
+    ) -> Result<GcnOperands> {
+        Self::from_parts(
+            Operand::Sparse(features),
+            SOperand::banded(s, bands),
+            w1,
+            w2,
+        )
+    }
+
+    /// Swap in new weights and refresh the cached offline check state
+    /// (`w_r1`, `w_r2` and the base `x_r1` all depend on the weights).
+    pub fn swap_weights(&mut self, w1: Dense, w2: Dense) -> Result<()> {
+        if w1.shape() != self.w1.shape() || w2.shape() != self.w2.shape() {
+            bail!(
+                "weight swap changes shapes: {:?}/{:?} -> {:?}/{:?}",
+                self.w1.shape(),
+                self.w2.shape(),
+                w1.shape(),
+                w2.shape()
+            );
+        }
+        self.w1 = w1;
+        self.w2 = w2;
+        self.check = CheckState::build(&self.features, &self.s, &self.w1, &self.w2);
+        Ok(())
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.features.rows()
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.features.cols()
+    }
+
+    pub fn hidden_dim(&self) -> usize {
+        self.w1.cols()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.w2.cols()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.s.is_sparse()
+    }
+
+    pub fn band_count(&self) -> usize {
+        self.s.band_count()
+    }
+
+    /// Heap footprint of the graph operands (S + features) in bytes.
+    pub fn operand_bytes(&self) -> usize {
+        self.features.heap_bytes() + self.s.heap_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetId;
+
+    fn workload() -> (Csr, Csr, Dense, Dense) {
+        let g = DatasetId::Tiny.build(3);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 4);
+        let w1 = m.layers[0].weights.clone();
+        let w2 = m.layers[1].weights.clone();
+        (g.features, m.adjacency, w1, w2)
+    }
+
+    #[test]
+    fn banded_col_sums_match_unsharded() {
+        let (_, s, _, _) = workload();
+        for nbands in [1, 3, 7] {
+            let banded = SOperand::banded(&s, nbands);
+            assert_eq!(banded.band_count(), nbands.min(s.rows()));
+            assert_eq!(banded.col_sums_f64(), s.col_sums_f64(), "nbands={nbands}");
+            assert_eq!(banded.rows(), s.rows());
+            assert_eq!(banded.cols(), s.cols());
+        }
+    }
+
+    #[test]
+    fn banded_aggregate_matches_unsharded_spmm() {
+        let (_, s, _, _) = workload();
+        let x = Dense::from_fn(s.cols(), 5, |r, c| ((r * 5 + c) % 13) as f32 * 0.25 - 1.0);
+        let x_r: Vec<f32> = x.row_sums();
+        let reference = s.spmm(&x);
+        let s_c = s.col_sums_f64();
+        for nbands in [1, 2, 5] {
+            let banded = SOperand::banded(&s, nbands);
+            let (z, pred, actual) = banded.aggregate(&x, &x_r, &s_c, 1);
+            // Stitched logits are bit-identical to the unsharded SpMM.
+            assert_eq!(z, reference, "nbands={nbands}");
+            // Stitched checksums satisfy the fused identity.
+            let scale = actual.abs().max(1.0);
+            assert!(
+                (pred - actual).abs() / scale < 1e-6,
+                "nbands={nbands}: pred {pred} vs actual {actual}"
+            );
+            assert!((actual - reference.checksum_f64()).abs() / scale < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dense_and_banded_aggregate_agree() {
+        let (_, s, _, _) = workload();
+        let x = Dense::from_fn(s.cols(), 4, |r, c| ((r + 3 * c) % 7) as f32 * 0.5 - 1.5);
+        let x_r = x.row_sums();
+        let s_c = s.col_sums_f64();
+        let dense = SOperand::Dense(s.to_dense());
+        let banded = SOperand::banded(&s, 4);
+        let (zd, pd, ad) = dense.aggregate(&x, &x_r, &s_c, 2);
+        let (zb, pb, ab) = banded.aggregate(&x, &x_r, &s_c, 2);
+        assert!(zd.max_abs_diff(&zb) < 1e-6);
+        assert!((pd - pb).abs() < 1e-9 * pd.abs().max(1.0));
+        assert!((ad - ab).abs() < 1e-9 * ad.abs().max(1.0));
+    }
+
+    #[test]
+    fn plan_admits_small_dense_and_refuses_oversized() {
+        // Tiny fits dense under any sane budget.
+        let p = OperandPlan::choose(64, 32, 300, 256, ExecMode::Auto, 64 << 20).unwrap();
+        assert!(!p.sparse);
+        // Full-scale PubMed: dense S alone is ~1.5 GB, CSR a few MB.
+        let (n, f, s_nnz, f_nnz) = (19_717, 500, 108_393, 988_031);
+        let p = OperandPlan::choose(n, f, s_nnz, f_nnz, ExecMode::Auto, 512 << 20).unwrap();
+        assert!(p.sparse, "auto must fall back to CSR for PubMed: {p:?}");
+        assert!(p.dense_bytes > (512 << 20));
+        assert!(p.csr_bytes < (64 << 20));
+        // Forcing dense must refuse rather than OOM.
+        assert!(OperandPlan::choose(n, f, s_nnz, f_nnz, ExecMode::Dense, 512 << 20).is_err());
+        // A budget below even the CSR footprint refuses too.
+        assert!(OperandPlan::choose(n, f, s_nnz, f_nnz, ExecMode::Sparse, 1 << 20).is_err());
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("auto"), Some(ExecMode::Auto));
+        assert_eq!(ExecMode::parse("Dense"), Some(ExecMode::Dense));
+        assert_eq!(ExecMode::parse("csr"), Some(ExecMode::Sparse));
+        assert_eq!(ExecMode::parse("bogus"), None);
+        assert_eq!(ExecMode::Sparse.name(), "sparse");
+    }
+
+    #[test]
+    fn swap_weights_refreshes_check_state() {
+        let (h, s, w1, w2) = workload();
+        let mut ops = GcnOperands::sparse(h, &s, w1.clone(), w2.clone(), 2).unwrap();
+        let before = ops.check.clone();
+        let w1b = crate::tensor::ops::scale(&w1, 2.0);
+        let w2b = crate::tensor::ops::scale(&w2, 0.5);
+        ops.swap_weights(w1b, w2b).unwrap();
+        assert_eq!(ops.check.s_c, before.s_c, "s_c is weight-independent");
+        for (a, b) in ops.check.w_r1.iter().zip(&before.w_r1) {
+            assert!((a - 2.0 * b).abs() <= 1e-5 * b.abs().max(1e-3), "{a} vs {b}");
+        }
+        // Shape-changing swaps are refused.
+        assert!(ops.swap_weights(Dense::zeros(3, 3), Dense::zeros(3, 3)).is_err());
+    }
+
+    #[test]
+    fn from_parts_validates_shapes() {
+        let (h, s, w1, w2) = workload();
+        let bad_s = Csr::from_coo(10, 10, vec![(0, 0, 1.0)]);
+        assert!(GcnOperands::sparse(h.clone(), &bad_s, w1.clone(), w2.clone(), 1).is_err());
+        assert!(GcnOperands::sparse(h.clone(), &s, Dense::zeros(5, 8), w2.clone(), 1).is_err());
+        assert!(GcnOperands::sparse(h, &s, w1, Dense::zeros(5, 4), 1).is_err());
+    }
+}

@@ -198,6 +198,36 @@ impl Csr {
             .collect()
     }
 
+    /// Extract rows `lo..hi` as their own CSR (columns unchanged) — the
+    /// unit of row-band sharding on the serving path. Concatenating the
+    /// bands of a partition reconstructs the original matrix, and the
+    /// bands' column sums add up to the full `eᵀM` exactly (checksum
+    /// additivity over row bands).
+    pub fn row_band(&self, lo: usize, hi: usize) -> Csr {
+        assert!(
+            lo <= hi && hi <= self.rows,
+            "row band {lo}..{hi} out of range for {} rows",
+            self.rows
+        );
+        let start = self.row_ptr[lo];
+        let end = self.row_ptr[hi];
+        Csr {
+            rows: hi - lo,
+            cols: self.cols,
+            row_ptr: self.row_ptr[lo..=hi].iter().map(|p| p - start).collect(),
+            col_idx: self.col_idx[start..end].to_vec(),
+            values: self.values[start..end].to_vec(),
+        }
+    }
+
+    /// Heap footprint of the CSR buffers in bytes (values + column
+    /// indices + row pointers) — the quantity the serving path budgets.
+    pub fn heap_bytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<f32>()
+            + self.col_idx.len() * std::mem::size_of::<usize>()
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+    }
+
     /// Transpose (CSR → CSR of the transpose).
     pub fn transpose(&self) -> Csr {
         let mut coo = Vec::with_capacity(self.nnz());
@@ -322,6 +352,37 @@ mod tests {
         assert_eq!(m.row_nnz(1), 0);
         let row2: Vec<_> = m.row_iter(2).collect();
         assert_eq!(row2, vec![(0, 3.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn row_band_partitions_exactly() {
+        let m = sample();
+        let top = m.row_band(0, 2);
+        let bot = m.row_band(2, 3);
+        assert_eq!(top.shape(), (2, 3));
+        assert_eq!(bot.shape(), (1, 3));
+        assert_eq!(top.nnz() + bot.nnz(), m.nnz());
+        // Band rows reproduce the original rows.
+        assert_eq!(top.to_dense().row(0), m.to_dense().row(0));
+        assert_eq!(bot.to_dense().row(0), m.to_dense().row(2));
+        // Empty band is fine.
+        assert_eq!(m.row_band(1, 1).nnz(), 0);
+        // Column-sum additivity over the partition (exact in f64: each
+        // column's entries are summed in the same row order either way).
+        let full = m.col_sums_f64();
+        let stitched: Vec<f64> = top
+            .col_sums_f64()
+            .iter()
+            .zip(bot.col_sums_f64())
+            .map(|(a, b)| a + b)
+            .collect();
+        assert_eq!(full, stitched);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn row_band_out_of_range_panics() {
+        sample().row_band(1, 4);
     }
 
     #[test]

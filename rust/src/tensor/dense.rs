@@ -163,13 +163,20 @@ impl Dense {
 
     /// Per-column sums (`eᵀM`), f64 accumulation, returned as f32 check row.
     pub fn col_sums(&self) -> Vec<f32> {
+        self.col_sums_f64().into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Per-column sums at full f64 precision — the serving path keeps
+    /// `s_c` in f64 so the cached offline state adds no rounding floor of
+    /// its own to the checksum residuals.
+    pub fn col_sums_f64(&self) -> Vec<f64> {
         let mut acc = vec![0f64; self.cols];
         for r in 0..self.rows {
             for (a, &x) in acc.iter_mut().zip(self.row(r)) {
                 *a += x as f64;
             }
         }
-        acc.into_iter().map(|x| x as f32).collect()
+        acc
     }
 
     /// Per-row sums (`M·e`), f64 accumulation, returned as f32 check column.

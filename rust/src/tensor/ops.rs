@@ -181,6 +181,14 @@ pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
 }
 
+/// Dot product of an f64 checksum row (offline `s_c`) with an f32 online
+/// checksum column (`H·w_r`), accumulated in f64 — the fused-check inner
+/// product of the serving path.
+pub fn dot_mixed(a: &[f64], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y as f64).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +290,7 @@ mod tests {
     #[test]
     fn dot_accumulates() {
         assert_eq!(dot_f64(&[1., 2.], &[3., 4.]), 11.0);
+        assert_eq!(dot_mixed(&[1.5, -2.0], &[2., 4.]), -5.0);
     }
 
     #[test]

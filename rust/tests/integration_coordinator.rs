@@ -6,6 +6,7 @@
 
 use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig, VerifyStatus};
 use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{ExecMode, OperandPlan};
 
 fn base_cfg() -> ServerConfig {
     ServerConfig {
@@ -31,7 +32,7 @@ fn clean_serving_answers_every_request() {
     assert_eq!(s.failed, 0);
     assert_eq!(s.metrics.checks_fired, 0, "no faults -> no alarms");
     assert!(s.metrics.batches >= 10); // 40 requests / max_batch 4
-    assert!(s.p50 > 0.0 && s.p99 >= s.p50);
+    assert!(s.metrics.p50_secs > 0.0 && s.metrics.p99_secs >= s.metrics.p50_secs);
 }
 
 #[test]
@@ -67,4 +68,98 @@ fn verify_status_taxonomy_is_consistent() {
     let s = serve_synthetic(&cfg, 30).unwrap();
     assert_eq!(s.clean + s.recovered + s.failed, s.responses);
     let _ = VerifyStatus::Clean; // type is part of the public API
+}
+
+#[test]
+fn pubmed_reduced_scale_serves_on_sparse_operands() {
+    // Before sparse-aware serving this dataset was refused up front
+    // (the dense path would have needed a ~1.5 GB S at full scale).
+    let cfg = ServerConfig {
+        dataset: DatasetId::Pubmed,
+        scale: 0.05,
+        mode: ExecMode::Sparse,
+        workers: 3,
+        train_epochs: 3,
+        batch: BatchPolicy {
+            max_batch: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let s = serve_synthetic(&cfg, 24).unwrap();
+    assert!(s.sparse, "forced-sparse run must use CSR operands");
+    assert_eq!(s.bands, 3, "S sharded into one row band per worker");
+    assert_eq!(s.responses, 24);
+    assert_eq!(s.clean, 24, "{s:?}");
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.metrics.checks_fired, 0, "fault-free passes must not alarm");
+    // Percentiles now live in ServeMetrics directly and must have been
+    // aggregated across the row-band topology.
+    assert!(s.metrics.p50_secs > 0.0);
+    assert!(s.metrics.p99_secs >= s.metrics.p50_secs);
+}
+
+#[test]
+fn sparse_path_detects_and_recovers_injected_faults() {
+    let cfg = ServerConfig {
+        dataset: DatasetId::Pubmed,
+        scale: 0.03,
+        mode: ExecMode::Sparse,
+        workers: 2,
+        train_epochs: 2,
+        inject_every: Some(2),
+        batch: BatchPolicy {
+            max_batch: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let s = serve_synthetic(&cfg, 16).unwrap();
+    assert!(s.metrics.injected_faults > 0);
+    assert_eq!(
+        s.metrics.checks_fired, s.metrics.injected_faults,
+        "every injected corruption must fire exactly one check: {s:?}"
+    );
+    assert_eq!(s.failed, 0, "retries must recover: {s:?}");
+    assert!(s.recovered > 0);
+}
+
+#[test]
+fn nell_reduced_scale_serves_on_sparse_operands() {
+    let cfg = ServerConfig {
+        dataset: DatasetId::Nell,
+        scale: 0.02,
+        mode: ExecMode::Sparse,
+        workers: 2,
+        train_epochs: 1,
+        ..Default::default()
+    };
+    let s = serve_synthetic(&cfg, 8).unwrap();
+    assert!(s.sparse);
+    assert_eq!(s.responses, 8);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.metrics.checks_fired, 0, "{s:?}");
+}
+
+#[test]
+fn full_scale_pubmed_and_nell_plan_sparse_under_default_budget() {
+    // Plan-only (no graph build): the operand-memory estimate that
+    // replaced the hard-coded dataset refusal. nnz figures are the
+    // synthetic-spec statistics (S nnz = 2E + N).
+    for (n, f, s_nnz, feat_nnz) in [
+        (19_717usize, 500usize, 108_393usize, 988_031usize), // pubmed
+        (65_755, 5414, 598_043, 32_300_000),                 // nell
+    ] {
+        let plan =
+            OperandPlan::choose(n, f, s_nnz, feat_nnz, ExecMode::Auto, 512 << 20).unwrap();
+        assert!(plan.sparse, "auto must pick CSR for n={n}: {plan:?}");
+        assert!(
+            OperandPlan::choose(n, f, s_nnz, feat_nnz, ExecMode::Dense, 512 << 20).is_err(),
+            "forcing dense at n={n} must refuse, not OOM"
+        );
+    }
+    // Cora still densifies under the same budget.
+    let plan =
+        OperandPlan::choose(2708, 1433, 13_566, 49_216, ExecMode::Auto, 512 << 20).unwrap();
+    assert!(!plan.sparse);
 }

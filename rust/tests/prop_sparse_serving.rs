@@ -1,0 +1,183 @@
+//! Property tests for the sparse serving path: on random synthetic
+//! graphs, the CSR (row-band sharded) executable must agree with the
+//! dense executable — logits within 1e-5 relative (in fact bit-identical,
+//! since both kernels fold each output row in the same nonzero order) —
+//! and fault-free passes must raise zero alarms: under the serving
+//! policy on the f32 path, and under all four paper thresholds on the
+//! f64 engine for the same workload.
+
+use gcn_abft::abft::{fused_forward_checked, CheckPolicy, EngineModel};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::synth::{generate, SynthSpec};
+use gcn_abft::coordinator::ServePolicy;
+use gcn_abft::runtime::{GcnOperands, ModelEntry, Runtime, SOperand};
+use gcn_abft::tensor::NopHook;
+use gcn_abft::util::proptest::{check, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+
+fn gen_case(rng: &mut Pcg64) -> (SynthSpec, u64, u64, usize) {
+    let n = 20 + rng.gen_index(40);
+    let spec = SynthSpec {
+        name: "prop-serve".into(),
+        num_nodes: n,
+        num_edges: 2 * n,
+        feat_dim: 8 + rng.gen_index(24),
+        feat_nnz: 4 * n,
+        num_classes: 2 + rng.gen_index(4),
+        homophily: 0.8,
+        binary_features: rng.gen_bool(0.5),
+        feature_scale: 1.0,
+    };
+    let graph_seed = rng.next_u64();
+    let model_seed = rng.next_u64();
+    let bands = 2 + rng.gen_index(4); // 2..=5 row bands
+    (spec, graph_seed, model_seed, bands)
+}
+
+#[test]
+fn prop_sparse_executable_matches_dense() {
+    check(
+        &Config {
+            cases: 24,
+            seed: 0xE407,
+            ..Default::default()
+        },
+        gen_case,
+        |(spec, graph_seed, model_seed, bands)| {
+            let graph = generate(spec, *graph_seed);
+            let model = GcnModel::two_layer(&graph, 8, *model_seed);
+            let w1 = model.layers[0].weights.clone();
+            let w2 = model.layers[1].weights.clone();
+            let entry = ModelEntry {
+                name: spec.name.clone(),
+                file: String::new(),
+                n: graph.num_nodes,
+                f: graph.feat_dim(),
+                hidden: 8,
+                classes: graph.num_classes,
+            };
+            let exe = Runtime::native(2).load_entry(entry);
+
+            let dense_out = exe
+                .run(
+                    &graph.features.to_dense(),
+                    &model.adjacency.to_dense(),
+                    &w1,
+                    &w2,
+                )
+                .map_err(|e| format!("dense run failed: {e}"))?;
+
+            for nbands in [1usize, *bands] {
+                let ops = GcnOperands::sparse(
+                    graph.features.clone(),
+                    &model.adjacency,
+                    w1.clone(),
+                    w2.clone(),
+                    nbands,
+                )
+                .map_err(|e| format!("operand build failed: {e}"))?;
+                let sparse_out = exe
+                    .run_operands(&ops, &[])
+                    .map_err(|e| format!("sparse run failed: {e}"))?;
+
+                // Logits within 1e-5 relative of the dense executable.
+                let scale = dense_out
+                    .logits
+                    .data()
+                    .iter()
+                    .fold(0f32, |m, &v| m.max(v.abs()))
+                    .max(1.0);
+                let diff = sparse_out.logits.max_abs_diff(&dense_out.logits);
+                if diff / scale > 1e-5 {
+                    return Err(format!(
+                        "sparse logits diverge from dense by {diff} (scale {scale}, \
+                         nbands={nbands})"
+                    ));
+                }
+                // Stitched fused checksums agree with the dense ones.
+                for l in 0..2 {
+                    let (a, b) = (sparse_out.predicted[l], dense_out.predicted[l]);
+                    if (a - b).abs() > 1e-5 * b.abs().max(1.0) {
+                        return Err(format!(
+                            "layer-{l} predicted checksum diverges: {a} vs {b} \
+                             (nbands={nbands})"
+                        ));
+                    }
+                }
+                // Fault-free pass raises no serving alarm.
+                let report = ServePolicy::default().verify(&sparse_out);
+                if !report.ok {
+                    return Err(format!(
+                        "fault-free sparse pass alarmed (nbands={nbands}): {report:?}"
+                    ));
+                }
+            }
+
+            // The same workload through the f64 engine raises zero
+            // fault-free alarms at every paper threshold.
+            let em = EngineModel::from_model(&model);
+            let mut nop = NopHook;
+            let (_, checks) = fused_forward_checked(&em, &graph.features, &mut nop);
+            for &tau in &CheckPolicy::PAPER_THRESHOLDS {
+                let policy = CheckPolicy::new(tau);
+                for c in &checks {
+                    if policy.fires(c.predicted, c.actual) {
+                        return Err(format!("fault-free alarm at tau={tau:.0e}: {c:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_row_band_stitching_is_exact() {
+    check(
+        &Config {
+            cases: 40,
+            seed: 0xE408,
+            ..Default::default()
+        },
+        gen_case,
+        |(spec, graph_seed, model_seed, bands)| {
+            let graph = generate(spec, *graph_seed);
+            let s = graph.normalized_adjacency();
+            // A dense right-hand side standing in for X = H·W.
+            let mut rng = Pcg64::from_seed(*model_seed);
+            let x = gcn_abft::tensor::Dense::from_fn(s.cols(), 6, |_, _| {
+                rng.gen_f32_range(-2.0, 2.0)
+            });
+            let x_r = x.row_sums();
+            let s_c = s.col_sums_f64();
+
+            let banded = SOperand::banded(&s, *bands);
+            // Band column sums stitch to the global s_c exactly.
+            if banded.col_sums_f64() != s_c {
+                return Err("band s_c vectors do not sum to the global s_c".into());
+            }
+            // Band-stitched aggregation is bit-identical to the unsharded
+            // SpMM, and the stitched checksum pair satisfies Eq. (4).
+            let reference = s.spmm(&x);
+            let (z, pred, actual) = banded.aggregate(&x, &x_r, &s_c, 1);
+            if z != reference {
+                return Err(format!(
+                    "stitched aggregation differs from unsharded SpMM ({} bands)",
+                    banded.band_count()
+                ));
+            }
+            let scale = actual.abs().max(1.0);
+            if (pred - actual).abs() / scale > 1e-6 {
+                return Err(format!(
+                    "stitched fused check violated: pred {pred} vs actual {actual}"
+                ));
+            }
+            if (actual - reference.checksum_f64()).abs() / scale > 1e-9 {
+                return Err("stitched actual checksum diverges from block sum".into());
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
