@@ -5,10 +5,11 @@
 //! Run: `cargo run --release --example fault_campaign [-- dataset [campaigns]]`
 //! (defaults: cora, 200 campaigns)
 
-use gcn_abft::abft::{EngineModel, Scheme};
-use gcn_abft::fault::{run_campaigns, CampaignConfig};
+use gcn_abft::abft::Scheme;
+use gcn_abft::fault::{run_campaigns, CampaignConfig, FaultModelKind};
 use gcn_abft::graph::DatasetId;
 use gcn_abft::report::{build_workload, ExperimentOpts};
+use gcn_abft::runtime::InstrumentedEngine;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,7 +27,9 @@ fn main() {
     };
     eprintln!("building {} + training a 2-layer GCN ...", dataset.name());
     let (graph, model) = build_workload(dataset, &opts);
-    let engine = EngineModel::from_model(&model);
+    // Campaigns run on the instrumented backend's banded f64 engine —
+    // the same execution `gcn-abft serve --backend instrumented` uses.
+    let engine = InstrumentedEngine::from_model(&model, &graph.features);
 
     for scheme in [Scheme::Split, Scheme::Fused] {
         eprintln!("running {campaigns} campaigns ({}) ...", scheme.name());
@@ -34,9 +37,11 @@ fn main() {
             scheme,
             campaigns,
             seed: 7,
+            fault_model: FaultModelKind::BitFlip,
+            band_workers: 2,
             ..Default::default()
         };
-        let report = run_campaigns(&engine, &graph.features, &cfg);
+        let report = run_campaigns(&engine, &cfg);
         println!(
             "\n== {} / {} — {} campaigns, 1 fault each ==",
             graph.name,

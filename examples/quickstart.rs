@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use gcn_abft::abft::{fused_forward_checked, CheckPolicy, EngineModel};
-use gcn_abft::fault::{FaultPlan, InjectHook, PlannedFault};
+use gcn_abft::fault::{FaultPlan, PlannedFault};
 use gcn_abft::gcn::GcnModel;
 use gcn_abft::graph::DatasetId;
 use gcn_abft::tensor::{CountingHook, NopHook};
@@ -65,7 +65,7 @@ fn main() {
             bit64: 63,
         }],
     };
-    let mut inject = InjectHook::new(&plan);
+    let mut inject = plan.hook();
     let (_, checks) = fused_forward_checked(&engine, &graph.features, &mut inject);
     println!("\nwith one injected bit flip:");
     let mut detected = false;

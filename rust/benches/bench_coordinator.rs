@@ -8,17 +8,19 @@
 
 use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig};
 use gcn_abft::graph::DatasetId;
-use gcn_abft::runtime::ExecMode;
+use gcn_abft::runtime::{BackendKind, ChecksumScheme, ExecMode};
 use gcn_abft::util::bench::bench_header;
 use gcn_abft::util::parallel::default_threads;
 
-fn run(
+fn run_backend(
     dataset: DatasetId,
     requests: usize,
     batch: usize,
     workers: usize,
     mode: ExecMode,
     scale: f64,
+    backend: BackendKind,
+    scheme: ChecksumScheme,
 ) {
     let cfg = ServerConfig {
         dataset,
@@ -32,14 +34,18 @@ fn run(
         seed: 7,
         mode,
         scale,
+        backend,
+        scheme,
         ..Default::default()
     };
     match serve_synthetic(&cfg, requests) {
         Ok(s) => {
             println!(
-                "{:<12} {:<6} batch={batch:<2} workers={workers:<2} {:>7.1} req/s  \
-                 p50 {:>8.2} ms  p95 {:>8.2} ms  verify-overhead {:.4}%",
+                "{:<12} {:<13} {:<8} {:<6} batch={batch:<2} workers={workers:<2} \
+                 {:>7.1} req/s  p50 {:>8.2} ms  p95 {:>8.2} ms  verify-overhead {:.4}%",
                 s.dataset,
+                s.backend,
+                s.scheme,
                 if s.sparse { "sparse" } else { "dense" },
                 s.metrics.throughput_rps(),
                 s.metrics.p50_secs * 1e3,
@@ -49,6 +55,26 @@ fn run(
         }
         Err(e) => println!("{}: FAILED ({e:#})", dataset.name()),
     }
+}
+
+fn run(
+    dataset: DatasetId,
+    requests: usize,
+    batch: usize,
+    workers: usize,
+    mode: ExecMode,
+    scale: f64,
+) {
+    run_backend(
+        dataset,
+        requests,
+        batch,
+        workers,
+        mode,
+        scale,
+        BackendKind::Native,
+        ChecksumScheme::Fused,
+    );
 }
 
 fn main() {
@@ -79,11 +105,26 @@ fn main() {
     // the CSR + row-band machinery end to end.
     run(DatasetId::Pubmed, 24, 8, 2, ExecMode::Sparse, 0.25);
 
+    println!("\n-- backend A/B: native vs instrumented, fused vs split (batch 8) --");
+    for backend in [BackendKind::Native, BackendKind::Instrumented] {
+        for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+            // Tiny at full scale, Cora reduced so the MAC-level f64
+            // engine stays in bench budget; same workload across the
+            // four cells, so req/s is directly comparable.
+            run_backend(DatasetId::Tiny, 64, 8, 2, ExecMode::Auto, 1.0, backend, scheme);
+            run_backend(DatasetId::Cora, 12, 8, 2, ExecMode::Sparse, 0.3, backend, scheme);
+        }
+    }
+
     println!(
         "\n(batching amortizes the per-pass cost; verification stays a tiny \
          fraction of execute time; the worker sweep should show req/s rising \
          until the worker pool saturates the host's cores; sparse operands \
          trade peak dense-kernel throughput for an operand footprint that \
-         scales with nnz — the only way PubMed/Nell serve at all)"
+         scales with nnz — the only way PubMed/Nell serve at all; the \
+         backend A/B shows the MAC-instrumented f64 engine orders of \
+         magnitude slower than the native kernels — it buys op-exact fault \
+         timelines, not throughput — and split costing more checking work \
+         than fused on both backends)"
     );
 }

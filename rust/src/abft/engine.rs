@@ -88,6 +88,15 @@ pub struct EngineModel {
     pub w_r: Vec<Vec<f64>>,
 }
 
+/// Offline `w_r = W·e` per layer, shared by every engine view of a
+/// model (the paper computes these once, at weight-load time).
+pub fn weight_row_sums(weights: &[Dense64]) -> Vec<Vec<f64>> {
+    weights
+        .iter()
+        .map(|w| (0..w.rows()).map(|r| w.row(r).iter().sum::<f64>()).collect())
+        .collect()
+}
+
 impl EngineModel {
     pub fn from_model(m: &GcnModel) -> Self {
         let weights: Vec<Dense64> = m
@@ -97,10 +106,7 @@ impl EngineModel {
             .collect();
         let activations = m.layers.iter().map(|l| l.activation).collect();
         let s_c = m.adjacency.col_sums_f64();
-        let w_r = weights
-            .iter()
-            .map(|w| (0..w.rows()).map(|r| w.row(r).iter().sum::<f64>()).collect())
-            .collect();
+        let w_r = weight_row_sums(&weights);
         Self {
             adjacency: m.adjacency.clone(),
             weights,

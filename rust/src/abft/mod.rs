@@ -13,7 +13,7 @@ pub mod split;
 pub use aggfirst::{fused_forward_checked_aggfirst, fused_layer_checked_aggfirst};
 pub use checksum::{CheckPolicy, OfflineChecksums};
 pub use localize::{fused_layer_localized, Localization};
-pub use engine::{EngineInput, EngineModel};
+pub use engine::{weight_row_sums, EngineInput, EngineModel};
 pub use fused::{fused_forward_checked, fused_layer_checked};
 pub use outcome::{CheckPoint, CheckRecord, Scheme};
 pub use split::{split_forward_checked, split_layer_checked};

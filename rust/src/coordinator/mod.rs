@@ -16,7 +16,7 @@ pub use server::{run_server, ModelState, ServerConfig};
 pub use verify::{ServePolicy, VerifyReport};
 
 use crate::graph::DatasetId;
-use crate::runtime::ExecMode;
+use crate::runtime::{BackendKind, ChecksumScheme, ExecMode};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -39,6 +39,10 @@ pub fn serve_cli(args: &Args) -> Result<String> {
     }
     let mode = ExecMode::parse(&args.get_str("mode", "auto"))
         .ok_or_else(|| anyhow!("unknown --mode (auto, dense, sparse)"))?;
+    let backend = BackendKind::parse(&args.get_str("backend", "native"))
+        .ok_or_else(|| anyhow!("unknown --backend (native, instrumented, pjrt)"))?;
+    let scheme = ChecksumScheme::parse(&args.get_str("scheme", "fused"))
+        .ok_or_else(|| anyhow!("unknown --scheme (fused, split)"))?;
     let mem_budget_mb = args
         .get_usize("mem-budget-mb", 512)
         .map_err(|e| anyhow!("{e}"))?;
@@ -63,6 +67,8 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         mode,
         mem_budget_mb,
         train_epochs,
+        backend,
+        scheme,
         ..Default::default()
     };
     let summary = serve_synthetic(&cfg, requests)?;
@@ -90,6 +96,10 @@ pub struct ServeSummary {
     pub bands: usize,
     /// Resident graph-operand footprint (S + features) in bytes.
     pub operand_bytes: usize,
+    /// Which execution backend served the run.
+    pub backend: &'static str,
+    /// Which checksum scheme was verified.
+    pub scheme: &'static str,
 }
 
 impl ServeSummary {
@@ -97,7 +107,7 @@ impl ServeSummary {
         let m = &self.metrics;
         format!(
             "SERVE {} — {} requests in {:.2}s ({:.1} req/s)\n\
-             operands: {} ({:.1} MB resident{})\n\
+             backend: {} (scheme {}) | operands: {} ({:.1} MB resident{})\n\
              batches {} (mean size {:.1}) | executions {} | p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
              verification: {:.3}% of execute time | checks fired {} | injected {} | retries {} | failures {}\n\
              responses: {} clean, {} recovered-after-retry, {} failed",
@@ -105,6 +115,8 @@ impl ServeSummary {
             m.requests,
             m.wall_secs,
             m.throughput_rps(),
+            self.backend,
+            self.scheme,
             if self.sparse { "sparse (CSR)" } else { "dense" },
             self.operand_bytes as f64 / (1u64 << 20) as f64,
             if self.sparse {
@@ -133,6 +145,8 @@ impl ServeSummary {
         let m = &self.metrics;
         Json::obj(vec![
             ("dataset", Json::from(self.dataset.clone())),
+            ("backend", Json::from(self.backend.to_string())),
+            ("scheme", Json::from(self.scheme.to_string())),
             ("sparse", Json::Bool(self.sparse)),
             ("bands", Json::from(self.bands)),
             ("operand_bytes", Json::from(self.operand_bytes)),
@@ -232,6 +246,8 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
         sparse: state.ops.is_sparse(),
         bands: state.ops.band_count(),
         operand_bytes: state.ops.operand_bytes(),
+        backend: cfg.backend.name(),
+        scheme: cfg.scheme.name(),
         metrics,
     })
 }

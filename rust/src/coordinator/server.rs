@@ -30,10 +30,12 @@ use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
 use super::verify::ServePolicy;
 use crate::graph::DatasetId;
+use crate::runtime::backend;
 use crate::runtime::{
-    ExecMode, GcnOperands, GcnOutputs, Manifest, ModelEntry, OperandPlan, Runtime,
+    BackendKind, ChecksumScheme, ExecMode, GcnOperands, GcnOutputs, Manifest, ModelEntry,
+    OperandPlan, Overlay,
 };
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Mutex;
@@ -62,6 +64,11 @@ pub struct ServerConfig {
     pub mem_budget_mb: usize,
     /// Brief training at model build so logits have realistic margins.
     pub train_epochs: usize,
+    /// Which [`backend::GcnBackend`] executes the forwards
+    /// (`--backend native|instrumented|pjrt`).
+    pub backend: BackendKind,
+    /// Checksum scheme the backend computes (`--scheme fused|split`).
+    pub scheme: ChecksumScheme,
 }
 
 impl Default for ServerConfig {
@@ -79,6 +86,8 @@ impl Default for ServerConfig {
             mode: ExecMode::Auto,
             mem_budget_mb: 512,
             train_epochs: 10,
+            backend: BackendKind::Native,
+            scheme: ChecksumScheme::Fused,
         }
     }
 }
@@ -156,9 +165,8 @@ impl ModelState {
     /// Collect a batch's perturbations as feature-row overlays, in
     /// request order (later overlays of the same node win, matching the
     /// historical copy-and-patch semantics). The base feature matrix is
-    /// no longer cloned per batch — the executable applies these
-    /// algebraically.
-    pub fn overlays<'a>(&self, batch: &'a Batch) -> Vec<(usize, &'a [f32])> {
+    /// never cloned per batch — backends apply these algebraically.
+    pub fn overlays<'a>(&self, batch: &'a Batch) -> Vec<Overlay<'a>> {
         let f = self.ops.feat_dim();
         let n = self.ops.n_nodes();
         let mut out = Vec::new();
@@ -171,11 +179,47 @@ impl ModelState {
                     p.node
                 );
                 assert!(p.node < n, "perturbation node {} out of range", p.node);
-                out.push((p.node, p.features.as_slice()));
+                out.push(Overlay {
+                    node: p.node,
+                    row: p.features.as_slice(),
+                });
             }
         }
         out
     }
+}
+
+/// Build one executor's backend: validate against the AOT manifest when
+/// one exists and the graph is at manifest scale (a manifest that is
+/// corrupt or version-skewed must fail loudly — that is the
+/// Python↔Rust contract check), then instantiate the configured
+/// [`backend::GcnBackend`] over the resident operands.
+fn build_worker_backend(
+    cfg: &ServerConfig,
+    state: &ModelState,
+    intra_threads: usize,
+) -> Result<Box<dyn backend::GcnBackend>> {
+    let full_scale = cfg.scale >= 1.0;
+    if full_scale && cfg.artifacts_dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let Some(entry) = manifest.model(cfg.dataset.name()) else {
+            bail!("model {:?} not in manifest", cfg.dataset.name());
+        };
+        let e = &state.entry;
+        if (entry.n, entry.f, entry.hidden, entry.classes) != (e.n, e.f, e.hidden, e.classes) {
+            bail!(
+                "manifest shapes for {} diverge from the operand set",
+                cfg.dataset.name()
+            );
+        }
+    }
+    backend::for_operands(
+        cfg.backend,
+        cfg.scheme,
+        &state.ops,
+        intra_threads,
+        Some((cfg.artifacts_dir.as_path(), cfg.dataset.name())),
+    )
 }
 
 /// Run the serving pipeline until the request channel closes; returns
@@ -251,22 +295,20 @@ pub fn run_server_with_ready(
             let cfg = cfg.clone();
             let state = state;
             handles.push(scope.spawn(move || -> Result<()> {
-                // Each executor owns its own runtime + executable (one
-                // accelerator per worker; required on the PJRT backend).
-                let rt = Runtime::native(intra_threads);
-                // Validate against the AOT manifest when one exists and
-                // the graph is at manifest scale; fall back to the shape
-                // entry derived from the operands otherwise (fresh
-                // checkout, or a --scale run whose dims intentionally
-                // differ from the full-scale manifest). A manifest that
-                // exists but is corrupt or version-skewed must still fail
-                // loudly — that is the Python↔Rust contract check.
-                let full_scale = cfg.scale >= 1.0;
-                let exe = if full_scale && cfg.artifacts_dir.join("manifest.json").exists() {
-                    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-                    rt.load_model(&manifest, cfg.dataset.name())?
-                } else {
-                    rt.load_entry(state.entry.clone())
+                // Each executor owns its own backend (one accelerator per
+                // worker; a hard requirement on the PJRT backend whose
+                // client handle is not Send).
+                let exe = match build_worker_backend(&cfg, state, intra_threads) {
+                    Ok(exe) => exe,
+                    Err(err) => {
+                        // A worker that cannot build its backend must not
+                        // leave the ready channel dangling — dropping the
+                        // sender unblocks the client driver immediately,
+                        // so the build error surfaces instead of a
+                        // recv_timeout stall.
+                        ready.lock().unwrap().take();
+                        return Err(err);
+                    }
                 };
                 if compiled.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 == pool {
                     if let Some(tx) = ready.lock().unwrap().take() {
@@ -295,7 +337,7 @@ pub fn run_server_with_ready(
                     let mut attempts = 0usize;
                     while attempts <= cfg.max_retries {
                         let t0 = Instant::now();
-                        let mut out = exe.run_operands(&state.ops, &overlays)?;
+                        let mut out = exe.run(&state.ops, &overlays)?;
                         let exec_dt = t0.elapsed().as_secs_f64();
 
                         // Optional fault injection into the response
@@ -466,10 +508,22 @@ mod tests {
         ]);
         let overlays = state.overlays(&batch);
         assert_eq!(overlays.len(), 2);
-        assert_eq!(overlays[0], (2, &[1.0f32, 2.0, 3.0][..]));
-        // Later overlays of the same node come later — the executable
-        // applies them in order, so the last one wins.
-        assert_eq!(overlays[1], (2, &[4.0f32, 5.0, 6.0][..]));
+        assert_eq!(
+            overlays[0],
+            Overlay {
+                node: 2,
+                row: &[1.0f32, 2.0, 3.0][..],
+            }
+        );
+        // Later overlays of the same node come later — the backends
+        // apply them in order, so the last one wins.
+        assert_eq!(
+            overlays[1],
+            Overlay {
+                node: 2,
+                row: &[4.0f32, 5.0, 6.0][..],
+            }
+        );
     }
 
     #[test]

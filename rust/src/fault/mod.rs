@@ -1,10 +1,16 @@
-//! Fault injection: single-bit flips in arithmetic results, fault plans
-//! over the op timeline, and the campaign runner behind Table I.
+//! Fault injection: pluggable fault models (single-bit, multi-bit,
+//! stuck-at) over the op timeline, segment hooks with deterministic
+//! prefix offsets, and the campaign runner behind Table I.
 
 pub mod bitflip;
 pub mod campaign;
+pub mod model;
 pub mod plan;
 
 pub use bitflip::{flip_f32_image, flip_f64, FaultSite};
 pub use campaign::{run_campaigns, CampaignConfig, CampaignReport, Tally};
-pub use plan::{FaultPlan, InjectHook, PlannedFault};
+pub use model::{
+    BitFlip, FaultEvent, FaultHit, FaultKind, FaultModel, FaultModelKind, MultiBit, NoFaults,
+    SegmentHook, StuckAt,
+};
+pub use plan::{FaultPlan, PlannedFault};

@@ -1,0 +1,645 @@
+//! Pluggable fault models over the op-index timeline.
+//!
+//! The paper's experiments use uniform single-bit flips (§IV-A), but the
+//! fault model is orthogonal to the checker: any corruption of a stored
+//! arithmetic result is detectable iff its checksum residual clears τ.
+//! This module makes the model a first-class, swappable component (the
+//! PyGFI line of work argues GNN-robustness studies need exactly this):
+//!
+//! * [`FaultModel`] — samples the [`FaultEvent`]s of one run;
+//! * [`BitFlip`] — the paper's model (one bit, uniform over the
+//!   timeline; the refactored form of the old `InjectHook` plan);
+//! * [`MultiBit`] — several simultaneous bit flips in one stored result
+//!   (burst/MBU faults);
+//! * [`StuckAt`] — a datapath bit latched at 0/1 for a window of ops
+//!   (persistent defect rather than a transient);
+//! * [`NoFaults`] — the golden model, used by the serving path and the
+//!   backend-parity property tests.
+//!
+//! Execution side: a [`SegmentHook`] applies a set of events to one
+//! **contiguous segment** `[start, end)` of the global op timeline. The
+//! instrumented engine splits each aggregation phase into fixed logical
+//! row bands with precomputed prefix offsets, and hands every band its
+//! own `SegmentHook` — so a fault plan lands on the same logical op
+//! whether the bands run serially or in parallel, and detection results
+//! are bit-identical at any worker count.
+
+use super::bitflip::{flip_f32_image, flip_f64, FaultSite};
+use super::plan::FaultPlan;
+use crate::tensor::instrumented::ExecHook;
+use crate::util::rng::Pcg64;
+
+/// What a fault does to the stored result it lands on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Flip one bit of the stored result: bit `bit32` of the f32 image on
+    /// the data path, bit `bit64` of the f64 accumulator on the checker
+    /// path (the paper's model).
+    BitFlip { bit32: u32, bit64: u32 },
+    /// Flip several bits of the same stored result at once.
+    MultiBit { mask32: u32, mask64: u64 },
+    /// From `op_index` for `duration` ops, the given bit of every stored
+    /// result (at any site) is forced to `stuck_one`.
+    StuckAt {
+        bit32: u32,
+        bit64: u32,
+        stuck_one: bool,
+        duration: u64,
+    },
+}
+
+/// One scheduled fault on the absolute op timeline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute index on the op timeline (0-based).
+    pub op_index: u64,
+    pub kind: FaultKind,
+}
+
+/// Where a fault actually landed (for the paper's site statistics).
+/// `op_index` identifies the *defect*: the op a point fault fired at,
+/// or a stuck-at fault's scheduled index — stable across timeline
+/// segments, so one logical persistent defect dedupes to one hit
+/// however many segments its window spans (`persistent` distinguishes
+/// the two, so a point fault firing at a stuck fault's scheduled index
+/// is never merged with it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultHit {
+    pub op_index: u64,
+    pub site: FaultSite,
+    /// True for stuck-at (windowed) defects, false for point faults.
+    pub persistent: bool,
+}
+
+/// A fault model: samples the events of one run over a timeline of
+/// `total_ops` operations. Implementations must be deterministic given
+/// the RNG state.
+pub trait FaultModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Sample `faults` fault events for one run.
+    fn sample(&self, rng: &mut Pcg64, total_ops: u64, faults: usize) -> Vec<FaultEvent>;
+}
+
+/// The paper's model: one uniformly placed single-bit flip per fault.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BitFlip;
+
+impl FaultModel for BitFlip {
+    fn name(&self) -> &'static str {
+        "bitflip"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, total_ops: u64, faults: usize) -> Vec<FaultEvent> {
+        FaultPlan::sample(rng, total_ops, faults).events()
+    }
+}
+
+/// `bits` simultaneous flips in one stored result (multi-bit upset).
+#[derive(Debug, Clone, Copy)]
+pub struct MultiBit {
+    pub bits: u32,
+}
+
+impl Default for MultiBit {
+    fn default() -> Self {
+        Self { bits: 2 }
+    }
+}
+
+impl FaultModel for MultiBit {
+    fn name(&self) -> &'static str {
+        "multibit"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, total_ops: u64, faults: usize) -> Vec<FaultEvent> {
+        let bits = self.bits.clamp(1, 32) as usize;
+        let plan = FaultPlan::sample(rng, total_ops, faults);
+        let mut events = Vec::with_capacity(plan.faults.len());
+        for f in &plan.faults {
+            let mask32 = rng
+                .sample_indices(32, bits)
+                .into_iter()
+                .fold(0u32, |m, b| m | (1u32 << b));
+            let mask64 = rng
+                .sample_indices(64, bits)
+                .into_iter()
+                .fold(0u64, |m, b| m | (1u64 << b));
+            events.push(FaultEvent {
+                op_index: f.op_index,
+                kind: FaultKind::MultiBit { mask32, mask64 },
+            });
+        }
+        events
+    }
+}
+
+/// A bit stuck at 0/1 for a window of `duration` ops (persistent defect;
+/// `u64::MAX` models a permanently latched line).
+#[derive(Debug, Clone, Copy)]
+pub struct StuckAt {
+    pub duration: u64,
+}
+
+impl Default for StuckAt {
+    fn default() -> Self {
+        Self { duration: 4096 }
+    }
+}
+
+impl FaultModel for StuckAt {
+    fn name(&self) -> &'static str {
+        "stuckat"
+    }
+
+    fn sample(&self, rng: &mut Pcg64, total_ops: u64, faults: usize) -> Vec<FaultEvent> {
+        let plan = FaultPlan::sample(rng, total_ops, faults);
+        let mut events = Vec::with_capacity(plan.faults.len());
+        for f in &plan.faults {
+            events.push(FaultEvent {
+                op_index: f.op_index,
+                kind: FaultKind::StuckAt {
+                    bit32: f.bit32,
+                    bit64: f.bit64,
+                    stuck_one: rng.gen_bool(0.5),
+                    duration: self.duration.max(1),
+                },
+            });
+        }
+        events
+    }
+}
+
+/// The golden model: no faults, ever. Serving and parity tests use it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoFaults;
+
+impl FaultModel for NoFaults {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn sample(&self, _rng: &mut Pcg64, _total_ops: u64, _faults: usize) -> Vec<FaultEvent> {
+        Vec::new()
+    }
+}
+
+/// Value-level selector for configs/CLI (avoids generics in
+/// `CampaignConfig`). Delegates to the trait implementations above.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultModelKind {
+    BitFlip,
+    MultiBit { bits: u32 },
+    StuckAt { duration: u64 },
+}
+
+impl FaultModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultModelKind::BitFlip => "bitflip",
+            FaultModelKind::MultiBit { .. } => "multibit",
+            FaultModelKind::StuckAt { .. } => "stuckat",
+        }
+    }
+
+    /// Parse `bitflip`, `multibit[:BITS]`, `stuckat[:DURATION]`.
+    pub fn parse(s: &str) -> Option<FaultModelKind> {
+        let lower = s.to_ascii_lowercase();
+        let (head, arg) = match lower.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        match head {
+            "bitflip" | "single" => Some(FaultModelKind::BitFlip),
+            "multibit" | "mbu" => {
+                let bits = match arg {
+                    Some(a) => a.parse().ok()?,
+                    None => MultiBit::default().bits,
+                };
+                Some(FaultModelKind::MultiBit { bits })
+            }
+            "stuckat" | "stuck-at" => {
+                let duration = match arg {
+                    Some(a) => a.parse().ok()?,
+                    None => StuckAt::default().duration,
+                };
+                Some(FaultModelKind::StuckAt { duration })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64, total_ops: u64, faults: usize) -> Vec<FaultEvent> {
+        match *self {
+            FaultModelKind::BitFlip => BitFlip.sample(rng, total_ops, faults),
+            FaultModelKind::MultiBit { bits } => MultiBit { bits }.sample(rng, total_ops, faults),
+            FaultModelKind::StuckAt { duration } => {
+                StuckAt { duration }.sample(rng, total_ops, faults)
+            }
+        }
+    }
+}
+
+/// Execution hook applying fault events to one contiguous timeline
+/// segment `[start, end)`.
+///
+/// Point faults (bit flips) defer past exact-zero stored values — the
+/// paper flips bits of stored results, which are (near-)always nonzero;
+/// a flip on a 0.0 product yields a denormal delta that rounds away and
+/// models nothing physical — but **deferral never crosses a segment
+/// boundary**: a fault that reaches the end of its segment still armed
+/// is dropped (the run classifies as benign). Because segment boundaries
+/// are a fixed property of the workload (logical bands + prefix
+/// offsets), not of the worker count, injection is bit-reproducible
+/// serial or parallel.
+#[derive(Debug, Clone)]
+pub struct SegmentHook {
+    /// Point events scheduled inside this segment, sorted by op index.
+    points: Vec<FaultEvent>,
+    /// Stuck-at events whose active window overlaps this segment.
+    stuck: Vec<FaultEvent>,
+    stuck_fired: Vec<bool>,
+    /// Absolute index of the next op this segment will observe.
+    counter: u64,
+    start: u64,
+    /// Next point event to fire.
+    next: usize,
+    /// Faults that actually modified a stored result, in op order.
+    pub hits: Vec<FaultHit>,
+}
+
+impl SegmentHook {
+    /// Hook for the segment `[start, end)` of the global timeline.
+    pub fn new(events: &[FaultEvent], start: u64, end: u64) -> SegmentHook {
+        let mut points = Vec::new();
+        let mut stuck = Vec::new();
+        for ev in events {
+            match ev.kind {
+                FaultKind::StuckAt { duration, .. } => {
+                    let window_end = ev.op_index.saturating_add(duration);
+                    if ev.op_index < end && window_end > start {
+                        stuck.push(*ev);
+                    }
+                }
+                _ => {
+                    if ev.op_index >= start && ev.op_index < end {
+                        points.push(*ev);
+                    }
+                }
+            }
+        }
+        points.sort_by_key(|e| e.op_index);
+        let stuck_fired = vec![false; stuck.len()];
+        SegmentHook {
+            points,
+            stuck,
+            stuck_fired,
+            counter: start,
+            start,
+            next: 0,
+            hits: Vec::new(),
+        }
+    }
+
+    /// Hook spanning the whole timeline (single-segment execution).
+    pub fn spanning(events: &[FaultEvent]) -> SegmentHook {
+        Self::new(events, 0, u64::MAX)
+    }
+
+    /// Ops observed by this segment so far.
+    pub fn ops_seen(&self) -> u64 {
+        self.counter - self.start
+    }
+
+    /// True when every point fault of this segment fired.
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.points.len()
+    }
+
+    #[inline(always)]
+    fn observe(&mut self, site: FaultSite, v: f64) -> f64 {
+        let idx = self.counter;
+        self.counter += 1;
+        let mut out = v;
+
+        // Persistent stuck-at conditions: pure function of the op index.
+        for i in 0..self.stuck.len() {
+            let ev = self.stuck[i];
+            if let FaultKind::StuckAt {
+                bit32,
+                bit64,
+                stuck_one,
+                duration,
+            } = ev.kind
+            {
+                let active = idx >= ev.op_index && idx - ev.op_index < duration;
+                if active {
+                    let forced = force_bit(out, site, bit32, bit64, stuck_one);
+                    if forced.to_bits() != out.to_bits() {
+                        if !self.stuck_fired[i] {
+                            self.stuck_fired[i] = true;
+                            // Keyed by the defect's scheduled index (not
+                            // the firing op) so a window spanning several
+                            // segments dedupes to one logical hit.
+                            self.hits.push(FaultHit {
+                                op_index: ev.op_index,
+                                site,
+                                persistent: true,
+                            });
+                        }
+                        out = forced;
+                    }
+                }
+            }
+        }
+
+        // Point faults: fire at the scheduled op, deferring past
+        // exact-zero values (within this segment only).
+        if self.next < self.points.len() && self.points[self.next].op_index <= idx {
+            let zero = match site {
+                FaultSite::ChecksumAcc => out == 0.0,
+                _ => out as f32 == 0.0,
+            };
+            if !zero {
+                let kind = self.points[self.next].kind;
+                self.next += 1;
+                self.hits.push(FaultHit {
+                    op_index: idx,
+                    site,
+                    persistent: false,
+                });
+                out = apply_point(out, site, kind);
+            }
+        }
+        out
+    }
+}
+
+/// Apply a point fault to a stored result at the given site.
+fn apply_point(v: f64, site: FaultSite, kind: FaultKind) -> f64 {
+    match (kind, site) {
+        (FaultKind::BitFlip { bit64, .. }, FaultSite::ChecksumAcc) => flip_f64(v, bit64),
+        (FaultKind::BitFlip { bit32, .. }, _) => flip_f32_image(v, bit32),
+        (FaultKind::MultiBit { mask64, .. }, FaultSite::ChecksumAcc) => {
+            f64::from_bits(v.to_bits() ^ mask64)
+        }
+        (FaultKind::MultiBit { mask32, .. }, _) => {
+            let v32 = v as f32;
+            let flipped = f32::from_bits(v32.to_bits() ^ mask32);
+            v + (flipped as f64 - v32 as f64)
+        }
+        // Stuck-at is handled as a persistent condition, never a point.
+        (FaultKind::StuckAt { .. }, _) => v,
+    }
+}
+
+/// Force one bit of the stored result to `stuck_one` (f32 image on the
+/// data path with delta-carry, f64 bits on the checker path).
+fn force_bit(v: f64, site: FaultSite, bit32: u32, bit64: u32, stuck_one: bool) -> f64 {
+    match site {
+        FaultSite::ChecksumAcc => {
+            let mask = 1u64 << bit64;
+            let bits = if stuck_one {
+                v.to_bits() | mask
+            } else {
+                v.to_bits() & !mask
+            };
+            f64::from_bits(bits)
+        }
+        _ => {
+            let v32 = v as f32;
+            let mask = 1u32 << bit32;
+            let bits = if stuck_one {
+                v32.to_bits() | mask
+            } else {
+                v32.to_bits() & !mask
+            };
+            let forced = f32::from_bits(bits);
+            v + (forced as f64 - v32 as f64)
+        }
+    }
+}
+
+impl ExecHook for SegmentHook {
+    #[inline(always)]
+    fn mul(&mut self, v: f64) -> f64 {
+        self.observe(FaultSite::DataMul, v)
+    }
+
+    #[inline(always)]
+    fn add(&mut self, v: f64) -> f64 {
+        self.observe(FaultSite::DataAdd, v)
+    }
+
+    #[inline(always)]
+    fn csum(&mut self, v: f64) -> f64 {
+        self.observe(FaultSite::ChecksumAcc, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::instrumented::{matmul_hooked, CountingHook, NopHook};
+    use crate::tensor::{Dense, Dense64};
+
+    fn d64(rows: usize, cols: usize, f: impl FnMut(usize, usize) -> f32) -> Dense64 {
+        Dense64::from_dense(&Dense::from_fn(rows, cols, f))
+    }
+
+    #[test]
+    fn spanning_hook_counts_like_counting_hook() {
+        let a = d64(5, 4, |r, c| (r + c) as f32);
+        let b = d64(4, 3, |r, c| (r * c) as f32 + 1.0);
+        let mut cnt = CountingHook::default();
+        matmul_hooked(&a, &b, &mut cnt);
+        let mut hook = SegmentHook::spanning(&[]);
+        matmul_hooked(&a, &b, &mut hook);
+        assert_eq!(hook.ops_seen(), cnt.total());
+        assert!(hook.exhausted());
+        assert!(hook.hits.is_empty());
+    }
+
+    #[test]
+    fn bitflip_fires_once_at_scheduled_op() {
+        let a = d64(6, 6, |_, _| 1.0);
+        let b = a.clone();
+        let mut nop = NopHook;
+        let golden = matmul_hooked(&a, &b, &mut nop);
+        let events = [FaultEvent {
+            op_index: 37,
+            kind: FaultKind::BitFlip { bit32: 31, bit64: 0 },
+        }];
+        let mut hook = SegmentHook::spanning(&events);
+        let faulty = matmul_hooked(&a, &b, &mut hook);
+        assert!(hook.exhausted());
+        assert_eq!(hook.hits.len(), 1);
+        assert_eq!(hook.hits[0].op_index, 37);
+        assert!(!faulty.identical(&golden));
+    }
+
+    #[test]
+    fn segment_split_is_equivalent_to_spanning() {
+        // Two events, one per half; running the two halves with separate
+        // hooks must reproduce the single spanning hook bit-for-bit.
+        let events = [
+            FaultEvent {
+                op_index: 3,
+                kind: FaultKind::BitFlip { bit32: 30, bit64: 62 },
+            },
+            FaultEvent {
+                op_index: 11,
+                kind: FaultKind::MultiBit {
+                    mask32: 0b110,
+                    mask64: 0b1100,
+                },
+            },
+        ];
+        let values: Vec<f64> = (0..16).map(|i| 1.0 + i as f64 * 0.25).collect();
+        let mut span = SegmentHook::spanning(&events);
+        let full: Vec<f64> = values.iter().map(|&v| span.mul(v)).collect();
+
+        let mut lo = SegmentHook::new(&events, 0, 8);
+        let mut hi = SegmentHook::new(&events, 8, 16);
+        let mut split: Vec<f64> = values[..8].iter().map(|&v| lo.mul(v)).collect();
+        split.extend(values[8..].iter().map(|&v| hi.mul(v)));
+        assert_eq!(full.len(), split.len());
+        for (a, b) in full.iter().zip(&split) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(span.hits.len(), lo.hits.len() + hi.hits.len());
+    }
+
+    #[test]
+    fn deferral_does_not_cross_segment_boundary() {
+        // A fault scheduled at op 6 sees zeros through the end of its
+        // segment [0, 8) and is dropped, not carried into [8, 16).
+        let events = [FaultEvent {
+            op_index: 6,
+            kind: FaultKind::BitFlip { bit32: 31, bit64: 63 },
+        }];
+        let mut lo = SegmentHook::new(&events, 0, 8);
+        for _ in 0..8 {
+            assert_eq!(lo.mul(0.0), 0.0);
+        }
+        assert!(!lo.exhausted(), "zero values must defer the fault");
+        assert!(lo.hits.is_empty());
+        let mut hi = SegmentHook::new(&events, 8, 16);
+        for _ in 8..16 {
+            assert_eq!(hi.mul(2.0), 2.0, "dropped fault must not fire later");
+        }
+        assert!(hi.hits.is_empty());
+    }
+
+    #[test]
+    fn stuck_at_forces_bit_over_window() {
+        let events = [FaultEvent {
+            op_index: 2,
+            kind: FaultKind::StuckAt {
+                bit32: 31,
+                bit64: 63,
+                stuck_one: true,
+                duration: 3,
+            },
+        }];
+        let mut hook = SegmentHook::spanning(&events);
+        // Ops 0,1 untouched; ops 2..5 have the f32 sign bit forced to 1;
+        // op 5 onward untouched again.
+        assert_eq!(hook.mul(1.0), 1.0);
+        assert_eq!(hook.mul(1.0), 1.0);
+        assert_eq!(hook.mul(1.0), -1.0);
+        assert_eq!(hook.mul(-1.0), -1.0); // already negative: unchanged
+        assert_eq!(hook.mul(2.5), -2.5);
+        assert_eq!(hook.mul(1.0), 1.0);
+        // One logical defect = one hit, however many ops it corrupted.
+        assert_eq!(hook.hits.len(), 1);
+        assert_eq!(hook.hits[0].op_index, 2);
+    }
+
+    #[test]
+    fn stuck_at_zero_clears_bit_on_checksum_path() {
+        let events = [FaultEvent {
+            op_index: 0,
+            kind: FaultKind::StuckAt {
+                bit32: 0,
+                bit64: 62,
+                stuck_one: false,
+                duration: u64::MAX,
+            },
+        }];
+        let mut hook = SegmentHook::spanning(&events);
+        let v = 3.5f64; // exponent uses bit 62
+        let forced = hook.csum(v);
+        assert_ne!(forced.to_bits(), v.to_bits());
+        assert_eq!(
+            forced.to_bits(),
+            v.to_bits() & !(1u64 << 62),
+            "bit 62 must be cleared"
+        );
+    }
+
+    #[test]
+    fn multibit_flips_mask_on_both_paths() {
+        let events = [
+            FaultEvent {
+                op_index: 0,
+                kind: FaultKind::MultiBit {
+                    mask32: (1 << 31) | 1,
+                    mask64: 0,
+                },
+            },
+            FaultEvent {
+                op_index: 1,
+                kind: FaultKind::MultiBit {
+                    mask32: 0,
+                    mask64: (1 << 63) | 1,
+                },
+            },
+        ];
+        let mut hook = SegmentHook::spanning(&events);
+        let a = hook.mul(1.0);
+        assert!(a < 0.0, "sign bit must flip: {a}");
+        let v = 2.0f64;
+        let b = hook.csum(v);
+        assert_eq!(b.to_bits(), v.to_bits() ^ ((1u64 << 63) | 1));
+    }
+
+    #[test]
+    fn models_sample_deterministically_and_in_range() {
+        for kind in [
+            FaultModelKind::BitFlip,
+            FaultModelKind::MultiBit { bits: 3 },
+            FaultModelKind::StuckAt { duration: 100 },
+        ] {
+            let mut r1 = Pcg64::from_seed(5);
+            let mut r2 = Pcg64::from_seed(5);
+            let e1 = kind.sample(&mut r1, 1000, 4);
+            let e2 = kind.sample(&mut r2, 1000, 4);
+            assert_eq!(e1, e2, "{kind:?} not deterministic");
+            assert_eq!(e1.len(), 4);
+            for ev in &e1 {
+                assert!(ev.op_index < 1000);
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(FaultModelKind::parse("bitflip"), Some(FaultModelKind::BitFlip));
+        assert_eq!(
+            FaultModelKind::parse("multibit:4"),
+            Some(FaultModelKind::MultiBit { bits: 4 })
+        );
+        assert_eq!(
+            FaultModelKind::parse("stuckat:512"),
+            Some(FaultModelKind::StuckAt { duration: 512 })
+        );
+        assert_eq!(
+            FaultModelKind::parse("stuck-at"),
+            Some(FaultModelKind::StuckAt {
+                duration: StuckAt::default().duration
+            })
+        );
+        assert_eq!(FaultModelKind::parse("bogus"), None);
+        assert_eq!(FaultModelKind::parse("multibit:x"), None);
+    }
+}

@@ -1,13 +1,19 @@
-//! Fault plans and the injecting execution hook.
+//! Fault plans: uniformly sampled bit-flip schedules over the op
+//! timeline.
 //!
 //! A plan schedules one or more bit flips at absolute positions on the
 //! layer-execution op timeline (every data-path and checker-path result,
 //! in program order). Uniform sampling over the timeline reproduces the
 //! paper's premise that "faults are more likely to occur during the matrix
 //! multiplication step that lasts longer" (§IV-A).
+//!
+//! Execution of a plan lives in [`super::model`]: `FaultPlan::events()`
+//! lowers the plan to [`FaultEvent`]s and [`FaultPlan::hook`] builds a
+//! whole-timeline [`SegmentHook`] (what the old `InjectHook` was — the
+//! hook machinery is now shared with the richer fault models and with
+//! the band-parallel instrumented backend).
 
-use super::bitflip::{flip_f32_image, flip_f64, FaultSite};
-use crate::tensor::instrumented::ExecHook;
+use super::model::{FaultEvent, FaultKind, SegmentHook};
 use crate::util::rng::Pcg64;
 
 /// One scheduled bit flip.
@@ -46,109 +52,32 @@ impl FaultPlan {
             .collect();
         Self { faults }
     }
-}
 
-/// Execution hook that injects the planned flips. After the run,
-/// [`InjectHook::hits`] reports which site each fault actually landed on
-/// (used for the paper's data-vs-checksum fault-share statistics).
-#[derive(Debug, Clone)]
-pub struct InjectHook {
-    plan: Vec<PlannedFault>,
-    /// Next fault to fire (plan is sorted by op_index).
-    next: usize,
-    /// Global op counter.
-    counter: u64,
-    /// Site actually hit per fired fault.
-    pub hits: Vec<FaultSite>,
-}
-
-impl InjectHook {
-    pub fn new(plan: &FaultPlan) -> Self {
-        Self {
-            plan: plan.faults.clone(),
-            next: 0,
-            counter: 0,
-            hits: Vec::with_capacity(plan.faults.len()),
-        }
+    /// Lower the plan to single-bit-flip fault events.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.faults
+            .iter()
+            .map(|f| FaultEvent {
+                op_index: f.op_index,
+                kind: FaultKind::BitFlip {
+                    bit32: f.bit32,
+                    bit64: f.bit64,
+                },
+            })
+            .collect()
     }
 
-    /// Number of ops seen so far.
-    pub fn ops_seen(&self) -> u64 {
-        self.counter
-    }
-
-    /// True if every planned fault fired.
-    pub fn exhausted(&self) -> bool {
-        self.next >= self.plan.len()
-    }
-
-    /// A fault is due when its scheduled index has been reached
-    /// (`<=` rather than `==` so a deferred fault stays armed).
-    #[inline(always)]
-    fn due(&mut self, value_is_zero: bool) -> Option<PlannedFault> {
-        if self.next < self.plan.len() && self.plan[self.next].op_index <= self.counter {
-            // Defer past exact-zero data values: the paper flips bits of
-            // *stored results*, which are (near-)always nonzero — a flip
-            // on a 0.0 product yields a denormal delta that rounds away
-            // in the accumulator and models nothing physical. The fault
-            // slides to the next op instead.
-            if value_is_zero {
-                return None;
-            }
-            let f = self.plan[self.next];
-            self.next += 1;
-            Some(f)
-        } else {
-            None
-        }
-    }
-}
-
-impl ExecHook for InjectHook {
-    #[inline(always)]
-    fn mul(&mut self, v: f64) -> f64 {
-        let out = match self.due(v as f32 == 0.0) {
-            Some(f) => {
-                self.hits.push(FaultSite::DataMul);
-                flip_f32_image(v, f.bit32)
-            }
-            None => v,
-        };
-        self.counter += 1;
-        out
-    }
-
-    #[inline(always)]
-    fn add(&mut self, v: f64) -> f64 {
-        let out = match self.due(v as f32 == 0.0) {
-            Some(f) => {
-                self.hits.push(FaultSite::DataAdd);
-                flip_f32_image(v, f.bit32)
-            }
-            None => v,
-        };
-        self.counter += 1;
-        out
-    }
-
-    #[inline(always)]
-    fn csum(&mut self, v: f64) -> f64 {
-        let out = match self.due(v == 0.0) {
-            Some(f) => {
-                self.hits.push(FaultSite::ChecksumAcc);
-                flip_f64(v, f.bit64)
-            }
-            None => v,
-        };
-        self.counter += 1;
-        out
+    /// An execution hook injecting this plan over the whole timeline.
+    pub fn hook(&self) -> SegmentHook {
+        SegmentHook::spanning(&self.events())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::instrumented::{matmul_hooked, CountingHook, NopHook};
+    use crate::fault::FaultSite;
+    use crate::tensor::instrumented::{matmul_hooked, CountingHook, ExecHook, NopHook};
     use crate::tensor::{Dense, Dense64};
 
     #[test]
@@ -172,10 +101,8 @@ mod tests {
         let b = Dense64::from_dense(&Dense::from_fn(4, 3, |r, c| (r * c) as f32 + 1.0));
         let mut cnt = CountingHook::default();
         matmul_hooked(&a, &b, &mut cnt);
-        let plan = FaultPlan {
-            faults: vec![],
-        };
-        let mut inj = InjectHook::new(&plan);
+        let plan = FaultPlan { faults: vec![] };
+        let mut inj = plan.hook();
         matmul_hooked(&a, &b, &mut inj);
         assert_eq!(inj.ops_seen(), cnt.total());
         assert!(inj.exhausted());
@@ -195,7 +122,7 @@ mod tests {
                 bit64: 0,
             }],
         };
-        let mut inj = InjectHook::new(&plan);
+        let mut inj = plan.hook();
         let faulty = matmul_hooked(&a, &b, &mut inj);
         assert!(inj.exhausted());
         assert_eq!(inj.hits.len(), 1);
@@ -223,12 +150,13 @@ mod tests {
                 },
             ],
         };
-        let mut inj = InjectHook::new(&plan);
+        let mut inj = plan.hook();
         inj.mul(1.0);
         inj.add(1.0);
         inj.csum(1.0);
+        let sites: Vec<FaultSite> = inj.hits.iter().map(|h| h.site).collect();
         assert_eq!(
-            inj.hits,
+            sites,
             vec![FaultSite::DataMul, FaultSite::DataAdd, FaultSite::ChecksumAcc]
         );
     }

@@ -20,9 +20,9 @@
 //! | [`graph`] | dataset container, synthesis, the paper's 4 dataset specs |
 //! | [`gcn`] | GCN layers/models, init, tiny trainer |
 //! | [`abft`] | split (baseline) and fused (GCN-ABFT) checkers |
-//! | [`opcount`] | analytic op-count model (Table II) |
-//! | [`fault`] | bit-flip fault injection + campaign runner (Table I) |
-//! | [`runtime`] | serving executables: native backend over dense/CSR operands (row-band sharding) + optional PJRT (`pjrt` feature) |
+//! | [`opcount`] | analytic op-count model (Table II) + per-(backend, scheme) overhead matrix |
+//! | [`fault`] | pluggable fault models (bit-flip/multi-bit/stuck-at) + campaign runner (Table I) |
+//! | [`runtime`] | the `GcnBackend` trait + its implementations: native dense/banded f32, instrumented f64 (band-parallel, deterministic fault timeline), optional PJRT (`pjrt` feature) |
 //! | [`coordinator`] | serving layer: batcher + workers + online verification |
 //! | [`report`] | table/figure rendering (Table I/II, Fig. 3) |
 //!

@@ -1,14 +1,18 @@
 //! `gcn-abft` — CLI for the GCN-ABFT reproduction.
 //!
 //! Subcommands (per-experiment index in DESIGN.md §8):
-//! * `table1`  — fault-injection campaign sweep (paper Table I);
+//! * `table1`  — fault-injection campaign sweep (paper Table I), with
+//!   `--fault-model bitflip|multibit[:B]|stuckat[:D]`;
 //! * `table2`  — operation-count accounting (paper Table II);
+//! * `opcount` — checksum-overhead matrix per (backend, scheme);
 //! * `fig3`    — phase-runtime split (paper Fig. 3);
 //! * `serve`   — end-to-end serving demo: batched inference with online
-//!   GCN-ABFT verification (native runtime backend, no artifacts needed);
+//!   GCN-ABFT verification (`--backend native|instrumented|pjrt`,
+//!   `--scheme fused|split`, no artifacts needed for native);
 //! * `train`   — train the synthetic workloads and print the curves;
 //! * `info`    — dataset statistics.
 
+use gcn_abft::fault::FaultModelKind;
 use gcn_abft::graph::DatasetId;
 use gcn_abft::report::{self, ExperimentOpts};
 use gcn_abft::util::cli::{Args, Spec};
@@ -26,6 +30,7 @@ fn main() {
     let code = match cmd.as_str() {
         "table1" => cmd_table1(rest),
         "table2" => cmd_table2(rest),
+        "opcount" => cmd_opcount(rest),
         "fig3" => cmd_fig3(rest),
         "serve" => cmd_serve(rest),
         "train" => cmd_train(rest),
@@ -54,18 +59,24 @@ SUBCOMMANDS
            --datasets cora,citeseer,pubmed,nell|tiny  --campaigns N (500)
            --faults K (1)  --seed S (7)  --scale F (dataset scale, 1.0)
            --threads T  --train-epochs E (20)  --json
+           --fault-model bitflip|multibit[:BITS]|stuckat[:OPS] (bitflip)
   table2   operation counts for executing + validating (paper Table II)
            --datasets ...  --seed S  --scale F  --json
+  opcount  checksum-overhead ops per (backend, scheme) pair, with the
+           fused-vs-split saving per backend (paper-scale statistics)
+           --datasets ...  --json
   fig3     runtime split across the two matmul phases (paper Fig. 3)
            --datasets ...  --seed S  --scale F  --reps R (5)
-  serve    serve inference with online GCN-ABFT verification (native
-           runtime; shapes validated against artifacts/ when present).
-           Operands are memory-planned: small graphs densify, PubMed/Nell
-           serve on CSR with S row-band-sharded across the workers.
+  serve    serve inference with online GCN-ABFT verification (shapes
+           validated against artifacts/ when present). Operands are
+           memory-planned: small graphs densify, PubMed/Nell serve on
+           CSR with S row-band-sharded across the workers.
            --dataset tiny|cora|citeseer|pubmed|nell  --requests N (64)
            --batch B (8)  --workers W (2)  --artifacts DIR (artifacts)
            --inject-every K  --scale F (1.0)  --mode auto|dense|sparse
            --mem-budget-mb M (512)  --train-epochs E (10)
+           --backend native|instrumented|pjrt (native)
+           --scheme fused|split (fused)
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves
            --datasets ...  --epochs E (30)  --seed S
   info     dataset statistics (nodes/edges/features/classes/nnz)
@@ -112,6 +123,7 @@ fn cmd_table1(rest: Vec<String>) -> i32 {
             "scale",
             "threads",
             "train-epochs",
+            "fault-model",
         ],
         flags: vec!["json"],
     };
@@ -128,12 +140,18 @@ fn cmd_table1(rest: Vec<String>) -> i32 {
     let threads = a
         .get_usize("threads", gcn_abft::fault::campaign::default_threads())
         .unwrap_or(8);
+    let Some(fault_model) = FaultModelKind::parse(&a.get_str("fault-model", "bitflip")) else {
+        eprintln!("unknown --fault-model (bitflip, multibit[:BITS], stuckat[:OPS])");
+        return 2;
+    };
     eprintln!(
-        "table1: datasets={:?} campaigns={campaigns} faults={faults} scale={} threads={threads}",
+        "table1: datasets={:?} campaigns={campaigns} faults={faults} scale={} threads={threads} \
+         fault-model={}",
         opts.datasets.iter().map(|d| d.name()).collect::<Vec<_>>(),
-        opts.scale
+        opts.scale,
+        fault_model.name()
     );
-    let entries = report::run_table1(&opts, campaigns, faults, threads);
+    let entries = report::run_table1_with_model(&opts, campaigns, faults, threads, fault_model);
     if a.has_flag("json") {
         println!("{}", report::experiments::table1_json(&entries).to_pretty());
     } else {
@@ -160,6 +178,35 @@ fn cmd_table2(rest: Vec<String>) -> i32 {
         println!("{}", report::experiments::table2_json(&entries).to_pretty());
     } else {
         println!("{}", report::render_table2(&entries));
+    }
+    0
+}
+
+fn cmd_opcount(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec!["datasets"],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    let names = a.get_list("datasets", &["cora", "citeseer", "pubmed", "nell"]);
+    let mut datasets = Vec::new();
+    for n in &names {
+        match DatasetId::parse(n) {
+            Some(d) => datasets.push(d),
+            None => {
+                eprintln!("unknown dataset: {n}");
+                return 2;
+            }
+        }
+    }
+    let rows = report::run_opcount_matrix(&datasets);
+    if a.has_flag("json") {
+        println!(
+            "{}",
+            report::experiments::opcount_matrix_json(&rows).to_pretty()
+        );
+    } else {
+        println!("{}", report::render_opcount_matrix(&rows));
     }
     0
 }
@@ -297,6 +344,8 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "mode",
             "mem-budget-mb",
             "train-epochs",
+            "backend",
+            "scheme",
         ],
         flags: vec!["json"],
     };

@@ -1,6 +1,9 @@
 //! Analytic operation-count accounting for execution + checking
-//! (regenerates the paper's Table II).
+//! (regenerates the paper's Table II), including the per-(backend,
+//! scheme) checksum-overhead matrix behind `gcn-abft opcount`.
 
+pub mod backend;
 pub mod model;
 
+pub use backend::{backend_matrix, check_ops_for, BackendOpsRow, BackendProfile};
 pub use model::{LayerShape, ModelOps, TableRow};

@@ -4,11 +4,13 @@
 
 use super::fig3;
 use super::table::{bar, Table};
-use crate::abft::{EngineModel, Scheme};
-use crate::fault::{run_campaigns, CampaignConfig, CampaignReport};
+use crate::abft::Scheme;
+use crate::fault::{run_campaigns, CampaignConfig, CampaignReport, FaultModelKind};
 use crate::gcn::{train_two_layer, GcnModel, TrainConfig};
 use crate::graph::{DatasetId, Graph};
+use crate::opcount::backend::{backend_matrix, check_saving, BackendOpsRow};
 use crate::opcount::ModelOps;
+use crate::runtime::InstrumentedEngine;
 use crate::util::json::Json;
 use crate::util::{fmt_millions, fmt_pct};
 
@@ -66,28 +68,42 @@ pub struct Table1Entry {
     pub fused: CampaignReport,
 }
 
-/// Run the Table-I experiment.
+/// Run the Table-I experiment with the paper's single-bit-flip model.
 pub fn run_table1(
     opts: &ExperimentOpts,
     campaigns: usize,
     faults: usize,
     threads: usize,
 ) -> Vec<Table1Entry> {
+    run_table1_with_model(opts, campaigns, faults, threads, FaultModelKind::BitFlip)
+}
+
+/// Run the Table-I experiment under any fault model (`--fault-model`).
+/// Campaigns run on the instrumented backend's engine — the same banded
+/// f64 execution the `--backend instrumented` serving mode uses.
+pub fn run_table1_with_model(
+    opts: &ExperimentOpts,
+    campaigns: usize,
+    faults: usize,
+    threads: usize,
+    fault_model: FaultModelKind,
+) -> Vec<Table1Entry> {
     let mut out = Vec::new();
     for &id in &opts.datasets {
         let (graph, model) = build_workload(id, opts);
-        let em = EngineModel::from_model(&model);
+        let engine = InstrumentedEngine::from_model(&model, &graph.features);
         let mut cfg = CampaignConfig {
             campaigns,
             faults_per_campaign: faults,
             seed: opts.seed,
             threads,
+            fault_model,
             ..Default::default()
         };
         cfg.scheme = Scheme::Split;
-        let split = run_campaigns(&em, &graph.features, &cfg);
+        let split = run_campaigns(&engine, &cfg);
         cfg.scheme = Scheme::Fused;
-        let fused = run_campaigns(&em, &graph.features, &cfg);
+        let fused = run_campaigns(&engine, &cfg);
         out.push(Table1Entry {
             dataset: graph.name.clone(),
             split,
@@ -256,6 +272,68 @@ pub fn table2_json(entries: &[Table2Entry]) -> Json {
     }))
 }
 
+// --------------------------------------------- opcount backend matrix
+
+/// The per-(backend, scheme) checksum-overhead matrix for a dataset set
+/// (analytic, paper-scale statistics — no graph build).
+pub fn run_opcount_matrix(datasets: &[DatasetId]) -> Vec<BackendOpsRow> {
+    backend_matrix(datasets)
+}
+
+/// Render the matrix: one block per dataset, split vs fused per backend
+/// profile, with the fused-vs-split checking saving the paper claims
+/// (>21% on the accelerator accounting for the feature-heavy graphs).
+pub fn render_opcount_matrix(rows: &[BackendOpsRow]) -> String {
+    let mut t = Table::new(vec![
+        "GCN",
+        "backend",
+        "scheme",
+        "true ops",
+        "check ops",
+        "overhead",
+        "fused saves",
+    ]);
+    for r in rows {
+        let saving = if r.scheme == Scheme::Fused {
+            fmt_pct(check_saving(rows, &r.dataset, r.profile))
+        } else {
+            String::from("-")
+        };
+        t.row(vec![
+            r.dataset.clone(),
+            r.profile.name().to_string(),
+            r.scheme.name().to_string(),
+            fmt_millions(r.true_ops),
+            fmt_millions(r.check_ops),
+            fmt_pct(r.overhead()),
+            saving,
+        ]);
+    }
+    format!(
+        "OPCOUNT — checksum overhead per (backend, scheme), millions of ops \
+         at paper scale\n\n{}",
+        t.render()
+    )
+}
+
+/// Machine-readable matrix.
+pub fn opcount_matrix_json(rows: &[BackendOpsRow]) -> Json {
+    Json::arr(rows.iter().map(|r| {
+        Json::obj(vec![
+            ("dataset", Json::from(r.dataset.clone())),
+            ("backend", Json::from(r.profile.name().to_string())),
+            ("scheme", Json::from(r.scheme.name().to_string())),
+            ("true_ops", Json::from(r.true_ops)),
+            ("check_ops", Json::from(r.check_ops)),
+            ("overhead", Json::Num(r.overhead())),
+            (
+                "fused_check_saving",
+                Json::Num(check_saving(rows, &r.dataset, r.profile)),
+            ),
+        ])
+    }))
+}
+
 // ----------------------------------------------------------------- Fig. 3
 
 /// Run the Fig. 3 experiment (phase-time split).
@@ -329,6 +407,34 @@ mod tests {
         assert!(text.contains("tiny"));
         let j = table2_json(&entries).to_string();
         assert!(j.contains("check_saving"));
+    }
+
+    #[test]
+    fn opcount_matrix_runs_and_renders() {
+        let rows = run_opcount_matrix(&[DatasetId::Cora, DatasetId::Pubmed]);
+        assert_eq!(rows.len(), 8, "2 datasets × 2 backends × 2 schemes");
+        let text = render_opcount_matrix(&rows);
+        assert!(text.contains("OPCOUNT"));
+        assert!(text.contains("instrumented"));
+        assert!(text.contains("native"));
+        let j = opcount_matrix_json(&rows).to_string();
+        assert!(j.contains("fused_check_saving"));
+    }
+
+    #[test]
+    fn table1_supports_alternate_fault_models() {
+        let entries = run_table1_with_model(
+            &tiny_opts(),
+            30,
+            1,
+            2,
+            FaultModelKind::MultiBit { bits: 2 },
+        );
+        assert_eq!(entries.len(), 1);
+        for (_, t) in &entries[0].fused.per_threshold {
+            assert_eq!(t.total(), 30);
+        }
+        assert_eq!(entries[0].fused.fault_model, FaultModelKind::MultiBit { bits: 2 });
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod fig3;
 pub mod table;
 
 pub use experiments::{
-    build_workload, render_fig3, render_table1, render_table2, run_fig3, run_table1, run_table2,
-    ExperimentOpts,
+    build_workload, render_fig3, render_opcount_matrix, render_table1, render_table2, run_fig3,
+    run_opcount_matrix, run_table1, run_table1_with_model, run_table2, ExperimentOpts,
 };
 pub use table::Table;

@@ -1,0 +1,750 @@
+//! The MAC-instrumented f64 backend: checked execution with a pluggable
+//! [`FaultModel`], band-parallel with a **deterministic op-index split**.
+//!
+//! This subsumes the old `abft::EngineModel` + single-hook executors for
+//! everything downstream (fault campaigns, backend-parity tests, the
+//! `--backend instrumented` serving mode): one engine, built from either
+//! a [`GcnOperands`] set or a [`GcnModel`], runs the split- or
+//! fused-checked forward with every arithmetic result flowing through a
+//! fault hook.
+//!
+//! ## Parallelism without losing the fault timeline
+//!
+//! The aggregation phase of each layer (the SpMM that dominates runtime)
+//! is partitioned into [`LOGICAL_BANDS`] fixed row bands. Band `k`'s op
+//! count is `2·nnz(S[k])·(cols+1)` — a pure function of the workload —
+//! so every band's **prefix offset** on the global op timeline is known
+//! before execution, and each band runs under its own
+//! [`SegmentHook`] positioned at that offset. Physical workers
+//! (`--workers`) merely pick up logical bands; the op index of every
+//! arithmetic result, and therefore where a [`FaultEvent`] lands, is
+//! identical at any worker count. Detection results are bit-identical
+//! serial or parallel — the property the determinism campaign test and
+//! CI job pin down.
+//!
+//! The op-index layout also matches the legacy single-hook executors
+//! op-for-op (the bands concatenate in row order), so the analytic
+//! `opcount` model keeps cross-checking the engine exactly.
+
+use super::super::operands::{GcnOperands, Operand};
+use super::{validate_overlays, ChecksumScheme, ExecPlan, GcnBackend, Overlay};
+use crate::abft::{CheckPoint, CheckRecord, EngineInput};
+use crate::fault::{FaultEvent, FaultHit, FaultModel, NoFaults, SegmentHook};
+use crate::gcn::{Activation, GcnModel};
+use crate::opcount::backend::BackendProfile;
+use crate::runtime::client::GcnOutputs;
+use crate::sparse::instrumented::spmm_with_check_col_hooked;
+use crate::sparse::Csr;
+use crate::tensor::instrumented::{block_checksum_hooked, dot_hooked, vecmat_hooked};
+use crate::tensor::Dense64;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed number of logical row bands the aggregation phase splits into.
+/// A property of the workload, **not** of the worker count — that is
+/// what makes fault injection bit-reproducible at any parallelism.
+pub const LOGICAL_BANDS: usize = 8;
+
+/// One logical row band of the adjacency.
+#[derive(Debug, Clone)]
+struct EngineBand {
+    row0: usize,
+    s: Csr,
+}
+
+/// The f64 engine view of a checked GCN: widened weights, offline check
+/// vectors, and the adjacency pre-partitioned into logical bands.
+#[derive(Debug, Clone)]
+pub struct InstrumentedEngine {
+    n: usize,
+    bands: Vec<EngineBand>,
+    /// `s_c = eᵀS` (offline).
+    s_c: Vec<f64>,
+    weights: Vec<Dense64>,
+    /// `w_r = W·e` per layer (offline).
+    w_r: Vec<Vec<f64>>,
+    activations: Vec<Activation>,
+    /// Layer-1 input (sparse dataset features or dense activations).
+    features: EngineInput,
+    /// Offline layer-1 input column sums (split scheme's `h_c`).
+    h_c1: Vec<f64>,
+}
+
+/// Everything one checked forward produced.
+#[derive(Debug, Clone)]
+pub struct EngineRun {
+    /// Every layer's pre-activation output (the values ABFT guards).
+    pub preacts: Vec<Dense64>,
+    /// Check records in execution order (fused: one end-of-layer per
+    /// layer; split: after-combination + end-of-layer per layer).
+    pub checks: Vec<CheckRecord>,
+    /// Faults that actually landed, in op order.
+    pub hits: Vec<FaultHit>,
+    /// Total ops on the checked timeline.
+    pub timeline_ops: u64,
+}
+
+/// Ops of the combination segment of one layer (data path + split's
+/// phase-1 checker work).
+fn seg_a_ops(scheme: ChecksumScheme, layer: usize, nnz_in: u64, f: u64, cols: u64, n: u64) -> u64 {
+    let data = 2 * nnz_in * cols + 2 * nnz_in;
+    match scheme {
+        ChecksumScheme::Fused => data,
+        ChecksumScheme::Split => {
+            let h_c = if layer == 0 { 0 } else { nnz_in };
+            data + h_c + 2 * f * (cols + 1) + (n * cols - 1)
+        }
+    }
+}
+
+/// Ops of the end-of-layer checker segment.
+fn seg_c_ops(n: u64, cols: u64) -> u64 {
+    2 * n * (cols + 1) + (n * cols - 1)
+}
+
+impl InstrumentedEngine {
+    fn from_parts(
+        adjacency: &Csr,
+        features: EngineInput,
+        weights: Vec<Dense64>,
+        activations: Vec<Activation>,
+    ) -> InstrumentedEngine {
+        let n = adjacency.rows();
+        assert_eq!(features.rows(), n, "feature rows != adjacency rows");
+        assert_eq!(weights.len(), activations.len());
+        let bands = super::super::operands::row_band_bounds(n, LOGICAL_BANDS)
+            .into_iter()
+            .map(|(row0, hi)| EngineBand {
+                row0,
+                s: adjacency.row_band(row0, hi),
+            })
+            .collect();
+        let w_r = crate::abft::weight_row_sums(&weights);
+        let h_c1 = features.col_sums_offline();
+        InstrumentedEngine {
+            n,
+            bands,
+            s_c: adjacency.col_sums_f64(),
+            weights,
+            w_r,
+            activations,
+            features,
+            h_c1,
+        }
+    }
+
+    /// Engine over a (possibly >2-layer) reference model.
+    pub fn from_model(m: &GcnModel, features: &Csr) -> InstrumentedEngine {
+        let weights = m
+            .layers
+            .iter()
+            .map(|l| Dense64::from_dense(&l.weights))
+            .collect();
+        let activations = m.layers.iter().map(|l| l.activation).collect();
+        Self::from_parts(
+            &m.adjacency,
+            EngineInput::Sparse(features.clone()),
+            weights,
+            activations,
+        )
+    }
+
+    /// Engine over a resident serving operand set, with per-request
+    /// feature overlays applied up front (the hooked timeline must be a
+    /// pure function of the patched workload).
+    pub fn from_operands(
+        ops: &GcnOperands,
+        overlays: &[Overlay<'_>],
+    ) -> Result<InstrumentedEngine> {
+        validate_overlays(ops, overlays)?;
+        let features = patched_features(ops, overlays);
+        let adjacency = ops.s.to_csr();
+        let weights = vec![Dense64::from_dense(&ops.w1), Dense64::from_dense(&ops.w2)];
+        Ok(Self::from_parts(
+            &adjacency,
+            features,
+            weights,
+            vec![Activation::Relu, Activation::None],
+        ))
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn band_count(&self) -> usize {
+        self.bands.len()
+    }
+
+    /// Stored nonzeros of the adjacency the engine actually executes
+    /// (zero-dropped CSR, whatever the resident representation was).
+    pub fn nnz_s(&self) -> usize {
+        self.bands.iter().map(|b| b.s.nnz()).sum()
+    }
+
+    /// Total ops on the checked timeline under `scheme` — the domain the
+    /// fault models sample from. Closed form; the executed forward
+    /// asserts against it segment by segment.
+    pub fn timeline_ops(&self, scheme: ChecksumScheme) -> u64 {
+        self.timeline_ops_for(scheme, self.features.nnz() as u64)
+    }
+
+    /// As [`InstrumentedEngine::timeline_ops`], for a layer-1 input with
+    /// `feat_nnz` stored entries (overlaid runs can change the nnz).
+    pub fn timeline_ops_for(&self, scheme: ChecksumScheme, feat_nnz: u64) -> u64 {
+        let n = self.n as u64;
+        let nnz_s = self.nnz_s() as u64;
+        let mut nnz_in = feat_nnz;
+        let mut total = 0u64;
+        for (li, w) in self.weights.iter().enumerate() {
+            let cols = w.cols() as u64;
+            let f = w.rows() as u64;
+            total += seg_a_ops(scheme, li, nnz_in, f, cols, n);
+            total += 2 * nnz_s * (cols + 1);
+            total += seg_c_ops(n, cols);
+            nnz_in = n * cols;
+        }
+        total
+    }
+
+    /// True when this engine was built from an operand set
+    /// indistinguishable from `ops` — the staleness check
+    /// `Instrumented::run` uses to honor the execute-the-passed-operands
+    /// contract against its cache. Weights are compared bit-for-bit
+    /// (cheap, and `swap_weights` is the one mutation API); the graph is
+    /// compared by dimensions, nnz, and its offline checksum vectors
+    /// (`s_c = eᵀS`, `h_c = eᵀH` — O(N+F), the same fingerprints the
+    /// ABFT scheme itself trusts to characterize the matrices).
+    pub fn matches_operands(&self, ops: &GcnOperands) -> bool {
+        let weights_eq = |w64: &Dense64, w: &crate::tensor::Dense| {
+            w64.shape() == w.shape()
+                && w64.data().iter().zip(w.data()).all(|(a, &b)| *a == b as f64)
+        };
+        self.weights.len() == 2
+            && weights_eq(&self.weights[0], &ops.w1)
+            && weights_eq(&self.weights[1], &ops.w2)
+            && self.n == ops.n_nodes()
+            && self.features.cols() == ops.feat_dim()
+            && self.features.nnz() == ops.features.nnz()
+            && self.nnz_s() <= ops.s.nnz()
+            && self.s_c == ops.check.s_c
+            && self.h_c1 == ops.check.h_c1
+    }
+
+    /// Run the checked forward with `events` injected, fanning each
+    /// layer's aggregation out over at most `workers` threads. Outputs,
+    /// check records and fault hits are bit-identical at any `workers`.
+    pub fn forward(
+        &self,
+        scheme: ChecksumScheme,
+        events: &[FaultEvent],
+        workers: usize,
+    ) -> EngineRun {
+        self.forward_with(scheme, events, workers, &self.features, &self.h_c1)
+    }
+
+    /// As [`InstrumentedEngine::forward`], but over an alternative
+    /// layer-1 input (+ its offline column sums) — how overlaid batches
+    /// run without cloning the overlay-independent engine state (bands,
+    /// `s_c`, widened weights, `w_r`).
+    pub fn forward_with(
+        &self,
+        scheme: ChecksumScheme,
+        events: &[FaultEvent],
+        workers: usize,
+        features: &EngineInput,
+        h_c1: &[f64],
+    ) -> EngineRun {
+        let n64 = self.n as u64;
+        let mut cursor = 0u64;
+        let mut hits: Vec<FaultHit> = Vec::new();
+        let mut preacts = Vec::with_capacity(self.num_layers());
+        let mut checks = Vec::new();
+        let mut input = features.clone();
+
+        for (li, w) in self.weights.iter().enumerate() {
+            let cols = w.cols();
+            let w_r = &self.w_r[li];
+
+            // ---- combination segment (+ split phase-1 check) ----------
+            let a_ops = seg_a_ops(
+                scheme,
+                li,
+                input.nnz() as u64,
+                w.rows() as u64,
+                cols as u64,
+                n64,
+            );
+            let mut hook_a = SegmentHook::new(events, cursor, cursor + a_ops);
+            let (x, x_r) = match scheme {
+                ChecksumScheme::Fused => {
+                    let x = input.matmul_hooked(w, &mut hook_a);
+                    let x_r = input.matvec_hooked(w_r, &mut hook_a);
+                    (x, x_r)
+                }
+                ChecksumScheme::Split => {
+                    // Same op order as the baseline split executor:
+                    // h_c, X, x_r, h_c·[W|w_r], checksum of X.
+                    let h_c: Vec<f64> = if li == 0 {
+                        h_c1.to_vec()
+                    } else {
+                        input.col_sums_hooked(&mut hook_a)
+                    };
+                    let x = input.matmul_hooked(w, &mut hook_a);
+                    let x_r = input.matvec_hooked(w_r, &mut hook_a);
+                    let _hc_w = vecmat_hooked(&h_c, w, &mut hook_a);
+                    let pred_x = dot_hooked(&h_c, w_r, &mut hook_a);
+                    let actual_x = block_checksum_hooked(&x, cols, &mut hook_a);
+                    checks.push(CheckRecord {
+                        layer: li,
+                        point: CheckPoint::AfterCombination,
+                        predicted: pred_x,
+                        actual: actual_x,
+                    });
+                    (x, x_r)
+                }
+            };
+            debug_assert_eq!(hook_a.ops_seen(), a_ops, "combination segment drifted");
+            cursor += a_ops;
+            hits.append(&mut hook_a.hits);
+
+            // ---- aggregation: logical bands at fixed prefix offsets ---
+            let band_ops: Vec<u64> = self
+                .bands
+                .iter()
+                .map(|b| 2 * b.s.nnz() as u64 * (cols as u64 + 1))
+                .collect();
+            let mut starts = Vec::with_capacity(self.bands.len());
+            for ops_k in &band_ops {
+                starts.push(cursor);
+                cursor += ops_k;
+            }
+            let run_band = |k: usize| -> (Dense64, SegmentHook) {
+                let mut hook = SegmentHook::new(events, starts[k], starts[k] + band_ops[k]);
+                let (out, _s_xr) =
+                    spmm_with_check_col_hooked(&self.bands[k].s, &x, &x_r, &mut hook);
+                debug_assert_eq!(hook.ops_seen(), band_ops[k], "band {k} drifted");
+                (out, hook)
+            };
+            let nb = self.bands.len();
+            let mut results: Vec<Option<(Dense64, SegmentHook)>> = Vec::with_capacity(nb);
+            results.resize_with(nb, || None);
+            let phys = workers.clamp(1, nb);
+            if phys <= 1 {
+                for (k, slot) in results.iter_mut().enumerate() {
+                    *slot = Some(run_band(k));
+                }
+            } else {
+                let chunk = nb.div_ceil(phys);
+                std::thread::scope(|scope| {
+                    for (ci, slots) in results.chunks_mut(chunk).enumerate() {
+                        let run_band = &run_band;
+                        scope.spawn(move || {
+                            for (j, slot) in slots.iter_mut().enumerate() {
+                                *slot = Some(run_band(ci * chunk + j));
+                            }
+                        });
+                    }
+                });
+            }
+            let mut out = Dense64::zeros(self.n, cols);
+            for (k, slot) in results.into_iter().enumerate() {
+                let (band_out, mut hook) = slot.expect("band not executed");
+                let row0 = self.bands[k].row0;
+                for r in 0..band_out.rows() {
+                    out.row_mut(row0 + r).copy_from_slice(band_out.row(r));
+                }
+                hits.append(&mut hook.hits);
+            }
+
+            // ---- end-of-layer checker segment -------------------------
+            let c_ops = seg_c_ops(n64, cols as u64);
+            let mut hook_c = SegmentHook::new(events, cursor, cursor + c_ops);
+            let _sc_x = vecmat_hooked(&self.s_c, &x, &mut hook_c);
+            let predicted = dot_hooked(&self.s_c, &x_r, &mut hook_c);
+            let actual = block_checksum_hooked(&out, cols, &mut hook_c);
+            debug_assert_eq!(hook_c.ops_seen(), c_ops, "checker segment drifted");
+            cursor += c_ops;
+            hits.append(&mut hook_c.hits);
+            checks.push(CheckRecord {
+                layer: li,
+                point: CheckPoint::EndOfLayer,
+                predicted,
+                actual,
+            });
+
+            let mut act = out.clone();
+            if self.activations[li] == Activation::Relu {
+                act.relu_inplace();
+            }
+            preacts.push(out);
+            input = EngineInput::Dense(act);
+        }
+
+        // One logical defect = one hit: a stuck-at window spanning
+        // several timeline segments records a hit per segment (keyed by
+        // its scheduled index), which collapses here to the earliest.
+        // Point hits always stay — each op fires at most one, so their
+        // firing indices are unique — and are never merged with a
+        // persistent defect that happens to share the index.
+        let mut seen = std::collections::BTreeSet::new();
+        hits.retain(|h| !h.persistent || seen.insert(h.op_index));
+
+        EngineRun {
+            preacts,
+            checks,
+            hits,
+            timeline_ops: cursor,
+        }
+    }
+
+}
+
+/// The layer-1 input of an operand set with overlays applied (sparse
+/// rows replaced, or dense rows patched, then widened).
+fn patched_features(ops: &GcnOperands, overlays: &[Overlay<'_>]) -> EngineInput {
+    match &ops.features {
+        Operand::Sparse(m) => {
+            if overlays.is_empty() {
+                EngineInput::Sparse(m.clone())
+            } else {
+                let repl: Vec<(usize, &[f32])> =
+                    overlays.iter().map(|o| (o.node, o.row)).collect();
+                EngineInput::Sparse(m.with_rows_replaced(&repl))
+            }
+        }
+        Operand::Dense(d) => {
+            if overlays.is_empty() {
+                EngineInput::Dense(Dense64::from_dense(d))
+            } else {
+                let mut patched = d.clone();
+                for o in overlays {
+                    patched.row_mut(o.node).copy_from_slice(o.row);
+                }
+                EngineInput::Dense(Dense64::from_dense(&patched))
+            }
+        }
+    }
+}
+
+/// The instrumented backend: the engine above behind [`GcnBackend`],
+/// generic over the [`FaultModel`] driving injection. The serving
+/// default is [`NoFaults`] (checked f64 execution, nothing injected);
+/// campaign studies plug in bit-flip/multi-bit/stuck-at models.
+pub struct Instrumented<F: FaultModel = NoFaults> {
+    /// Engine cache, refreshed in place when a weight swap on the
+    /// operand set makes it stale (a per-worker backend, so the lock is
+    /// uncontended).
+    engine: std::sync::Mutex<InstrumentedEngine>,
+    scheme: ChecksumScheme,
+    workers: usize,
+    fault: F,
+    faults_per_run: usize,
+    seed: u64,
+    runs: AtomicU64,
+}
+
+impl Instrumented<NoFaults> {
+    /// Fault-free instrumented backend over a resident operand set.
+    pub fn for_operands(
+        ops: &GcnOperands,
+        scheme: ChecksumScheme,
+        workers: usize,
+    ) -> Result<Instrumented<NoFaults>> {
+        Self::with_fault_model(ops, scheme, workers, NoFaults, 0, 0)
+    }
+}
+
+impl<F: FaultModel> Instrumented<F> {
+    /// Instrumented backend injecting `faults_per_run` faults sampled
+    /// from `fault` on every pass (run index advances the RNG stream).
+    pub fn with_fault_model(
+        ops: &GcnOperands,
+        scheme: ChecksumScheme,
+        workers: usize,
+        fault: F,
+        faults_per_run: usize,
+        seed: u64,
+    ) -> Result<Instrumented<F>> {
+        Ok(Instrumented {
+            engine: std::sync::Mutex::new(InstrumentedEngine::from_operands(ops, &[])?),
+            scheme,
+            workers: workers.max(1),
+            fault,
+            faults_per_run,
+            seed,
+            runs: AtomicU64::new(0),
+        })
+    }
+}
+
+impl<F: FaultModel> GcnBackend for Instrumented<F> {
+    fn name(&self) -> &'static str {
+        "instrumented"
+    }
+
+    fn plan(&self, ops: &GcnOperands) -> Result<ExecPlan> {
+        // Same passed-operands contract as run(): refresh the cache if
+        // these are not the operands the engine was built from.
+        let mut cached = self.engine.lock().unwrap();
+        if !cached.matches_operands(ops) {
+            *cached = InstrumentedEngine::from_operands(ops, &[])?;
+        }
+        let engine: &InstrumentedEngine = &cached;
+        // The engine executes `S` as a zero-dropped CSR regardless of
+        // the operand representation, so the plan reports the ops it
+        // will actually run (dense-operand `N²` would overstate them).
+        let mut shapes = super::layer_shapes(ops);
+        for l in &mut shapes {
+            l.nnz_s = engine.nnz_s();
+        }
+        Ok(super::plan_from_shapes(
+            self.name(),
+            BackendProfile::Instrumented,
+            self.scheme,
+            &shapes,
+            "csr-banded",
+            engine.band_count(),
+            self.workers,
+        ))
+    }
+
+    fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs> {
+        validate_overlays(ops, overlays)?;
+        // Honor the trait contract of executing the *passed* operands:
+        // the cached engine is refreshed in place when the operand set
+        // it was built from no longer matches (weight swap, or a
+        // different model's operands altogether).
+        let mut cached = self.engine.lock().unwrap();
+        if !cached.matches_operands(ops) {
+            *cached = InstrumentedEngine::from_operands(ops, &[])?;
+        }
+        let engine: &InstrumentedEngine = &cached;
+        // Overlaid batches rebuild only the layer-1 input (+ its offline
+        // column sums); bands, `s_c`, weights and `w_r` are shared.
+        let (features, h_c1) = if overlays.is_empty() {
+            (None, None)
+        } else {
+            let f = patched_features(ops, overlays);
+            let h = f.col_sums_offline();
+            (Some(f), Some(h))
+        };
+        let feat_nnz = features
+            .as_ref()
+            .map(|f| f.nnz() as u64)
+            .unwrap_or_else(|| engine.features.nnz() as u64);
+        let events = if self.faults_per_run > 0 {
+            let idx = self.runs.fetch_add(1, Ordering::Relaxed);
+            let mut rng = Pcg64::new(self.seed, idx);
+            let total = engine.timeline_ops_for(self.scheme, feat_nnz);
+            self.fault.sample(&mut rng, total, self.faults_per_run)
+        } else {
+            Vec::new()
+        };
+        let run = match (&features, &h_c1) {
+            (Some(f), Some(h)) => engine.forward_with(self.scheme, &events, self.workers, f, h),
+            _ => engine.forward(self.scheme, &events, self.workers),
+        };
+        let logits = run.preacts.last().expect("at least one layer").to_dense();
+        Ok(GcnOutputs {
+            logits,
+            predicted: run.checks.iter().map(|c| c.predicted as f32).collect(),
+            actual: run.checks.iter().map(|c| c.actual as f32).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::abft::{fused_forward_checked, split_forward_checked, EngineModel};
+    use crate::fault::FaultKind;
+    use crate::graph::DatasetId;
+    use crate::opcount::ModelOps;
+    use crate::tensor::NopHook;
+
+    fn setup() -> (GcnModel, crate::graph::Graph) {
+        let g = DatasetId::Tiny.build(0);
+        let m = GcnModel::two_layer(&g, 8, 1);
+        (m, g)
+    }
+
+    #[test]
+    fn forward_matches_legacy_single_hook_executors() {
+        let (m, g) = setup();
+        let engine = InstrumentedEngine::from_model(&m, &g.features);
+        let em = EngineModel::from_model(&m);
+        let mut nop = NopHook;
+
+        let run = engine.forward(ChecksumScheme::Fused, &[], 1);
+        let (legacy_pre, legacy_checks) = fused_forward_checked(&em, &g.features, &mut nop);
+        assert_eq!(run.preacts.len(), legacy_pre.len());
+        for (a, b) in run.preacts.iter().zip(&legacy_pre) {
+            assert!(a.identical(b), "banded forward diverged from legacy");
+        }
+        for (a, b) in run.checks.iter().zip(&legacy_checks) {
+            assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+            assert_eq!(a.actual.to_bits(), b.actual.to_bits());
+        }
+
+        let h_c = g.features.col_sums_f64();
+        let run = engine.forward(ChecksumScheme::Split, &[], 1);
+        let (legacy_pre, legacy_checks) = split_forward_checked(&em, &g.features, &h_c, &mut nop);
+        for (a, b) in run.preacts.iter().zip(&legacy_pre) {
+            assert!(a.identical(b));
+        }
+        assert_eq!(run.checks.len(), legacy_checks.len());
+        for (a, b) in run.checks.iter().zip(&legacy_checks) {
+            assert_eq!(a.point, b.point);
+            assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+            assert_eq!(a.actual.to_bits(), b.actual.to_bits());
+        }
+    }
+
+    #[test]
+    fn timeline_matches_analytic_opcount_model() {
+        let (m, g) = setup();
+        let engine = InstrumentedEngine::from_model(&m, &g.features);
+        let row = ModelOps::two_layer(&g, 8).table_row();
+        let fused = engine.forward(ChecksumScheme::Fused, &[], 1);
+        assert_eq!(fused.timeline_ops, row.fused_total());
+        assert_eq!(fused.timeline_ops, engine.timeline_ops(ChecksumScheme::Fused));
+        let split = engine.forward(ChecksumScheme::Split, &[], 1);
+        assert_eq!(split.timeline_ops, row.split_total());
+        assert_eq!(split.timeline_ops, engine.timeline_ops(ChecksumScheme::Split));
+    }
+
+    #[test]
+    fn workers_do_not_change_anything() {
+        let (m, g) = setup();
+        let engine = InstrumentedEngine::from_model(&m, &g.features);
+        let events = [
+            FaultEvent {
+                op_index: engine.timeline_ops(ChecksumScheme::Fused) / 3,
+                kind: FaultKind::BitFlip { bit32: 30, bit64: 62 },
+            },
+            FaultEvent {
+                op_index: engine.timeline_ops(ChecksumScheme::Fused) / 2,
+                kind: FaultKind::StuckAt {
+                    bit32: 29,
+                    bit64: 61,
+                    stuck_one: true,
+                    duration: 500,
+                },
+            },
+        ];
+        let base = engine.forward(ChecksumScheme::Fused, &events, 1);
+        for workers in [2, 4, 16] {
+            let par = engine.forward(ChecksumScheme::Fused, &events, workers);
+            for (a, b) in base.preacts.iter().zip(&par.preacts) {
+                assert!(a.identical(b), "workers={workers} changed the outputs");
+            }
+            assert_eq!(base.hits, par.hits, "workers={workers} changed fault hits");
+            for (a, b) in base.checks.iter().zip(&par.checks) {
+                assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+                assert_eq!(a.actual.to_bits(), b.actual.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn backend_run_narrows_to_serving_outputs() {
+        let (m, g) = setup();
+        let ops = GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            2,
+        )
+        .unwrap();
+        let backend = Instrumented::for_operands(&ops, ChecksumScheme::Fused, 2).unwrap();
+        let out = backend.run(&ops, &[]).unwrap();
+        assert_eq!(out.logits.shape(), (64, 4));
+        assert_eq!(out.predicted.len(), 2);
+        let report = crate::coordinator::ServePolicy::default().verify(&out);
+        assert!(report.ok, "fault-free instrumented pass alarmed: {report:?}");
+
+        let split = Instrumented::for_operands(&ops, ChecksumScheme::Split, 1).unwrap();
+        let out = split.run(&ops, &[]).unwrap();
+        assert_eq!(out.predicted.len(), 4);
+        assert!(crate::coordinator::ServePolicy::default().verify(&out).ok);
+    }
+
+    #[test]
+    fn weight_swap_is_honored_by_the_cached_engine() {
+        // The trait contract: run() executes the *passed* operands. A
+        // swap_weights after backend construction must not serve stale
+        // logits from the cached engine.
+        let (m, g) = setup();
+        let mut ops = GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            2,
+        )
+        .unwrap();
+        let backend = Instrumented::for_operands(&ops, ChecksumScheme::Fused, 1).unwrap();
+        let before = backend.run(&ops, &[]).unwrap();
+
+        let w1b = crate::tensor::ops::scale(&m.layers[0].weights, 2.0);
+        let w2b = crate::tensor::ops::scale(&m.layers[1].weights, 0.5);
+        ops.swap_weights(w1b, w2b).unwrap();
+        let after = backend.run(&ops, &[]).unwrap();
+        assert_ne!(before.logits, after.logits, "stale weights served");
+        // The post-swap run matches a freshly built backend bit for bit
+        // and still verifies.
+        let fresh = Instrumented::for_operands(&ops, ChecksumScheme::Fused, 1).unwrap();
+        assert_eq!(after.logits, fresh.run(&ops, &[]).unwrap().logits);
+        assert!(crate::coordinator::ServePolicy::default().verify(&after).ok);
+
+        // A different graph with the same weights must also refresh the
+        // cache (the fingerprint covers s_c/h_c1, not just weights).
+        let g2 = DatasetId::Tiny.build(99);
+        let m2 = GcnModel::two_layer(&g2, 8, 1);
+        let ops2 = GcnOperands::sparse(
+            g2.features.clone(),
+            &m2.adjacency,
+            ops.w1.clone(),
+            ops.w2.clone(),
+            2,
+        )
+        .unwrap();
+        let other = backend.run(&ops2, &[]).unwrap();
+        let fresh2 = Instrumented::for_operands(&ops2, ChecksumScheme::Fused, 1).unwrap();
+        assert_eq!(other.logits, fresh2.run(&ops2, &[]).unwrap().logits);
+    }
+
+    #[test]
+    fn overlays_patch_the_instrumented_timeline() {
+        let (m, g) = setup();
+        let ops = GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            1,
+        )
+        .unwrap();
+        let backend = Instrumented::for_operands(&ops, ChecksumScheme::Split, 1).unwrap();
+        let row: Vec<f32> = (0..ops.feat_dim())
+            .map(|c| if c % 4 == 0 { 6.0 } else { 0.0 })
+            .collect();
+        let out = backend
+            .run(&ops, &[Overlay { node: 3, row: &row }])
+            .unwrap();
+        let report = crate::coordinator::ServePolicy::default().verify(&out);
+        assert!(report.ok, "overlaid instrumented pass alarmed: {report:?}");
+        // Overlay must actually change the logits.
+        let base = backend.run(&ops, &[]).unwrap();
+        assert_ne!(base.logits, out.logits);
+        // Bad overlays are rejected before any arithmetic.
+        assert!(backend.run(&ops, &[Overlay { node: 999, row: &row }]).is_err());
+    }
+}

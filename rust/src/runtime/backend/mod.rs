@@ -1,0 +1,341 @@
+//! The execution-backend abstraction: **one trait for every forward
+//! path**.
+//!
+//! The paper's core claim is that one fused checksum checks the whole
+//! three-matrix product `S·H·W` regardless of how the product is
+//! executed. This module makes that literal: every way this repo can run
+//! a 2-layer GCN forward — dense f32 kernels, row-band-sharded CSR
+//! kernels, the MAC-instrumented f64 engine, the PJRT/XLA artifact path —
+//! implements [`GcnBackend`] over the same resident
+//! [`GcnOperands`], and the checksum scheme ([`ChecksumScheme`]: the
+//! paper's fused check vs the per-matmul split baseline) is an explicit
+//! parameter instead of being hardcoded per call site.
+//!
+//! | backend | substrate | serves | checks |
+//! |---|---|---|---|
+//! | [`NativeDense`] | row-parallel f32 matmul | dense operands | f64 ride-along |
+//! | [`NativeBanded`] | row-band CSR SpMM, one worker per band | CSR operands | stitched partials |
+//! | [`Instrumented`] | MAC-level hooked f64 engine, pluggable [`crate::fault::FaultModel`] | any operands | hooked enhanced products |
+//! | `Pjrt` (feature `pjrt`) | compiled HLO artifacts | dense operands | in-graph |
+//!
+//! The coordinator, the fault-campaign runner, the benches and the CLI
+//! all select a backend through this trait (`--backend`, `--scheme`);
+//! none of them call a concrete forward path directly.
+
+pub mod instrumented;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use instrumented::{Instrumented, InstrumentedEngine};
+pub use native::{NativeBanded, NativeDense};
+
+use super::client::GcnOutputs;
+use super::operands::GcnOperands;
+use crate::opcount::backend::{check_ops_for, BackendProfile};
+use crate::opcount::LayerShape;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Which checksum scheme a backend computes alongside the forward.
+/// `Fused` is the paper's GCN-ABFT (one end-of-layer check); `Split` is
+/// the per-matmul baseline (an extra after-combination check per layer).
+pub use crate::abft::Scheme as ChecksumScheme;
+
+/// One per-request feature-row overlay: `row` replaces the node's
+/// feature row for this pass only. Backends apply overlays without
+/// mutating the resident operands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Overlay<'a> {
+    pub node: usize,
+    pub row: &'a [f32],
+}
+
+/// What a backend intends to do with an operand set: representation,
+/// parallel layout, and the analytic op cost of one forward (true-output
+/// ops vs checksum-overhead ops under the chosen scheme).
+#[derive(Debug, Clone, Copy)]
+pub struct ExecPlan {
+    pub backend: &'static str,
+    pub scheme: ChecksumScheme,
+    /// Operand representation the backend will execute on.
+    pub representation: &'static str,
+    /// Row bands of `S` the aggregation fans out over (1 = unsharded).
+    pub bands: usize,
+    /// Worker threads per forward.
+    pub threads: usize,
+    /// Arithmetic ops for the true output (both layers).
+    pub true_ops: u64,
+    /// Checksum-overhead ops under `scheme` (both layers).
+    pub check_ops: u64,
+}
+
+impl ExecPlan {
+    /// Checking overhead as a fraction of the true-output work.
+    pub fn overhead(&self) -> f64 {
+        self.check_ops as f64 / self.true_ops.max(1) as f64
+    }
+}
+
+/// A GCN forward-execution backend over resident operands.
+///
+/// Implementations must be pure with respect to the operands: `run` may
+/// not mutate them, and overlays apply to this pass only. The returned
+/// [`GcnOutputs`] carry one `(predicted, actual)` checksum pair per
+/// check point — two pairs under [`ChecksumScheme::Fused`] (one per
+/// layer), four under [`ChecksumScheme::Split`] (after-combination and
+/// end-of-layer per layer) — which [`crate::coordinator::ServePolicy`]
+/// verifies uniformly.
+/// Not `Send`/`Sync`-bounded: the coordinator constructs one backend per
+/// executor thread (the PJRT client handle is not `Send`).
+pub trait GcnBackend {
+    /// Backend name for reports and metrics.
+    fn name(&self) -> &'static str;
+
+    /// Describe how this backend would execute one forward over `ops`.
+    fn plan(&self, ops: &GcnOperands) -> Result<ExecPlan>;
+
+    /// Execute one forward with per-request overlays.
+    fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs>;
+}
+
+/// Backend selector for configs and the `--backend` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Native f32 kernels; picks dense or banded from the operands.
+    Native,
+    /// MAC-instrumented f64 engine (fault-free on the serving path).
+    Instrumented,
+    /// Compiled HLO artifacts via PJRT (feature `pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Instrumented => "instrumented",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(BackendKind::Native),
+            "instrumented" | "f64" | "engine" => Some(BackendKind::Instrumented),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Build the backend a config selects, specialized to the operand set.
+/// `artifacts` names the HLO-artifact directory and model the PJRT
+/// backend compiles; other backends ignore it.
+pub fn for_operands(
+    kind: BackendKind,
+    scheme: ChecksumScheme,
+    ops: &GcnOperands,
+    threads: usize,
+    artifacts: Option<(&Path, &str)>,
+) -> Result<Box<dyn GcnBackend>> {
+    match kind {
+        BackendKind::Native => {
+            if ops.is_sparse() {
+                Ok(Box::new(NativeBanded::new(threads, scheme)))
+            } else {
+                Ok(Box::new(NativeDense::new(threads, scheme)))
+            }
+        }
+        BackendKind::Instrumented => {
+            Ok(Box::new(Instrumented::for_operands(ops, scheme, threads)?))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => {
+            let Some((dir, model)) = artifacts else {
+                bail!("the pjrt backend needs an artifacts directory and model name");
+            };
+            Ok(Box::new(pjrt::PjrtBackend::load(dir, model, scheme)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            let _ = artifacts;
+            bail!(
+                "the pjrt backend requires building with --features pjrt \
+                 (and a vendored xla crate)"
+            )
+        }
+    }
+}
+
+/// The two layer shapes of an operand set, as the analytic op model sees
+/// them (layer-1 input nnz from the resident representation, layer-2
+/// input dense ReLU activations).
+pub fn layer_shapes(ops: &GcnOperands) -> [LayerShape; 2] {
+    let n = ops.n_nodes();
+    let hidden = ops.hidden_dim();
+    let nnz_s = ops.s.nnz();
+    [
+        LayerShape {
+            n,
+            f: ops.feat_dim(),
+            h: hidden,
+            nnz_h: ops.features.nnz(),
+            nnz_s,
+            static_input: true,
+        },
+        LayerShape {
+            n,
+            f: hidden,
+            h: ops.num_classes(),
+            nnz_h: n * hidden,
+            nnz_s,
+            static_input: false,
+        },
+    ]
+}
+
+/// Assemble an [`ExecPlan`] from the shared analytic op model.
+pub(crate) fn plan_with_profile(
+    backend: &'static str,
+    profile: BackendProfile,
+    scheme: ChecksumScheme,
+    ops: &GcnOperands,
+    bands: usize,
+    threads: usize,
+) -> ExecPlan {
+    plan_from_shapes(
+        backend,
+        profile,
+        scheme,
+        &layer_shapes(ops),
+        if ops.is_sparse() { "csr-banded" } else { "dense" },
+        bands,
+        threads,
+    )
+}
+
+/// As [`plan_with_profile`], from explicit layer shapes (backends whose
+/// executed operand representation differs from the resident one patch
+/// the shapes first — e.g. the instrumented engine's zero-dropped CSR).
+pub(crate) fn plan_from_shapes(
+    backend: &'static str,
+    profile: BackendProfile,
+    scheme: ChecksumScheme,
+    shapes: &[LayerShape],
+    representation: &'static str,
+    bands: usize,
+    threads: usize,
+) -> ExecPlan {
+    let true_ops = shapes.iter().map(|l| l.true_ops()).sum();
+    let check_ops = shapes.iter().map(|l| check_ops_for(profile, scheme, l)).sum();
+    ExecPlan {
+        backend,
+        scheme,
+        representation,
+        bands,
+        threads,
+        true_ops,
+        check_ops,
+    }
+}
+
+/// Validate overlays against an operand set (shared by all backends).
+pub(crate) fn validate_overlays(ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<()> {
+    let n = ops.n_nodes();
+    let f = ops.feat_dim();
+    for o in overlays {
+        if o.node >= n {
+            bail!("overlay node {} out of range for {n} nodes", o.node);
+        }
+        if o.row.len() != f {
+            bail!(
+                "overlay width {} != feature dim {f} for node {}",
+                o.row.len(),
+                o.node
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("f64"), Some(BackendKind::Instrumented));
+        assert_eq!(BackendKind::parse("PJRT"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("bogus"), None);
+        assert_eq!(BackendKind::Instrumented.name(), "instrumented");
+    }
+
+    #[test]
+    fn factory_dispatches_on_representation() {
+        let g = crate::graph::DatasetId::Tiny.build(3);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 4);
+        let w1 = m.layers[0].weights.clone();
+        let w2 = m.layers[1].weights.clone();
+        let dense = GcnOperands::dense(
+            g.features.to_dense(),
+            m.adjacency.to_dense(),
+            w1.clone(),
+            w2.clone(),
+        )
+        .unwrap();
+        let sparse = GcnOperands::sparse(g.features.clone(), &m.adjacency, w1, w2, 3).unwrap();
+
+        let b = for_operands(BackendKind::Native, ChecksumScheme::Fused, &dense, 2, None).unwrap();
+        assert_eq!(b.name(), "native-dense");
+        let b = for_operands(BackendKind::Native, ChecksumScheme::Fused, &sparse, 2, None).unwrap();
+        assert_eq!(b.name(), "native-banded");
+        let b = for_operands(
+            BackendKind::Instrumented,
+            ChecksumScheme::Split,
+            &dense,
+            1,
+            None,
+        )
+        .unwrap();
+        assert_eq!(b.name(), "instrumented");
+        #[cfg(not(feature = "pjrt"))]
+        assert!(
+            for_operands(BackendKind::Pjrt, ChecksumScheme::Fused, &dense, 1, None).is_err(),
+            "pjrt must refuse cleanly without the feature"
+        );
+    }
+
+    #[test]
+    fn plans_report_scheme_dependent_overhead() {
+        let g = crate::graph::DatasetId::Tiny.build(3);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 4);
+        let ops = GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            2,
+        )
+        .unwrap();
+        for kind in [BackendKind::Native, BackendKind::Instrumented] {
+            let fused = for_operands(kind, ChecksumScheme::Fused, &ops, 1, None)
+                .unwrap()
+                .plan(&ops)
+                .unwrap();
+            let split = for_operands(kind, ChecksumScheme::Split, &ops, 1, None)
+                .unwrap()
+                .plan(&ops)
+                .unwrap();
+            assert_eq!(fused.true_ops, split.true_ops, "{kind:?}");
+            assert!(
+                fused.check_ops < split.check_ops,
+                "{kind:?}: fused {} must beat split {}",
+                fused.check_ops,
+                split.check_ops
+            );
+            assert!(fused.overhead() > 0.0 && fused.overhead() < 1.0);
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! Native f32 backends: the serving hot path on this crate's own
+//! kernels, extracted from the old `GcnExecutable::run`/`run_operands`
+//! pair and parameterized by [`ChecksumScheme`].
+//!
+//! Both backends share one forward ([`forward`]); they differ only in
+//! which operand representation they accept:
+//!
+//! * [`NativeDense`] — dense `S`/features, cache-blocked row-parallel
+//!   matmul ([`crate::tensor::ops::matmul_par`]);
+//! * [`NativeBanded`] — CSR features and a row-band-sharded CSR `S`:
+//!   each band aggregates on its own scoped worker and the fused
+//!   checksums are stitched from the band partials (exact by additivity
+//!   over row bands).
+//!
+//! Checksums ride along in f64. Under [`ChecksumScheme::Fused`] the
+//! outputs carry one `(predicted, actual)` pair per layer (Eq. 4);
+//! under [`ChecksumScheme::Split`] an after-combination pair per layer
+//! is prepended (the baseline's extra check, costing an online `h_c`
+//! column-sum pass for layer 2 — exactly the state the paper's scheme
+//! eliminates).
+
+use super::super::client::GcnOutputs;
+use super::super::operands::GcnOperands;
+use super::{plan_with_profile, validate_overlays, ChecksumScheme, ExecPlan, GcnBackend, Overlay};
+use crate::opcount::backend::BackendProfile;
+use crate::tensor::ops;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// The 2-layer native forward over resident operands, shared by both
+/// native backends (and by the legacy `GcnExecutable::run_operands`
+/// entry point, which fixes the scheme to `Fused`).
+///
+/// Overlays are applied algebraically: an overlaid row patches the
+/// corresponding row of the combination product `X₁ = H·W₁`, the entry
+/// of the online checksum column `x_r`, and (split scheme) the cached
+/// `h_c` column sums — the base feature matrix is never copied on the
+/// request path.
+pub fn forward(
+    model: &GcnOperands,
+    overlays: &[Overlay<'_>],
+    threads: usize,
+    scheme: ChecksumScheme,
+) -> Result<GcnOutputs> {
+    validate_overlays(model, overlays)?;
+    let split = scheme == ChecksumScheme::Split;
+    let mut predicted: Vec<f32> = Vec::with_capacity(if split { 4 } else { 2 });
+    let mut actual: Vec<f32> = Vec::with_capacity(predicted.capacity());
+
+    // Layer 1 combination: X₁ = H·W₁ on the representation's kernel,
+    // then patch the overlaid rows (and their x_r entries).
+    let mut x1 = model.features.matmul(&model.w1, threads);
+    let mut x_r1 = model.check.x_r1.clone();
+    for o in overlays {
+        x1.row_mut(o.node)
+            .copy_from_slice(&ops::vecmat_f64(o.row, &model.w1));
+        x_r1[o.node] = ops::dot_f64(o.row, &model.check.w_r1) as f32;
+    }
+    if split {
+        // Baseline phase-1 check: h_c·w_r₁ vs eᵀ·X₁·e. The cached h_c
+        // is patched per overlaid node (last overlay wins, matching the
+        // row-patch semantics above).
+        let mut h_c1 = model.check.h_c1.clone();
+        if !overlays.is_empty() {
+            let mut last: BTreeMap<usize, &[f32]> = BTreeMap::new();
+            for o in overlays {
+                last.insert(o.node, o.row);
+            }
+            for (node, row) in last {
+                model.features.accumulate_row_f64(node, -1.0, &mut h_c1);
+                for (a, &v) in h_c1.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
+            }
+        }
+        predicted.push(ops::dot_mixed(&h_c1, &model.check.w_r1) as f32);
+        actual.push(x1.checksum_f64() as f32);
+    }
+
+    // Layer 1 aggregation + fused checksum, Eq. (4):
+    // s_c·H·w_r vs eᵀ·Z₁·e (band-stitched when S is sharded).
+    let (mut z1, pred1, actual1) = model.s.aggregate(&x1, &x_r1, &model.check.s_c, threads);
+    predicted.push(pred1 as f32);
+    actual.push(actual1 as f32);
+
+    // Layer 2: H₁ = ReLU(Z₁), X₂ = H₁·W₂, logits = S·X₂.
+    ops::relu_inplace(&mut z1);
+    let h1 = z1;
+    let x2 = ops::matmul_par(&h1, &model.w2, threads);
+    let x_r2 = ops::matvec_f64(&h1, &model.check.w_r2);
+    if split {
+        // Baseline phase-1 check for layer 2: h_c here is genuinely
+        // online (the previous layer's activations).
+        let h_c2 = h1.col_sums_f64();
+        predicted.push(ops::dot_mixed(&h_c2, &model.check.w_r2) as f32);
+        actual.push(x2.checksum_f64() as f32);
+    }
+    let (logits, pred2, actual2) = model.s.aggregate(&x2, &x_r2, &model.check.s_c, threads);
+    predicted.push(pred2 as f32);
+    actual.push(actual2 as f32);
+
+    Ok(GcnOutputs {
+        logits,
+        predicted,
+        actual,
+    })
+}
+
+/// Native backend over dense operands (model-replicated workers).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeDense {
+    threads: usize,
+    scheme: ChecksumScheme,
+}
+
+impl NativeDense {
+    pub fn new(threads: usize, scheme: ChecksumScheme) -> NativeDense {
+        NativeDense {
+            threads: threads.max(1),
+            scheme,
+        }
+    }
+}
+
+impl GcnBackend for NativeDense {
+    fn name(&self) -> &'static str {
+        "native-dense"
+    }
+
+    fn plan(&self, ops: &GcnOperands) -> Result<ExecPlan> {
+        if ops.is_sparse() {
+            bail!("native-dense backend got CSR operands (use native-banded)");
+        }
+        Ok(plan_with_profile(
+            self.name(),
+            BackendProfile::Native,
+            self.scheme,
+            ops,
+            1,
+            self.threads,
+        ))
+    }
+
+    fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs> {
+        if ops.is_sparse() {
+            bail!("native-dense backend got CSR operands (use native-banded)");
+        }
+        forward(ops, overlays, self.threads, self.scheme)
+    }
+}
+
+/// Native backend over CSR operands with a row-band-sharded `S`.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeBanded {
+    threads: usize,
+    scheme: ChecksumScheme,
+}
+
+impl NativeBanded {
+    pub fn new(threads: usize, scheme: ChecksumScheme) -> NativeBanded {
+        NativeBanded {
+            threads: threads.max(1),
+            scheme,
+        }
+    }
+}
+
+impl GcnBackend for NativeBanded {
+    fn name(&self) -> &'static str {
+        "native-banded"
+    }
+
+    fn plan(&self, ops: &GcnOperands) -> Result<ExecPlan> {
+        if !ops.is_sparse() {
+            bail!("native-banded backend got dense operands (use native-dense)");
+        }
+        Ok(plan_with_profile(
+            self.name(),
+            BackendProfile::Native,
+            self.scheme,
+            ops,
+            ops.band_count(),
+            self.threads,
+        ))
+    }
+
+    fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs> {
+        if !ops.is_sparse() {
+            bail!("native-banded backend got dense operands (use native-dense)");
+        }
+        forward(ops, overlays, self.threads, self.scheme)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServePolicy;
+    use crate::graph::DatasetId;
+
+    fn workload() -> (GcnOperands, GcnOperands) {
+        let g = DatasetId::Tiny.build(5);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 6);
+        let w1 = m.layers[0].weights.clone();
+        let w2 = m.layers[1].weights.clone();
+        let dense = GcnOperands::dense(
+            g.features.to_dense(),
+            m.adjacency.to_dense(),
+            w1.clone(),
+            w2.clone(),
+        )
+        .unwrap();
+        let sparse = GcnOperands::sparse(g.features.clone(), &m.adjacency, w1, w2, 3).unwrap();
+        (dense, sparse)
+    }
+
+    #[test]
+    fn backends_refuse_foreign_representations() {
+        let (dense, sparse) = workload();
+        let d = NativeDense::new(1, ChecksumScheme::Fused);
+        let b = NativeBanded::new(1, ChecksumScheme::Fused);
+        assert!(d.run(&sparse, &[]).is_err());
+        assert!(d.plan(&sparse).is_err());
+        assert!(b.run(&dense, &[]).is_err());
+        assert!(b.plan(&dense).is_err());
+    }
+
+    #[test]
+    fn split_scheme_doubles_check_points_and_stays_quiet() {
+        let (dense, sparse) = workload();
+        let d = NativeDense::new(2, ChecksumScheme::Split);
+        let b = NativeBanded::new(2, ChecksumScheme::Split);
+        for (ops, backend) in [
+            (&dense, &d as &dyn GcnBackend),
+            (&sparse, &b as &dyn GcnBackend),
+        ] {
+            let out = backend.run(ops, &[]).unwrap();
+            assert_eq!(out.predicted.len(), 4, "{}", backend.name());
+            assert_eq!(out.actual.len(), 4);
+            let report = ServePolicy::default().verify(&out);
+            assert!(report.ok, "{}: fault-free split pass alarmed: {report:?}", backend.name());
+        }
+    }
+
+    #[test]
+    fn split_and_fused_agree_on_logits_and_shared_checks() {
+        let (dense, _) = workload();
+        let fused = NativeDense::new(2, ChecksumScheme::Fused).run(&dense, &[]).unwrap();
+        let split = NativeDense::new(2, ChecksumScheme::Split).run(&dense, &[]).unwrap();
+        assert_eq!(fused.logits, split.logits, "scheme must not change the data path");
+        // Split's end-of-layer pairs are fused's pairs.
+        assert_eq!(fused.predicted[0], split.predicted[1]);
+        assert_eq!(fused.predicted[1], split.predicted[3]);
+        assert_eq!(fused.actual[0], split.actual[1]);
+        assert_eq!(fused.actual[1], split.actual[3]);
+    }
+
+    #[test]
+    fn split_phase1_check_sees_overlays() {
+        let (dense, sparse) = workload();
+        for ops in [&dense, &sparse] {
+            let overlay_row: Vec<f32> = (0..ops.feat_dim())
+                .map(|c| if c % 3 == 0 { 4.0 } else { 0.0 })
+                .collect();
+            let overlays = [Overlay {
+                node: 7,
+                row: &overlay_row,
+            }];
+            let backend = NativeDense::new(1, ChecksumScheme::Split);
+            let out = if ops.is_sparse() {
+                NativeBanded::new(1, ChecksumScheme::Split).run(ops, &overlays).unwrap()
+            } else {
+                backend.run(ops, &overlays).unwrap()
+            };
+            // The phase-1 check must still verify: h_c was patched to
+            // match the overlaid combination product.
+            let report = ServePolicy::default().verify(&out);
+            assert!(report.ok, "overlaid split pass alarmed: {report:?}");
+        }
+    }
+}

@@ -23,6 +23,7 @@
 //! instruction ids that xla_extension 0.5.1 rejects in proto form.
 
 use super::artifact::{Manifest, ModelEntry};
+use super::backend;
 use super::operands::GcnOperands;
 use crate::tensor::{ops, Dense};
 use anyhow::{bail, Result};
@@ -145,17 +146,13 @@ impl GcnExecutable {
     }
 
     /// Execute the forward on a resident operand set (dense or CSR, see
-    /// [`GcnOperands`]), applying per-request feature-row overlays
-    /// algebraically: an overlaid row patches the corresponding row of
-    /// the combination product `X₁ = H·W₁` and entry of the online
-    /// checksum column `x_r = H·w_r` — the base feature matrix is never
-    /// copied on the request path.
-    ///
-    /// The offline check state (`s_c`, `w_r`, base `x_r`) comes cached
-    /// from the operands; only layer-dependent quantities are computed
-    /// here. With a banded `S`, each row band aggregates on its own
-    /// worker and the fused checksums are stitched from the band
-    /// partials (exact by additivity over row bands).
+    /// [`GcnOperands`]) with the **fused** checksum scheme — the legacy
+    /// serving entry point, now a thin shim over the shared
+    /// [`backend::native::forward`] that the [`backend::GcnBackend`]
+    /// implementations run on. Overlays apply algebraically (one patched
+    /// row of `X₁` and entry of `x_r` per overlaid node); with a banded
+    /// `S`, each row band aggregates on its own worker and the fused
+    /// checksums are stitched from the band partials.
     pub fn run_operands(
         &self,
         model: &GcnOperands,
@@ -176,47 +173,11 @@ impl GcnExecutable {
                 );
             }
         }
-        for (node, row) in overlays {
-            if *node >= e.n {
-                bail!("overlay node {node} out of range for {} nodes", e.n);
-            }
-            if row.len() != e.f {
-                bail!(
-                    "overlay width {} != feature dim {} for node {node}",
-                    row.len(),
-                    e.f
-                );
-            }
-        }
-
-        // Layer 1 combination: X₁ = H·W₁ on the representation's kernel,
-        // then patch the overlaid rows (and their x_r entries).
-        let mut x1 = model.features.matmul(&model.w1, self.threads);
-        let mut x_r1 = model.check.x_r1.clone();
-        for &(node, row) in overlays {
-            x1.row_mut(node)
-                .copy_from_slice(&ops::vecmat_f64(row, &model.w1));
-            x_r1[node] = ops::dot_f64(row, &model.check.w_r1) as f32;
-        }
-
-        // Layer 1 aggregation + fused checksum, Eq. (4):
-        // s_c·H·w_r vs eᵀ·Z₁·e (band-stitched when S is sharded).
-        let (mut z1, pred1, actual1) =
-            model.s.aggregate(&x1, &x_r1, &model.check.s_c, self.threads);
-
-        // Layer 2: H₁ = ReLU(Z₁), X₂ = H₁·W₂, logits = S·X₂.
-        ops::relu_inplace(&mut z1);
-        let h1 = z1;
-        let x2 = ops::matmul_par(&h1, &model.w2, self.threads);
-        let x_r2 = ops::matvec_f64(&h1, &model.check.w_r2);
-        let (logits, pred2, actual2) =
-            model.s.aggregate(&x2, &x_r2, &model.check.s_c, self.threads);
-
-        Ok(GcnOutputs {
-            logits,
-            predicted: vec![pred1 as f32, pred2 as f32],
-            actual: vec![actual1 as f32, actual2 as f32],
-        })
+        let overlays: Vec<backend::Overlay<'_>> = overlays
+            .iter()
+            .map(|&(node, row)| backend::Overlay { node, row })
+            .collect();
+        backend::native::forward(model, &overlays, self.threads, backend::ChecksumScheme::Fused)
     }
 }
 
@@ -224,7 +185,9 @@ impl GcnExecutable {
 /// been vendored into the build environment (`--features pjrt`).
 #[cfg(feature = "pjrt")]
 pub mod pjrt {
-    use super::{GcnOutputs, Manifest, ModelEntry};
+    use super::backend::{validate_overlays, Overlay};
+    use super::{GcnOperands, GcnOutputs, Manifest, ModelEntry};
+    use crate::runtime::operands::{Operand, SOperand};
     use crate::tensor::Dense;
     use anyhow::{bail, Context, Result};
     use std::path::Path;
@@ -268,7 +231,32 @@ pub mod pjrt {
     }
 
     impl PjrtExecutable {
-        pub fn run(
+        /// Execute on a resident operand set — the same contract as the
+        /// native backends ([`GcnOperands`] + per-request overlays). The
+        /// compiled artifact graphs are dense, so CSR operands are
+        /// refused up front; overlays patch a transient copy of the
+        /// feature matrix (the compiled graph has no overlay port).
+        pub fn run(&self, model: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs> {
+            validate_overlays(model, overlays)?;
+            let Operand::Dense(features) = &model.features else {
+                bail!("the pjrt backend executes dense artifacts; features are CSR");
+            };
+            let SOperand::Dense(s) = &model.s else {
+                bail!("the pjrt backend executes dense artifacts; S is CSR/banded");
+            };
+            if overlays.is_empty() {
+                return self.run_dense(features, s, &model.w1, &model.w2);
+            }
+            let mut patched = features.clone();
+            for o in overlays {
+                patched.row_mut(o.node).copy_from_slice(o.row);
+            }
+            self.run_dense(&patched, s, &model.w1, &model.w2)
+        }
+
+        /// Raw dense-parts entry point (the pre-operand contract, kept
+        /// for the PJRT↔native parity tests).
+        pub fn run_dense(
             &self,
             features: &Dense,
             s: &Dense,
@@ -435,6 +423,35 @@ mod tests {
         assert!(err.is_err());
         let short = [1.0f32];
         assert!(exe.run_operands(&ops, &[(0, &short[..])]).is_err());
+    }
+
+    /// PJRT↔native parity contract: both backends execute the same
+    /// dense operand set and must agree on logits and checksums within
+    /// f32 tolerance. Compiles (and runs, given artifacts) only with a
+    /// vendored `xla` crate.
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_runs_the_operand_contract() {
+        let (exe, features, s, w1, w2, _, _) = tiny_state();
+        let ops = crate::runtime::GcnOperands::dense(features, s, w1, w2).unwrap();
+        let native = exe.run_operands(&ops, &[]).unwrap();
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: run `python -m compile.aot` to build artifacts first");
+            return;
+        }
+        let rt = pjrt::PjrtRuntime::cpu().unwrap();
+        let manifest = Manifest::load(dir).unwrap();
+        let pexe = rt.load_model(&manifest, "tiny").unwrap();
+        let out = pexe.run(&ops, &[]).unwrap();
+        let scale = native
+            .logits
+            .data()
+            .iter()
+            .fold(0f32, |m, &v| m.max(v.abs()))
+            .max(1.0);
+        assert!(out.logits.max_abs_diff(&native.logits) / scale < 1e-3);
+        assert_eq!(out.predicted.len(), 2);
     }
 
     #[test]

@@ -2,19 +2,26 @@
 //! path and validates shapes against the artifact manifest produced by
 //! `python/compile/aot.py`. Python never runs at serving time.
 //!
-//! The default backend is native (the repo's own row-parallel f32
-//! kernels); it consumes either dense or CSR operands (see
-//! [`operands`] — sparse operands are what let PubMed/Nell serve at
-//! all, and row-band sharding is the multi-node blueprint). The
-//! original PJRT/XLA path is kept behind the `pjrt` feature because the
-//! `xla` crate is absent from the offline registry — see [`client`] for
-//! the full story.
+//! Every forward path implements the [`backend::GcnBackend`] trait over
+//! resident [`operands::GcnOperands`]: `NativeDense`/`NativeBanded` (the
+//! repo's own row-parallel f32 kernels — sparse operands are what let
+//! PubMed/Nell serve at all, and row-band sharding is the multi-node
+//! blueprint), the MAC-instrumented f64 `Instrumented` backend with
+//! pluggable fault models, and the PJRT/XLA path behind the `pjrt`
+//! feature (the `xla` crate is absent from the offline registry — see
+//! [`client`] for the full story). The checksum scheme (fused GCN-ABFT
+//! vs the split baseline) is selected per backend, not per call site.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod operands;
 
 pub use artifact::{Manifest, ModelEntry};
+pub use backend::{
+    BackendKind, ChecksumScheme, ExecPlan, GcnBackend, Instrumented, InstrumentedEngine,
+    NativeBanded, NativeDense, Overlay,
+};
 pub use client::{GcnExecutable, GcnOutputs, Runtime};
 pub use operands::{
     CheckState, ExecMode, GcnOperands, Operand, OperandPlan, RowBand, SOperand,

@@ -186,6 +186,41 @@ impl Operand {
             Operand::Sparse(m) => m.matvec(v),
         }
     }
+
+    /// Stored entries (dense operands store every element) — the number
+    /// the kernels' op counts are proportional to.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Operand::Dense(d) => d.rows() * d.cols(),
+            Operand::Sparse(m) => m.nnz(),
+        }
+    }
+
+    /// Column sums `eᵀ·self` in f64 (the offline `h_c` of the split
+    /// checker's first layer).
+    pub fn col_sums_f64(&self) -> Vec<f64> {
+        match self {
+            Operand::Dense(d) => d.col_sums_f64(),
+            Operand::Sparse(m) => m.col_sums_f64(),
+        }
+    }
+
+    /// `acc[c] += sign · self[node][c]` — used to patch cached column
+    /// sums algebraically when a feature row is overlaid.
+    pub fn accumulate_row_f64(&self, node: usize, sign: f64, acc: &mut [f64]) {
+        match self {
+            Operand::Dense(d) => {
+                for (a, &v) in acc.iter_mut().zip(d.row(node)) {
+                    *a += sign * v as f64;
+                }
+            }
+            Operand::Sparse(m) => {
+                for (c, v) in m.row_iter(node) {
+                    acc[c] += sign * v as f64;
+                }
+            }
+        }
+    }
 }
 
 /// One contiguous row band of the propagation matrix — the unit of
@@ -232,22 +267,35 @@ pub enum SOperand {
     Banded(Vec<RowBand>),
 }
 
+/// Contiguous row-band boundaries: at most `nbands` bands of
+/// `ceil(n/nbands)` rows each (the last possibly short). The single
+/// source of the partition arithmetic, shared by the serving-path
+/// sharding and the instrumented engine's logical fault-timeline bands.
+pub fn row_band_bounds(n: usize, nbands: usize) -> Vec<(usize, usize)> {
+    let nbands = nbands.clamp(1, n.max(1));
+    let band_rows = n.div_ceil(nbands);
+    let mut bounds = Vec::with_capacity(nbands);
+    let mut row0 = 0;
+    while row0 < n {
+        let hi = (row0 + band_rows).min(n);
+        bounds.push((row0, hi));
+        row0 = hi;
+    }
+    bounds
+}
+
 impl SOperand {
     /// Partition a sparse `S` into at most `nbands` contiguous row
     /// bands (one per worker), precomputing each band's `s_c`.
     pub fn banded(s: &Csr, nbands: usize) -> SOperand {
-        let n = s.rows();
-        let nbands = nbands.clamp(1, n.max(1));
-        let band_rows = n.div_ceil(nbands);
-        let mut bands = Vec::with_capacity(nbands);
-        let mut row0 = 0;
-        while row0 < n {
-            let hi = (row0 + band_rows).min(n);
-            let band = s.row_band(row0, hi);
-            let s_c = band.col_sums_f64();
-            bands.push(RowBand { row0, s: band, s_c });
-            row0 = hi;
-        }
+        let bands = row_band_bounds(s.rows(), nbands)
+            .into_iter()
+            .map(|(row0, hi)| {
+                let band = s.row_band(row0, hi);
+                let s_c = band.col_sums_f64();
+                RowBand { row0, s: band, s_c }
+            })
+            .collect();
         SOperand::Banded(bands)
     }
 
@@ -273,6 +321,27 @@ impl SOperand {
         match self {
             SOperand::Dense(_) => 1,
             SOperand::Banded(bands) => bands.len(),
+        }
+    }
+
+    /// Stored entries of `S` (dense: N²).
+    pub fn nnz(&self) -> usize {
+        match self {
+            SOperand::Dense(d) => d.rows() * d.cols(),
+            SOperand::Banded(bands) => bands.iter().map(|b| b.s.nnz()).sum(),
+        }
+    }
+
+    /// The full propagation matrix as one CSR (the instrumented f64
+    /// backend's native representation). Dense operands drop exact
+    /// zeros; banded operands are stacked back in row order.
+    pub fn to_csr(&self) -> Csr {
+        match self {
+            SOperand::Dense(d) => Csr::from_dense(d),
+            SOperand::Banded(bands) => {
+                let parts: Vec<&Csr> = bands.iter().map(|b| &b.s).collect();
+                Csr::vstack(&parts)
+            }
         }
     }
 
@@ -372,6 +441,10 @@ pub struct CheckState {
     /// of this vector (one dot product per overlaid row) instead of
     /// recomputing the full product.
     pub x_r1: Vec<f32>,
+    /// `h_c = eᵀH`, length F, f64 — the layer-1 input column sums the
+    /// baseline **split** checker needs for its phase-1 check. Static
+    /// features ⇒ offline; overlays patch it algebraically per request.
+    pub h_c1: Vec<f64>,
 }
 
 impl CheckState {
@@ -384,6 +457,7 @@ impl CheckState {
             w_r1,
             w_r2,
             x_r1,
+            h_c1: features.col_sums_f64(),
         }
     }
 }

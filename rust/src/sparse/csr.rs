@@ -239,6 +239,80 @@ impl Csr {
         Csr::from_coo(self.cols, self.rows, coo)
     }
 
+    /// Stack row bands back into one matrix (the inverse of a
+    /// [`Csr::row_band`] partition). All parts must share the column
+    /// count; the result has the parts' rows in order.
+    pub fn vstack(parts: &[&Csr]) -> Csr {
+        assert!(!parts.is_empty(), "vstack of zero parts");
+        let cols = parts[0].cols;
+        let mut rows = 0usize;
+        let mut nnz = 0usize;
+        for p in parts {
+            assert_eq!(p.cols, cols, "vstack column mismatch");
+            rows += p.rows;
+            nnz += p.nnz();
+        }
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        row_ptr.push(0usize);
+        for p in parts {
+            let base = *row_ptr.last().unwrap();
+            row_ptr.extend(p.row_ptr[1..].iter().map(|&x| base + x));
+            col_idx.extend_from_slice(&p.col_idx);
+            values.extend_from_slice(&p.values);
+        }
+        Csr {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// A copy of the matrix with the given rows replaced by dense
+    /// replacement rows (zeros dropped). Later replacements of the same
+    /// row win — the per-request feature-overlay semantics.
+    pub fn with_rows_replaced(&self, replacements: &[(usize, &[f32])]) -> Csr {
+        let mut last: std::collections::BTreeMap<usize, &[f32]> = std::collections::BTreeMap::new();
+        for &(node, row) in replacements {
+            assert!(node < self.rows, "replacement row {node} out of range");
+            assert_eq!(row.len(), self.cols, "replacement width mismatch");
+            last.insert(node, row);
+        }
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0usize);
+        for r in 0..self.rows {
+            match last.get(&r) {
+                Some(row) => {
+                    for (c, &v) in row.iter().enumerate() {
+                        if v != 0.0 {
+                            col_idx.push(c);
+                            values.push(v);
+                        }
+                    }
+                }
+                None => {
+                    for (c, v) in self.row_iter(r) {
+                        col_idx.push(c);
+                        values.push(v);
+                    }
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
     /// Columns that contain no nonzero at all — the degenerate case in
     /// which GCN-ABFT can miss a phase-1 fault (§III: an all-zero column of
     /// `S` nullifies any fault in the corresponding row of `HW`).
@@ -352,6 +426,33 @@ mod tests {
         assert_eq!(m.row_nnz(1), 0);
         let row2: Vec<_> = m.row_iter(2).collect();
         assert_eq!(row2, vec![(0, 3.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn vstack_inverts_row_band_partition() {
+        let m = sample();
+        let a = m.row_band(0, 1);
+        let b = m.row_band(1, 3);
+        assert_eq!(Csr::vstack(&[&a, &b]), m);
+        // Single part round-trips too.
+        assert_eq!(Csr::vstack(&[&m]), m);
+    }
+
+    #[test]
+    fn rows_replaced_last_wins_and_drops_zeros() {
+        let m = sample();
+        let r0 = [9.0f32, 0.0, 7.0];
+        let r0b = [0.0f32, 5.0, 0.0];
+        let patched = m.with_rows_replaced(&[(0, &r0[..]), (0, &r0b[..])]);
+        assert_eq!(patched.rows(), 3);
+        assert_eq!(patched.row_nnz(0), 1, "zeros dropped, last overlay wins");
+        let row0: Vec<_> = patched.row_iter(0).collect();
+        assert_eq!(row0, vec![(1, 5.0)]);
+        // Untouched rows are preserved verbatim.
+        let row2: Vec<_> = patched.row_iter(2).collect();
+        assert_eq!(row2, vec![(0, 3.0), (1, 4.0)]);
+        // Replacing nothing is the identity.
+        assert_eq!(m.with_rows_replaced(&[]), m);
     }
 
     #[test]

@@ -25,8 +25,9 @@ use super::dense64::Dense64;
 
 /// Observer/transformer of every arithmetic result.
 ///
-/// Implementations: [`CountingHook`] (op accounting), `fault::InjectHook`
-/// (bit-flip at a scheduled op index), [`NopHook`] (golden runs).
+/// Implementations: [`CountingHook`] (op accounting),
+/// `fault::SegmentHook` (fault-model injection over one timeline
+/// segment), [`NopHook`] (golden runs).
 pub trait ExecHook {
     /// A multiply result on the data path. May return a modified value.
     fn mul(&mut self, v: f64) -> f64;

@@ -1,0 +1,82 @@
+//! Determinism contract of the band-parallel instrumented backend: a
+//! fixed-seed fault campaign reports **bit-identical detections** at any
+//! band-worker count. This is the property that lets fault studies scale
+//! across cores without losing reproducibility — the op-index timeline
+//! is split at fixed logical-band prefix offsets, so a fault plan lands
+//! on the same logical op serial or parallel. CI runs this test on
+//! every push.
+
+use gcn_abft::fault::{run_campaigns, CampaignConfig, FaultModelKind};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{ChecksumScheme, InstrumentedEngine};
+
+fn engine(seed: u64) -> InstrumentedEngine {
+    let g = DatasetId::Tiny.build(seed);
+    let m = GcnModel::two_layer(&g, 8, seed);
+    InstrumentedEngine::from_model(&m, &g.features)
+}
+
+fn campaign_cfg(scheme: ChecksumScheme, model: FaultModelKind, workers: usize) -> CampaignConfig {
+    CampaignConfig {
+        scheme,
+        fault_model: model,
+        campaigns: 80,
+        faults_per_campaign: 1,
+        seed: 0xD37E,
+        threads: 1,
+        band_workers: workers,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fixed_seed_campaign_is_bit_identical_across_workers() {
+    let engine = engine(3);
+    for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+        for model in [
+            FaultModelKind::BitFlip,
+            FaultModelKind::MultiBit { bits: 2 },
+            FaultModelKind::StuckAt { duration: 1024 },
+        ] {
+            let serial = run_campaigns(&engine, &campaign_cfg(scheme, model, 1));
+            for workers in [2, 4] {
+                let parallel = run_campaigns(&engine, &campaign_cfg(scheme, model, workers));
+                assert_eq!(
+                    serial.per_threshold, parallel.per_threshold,
+                    "{scheme:?}/{model:?}: detections changed at band_workers={workers}"
+                );
+                assert_eq!(serial.critical, parallel.critical, "{scheme:?}/{model:?}");
+                assert_eq!(serial.class_critical, parallel.class_critical);
+                assert_eq!(serial.data_faults, parallel.data_faults);
+                assert_eq!(serial.checksum_faults, parallel.checksum_faults);
+                assert_eq!(serial.timeline_ops, parallel.timeline_ops);
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_outputs_and_hits_are_bit_identical_across_workers() {
+    // Stronger than tally equality: the raw preactivations, check
+    // records and fault hits of a single faulty forward must match bit
+    // for bit.
+    let engine = engine(11);
+    let total = engine.timeline_ops(ChecksumScheme::Fused);
+    let mut rng = gcn_abft::util::rng::Pcg64::from_seed(42);
+    let events = FaultModelKind::BitFlip.sample(&mut rng, total, 4);
+    let base = engine.forward(ChecksumScheme::Fused, &events, 1);
+    assert_eq!(base.timeline_ops, total);
+    for workers in [2, 3, 4, 16] {
+        let par = engine.forward(ChecksumScheme::Fused, &events, workers);
+        assert_eq!(base.hits, par.hits, "workers={workers}");
+        assert_eq!(base.timeline_ops, par.timeline_ops);
+        for (a, b) in base.preacts.iter().zip(&par.preacts) {
+            assert!(a.identical(b), "workers={workers}: preacts diverged");
+        }
+        for (a, b) in base.checks.iter().zip(&par.checks) {
+            assert_eq!(a.predicted.to_bits(), b.predicted.to_bits(), "workers={workers}");
+            assert_eq!(a.actual.to_bits(), b.actual.to_bits(), "workers={workers}");
+        }
+    }
+}

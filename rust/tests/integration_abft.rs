@@ -8,6 +8,7 @@ use gcn_abft::fault::{run_campaigns, CampaignConfig};
 use gcn_abft::gcn::{train_two_layer, GcnModel, TrainConfig};
 use gcn_abft::graph::DatasetId;
 use gcn_abft::opcount::ModelOps;
+use gcn_abft::runtime::InstrumentedEngine;
 use gcn_abft::tensor::{CountingHook, NopHook};
 
 #[test]
@@ -82,7 +83,7 @@ fn campaign_invariants_on_citeseer_subset() {
             ..Default::default()
         },
     );
-    let em = EngineModel::from_model(&m);
+    let engine = InstrumentedEngine::from_model(&m, &g.features);
     for scheme in [Scheme::Split, Scheme::Fused] {
         let cfg = CampaignConfig {
             scheme,
@@ -91,7 +92,7 @@ fn campaign_invariants_on_citeseer_subset() {
             threads: 1,
             ..Default::default()
         };
-        let r = run_campaigns(&em, &g.features, &cfg);
+        let r = run_campaigns(&engine, &cfg);
         // Partition invariant at every threshold.
         for (tau, t) in &r.per_threshold {
             assert_eq!(t.total(), 120, "tau {tau}: {t:?}");
@@ -112,7 +113,7 @@ fn multi_fault_campaigns_flag_almost_everything() {
     // §IV-B: with >1 fault per campaign both schemes reach ~100%.
     let g = DatasetId::Tiny.build(9);
     let m = GcnModel::two_layer(&g, 8, 9);
-    let em = EngineModel::from_model(&m);
+    let engine = InstrumentedEngine::from_model(&m, &g.features);
     let cfg = CampaignConfig {
         scheme: Scheme::Fused,
         campaigns: 150,
@@ -121,7 +122,7 @@ fn multi_fault_campaigns_flag_almost_everything() {
         threads: 1,
         ..Default::default()
     };
-    let r = run_campaigns(&em, &g.features, &cfg);
+    let r = run_campaigns(&engine, &cfg);
     let t = r.per_threshold.last().unwrap().1;
     let flagged = (t.detected + t.false_positive) as f64 / t.total() as f64;
     assert!(flagged > 0.9, "multi-fault flag rate {flagged}: {t:?}");
@@ -142,7 +143,9 @@ fn deeper_models_are_checkable_too() {
     for c in &checks {
         assert!(!policy.fires(c.predicted, c.actual), "{c:?}");
     }
-    // And campaigns run on it.
+    // And campaigns run on it (the instrumented engine is layer-count
+    // agnostic, not just the 2-layer serving shape).
+    let engine = InstrumentedEngine::from_model(&m, &g.features);
     let cfg = CampaignConfig {
         scheme: Scheme::Fused,
         campaigns: 60,
@@ -150,7 +153,7 @@ fn deeper_models_are_checkable_too() {
         threads: 1,
         ..Default::default()
     };
-    let r = run_campaigns(&em, &g.features, &cfg);
+    let r = run_campaigns(&engine, &cfg);
     for (_, t) in &r.per_threshold {
         assert_eq!(t.total(), 60);
     }

@@ -6,7 +6,7 @@
 
 use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig, VerifyStatus};
 use gcn_abft::graph::DatasetId;
-use gcn_abft::runtime::{ExecMode, OperandPlan};
+use gcn_abft::runtime::{BackendKind, ChecksumScheme, ExecMode, OperandPlan};
 
 fn base_cfg() -> ServerConfig {
     ServerConfig {
@@ -68,6 +68,55 @@ fn verify_status_taxonomy_is_consistent() {
     let s = serve_synthetic(&cfg, 30).unwrap();
     assert_eq!(s.clean + s.recovered + s.failed, s.responses);
     let _ = VerifyStatus::Clean; // type is part of the public API
+}
+
+#[test]
+fn instrumented_backend_serves_and_verifies() {
+    // --backend instrumented: the MAC-level f64 engine behind the same
+    // coordinator; fault-free passes must verify under both schemes.
+    for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+        let mut cfg = base_cfg();
+        cfg.backend = BackendKind::Instrumented;
+        cfg.scheme = scheme;
+        let s = serve_synthetic(&cfg, 16).unwrap();
+        assert_eq!(s.backend, "instrumented");
+        assert_eq!(s.scheme, scheme.name());
+        assert_eq!(s.responses, 16);
+        assert_eq!(s.clean, 16, "{s:?}");
+        assert_eq!(s.metrics.checks_fired, 0, "fault-free must not alarm");
+    }
+}
+
+#[test]
+fn split_scheme_detects_and_recovers_on_native_backend() {
+    // The split baseline is selectable at the API and its four check
+    // points drive the same detect→retry→release loop.
+    let mut cfg = base_cfg();
+    cfg.scheme = ChecksumScheme::Split;
+    cfg.inject_every = Some(2);
+    let s = serve_synthetic(&cfg, 24).unwrap();
+    assert_eq!(s.scheme, "split");
+    assert!(s.metrics.injected_faults > 0);
+    assert_eq!(
+        s.metrics.checks_fired, s.metrics.injected_faults,
+        "every injected corruption must fire exactly one check: {s:?}"
+    );
+    assert_eq!(s.failed, 0, "retries must recover: {s:?}");
+    assert!(s.recovered > 0);
+}
+
+#[test]
+fn pjrt_backend_refuses_cleanly_without_the_feature() {
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let mut cfg = base_cfg();
+        cfg.backend = BackendKind::Pjrt;
+        let err = serve_synthetic(&cfg, 4).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("pjrt"),
+            "unexpected error: {err:#}"
+        );
+    }
 }
 
 #[test]

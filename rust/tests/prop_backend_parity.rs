@@ -1,0 +1,176 @@
+//! Backend-parity property tests: every [`GcnBackend`] implementation
+//! must compute the same forward. On random synthetic graphs, the
+//! `instrumented` backend with the no-op fault model must match
+//! `native-dense`/`native-banded` logits within f32→f64 tolerance and
+//! produce **identical fused-vs-split alarm decisions** under the
+//! serving policy — the trait-level statement of the paper's claim that
+//! the checksum checks the product, not the execution strategy.
+
+use gcn_abft::coordinator::ServePolicy;
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::synth::{generate, SynthSpec};
+use gcn_abft::runtime::{
+    ChecksumScheme, GcnBackend, GcnOperands, Instrumented, NativeBanded, NativeDense,
+};
+use gcn_abft::util::proptest::{check, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+
+fn gen_case(rng: &mut Pcg64) -> (SynthSpec, u64, u64, usize) {
+    let n = 20 + rng.gen_index(40);
+    let spec = SynthSpec {
+        name: "prop-backend".into(),
+        num_nodes: n,
+        num_edges: 2 * n,
+        feat_dim: 8 + rng.gen_index(24),
+        feat_nnz: 4 * n,
+        num_classes: 2 + rng.gen_index(4),
+        homophily: 0.8,
+        binary_features: rng.gen_bool(0.5),
+        feature_scale: 1.0,
+    };
+    (spec, rng.next_u64(), rng.next_u64(), 2 + rng.gen_index(4))
+}
+
+#[test]
+fn prop_instrumented_matches_native_backends() {
+    check(
+        &Config {
+            cases: 16,
+            seed: 0xBAC7,
+            ..Default::default()
+        },
+        gen_case,
+        |(spec, graph_seed, model_seed, bands)| {
+            let graph = generate(spec, *graph_seed);
+            let model = GcnModel::two_layer(&graph, 8, *model_seed);
+            let w1 = model.layers[0].weights.clone();
+            let w2 = model.layers[1].weights.clone();
+            let dense = GcnOperands::dense(
+                graph.features.to_dense(),
+                model.adjacency.to_dense(),
+                w1.clone(),
+                w2.clone(),
+            )
+            .map_err(|e| format!("dense operands: {e}"))?;
+            let sparse =
+                GcnOperands::sparse(graph.features.clone(), &model.adjacency, w1, w2, *bands)
+                    .map_err(|e| format!("sparse operands: {e}"))?;
+
+            for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+                let nd = NativeDense::new(2, scheme)
+                    .run(&dense, &[])
+                    .map_err(|e| format!("native-dense: {e}"))?;
+                let nb = NativeBanded::new(2, scheme)
+                    .run(&sparse, &[])
+                    .map_err(|e| format!("native-banded: {e}"))?;
+                let inst = Instrumented::for_operands(&sparse, scheme, 2)
+                    .and_then(|b| b.run(&sparse, &[]))
+                    .map_err(|e| format!("instrumented: {e}"))?;
+
+                let expect_checks = match scheme {
+                    ChecksumScheme::Fused => 2,
+                    ChecksumScheme::Split => 4,
+                };
+                for (name, out) in [("dense", &nd), ("banded", &nb), ("instrumented", &inst)] {
+                    if out.predicted.len() != expect_checks {
+                        return Err(format!(
+                            "{name}: {} checks under {scheme:?}, want {expect_checks}",
+                            out.predicted.len()
+                        ));
+                    }
+                }
+
+                // Logits: f64 engine vs f32 kernels within f32 tolerance.
+                let scale = nd
+                    .logits
+                    .data()
+                    .iter()
+                    .fold(0f32, |m, &v| m.max(v.abs()))
+                    .max(1.0);
+                let d_inst = inst.logits.max_abs_diff(&nd.logits);
+                if d_inst / scale > 1e-4 {
+                    return Err(format!(
+                        "instrumented logits diverge from native by {d_inst} \
+                         (scale {scale}, {scheme:?})"
+                    ));
+                }
+                let d_band = nb.logits.max_abs_diff(&nd.logits);
+                if d_band / scale > 1e-5 {
+                    return Err(format!(
+                        "banded logits diverge from dense by {d_band} ({scheme:?})"
+                    ));
+                }
+
+                // Identical alarm decisions on the fault-free pass.
+                let policy = ServePolicy::default();
+                let decisions = [
+                    policy.verify(&nd).ok,
+                    policy.verify(&nb).ok,
+                    policy.verify(&inst).ok,
+                ];
+                if decisions != [true, true, true] {
+                    return Err(format!(
+                        "fault-free alarm decisions diverge under {scheme:?}: \
+                         dense={} banded={} instrumented={}",
+                        decisions[0], decisions[1], decisions[2]
+                    ));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_plans_agree_on_true_ops_across_backends() {
+    // plan() is the analytic side of the trait: every backend sees the
+    // same true-output work, and fused strictly undercuts split on
+    // checking ops for every backend.
+    check(
+        &Config {
+            cases: 24,
+            seed: 0xBAC8,
+            ..Default::default()
+        },
+        gen_case,
+        |(spec, graph_seed, model_seed, bands)| {
+            let graph = generate(spec, *graph_seed);
+            let model = GcnModel::two_layer(&graph, 8, *model_seed);
+            let sparse = GcnOperands::sparse(
+                graph.features.clone(),
+                &model.adjacency,
+                model.layers[0].weights.clone(),
+                model.layers[1].weights.clone(),
+                *bands,
+            )
+            .map_err(|e| format!("operands: {e}"))?;
+            let mut true_ops = Vec::new();
+            for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+                let nb = NativeBanded::new(1, scheme)
+                    .plan(&sparse)
+                    .map_err(|e| format!("plan: {e}"))?;
+                let inst = Instrumented::for_operands(&sparse, scheme, 1)
+                    .and_then(|b| b.plan(&sparse))
+                    .map_err(|e| format!("plan: {e}"))?;
+                if nb.true_ops != inst.true_ops {
+                    return Err(format!(
+                        "true ops disagree: native {} vs instrumented {}",
+                        nb.true_ops, inst.true_ops
+                    ));
+                }
+                true_ops.push((nb.check_ops, inst.check_ops));
+            }
+            let (fused_native, fused_inst) = true_ops[0];
+            let (split_native, split_inst) = true_ops[1];
+            if fused_native >= split_native || fused_inst >= split_inst {
+                return Err(format!(
+                    "fused must undercut split: native {fused_native}/{split_native}, \
+                     instrumented {fused_inst}/{split_inst}"
+                ));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}

@@ -13,7 +13,7 @@ use gcn_abft::abft::{
     fused_forward_checked, fused_layer_checked, split_forward_checked, split_layer_checked,
     CheckPolicy, EngineInput, EngineModel,
 };
-use gcn_abft::fault::{FaultPlan, InjectHook, PlannedFault};
+use gcn_abft::fault::{FaultPlan, PlannedFault};
 use gcn_abft::gcn::GcnModel;
 use gcn_abft::graph::synth::{generate, SynthSpec};
 use gcn_abft::sparse::Csr;
@@ -344,7 +344,7 @@ fn prop_fused_equals_split_on_random_synthetic_graphs() {
                         bit64: 62,
                     }],
                 };
-                let mut hook = InjectHook::new(&plan);
+                let mut hook = plan.hook();
                 let checks = if scheme_is_fused {
                     fused_forward_checked(&em, &graph.features, &mut hook).1
                 } else {
