@@ -6,11 +6,12 @@
 //! that can run both (Cora/Citeseer), plus a reduced-scale PubMed run
 //! that only the sparse path can serve at paper shape.
 
-use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServerConfig};
+use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, Priority, ServerConfig};
 use gcn_abft::graph::DatasetId;
 use gcn_abft::runtime::{BackendKind, ChecksumScheme, ExecMode};
 use gcn_abft::util::bench::bench_header;
 use gcn_abft::util::parallel::default_threads;
+use std::time::Duration;
 
 fn run_backend(
     dataset: DatasetId,
@@ -117,6 +118,52 @@ fn main() {
     }
 
     println!(
+        "\n-- mixed-priority open-loop: per-priority p99, unbatched vs continuous \
+         coalescing --"
+    );
+    // 60/25/15 interactive/batch/background arrival mix. max_batch 1 is
+    // the no-coalescing baseline (every request its own pass); the
+    // continuous-batching scheduler coalesces arrivals into the next
+    // batch while the current one executes, with the starvation bound
+    // protecting background p99 against the interactive flood.
+    for (label, max_batch) in [("unbatched", 1usize), ("coalesced", 8)] {
+        let cfg = ServerConfig {
+            dataset: DatasetId::Tiny,
+            batch: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+                starvation_factor: 4,
+            },
+            workers: 2,
+            priority_mix: [0.60, 0.25, 0.15],
+            ..Default::default()
+        };
+        match serve_synthetic(&cfg, 192) {
+            Ok(s) => {
+                let m = &s.metrics;
+                let mut line = format!(
+                    "{label:<10} max_batch={max_batch:<2} {:>7.1} req/s  \
+                     promotions {:>2} ",
+                    m.throughput_rps(),
+                    m.starvation_promotions
+                );
+                for (rank, pl) in m.by_priority.iter().enumerate() {
+                    if pl.requests > 0 {
+                        line.push_str(&format!(
+                            " | {} n={:<3} p99 {:>7.2} ms",
+                            Priority::ALL[rank].name(),
+                            pl.requests,
+                            pl.p99_secs * 1e3
+                        ));
+                    }
+                }
+                println!("{line}");
+            }
+            Err(e) => println!("{label}: FAILED ({e:#})"),
+        }
+    }
+
+    println!(
         "\n(batching amortizes the per-pass cost; verification stays a tiny \
          fraction of execute time; the worker sweep should show req/s rising \
          until the worker pool saturates the host's cores; sparse operands \
@@ -125,6 +172,8 @@ fn main() {
          backend A/B shows the MAC-instrumented f64 engine orders of \
          magnitude slower than the native kernels — it buys op-exact fault \
          timelines, not throughput — and split costing more checking work \
-         than fused on both backends)"
+         than fused on both backends; the mixed-priority sweep should show \
+         continuous coalescing lifting throughput over the unbatched \
+         baseline while the starvation bound keeps background p99 bounded)"
     );
 }

@@ -1,10 +1,47 @@
-//! Dynamic batcher: coalesce concurrent inference requests into one
-//! accelerator pass, bounded by batch size and a latency deadline —
-//! the standard continuous-batching control loop of serving systems.
+//! Continuous-batching scheduler: a priority-aware admission queue that
+//! coalesces newly arrived requests into the *next* batch while the
+//! current one is still executing on a worker.
+//!
+//! The old control loop (one batcher thread blocking on an mpsc, going
+//! idle while the backend ran) closed a batch on size/deadline and then
+//! stopped admitting — exactly when load is highest the next
+//! accelerator pass started under-filled. Here admission never blocks
+//! on a forward: producers [`Scheduler::submit`] into the queue at any
+//! time, and each executor pulls its next batch directly with
+//! [`Scheduler::next_batch`] the moment it finishes the previous one
+//! (double-buffered by construction — while worker A executes, the
+//! queue keeps filling for whoever pulls next).
+//!
+//! Close policy (mixing size, oldest-waiter deadline, and a starvation
+//! bound):
+//!
+//! * **size** — ≥ `max_batch` requests are queued;
+//! * **deadline** — some queued request has waited out its hold budget,
+//!   `min(max_wait, request.deadline)`, measured from *arrival* (a
+//!   request admitted with an already-expired budget closes the batch
+//!   immediately — the old loop's idle-spin edge, where the first
+//!   member's expired deadline still waited out a full `recv_timeout`,
+//!   is gone);
+//! * **drain** — the scheduler was shut down; whatever is queued is
+//!   released without waiting.
+//!
+//! Members are picked in priority order (rank, then arrival) — except
+//! that a request older than `starvation_factor × max_wait`, or past
+//! its **explicit per-request deadline**, is **force included** ahead
+//! of any priority, so background traffic is never starved by an
+//! interactive flood: no request waits in the admission queue past the
+//! starvation bound while batches are closing, and a caller-declared
+//! deadline is honored in member selection, not just in close timing.
+//!
+//! Every decision is a pure function of the queue and a [`Tick`] from
+//! the [`Clock`], so the whole policy is tested deterministically on a
+//! [`super::clock::VirtualClock`] with zero real sleeps
+//! (`tests/scheduler_virtual_clock.rs`).
 
+use super::clock::{Clock, MonotonicClock, Tick};
 use super::request::InferenceRequest;
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::time::{Duration, Instant};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// Batching policy.
 #[derive(Debug, Clone, Copy)]
@@ -13,6 +50,9 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// ... or when the oldest member has waited this long.
     pub max_wait: Duration,
+    /// A request older than `starvation_factor × max_wait` is force
+    /// included in the next batch regardless of priority pressure.
+    pub starvation_factor: u32,
 }
 
 impl Default for BatchPolicy {
@@ -20,14 +60,39 @@ impl Default for BatchPolicy {
         Self {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
+            starvation_factor: 4,
         }
     }
 }
 
-/// A closed batch.
+impl BatchPolicy {
+    /// The absolute age past which a queued request is starved:
+    /// `starvation_factor × max_wait` (factor clamped to ≥ 1).
+    pub fn starvation_bound(&self) -> Duration {
+        self.max_wait * self.starvation_factor.max(1)
+    }
+}
+
+/// Why a batch was closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// `max_batch` requests were ready.
+    Size,
+    /// A queued request waited out its hold budget.
+    Deadline,
+    /// A starved request was force-included over priority order.
+    Starvation,
+    /// Shutdown drain: remaining requests released without waiting.
+    Drain,
+}
+
+/// A closed batch. `requests` are in scheduling order: force-included
+/// members (past the starvation bound or an explicit deadline) first,
+/// then the rest — both groups sorted by (priority, arrival).
 #[derive(Debug)]
 pub struct Batch {
     pub requests: Vec<InferenceRequest>,
+    pub closed_by: CloseReason,
 }
 
 impl Batch {
@@ -39,91 +104,401 @@ impl Batch {
     }
 }
 
-/// Pull one batch from `rx` under `policy`. Returns `None` when the
-/// channel is closed and drained. Blocks for the first request, then
-/// fills greedily until size or deadline.
-pub fn next_batch(rx: &Receiver<InferenceRequest>, policy: &BatchPolicy) -> Option<Batch> {
-    let first = rx.recv().ok()?;
-    let deadline = Instant::now() + policy.max_wait;
-    let mut requests = vec![first];
-    while requests.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(r) => requests.push(r),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+/// Scheduler counters (snapshot via [`Scheduler::stats`]).
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub submitted: u64,
+    pub batches: u64,
+    /// Requests force-included into a batch over priority order —
+    /// because they crossed the starvation bound or an explicit
+    /// per-request deadline.
+    pub starvation_promotions: u64,
+}
+
+/// One queued request with its admission bookkeeping.
+#[derive(Debug)]
+struct Queued {
+    req: InferenceRequest,
+    arrived: Tick,
+    seq: u64,
+}
+
+impl Queued {
+    /// How long the scheduler may hold this request before a close is
+    /// forced: the policy-wide `max_wait`, tightened by the request's
+    /// own deadline when one is set.
+    fn hold_deadline(&self, p: &BatchPolicy) -> Tick {
+        let budget = match self.req.deadline {
+            Some(d) => d.min(p.max_wait),
+            None => p.max_wait,
+        };
+        self.arrived.after(budget)
+    }
+
+    /// Whether the request's **declared** deadline (not the
+    /// max_wait-capped hold budget) has expired — the condition that
+    /// promotes it over priority order in member selection. A deadline
+    /// looser than `max_wait` must not jump priority any earlier than
+    /// the caller asked for.
+    fn deadline_expired(&self, now: Tick) -> bool {
+        match self.req.deadline {
+            Some(d) => now >= self.arrived.after(d),
+            None => false,
         }
     }
-    Some(Batch { requests })
+}
+
+#[derive(Debug, Default)]
+struct State {
+    queue: Vec<Queued>,
+    shutdown: bool,
+    next_seq: u64,
+    stats: SchedStats,
+}
+
+/// The continuous-batching scheduler. Shared by reference between the
+/// admission side ([`submit`](Scheduler::submit)) and any number of
+/// executor threads ([`next_batch`](Scheduler::next_batch)).
+#[derive(Debug)]
+pub struct Scheduler<C: Clock = MonotonicClock> {
+    clock: C,
+    policy: BatchPolicy,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Scheduler<MonotonicClock> {
+    /// A real-time scheduler (production path).
+    pub fn with_policy(policy: BatchPolicy) -> Scheduler<MonotonicClock> {
+        Scheduler::new(MonotonicClock::new(), policy)
+    }
+}
+
+impl<C: Clock> Scheduler<C> {
+    pub fn new(clock: C, policy: BatchPolicy) -> Scheduler<C> {
+        Scheduler {
+            clock,
+            policy,
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The scheduler's clock — tests advance a
+    /// [`super::clock::VirtualClock`] through this.
+    pub fn clock(&self) -> &C {
+        &self.clock
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Admit one request. Never blocks on an executing forward; stamps
+    /// the arrival tick used by every close decision.
+    pub fn submit(&self, req: InferenceRequest) {
+        let arrived = self.clock.now();
+        let mut st = self.state.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.stats.submitted += 1;
+        st.queue.push(Queued { req, arrived, seq });
+        self.cv.notify_all();
+    }
+
+    /// Close admission: queued requests drain (immediately, without
+    /// waiting out deadlines) and then [`next_batch`](Self::next_batch)
+    /// returns `None`.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Requests currently queued.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.state.lock().unwrap().stats.clone()
+    }
+
+    /// Non-blocking pull: close and return a batch if the policy says
+    /// so at `clock.now()`, else `None`. This is the whole scheduler
+    /// surface a virtual-clock test needs.
+    pub fn poll(&self) -> Option<Batch> {
+        let now = self.clock.now();
+        let mut st = self.state.lock().unwrap();
+        Self::close_ready(&mut st, &self.policy, now)
+    }
+
+    /// Blocking pull for executors: waits (on real time — pair with a
+    /// [`MonotonicClock`]) until a batch closes, and returns `None`
+    /// once the scheduler is shut down and drained.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = self.clock.now();
+            if let Some(b) = Self::close_ready(&mut st, &self.policy, now) {
+                return Some(b);
+            }
+            if st.shutdown && st.queue.is_empty() {
+                return None;
+            }
+            st = match Self::next_wakeup(&st, &self.policy, now) {
+                Some(wait) => self.cv.wait_timeout(st, wait).unwrap().0,
+                None => self.cv.wait(st).unwrap(),
+            };
+        }
+    }
+
+    /// The close decision: size, oldest-waiter deadline, or drain.
+    fn close_ready(st: &mut State, p: &BatchPolicy, now: Tick) -> Option<Batch> {
+        if st.queue.is_empty() {
+            return None;
+        }
+        let reason = if st.queue.len() >= p.max_batch.max(1) {
+            CloseReason::Size
+        } else if st.queue.iter().any(|q| now >= q.hold_deadline(p)) {
+            CloseReason::Deadline
+        } else if st.shutdown {
+            CloseReason::Drain
+        } else {
+            return None;
+        };
+        Some(Self::take_batch(st, p, now, reason))
+    }
+
+    /// Sleep budget until the next time-driven close (None: queue empty,
+    /// only a submit or shutdown can make progress).
+    fn next_wakeup(st: &State, p: &BatchPolicy, now: Tick) -> Option<Duration> {
+        st.queue
+            .iter()
+            .map(|q| q.hold_deadline(p))
+            .min()
+            .map(|dl| dl.since(now).max(Duration::from_micros(10)))
+    }
+
+    /// Select and remove up to `max_batch` members: urgent requests
+    /// first, then by (priority rank, arrival, seq). Urgent = past the
+    /// starvation bound, or past an **explicit** per-request deadline —
+    /// a caller-declared latency budget must be honored in selection
+    /// too, not only in close timing, or size pressure could hold the
+    /// request all the way to the starvation bound. (Plain `max_wait`
+    /// aging deliberately does *not* jump priority: under overload that
+    /// would collapse priority scheduling into FIFO.)
+    fn take_batch(st: &mut State, p: &BatchPolicy, now: Tick, reason: CloseReason) -> Batch {
+        let n = st.queue.len();
+        let take = p.max_batch.max(1).min(n);
+        let bound = p.starvation_bound();
+        let starved: Vec<bool> = st
+            .queue
+            .iter()
+            .map(|q| now >= q.arrived.after(bound))
+            .collect();
+        let urgent: Vec<bool> = st
+            .queue
+            .iter()
+            .zip(&starved)
+            .map(|(q, &s)| s || q.deadline_expired(now))
+            .collect();
+
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| {
+            let q = &st.queue[i];
+            (!urgent[i], q.req.priority.rank(), q.arrived, q.seq)
+        });
+        order.truncate(take);
+
+        // Promotions: selected urgent members that a pure (priority,
+        // arrival) cut of the same size would have left out.
+        let mut promotions = 0u64;
+        let mut starved_promoted = false;
+        if n > take {
+            let mut by_prio: Vec<usize> = (0..n).collect();
+            by_prio.sort_by_key(|&i| {
+                let q = &st.queue[i];
+                (q.req.priority.rank(), q.arrived, q.seq)
+            });
+            by_prio.truncate(take);
+            for &i in &order {
+                if urgent[i] && !by_prio.contains(&i) {
+                    promotions += 1;
+                    if starved[i] {
+                        starved_promoted = true;
+                    }
+                }
+            }
+        }
+
+        let mut rank_of = vec![usize::MAX; n];
+        for (rank, &i) in order.iter().enumerate() {
+            rank_of[i] = rank;
+        }
+        let queue = std::mem::take(&mut st.queue);
+        let mut picked: Vec<(usize, InferenceRequest)> = Vec::with_capacity(take);
+        for (i, q) in queue.into_iter().enumerate() {
+            if rank_of[i] != usize::MAX {
+                picked.push((rank_of[i], q.req));
+            } else {
+                st.queue.push(q);
+            }
+        }
+        picked.sort_by_key(|(rank, _)| *rank);
+
+        st.stats.batches += 1;
+        st.stats.starvation_promotions += promotions;
+        let closed_by = if starved_promoted {
+            CloseReason::Starvation
+        } else {
+            reason
+        };
+        Batch {
+            requests: picked.into_iter().map(|(_, r)| r).collect(),
+            closed_by,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::clock::VirtualClock;
+    use super::super::request::Priority;
     use super::*;
-    use std::sync::mpsc;
-    use std::time::Instant;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
 
     fn req(id: u64) -> InferenceRequest {
-        InferenceRequest {
-            id,
-            query_nodes: vec![0],
-            perturbations: vec![],
-            submitted: Instant::now(),
-        }
+        InferenceRequest::new(id, vec![0], vec![])
+    }
+
+    fn sched(max_batch: usize, max_wait_ms: u64, k: u32) -> Scheduler<VirtualClock> {
+        Scheduler::new(
+            VirtualClock::new(),
+            BatchPolicy {
+                max_batch,
+                max_wait: ms(max_wait_ms),
+                starvation_factor: k,
+            },
+        )
     }
 
     #[test]
-    fn fills_to_max_batch() {
-        let (tx, rx) = mpsc::channel();
+    fn fills_to_max_batch_in_fifo_order_at_equal_priority() {
+        let s = sched(4, 50, 4);
         for i in 0..10 {
-            tx.send(req(i)).unwrap();
+            s.submit(req(i));
         }
-        let policy = BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_millis(50),
-        };
-        let b = next_batch(&rx, &policy).unwrap();
+        let b = s.poll().unwrap();
         assert_eq!(b.len(), 4);
+        assert_eq!(b.closed_by, CloseReason::Size);
         let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(s.pending(), 6);
     }
 
     #[test]
-    fn deadline_closes_partial_batch() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(0)).unwrap();
-        let policy = BatchPolicy {
-            max_batch: 100,
-            max_wait: Duration::from_millis(10),
-        };
-        let t0 = Instant::now();
-        let b = next_batch(&rx, &policy).unwrap();
+    fn deadline_closes_partial_batch_without_real_time() {
+        let s = sched(100, 10, 4);
+        s.submit(req(0));
+        assert!(s.poll().is_none(), "no close before the hold deadline");
+        s.clock().advance(ms(9));
+        assert!(s.poll().is_none());
+        s.clock().advance(ms(1));
+        let b = s.poll().unwrap();
         assert_eq!(b.len(), 1);
-        assert!(t0.elapsed() < Duration::from_millis(500));
+        assert_eq!(b.closed_by, CloseReason::Deadline);
     }
 
     #[test]
-    fn closed_channel_yields_none() {
-        let (tx, rx) = mpsc::channel::<InferenceRequest>();
-        drop(tx);
-        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    fn priority_orders_members_within_a_window() {
+        let s = sched(8, 5, 4);
+        s.submit(req(0).with_priority(Priority::Background));
+        s.submit(req(1).with_priority(Priority::Batch));
+        s.submit(req(2).with_priority(Priority::Interactive));
+        s.submit(req(3).with_priority(Priority::Interactive));
+        s.clock().advance(ms(5));
+        let b = s.poll().unwrap();
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 1, 0], "priority rank, FIFO within rank");
     }
 
     #[test]
-    fn drains_remaining_after_close() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(0)).unwrap();
-        tx.send(req(1)).unwrap();
-        drop(tx);
-        let policy = BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_millis(5),
-        };
-        let b = next_batch(&rx, &policy).unwrap();
+    fn shutdown_drains_immediately_then_yields_none() {
+        let s = sched(8, 1_000_000, 1);
+        s.submit(req(0));
+        s.submit(req(1));
+        s.shutdown();
+        // next_batch must not wait out the huge max_wait: drain closes
+        // immediately (and this blocking call returns at once).
+        let b = s.next_batch().unwrap();
         assert_eq!(b.len(), 2);
-        assert!(next_batch(&rx, &policy).is_none());
+        assert_eq!(b.closed_by, CloseReason::Drain);
+        assert!(s.next_batch().is_none());
+        assert!(s.poll().is_none());
+    }
+
+    #[test]
+    fn expired_request_closes_immediately() {
+        // The old next_batch idle-spin edge: a first member whose
+        // deadline is already spent still waited out recv_timeout. A
+        // zero hold budget must close at the very tick of admission.
+        let s = sched(8, 5, 4);
+        s.submit(req(0).with_deadline(Duration::ZERO));
+        let b = s.poll().expect("already-expired request must close now");
+        assert_eq!(b.closed_by, CloseReason::Deadline);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn starved_background_is_promoted_over_priority_order() {
+        let s = sched(2, 5, 3); // starvation bound = 15 ms
+        s.submit(req(0).with_priority(Priority::Background));
+        // Flood: two fresh interactive requests per window.
+        s.submit(req(1));
+        s.submit(req(2));
+        let b = s.poll().unwrap();
+        assert_eq!(b.closed_by, CloseReason::Size);
+        assert!(b.requests.iter().all(|r| r.priority == Priority::Interactive));
+        s.clock().advance(ms(15));
+        s.submit(req(3));
+        s.submit(req(4));
+        let b = s.poll().unwrap();
+        assert_eq!(b.closed_by, CloseReason::Starvation);
+        assert_eq!(b.requests[0].id, 0, "starved member leads the batch");
+        assert_eq!(s.stats().starvation_promotions, 1);
+    }
+
+    #[test]
+    fn stats_count_submissions_and_batches() {
+        let s = sched(2, 5, 4);
+        for i in 0..5 {
+            s.submit(req(i));
+        }
+        let mut batches = 0;
+        while s.poll().is_some() {
+            batches += 1;
+        }
+        assert_eq!(batches, 2, "fifth request still inside its window");
+        s.shutdown();
+        assert!(s.next_batch().is_some());
+        let st = s.stats();
+        assert_eq!(st.submitted, 5);
+        assert_eq!(st.batches, 3);
+    }
+
+    #[test]
+    fn policy_defaults_are_sane() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.max_batch, 8);
+        assert_eq!(p.starvation_bound(), p.max_wait * 4);
+        let p = BatchPolicy {
+            starvation_factor: 0,
+            ..Default::default()
+        };
+        assert_eq!(p.starvation_bound(), p.max_wait, "factor clamps to 1");
     }
 }

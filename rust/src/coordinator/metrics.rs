@@ -62,6 +62,17 @@ impl LatencyHistogram {
     }
 }
 
+/// Latency percentiles for one [`crate::coordinator::Priority`] class
+/// (indexed by `Priority::rank()` in [`ServeMetrics::by_priority`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PriorityLatency {
+    pub requests: u64,
+    /// Percentiles in seconds; NaN when the class saw no requests.
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub p99_secs: f64,
+}
+
 /// Aggregate serving metrics. The latency percentiles live here
 /// directly (filled from the merged per-worker histograms when a serve
 /// run finishes), not in a side channel.
@@ -69,11 +80,19 @@ impl LatencyHistogram {
 pub struct ServeMetrics {
     pub requests: u64,
     pub batches: u64,
+    /// Forwards per batch after overlay-equivalence grouping (requests
+    /// with identical perturbation sets share one forward, so batching
+    /// never changes an answer).
+    pub overlay_groups: u64,
     pub executions: u64,
     pub checks_fired: u64,
     pub retries: u64,
+    /// Forwards whose verification never passed within the retry budget.
     pub failures: u64,
     pub injected_faults: u64,
+    /// Requests the scheduler force-included over priority order
+    /// (starvation bound or expired per-request deadline).
+    pub starvation_promotions: u64,
     pub exec_secs: f64,
     pub verify_secs: f64,
     pub wall_secs: f64,
@@ -82,6 +101,8 @@ pub struct ServeMetrics {
     pub p50_secs: f64,
     pub p95_secs: f64,
     pub p99_secs: f64,
+    /// Per-priority request latencies, indexed by `Priority::rank()`.
+    pub by_priority: [PriorityLatency; 3],
 }
 
 impl ServeMetrics {
@@ -90,6 +111,16 @@ impl ServeMetrics {
         self.p50_secs = lat.percentile(50.0);
         self.p95_secs = lat.percentile(95.0);
         self.p99_secs = lat.percentile(99.0);
+    }
+
+    /// Fill one priority class's percentiles from its histogram.
+    pub fn set_priority_percentiles(&mut self, rank: usize, lat: &LatencyHistogram) {
+        self.by_priority[rank] = PriorityLatency {
+            requests: lat.count() as u64,
+            p50_secs: lat.percentile(50.0),
+            p95_secs: lat.percentile(95.0),
+            p99_secs: lat.percentile(99.0),
+        };
     }
     pub fn throughput_rps(&self) -> f64 {
         self.requests as f64 / self.wall_secs.max(1e-9)
@@ -163,6 +194,25 @@ mod tests {
         let mut empty = ServeMetrics::default();
         empty.set_latency_percentiles(&LatencyHistogram::new());
         assert!(empty.p50_secs.is_nan());
+    }
+
+    #[test]
+    fn per_priority_percentiles_fill_their_slot() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let mut m = ServeMetrics::default();
+        m.set_priority_percentiles(2, &h);
+        assert_eq!(m.by_priority[2].requests, 100);
+        assert!((m.by_priority[2].p50_secs - 0.05).abs() < 0.002);
+        assert!(m.by_priority[2].p95_secs <= m.by_priority[2].p99_secs);
+        // Untouched classes stay at their default.
+        assert_eq!(m.by_priority[0].requests, 0);
+        // An empty class reports NaN percentiles, matching the
+        // serve-wide convention.
+        m.set_priority_percentiles(0, &LatencyHistogram::new());
+        assert!(m.by_priority[0].p50_secs.is_nan());
     }
 
     #[test]

@@ -1,18 +1,23 @@
-//! L3 serving coordinator: request routing, dynamic batching, worker
-//! pool over runtime executables, and **online GCN-ABFT verification** of
-//! every response — the deployment shape the paper's checker is built
-//! for (detect-before-release, re-execute on transient faults).
+//! L3 serving coordinator: request routing, priority-aware continuous
+//! batching, worker pool over runtime executables, and **online
+//! GCN-ABFT verification** of every response — the deployment shape the
+//! paper's checker is built for (detect-before-release, re-execute on
+//! transient faults).
 
 pub mod batcher;
+pub mod clock;
 pub mod metrics;
 pub mod request;
 pub mod server;
 pub mod verify;
 
-pub use batcher::{Batch, BatchPolicy};
-pub use metrics::{LatencyHistogram, ServeMetrics};
-pub use request::{InferenceRequest, InferenceResponse, Perturbation, VerifyStatus};
-pub use server::{run_server, ModelState, ServerConfig};
+pub use batcher::{Batch, BatchPolicy, CloseReason, SchedStats, Scheduler};
+pub use clock::{Clock, MonotonicClock, Tick, VirtualClock};
+pub use metrics::{LatencyHistogram, PriorityLatency, ServeMetrics};
+pub use request::{
+    InferenceRequest, InferenceResponse, Perturbation, Priority, VerifyStatus,
+};
+pub use server::{overlay_groups, run_server, ModelState, ServerConfig};
 pub use verify::{ServePolicy, VerifyReport};
 
 use crate::graph::DatasetId;
@@ -21,7 +26,7 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use anyhow::{anyhow, Result};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Synthetic client driver + server, used by `gcn-abft serve` and the
 /// `serve_inference` example. Returns a human-readable summary.
@@ -30,7 +35,29 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         anyhow!("unknown dataset (serving supports tiny, cora, citeseer, pubmed, nell)")
     })?;
     let requests = args.get_usize("requests", 64).map_err(|e| anyhow!("{e}"))?;
-    let batch = args.get_usize("batch", 8).map_err(|e| anyhow!("{e}"))?;
+    // `--max-batch` is the canonical spelling; `--batch` stays as an
+    // alias for older scripts.
+    let batch_alias = args.get_usize("batch", 8).map_err(|e| anyhow!("{e}"))?;
+    let max_batch = args
+        .get_usize("max-batch", batch_alias)
+        .map_err(|e| anyhow!("{e}"))?;
+    let max_wait_ms = args
+        .get_f64("max-wait-ms", 5.0)
+        .map_err(|e| anyhow!("{e}"))?;
+    // Upper bound keeps Duration::from_secs_f64 panic-free (an absurd
+    // wait would also mean a batch that may never close before drain).
+    if !(max_wait_ms > 0.0 && max_wait_ms <= 3_600_000.0) {
+        return Err(anyhow!(
+            "--max-wait-ms must be in (0, 3600000] (got {max_wait_ms})"
+        ));
+    }
+    let starvation_factor = args
+        .get_usize("starvation-factor", 4)
+        .map_err(|e| anyhow!("{e}"))?;
+    if starvation_factor == 0 {
+        return Err(anyhow!("--starvation-factor must be ≥ 1"));
+    }
+    let priority_mix = parse_priority_mix(&args.get_str("priority-mix", "1,0,0"))?;
     let workers = args.get_usize("workers", 2).map_err(|e| anyhow!("{e}"))?;
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!("{e}"))?;
     let scale = args.get_f64("scale", 1.0).map_err(|e| anyhow!("{e}"))?;
@@ -57,8 +84,9 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         dataset,
         artifacts_dir: args.get_str("artifacts", "artifacts").into(),
         batch: BatchPolicy {
-            max_batch: batch,
-            ..Default::default()
+            max_batch,
+            max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+            starvation_factor: starvation_factor as u32,
         },
         workers,
         inject_every,
@@ -69,6 +97,7 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         train_epochs,
         backend,
         scheme,
+        priority_mix,
         ..Default::default()
     };
     let summary = serve_synthetic(&cfg, requests)?;
@@ -79,12 +108,38 @@ pub fn serve_cli(args: &Args) -> Result<String> {
     }
 }
 
+/// Parse `--priority-mix i,b,bg` into the three driver weights.
+fn parse_priority_mix(raw: &str) -> Result<[f64; 3]> {
+    let parts: Vec<&str> = raw.split(',').collect();
+    if parts.len() != 3 {
+        return Err(anyhow!(
+            "--priority-mix wants three comma-separated weights \
+             (interactive,batch,background), got {raw:?}"
+        ));
+    }
+    let mut mix = [0f64; 3];
+    for (slot, part) in mix.iter_mut().zip(&parts) {
+        *slot = part
+            .trim()
+            .parse::<f64>()
+            .map_err(|e| anyhow!("priority-mix: {e}"))?;
+        if !slot.is_finite() || *slot < 0.0 {
+            return Err(anyhow!("priority-mix weights must be finite and ≥ 0"));
+        }
+    }
+    if mix.iter().sum::<f64>() <= 0.0 {
+        return Err(anyhow!("priority-mix must have a positive total"));
+    }
+    Ok(mix)
+}
+
 /// Outcome of a synthetic serving run.
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
     pub dataset: String,
     /// Aggregated serving metrics (latency percentiles included:
-    /// `p50_secs`/`p95_secs`/`p99_secs` — the single source of truth).
+    /// `p50_secs`/`p95_secs`/`p99_secs` serve-wide plus `by_priority`
+    /// per class — the single source of truth).
     pub metrics: ServeMetrics,
     pub responses: usize,
     pub clean: usize,
@@ -105,11 +160,13 @@ pub struct ServeSummary {
 impl ServeSummary {
     pub fn render(&self) -> String {
         let m = &self.metrics;
-        format!(
+        let mut out = format!(
             "SERVE {} — {} requests in {:.2}s ({:.1} req/s)\n\
              backend: {} (scheme {}) | operands: {} ({:.1} MB resident{})\n\
-             batches {} (mean size {:.1}) | executions {} | p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
-             verification: {:.3}% of execute time | checks fired {} | injected {} | retries {} | failures {}\n\
+             batches {} (mean size {:.1}) | groups {} | executions {} | \
+             p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
+             verification: {:.3}% of execute time | checks fired {} | injected {} | \
+             retries {} | failures {} | starvation promotions {}\n\
              responses: {} clean, {} recovered-after-retry, {} failed",
             self.dataset,
             m.requests,
@@ -126,6 +183,7 @@ impl ServeSummary {
             },
             m.batches,
             m.mean_batch(),
+            m.overlay_groups,
             m.executions,
             m.p50_secs * 1e3,
             m.p95_secs * 1e3,
@@ -135,14 +193,51 @@ impl ServeSummary {
             m.injected_faults,
             m.retries,
             m.failures,
+            m.starvation_promotions,
             self.clean,
             self.recovered,
             self.failed,
-        )
+        );
+        let mut prio_line = String::new();
+        for (rank, pl) in m.by_priority.iter().enumerate() {
+            if pl.requests == 0 {
+                continue;
+            }
+            if !prio_line.is_empty() {
+                prio_line.push_str("  |  ");
+            }
+            prio_line.push_str(&format!(
+                "{}: {} reqs  p50 {:.2} ms  p99 {:.2} ms",
+                Priority::ALL[rank].name(),
+                pl.requests,
+                pl.p50_secs * 1e3,
+                pl.p99_secs * 1e3,
+            ));
+        }
+        if !prio_line.is_empty() {
+            out.push_str("\nper-priority: ");
+            out.push_str(&prio_line);
+        }
+        out
     }
 
     pub fn json(&self) -> Json {
         let m = &self.metrics;
+        let by_priority: Vec<Json> = m
+            .by_priority
+            .iter()
+            .enumerate()
+            .filter(|(_, pl)| pl.requests > 0)
+            .map(|(rank, pl)| {
+                Json::obj(vec![
+                    ("priority", Json::from(Priority::ALL[rank].name().to_string())),
+                    ("requests", Json::from(pl.requests)),
+                    ("p50_ms", Json::Num(pl.p50_secs * 1e3)),
+                    ("p95_ms", Json::Num(pl.p95_secs * 1e3)),
+                    ("p99_ms", Json::Num(pl.p99_secs * 1e3)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("dataset", Json::from(self.dataset.clone())),
             ("backend", Json::from(self.backend.to_string())),
@@ -155,14 +250,17 @@ impl ServeSummary {
             ("throughput_rps", Json::Num(m.throughput_rps())),
             ("batches", Json::from(m.batches)),
             ("mean_batch", Json::Num(m.mean_batch())),
+            ("overlay_groups", Json::from(m.overlay_groups)),
             ("p50_ms", Json::Num(m.p50_secs * 1e3)),
             ("p95_ms", Json::Num(m.p95_secs * 1e3)),
             ("p99_ms", Json::Num(m.p99_secs * 1e3)),
+            ("by_priority", Json::Arr(by_priority)),
             ("verify_overhead", Json::Num(m.verify_overhead())),
             ("checks_fired", Json::from(m.checks_fired)),
             ("injected_faults", Json::from(m.injected_faults)),
             ("retries", Json::from(m.retries)),
             ("failures", Json::from(m.failures)),
+            ("starvation_promotions", Json::from(m.starvation_promotions)),
             ("clean", Json::from(self.clean)),
             ("recovered", Json::from(self.recovered)),
             ("failed", Json::from(self.failed)),
@@ -181,13 +279,15 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
     let (ready_tx, ready_rx) = std::sync::mpsc::channel();
 
     // Client driver thread: bursty request arrivals with random what-if
-    // perturbations and query sets. Held back until every worker has
-    // compiled so latencies measure steady-state serving, not executable
-    // warm-up.
+    // perturbations, query sets and priorities. Held back until every
+    // worker has compiled so latencies measure steady-state serving, not
+    // executable warm-up.
     let seed = cfg.seed;
+    let priority_mix = cfg.priority_mix;
     let driver = std::thread::spawn(move || {
         let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
         let mut rng = Pcg64::from_seed(seed ^ 0xD21u64);
+        let mix_total: f64 = priority_mix.iter().sum();
         for id in 0..n_requests {
             let n_pert = rng.gen_index(3);
             let perturbations = (0..n_pert)
@@ -200,8 +300,15 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
                 .collect();
             let k = 1 + rng.gen_index(4);
             let query_nodes = rng.sample_indices(n_nodes, k);
+            let priority = if mix_total > 0.0 {
+                Priority::ALL[rng.gen_weighted(&priority_mix)]
+            } else {
+                Priority::Interactive
+            };
             let req = InferenceRequest {
                 id: id as u64,
+                priority,
+                deadline: None,
                 query_nodes,
                 perturbations,
                 submitted: Instant::now(),

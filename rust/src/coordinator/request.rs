@@ -3,10 +3,12 @@
 //! The serving model (DESIGN.md §3): the graph and weights are resident;
 //! a request carries an optional *feature perturbation overlay* (a
 //! what-if query: "reclassify with these nodes' features changed") plus
-//! the node ids whose classes the caller wants. The batcher coalesces
-//! concurrent requests into one accelerator pass.
+//! the node ids whose classes the caller wants. The scheduler coalesces
+//! concurrent requests into accelerator passes; requests with identical
+//! overlay sets share one forward, so coalescing never changes a
+//! request's answer (pinned by `tests/prop_batching_equivalence.rs`).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A feature overwrite for one node (length must equal feat_dim).
 #[derive(Debug, Clone)]
@@ -15,15 +17,93 @@ pub struct Perturbation {
     pub features: Vec<f32>,
 }
 
+/// Scheduling priority of a request. Declaration order is rank order:
+/// `Interactive` is served first within a batch window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic (default).
+    #[default]
+    Interactive,
+    /// Throughput-oriented bulk traffic.
+    Batch,
+    /// Best-effort traffic, protected only by the starvation bound.
+    Background,
+}
+
+impl Priority {
+    /// All priorities in rank order (index = [`Priority::rank`]).
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::Background];
+
+    /// 0 = most urgent. Used as the scheduler's sort key and as the
+    /// index into per-priority metrics.
+    pub fn rank(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" | "i" => Some(Priority::Interactive),
+            "batch" | "b" => Some(Priority::Batch),
+            "background" | "bg" => Some(Priority::Background),
+            _ => None,
+        }
+    }
+}
+
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub id: u64,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
+    /// Optional per-request latency budget for the admission queue. It
+    /// acts twice: a batch closes no later than
+    /// `min(deadline, policy.max_wait)` after arrival, and once the
+    /// **declared** deadline itself expires the request is
+    /// force-included in the next batch ahead of priority order (a
+    /// deadline looser than `max_wait` jumps priority no earlier than
+    /// the caller asked for). `None` means the policy-wide `max_wait`
+    /// governs close timing and only the starvation bound overrides
+    /// priority.
+    pub deadline: Option<Duration>,
     /// Nodes whose predicted class the caller wants.
     pub query_nodes: Vec<usize>,
-    /// Feature overlay applied for this request's batch.
+    /// Feature overlay applied for this request's forward.
     pub perturbations: Vec<Perturbation>,
     pub submitted: Instant,
+}
+
+impl InferenceRequest {
+    /// A default-priority request with no admission deadline, submitted
+    /// now.
+    pub fn new(id: u64, query_nodes: Vec<usize>, perturbations: Vec<Perturbation>) -> Self {
+        InferenceRequest {
+            id,
+            priority: Priority::Interactive,
+            deadline: None,
+            query_nodes,
+            perturbations,
+            submitted: Instant::now(),
+        }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// Verification status attached to every response.
@@ -31,7 +111,7 @@ pub struct InferenceRequest {
 pub enum VerifyStatus {
     /// All checks passed on the first execution.
     Clean,
-    /// A check fired; the batch was re-executed and then passed.
+    /// A check fired; the forward was re-executed and then passed.
     RecoveredAfterRetry,
     /// A check fired on every attempt; response withheld as faulty.
     Failed,
@@ -41,12 +121,15 @@ pub enum VerifyStatus {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub id: u64,
+    /// The request's scheduling class (rides along for per-priority
+    /// accounting at the client).
+    pub priority: Priority,
     /// (node, predicted class) for each query node.
     pub classes: Vec<(usize, usize)>,
     pub status: VerifyStatus,
     /// End-to-end latency in seconds (submit → respond).
     pub latency_secs: f64,
-    /// Size of the batch this request rode in.
+    /// Size of the scheduling batch this request rode in.
     pub batch_size: usize,
 }
 
@@ -56,17 +139,37 @@ mod tests {
 
     #[test]
     fn request_construction() {
-        let r = InferenceRequest {
-            id: 1,
-            query_nodes: vec![0, 5],
-            perturbations: vec![Perturbation {
+        let r = InferenceRequest::new(
+            1,
+            vec![0, 5],
+            vec![Perturbation {
                 node: 3,
                 features: vec![0.0; 8],
             }],
-            submitted: Instant::now(),
-        };
+        );
         assert_eq!(r.query_nodes.len(), 2);
         assert_eq!(r.perturbations[0].node, 3);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline, None);
+
+        let r = r
+            .with_priority(Priority::Background)
+            .with_deadline(Duration::from_millis(2));
+        assert_eq!(r.priority, Priority::Background);
+        assert_eq!(r.deadline, Some(Duration::from_millis(2)));
+    }
+
+    #[test]
+    fn priority_rank_and_parse() {
+        assert!(Priority::Interactive < Priority::Batch);
+        assert!(Priority::Batch < Priority::Background);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.rank(), i);
+            assert_eq!(Priority::parse(p.name()), Some(*p));
+        }
+        assert_eq!(Priority::parse("BG"), Some(Priority::Background));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Interactive);
     }
 
     #[test]

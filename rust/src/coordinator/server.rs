@@ -1,41 +1,55 @@
-//! The serving coordinator: batcher + executor workers + online
-//! verification + metrics.
+//! The serving coordinator: continuous-batching scheduler + executor
+//! workers + online verification + metrics.
 //!
 //! Topology (all std threads; each worker owns its own runtime handle and
 //! executable — the realistic analogue of one accelerator per worker, and
 //! a hard requirement on the PJRT backend whose handles are not `Send`):
 //!
 //! ```text
-//!   client driver ──► request ch ──► batcher ──► batch ch ─┬─► worker 0 ─┐
-//!                                                          ├─► worker 1 ─┼─► response ch
-//!                                                          └─► worker W ─┘
+//!   client driver ──► request ch ──► admission ──► Scheduler ─┬─► worker 0 ─┐
+//!                                    (submit)    (priority    ├─► worker 1 ─┼─► response ch
+//!                                                 queue)      └─► worker W ─┘
 //! ```
 //!
-//! With **dense** operands the workers replicate the model and batches
-//! run batch-parallel (the layout above). With **sparse** operands the
-//! propagation matrix is sharded into `--workers` row bands instead:
-//! one executor loop pulls batches, each band aggregates on its own
-//! worker, and the logits + fused-checksum partials are stitched back
-//! together (`runtime::operands`) — the paper's check is exact under
-//! that stitching because both `eᵀ·Z·e` and `s_c` are additive over a
-//! row partition.
+//! Workers pull batches **directly from the scheduler** the moment they
+//! finish the previous forward; admission never blocks on an executing
+//! batch, so newly arrived requests coalesce into the *next* batch while
+//! the current one runs (see [`super::batcher`]).
+//!
+//! **Coalescing is a scheduling artifact only.** Each batch is
+//! partitioned into *overlay-equivalence groups* ([`overlay_groups`]):
+//! requests whose perturbation sets are identical (in particular, all
+//! unperturbed requests) share one forward, and requests with different
+//! what-if overlays get their own forward. A request's logits and alarm
+//! decisions are therefore bit-identical to serving it alone — pinned by
+//! `tests/prop_batching_equivalence.rs`.
+//!
+//! With **dense** operands the workers replicate the model and groups
+//! run batch-parallel. With **sparse** operands the propagation matrix
+//! is sharded into `--workers` row bands instead: one executor loop
+//! pulls batches, each band aggregates on its own worker, and the
+//! logits + fused-checksum partials are stitched back together
+//! (`runtime::operands`) — the paper's check is exact under that
+//! stitching because both `eᵀ·Z·e` and `s_c` are additive over a row
+//! partition.
 //!
 //! Every pass is verified with GCN-ABFT before its responses are
 //! released; a fired check triggers a bounded re-execution (transient
-//! fault recovery), and a persistently failing batch is answered with
+//! fault recovery), and a persistently failing forward is answered with
 //! `VerifyStatus::Failed` rather than silently wrong logits.
 
-use super::batcher::{next_batch, Batch, BatchPolicy};
+use super::batcher::{Batch, BatchPolicy, Scheduler};
 use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
 use super::verify::ServePolicy;
 use crate::graph::DatasetId;
 use crate::runtime::backend;
 use crate::runtime::{
-    BackendKind, ChecksumScheme, ExecMode, GcnOperands, GcnOutputs, Manifest, ModelEntry,
-    OperandPlan, Overlay,
+    BackendKind, ChecksumScheme, ExecMode, GcnOperands, Manifest, ModelEntry, OperandPlan,
+    Overlay,
 };
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Mutex;
@@ -69,6 +83,9 @@ pub struct ServerConfig {
     pub backend: BackendKind,
     /// Checksum scheme the backend computes (`--scheme fused|split`).
     pub scheme: ChecksumScheme,
+    /// Priority mix of the synthetic client driver
+    /// (interactive/batch/background weights, `--priority-mix`).
+    pub priority_mix: [f64; 3],
 }
 
 impl Default for ServerConfig {
@@ -88,8 +105,38 @@ impl Default for ServerConfig {
             train_epochs: 10,
             backend: BackendKind::Native,
             scheme: ChecksumScheme::Fused,
+            priority_mix: [1.0, 0.0, 0.0],
         }
     }
+}
+
+/// The overlay-equivalence key of one request: its perturbation list,
+/// node ids plus exact feature bit patterns.
+type OverlayKey = Vec<(usize, Vec<u32>)>;
+
+/// Partition a batch into overlay-equivalence groups (indices into
+/// `batch.requests`, in first-seen order): requests whose perturbation
+/// lists are bit-identical share one forward, so a member's answer is
+/// exactly what serving it alone would produce. Unperturbed requests —
+/// the common case — all land in one group and batch perfectly.
+pub fn overlay_groups(batch: &Batch) -> Vec<Vec<usize>> {
+    let mut index: BTreeMap<OverlayKey, usize> = BTreeMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, req) in batch.requests.iter().enumerate() {
+        let key: OverlayKey = req
+            .perturbations
+            .iter()
+            .map(|p| (p.node, p.features.iter().map(|v| v.to_bits()).collect()))
+            .collect();
+        match index.entry(key) {
+            std::collections::btree_map::Entry::Occupied(e) => groups[*e.get()].push(i),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                v.insert(groups.len());
+                groups.push(vec![i]);
+            }
+        }
+    }
+    groups
 }
 
 /// Resident model state shared (read-only) by all workers: the operand
@@ -162,16 +209,16 @@ impl ModelState {
         Ok(ModelState { ops, entry })
     }
 
-    /// Collect a batch's perturbations as feature-row overlays, in
-    /// request order (later overlays of the same node win, matching the
+    /// Collect one request's perturbations as feature-row overlays, in
+    /// list order (later overlays of the same node win, matching the
     /// historical copy-and-patch semantics). The base feature matrix is
-    /// never cloned per batch — backends apply these algebraically.
-    pub fn overlays<'a>(&self, batch: &'a Batch) -> Vec<Overlay<'a>> {
+    /// never cloned per forward — backends apply these algebraically.
+    pub fn request_overlays<'a>(&self, req: &'a InferenceRequest) -> Vec<Overlay<'a>> {
         let f = self.ops.feat_dim();
         let n = self.ops.n_nodes();
-        let mut out = Vec::new();
-        for req in &batch.requests {
-            for p in &req.perturbations {
+        req.perturbations
+            .iter()
+            .map(|p| {
                 assert_eq!(
                     p.features.len(),
                     f,
@@ -179,13 +226,12 @@ impl ModelState {
                     p.node
                 );
                 assert!(p.node < n, "perturbation node {} out of range", p.node);
-                out.push(Overlay {
+                Overlay {
                     node: p.node,
                     row: p.features.as_slice(),
-                });
-            }
-        }
-        out
+                }
+            })
+            .collect()
     }
 }
 
@@ -223,7 +269,8 @@ fn build_worker_backend(
 }
 
 /// Run the serving pipeline until the request channel closes; returns
-/// aggregated metrics. Spawns the executor thread(s) plus a batcher.
+/// aggregated metrics. Spawns the executor thread(s) plus an admission
+/// thread feeding the continuous-batching scheduler.
 pub fn run_server(
     cfg: &ServerConfig,
     state: &ModelState,
@@ -245,10 +292,14 @@ pub fn run_server_with_ready(
     ready: Option<Sender<()>>,
 ) -> Result<ServeMetrics> {
     let wall_start = Instant::now();
-    let (batch_tx, batch_rx) = std::sync::mpsc::channel::<Batch>();
-    let batch_rx = Mutex::new(batch_rx);
+    let sched = Scheduler::with_policy(cfg.batch);
     let metrics = Mutex::new(ServeMetrics::default());
     let latency = Mutex::new(LatencyHistogram::new());
+    let prio_latency = Mutex::new([
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+    ]);
     let batch_counter = std::sync::atomic::AtomicU64::new(0);
     let n_workers = cfg.workers.max(1);
     // Dense (replicated) operands: split the host's cores between
@@ -271,25 +322,28 @@ pub fn run_server_with_ready(
     let ready = Mutex::new(ready);
 
     std::thread::scope(|scope| -> Result<()> {
-        // Batcher.
-        let bp = cfg.batch;
-        scope.spawn(move || {
-            while let Some(b) = next_batch(&requests, &bp) {
-                if batch_tx.send(b).is_err() {
-                    break;
+        // Admission: feed the scheduler from the public request channel.
+        // submit() never blocks on an executing forward, so arrivals
+        // keep coalescing into the next batch while workers run.
+        {
+            let sched = &sched;
+            scope.spawn(move || {
+                while let Ok(r) = requests.recv() {
+                    sched.submit(r);
                 }
-            }
-            // dropping batch_tx closes the workers' queue
-        });
+                sched.shutdown();
+            });
+        }
 
         // Executors.
         let compiled = &compiled;
         let ready = &ready;
         let mut handles = Vec::new();
         for _worker_id in 0..pool {
-            let batch_rx = &batch_rx;
+            let sched = &sched;
             let metrics = &metrics;
             let latency = &latency;
+            let prio_latency = &prio_latency;
             let responses = responses.clone();
             let batch_counter = &batch_counter;
             let cfg = cfg.clone();
@@ -316,39 +370,69 @@ pub fn run_server_with_ready(
                     }
                 }
                 // Request latencies are recorded locally and merged into
-                // the serve-wide histogram at executor exit (no shared
+                // the serve-wide histograms at executor exit (no shared
                 // lock on the response path).
                 let mut local_lat = LatencyHistogram::new();
-                loop {
-                    let batch = {
-                        let rx = batch_rx.lock().unwrap();
-                        match rx.recv() {
-                            Ok(b) => b,
-                            Err(_) => break,
-                        }
-                    };
+                let mut local_prio = [
+                    LatencyHistogram::new(),
+                    LatencyHistogram::new(),
+                    LatencyHistogram::new(),
+                ];
+                // Pull straight from the scheduler: the next batch closes
+                // (size / deadline / starvation / drain) the moment this
+                // worker is free for it.
+                while let Some(batch) = sched.next_batch() {
                     let bidx =
                         batch_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let overlays = state.overlays(&batch);
+                    let bsize = batch.len();
+                    // Overlay-equivalence groups: one forward per distinct
+                    // perturbation set, so coalescing never changes what
+                    // any member would have answered alone.
+                    let groups = overlay_groups(&batch);
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.batches += 1;
+                        m.requests += bsize as u64;
+                        m.overlay_groups += groups.len() as u64;
+                    }
+                    // Initial pass: the whole batch through the batched
+                    // call boundary — one forward per overlay group
+                    // (`result[i] == run(groups[i])` by the
+                    // [`backend::GcnBackend::run_groups`] contract).
+                    let group_overlays: Vec<Vec<Overlay<'_>>> = groups
+                        .iter()
+                        .map(|members| {
+                            state.request_overlays(&batch.requests[members[0]])
+                        })
+                        .collect();
+                    let group_refs: Vec<&[Overlay<'_>]> =
+                        group_overlays.iter().map(|g| g.as_slice()).collect();
+                    let t0 = Instant::now();
+                    let mut outs = exe.run_groups(&state.ops, &group_refs)?;
+                    let exec_dt = t0.elapsed().as_secs_f64();
+                    // A backend override returning the wrong arity would
+                    // otherwise silently drop requests in the zip below.
+                    assert_eq!(
+                        outs.len(),
+                        groups.len(),
+                        "{}: run_groups must return one output per group",
+                        exe.name()
+                    );
+                    {
+                        let mut m = metrics.lock().unwrap();
+                        m.executions += outs.len() as u64;
+                        m.exec_secs += exec_dt;
+                    }
 
-                    // Execute + verify with bounded retry.
-                    let mut status = VerifyStatus::Failed;
-                    let mut outputs: Option<GcnOutputs> = None;
-                    let mut attempts = 0usize;
-                    while attempts <= cfg.max_retries {
-                        let t0 = Instant::now();
-                        let mut out = exe.run(&state.ops, &overlays)?;
-                        let exec_dt = t0.elapsed().as_secs_f64();
-
-                        // Optional fault injection into the response
-                        // payload (first attempt only — models a
-                        // transient corruption the retry clears).
-                        let inject = attempts == 0
-                            && cfg
-                                .inject_every
-                                .map(|k| k > 0 && bidx % k == 0)
-                                .unwrap_or(false);
-                        if inject {
+                    // Optional fault injection into the response payload
+                    // (first group only — models a transient corruption
+                    // the per-group retry clears).
+                    let inject = cfg
+                        .inject_every
+                        .map(|k| k > 0 && bidx % k == 0)
+                        .unwrap_or(false);
+                    if inject {
+                        if let Some(out) = outs.first_mut() {
                             // Flip the top exponent bit of the logit where
                             // that flip perturbs the checksum the most
                             // (|v| < 2 explodes by 2^128, |v| ≥ 2 collapses
@@ -374,72 +458,96 @@ pub fn run_server_with_ready(
                                 })
                                 .map(|(i, _)| i)
                                 .unwrap_or(0);
-                            let (r, c) = (idx / out.logits.cols(), idx % out.logits.cols());
+                            let (r, c) =
+                                (idx / out.logits.cols(), idx % out.logits.cols());
                             let v = out.logits.get(r, c);
                             out.logits
                                 .set(r, c, f32::from_bits(v.to_bits() ^ (1 << 30)));
                             metrics.lock().unwrap().injected_faults += 1;
                         }
-
-                        let t1 = Instant::now();
-                        let report = cfg.policy.verify(&out);
-                        let verify_dt = t1.elapsed().as_secs_f64();
-                        {
-                            let mut m = metrics.lock().unwrap();
-                            m.executions += 1;
-                            m.exec_secs += exec_dt;
-                            m.verify_secs += verify_dt;
-                            if !report.ok {
-                                m.checks_fired += 1;
-                            }
-                        }
-                        if report.ok {
-                            status = if attempts == 0 {
-                                VerifyStatus::Clean
-                            } else {
-                                VerifyStatus::RecoveredAfterRetry
-                            };
-                            outputs = Some(out);
-                            break;
-                        }
-                        attempts += 1;
-                        if attempts <= cfg.max_retries {
-                            metrics.lock().unwrap().retries += 1;
-                        }
-                    }
-                    if status == VerifyStatus::Failed {
-                        metrics.lock().unwrap().failures += 1;
                     }
 
-                    // Respond per request.
-                    let classes: Vec<usize> = outputs
-                        .as_ref()
-                        .map(|o| crate::tensor::ops::argmax_rows(&o.logits))
-                        .unwrap_or_default();
-                    let bsize = batch.len();
+                    for ((members, overlays), first_out) in
+                        groups.iter().zip(&group_overlays).zip(outs)
                     {
-                        let mut m = metrics.lock().unwrap();
-                        m.batches += 1;
-                        m.requests += bsize as u64;
-                    }
-                    for req in &batch.requests {
-                        let lat = req.submitted.elapsed().as_secs_f64();
-                        local_lat.record(lat);
-                        let resp = InferenceResponse {
-                            id: req.id,
-                            classes: req
-                                .query_nodes
-                                .iter()
-                                .map(|&n| (n, classes.get(n).copied().unwrap_or(usize::MAX)))
-                                .collect(),
-                            status,
-                            latency_secs: lat,
-                            batch_size: bsize,
+                        // Verify with bounded re-execution: attempt 0 is
+                        // the batched result; a retry re-runs this group
+                        // alone (identical outputs by the run_groups
+                        // contract, so recovery semantics are unchanged).
+                        let mut attempts = 0usize;
+                        let mut current = first_out;
+                        let (status, outputs) = loop {
+                            let t1 = Instant::now();
+                            let report = cfg.policy.verify(&current);
+                            let verify_dt = t1.elapsed().as_secs_f64();
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.verify_secs += verify_dt;
+                                if !report.ok {
+                                    m.checks_fired += 1;
+                                }
+                            }
+                            if report.ok {
+                                let status = if attempts == 0 {
+                                    VerifyStatus::Clean
+                                } else {
+                                    VerifyStatus::RecoveredAfterRetry
+                                };
+                                break (status, Some(current));
+                            }
+                            attempts += 1;
+                            if attempts > cfg.max_retries {
+                                break (VerifyStatus::Failed, None);
+                            }
+                            metrics.lock().unwrap().retries += 1;
+                            let t0 = Instant::now();
+                            current = exe.run(&state.ops, overlays)?;
+                            let dt = t0.elapsed().as_secs_f64();
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.executions += 1;
+                                m.exec_secs += dt;
+                            }
                         };
-                        let _ = responses.send(resp);
+                        if status == VerifyStatus::Failed {
+                            metrics.lock().unwrap().failures += 1;
+                        }
+
+                        // Respond per member of this overlay group.
+                        let classes: Vec<usize> = outputs
+                            .as_ref()
+                            .map(|o| crate::tensor::ops::argmax_rows(&o.logits))
+                            .unwrap_or_default();
+                        for &mi in members {
+                            let req = &batch.requests[mi];
+                            let lat = req.submitted.elapsed().as_secs_f64();
+                            local_lat.record(lat);
+                            local_prio[req.priority.rank()].record(lat);
+                            let resp = InferenceResponse {
+                                id: req.id,
+                                priority: req.priority,
+                                classes: req
+                                    .query_nodes
+                                    .iter()
+                                    .map(|&n| {
+                                        (n, classes.get(n).copied().unwrap_or(usize::MAX))
+                                    })
+                                    .collect(),
+                                status,
+                                latency_secs: lat,
+                                batch_size: bsize,
+                            };
+                            let _ = responses.send(resp);
+                        }
                     }
                 }
                 latency.lock().unwrap().merge(&local_lat);
+                {
+                    let mut g = prio_latency.lock().unwrap();
+                    for (a, b) in g.iter_mut().zip(&local_prio) {
+                        a.merge(b);
+                    }
+                }
                 Ok(())
             }));
         }
@@ -453,15 +561,19 @@ pub fn run_server_with_ready(
     let mut m = metrics.into_inner().unwrap();
     m.wall_secs = wall_start.elapsed().as_secs_f64();
     m.set_latency_percentiles(&latency.into_inner().unwrap());
+    for (rank, h) in prio_latency.into_inner().unwrap().iter().enumerate() {
+        m.set_priority_percentiles(rank, h);
+    }
+    m.starvation_promotions = sched.stats().starvation_promotions;
     Ok(m)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::batcher::CloseReason;
     use super::*;
     use crate::coordinator::request::Perturbation;
     use crate::tensor::Dense;
-    use std::time::Instant;
 
     fn tiny_state() -> ModelState {
         let ops = GcnOperands::dense(
@@ -482,31 +594,34 @@ mod tests {
         ModelState { ops, entry }
     }
 
-    fn batch_with(perturbations: Vec<Perturbation>) -> Batch {
+    fn req_with(id: u64, perturbations: Vec<Perturbation>) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1], perturbations)
+    }
+
+    fn batch_of(requests: Vec<InferenceRequest>) -> Batch {
         Batch {
-            requests: vec![InferenceRequest {
-                id: 0,
-                query_nodes: vec![1],
-                perturbations,
-                submitted: Instant::now(),
-            }],
+            requests,
+            closed_by: CloseReason::Size,
         }
     }
 
     #[test]
-    fn overlays_collect_in_request_order() {
+    fn request_overlays_collect_in_list_order() {
         let state = tiny_state();
-        let batch = batch_with(vec![
-            Perturbation {
-                node: 2,
-                features: vec![1.0, 2.0, 3.0],
-            },
-            Perturbation {
-                node: 2,
-                features: vec![4.0, 5.0, 6.0],
-            },
-        ]);
-        let overlays = state.overlays(&batch);
+        let req = req_with(
+            0,
+            vec![
+                Perturbation {
+                    node: 2,
+                    features: vec![1.0, 2.0, 3.0],
+                },
+                Perturbation {
+                    node: 2,
+                    features: vec![4.0, 5.0, 6.0],
+                },
+            ],
+        );
+        let overlays = state.request_overlays(&req);
         assert_eq!(overlays.len(), 2);
         assert_eq!(
             overlays[0],
@@ -528,24 +643,56 @@ mod tests {
 
     #[test]
     #[should_panic(expected = "perturbation width mismatch")]
-    fn overlays_reject_bad_width() {
+    fn request_overlays_reject_bad_width() {
         let state = tiny_state();
-        let batch = batch_with(vec![Perturbation {
-            node: 0,
-            features: vec![1.0],
-        }]);
-        state.overlays(&batch);
+        let req = req_with(
+            0,
+            vec![Perturbation {
+                node: 0,
+                features: vec![1.0],
+            }],
+        );
+        state.request_overlays(&req);
     }
 
     #[test]
     #[should_panic(expected = "out of range")]
-    fn overlays_reject_bad_node() {
+    fn request_overlays_reject_bad_node() {
         let state = tiny_state();
-        let batch = batch_with(vec![Perturbation {
-            node: 9,
-            features: vec![1.0, 2.0, 3.0],
-        }]);
-        state.overlays(&batch);
+        let req = req_with(
+            0,
+            vec![Perturbation {
+                node: 9,
+                features: vec![1.0, 2.0, 3.0],
+            }],
+        );
+        state.request_overlays(&req);
+    }
+
+    #[test]
+    fn overlay_groups_share_identical_perturbation_sets() {
+        let p = |node: usize, v: f32| Perturbation {
+            node,
+            features: vec![v, 0.0, 0.0],
+        };
+        let batch = batch_of(vec![
+            req_with(0, vec![]),
+            req_with(1, vec![p(2, 1.0)]),
+            req_with(2, vec![]),
+            req_with(3, vec![p(2, 1.0)]),
+            req_with(4, vec![p(2, 1.5)]),
+        ]);
+        let groups = overlay_groups(&batch);
+        assert_eq!(groups, vec![vec![0, 2], vec![1, 3], vec![4]]);
+        // The same perturbations in a different order are a different
+        // forward (overlay application is order-sensitive).
+        let batch = batch_of(vec![
+            req_with(0, vec![p(1, 1.0), p(2, 2.0)]),
+            req_with(1, vec![p(2, 2.0), p(1, 1.0)]),
+        ]);
+        assert_eq!(overlay_groups(&batch).len(), 2);
+        // An empty batch has no groups.
+        assert!(overlay_groups(&batch_of(vec![])).is_empty());
     }
 
     #[test]

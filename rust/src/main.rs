@@ -6,9 +6,11 @@
 //! * `table2`  — operation-count accounting (paper Table II);
 //! * `opcount` — checksum-overhead matrix per (backend, scheme);
 //! * `fig3`    — phase-runtime split (paper Fig. 3);
-//! * `serve`   — end-to-end serving demo: batched inference with online
-//!   GCN-ABFT verification (`--backend native|instrumented|pjrt`,
-//!   `--scheme fused|split`, no artifacts needed for native);
+//! * `serve`   — end-to-end serving demo: priority-aware continuous
+//!   batching with online GCN-ABFT verification (`--backend
+//!   native|instrumented|pjrt`, `--scheme fused|split`, `--max-batch
+//!   --max-wait-ms --starvation-factor --priority-mix`, no artifacts
+//!   needed for native);
 //! * `train`   — train the synthetic workloads and print the curves;
 //! * `info`    — dataset statistics.
 
@@ -70,9 +72,17 @@ SUBCOMMANDS
   serve    serve inference with online GCN-ABFT verification (shapes
            validated against artifacts/ when present). Operands are
            memory-planned: small graphs densify, PubMed/Nell serve on
-           CSR with S row-band-sharded across the workers.
+           CSR with S row-band-sharded across the workers. Scheduling is
+           priority-aware continuous batching: requests coalesce into
+           the next batch while the current one executes, and a request
+           older than starvation-factor x max-wait is force-included
+           over any priority pressure.
            --dataset tiny|cora|citeseer|pubmed|nell  --requests N (64)
-           --batch B (8)  --workers W (2)  --artifacts DIR (artifacts)
+           --max-batch B (8, alias --batch)  --max-wait-ms T (5)
+           --starvation-factor K (4)
+           --priority-mix I,B,BG (1,0,0 — client-driver weights for
+           interactive/batch/background requests)
+           --workers W (2)  --artifacts DIR (artifacts)
            --inject-every K  --scale F (1.0)  --mode auto|dense|sparse
            --mem-budget-mb M (512)  --train-epochs E (10)
            --backend native|instrumented|pjrt (native)
@@ -336,6 +346,10 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "dataset",
             "requests",
             "batch",
+            "max-batch",
+            "max-wait-ms",
+            "starvation-factor",
+            "priority-mix",
             "workers",
             "artifacts",
             "seed",

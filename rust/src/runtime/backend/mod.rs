@@ -97,6 +97,20 @@ pub trait GcnBackend {
 
     /// Execute one forward with per-request overlays.
     fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs>;
+
+    /// Execute a scheduling batch as one forward per overlay group (the
+    /// coordinator's overlay-equivalence grouping hands each group's
+    /// shared overlay set here). Semantics are fixed by the contract
+    /// `result[i] == self.run(ops, groups[i])` — batching is a
+    /// throughput concern and must never change outputs; a backend with
+    /// genuinely batched execution may override this for speed only.
+    fn run_groups(
+        &self,
+        ops: &GcnOperands,
+        groups: &[&[Overlay<'_>]],
+    ) -> Result<Vec<GcnOutputs>> {
+        groups.iter().map(|g| self.run(ops, g)).collect()
+    }
 }
 
 /// Backend selector for configs and the `--backend` CLI flag.
@@ -305,6 +319,31 @@ mod tests {
             for_operands(BackendKind::Pjrt, ChecksumScheme::Fused, &dense, 1, None).is_err(),
             "pjrt must refuse cleanly without the feature"
         );
+    }
+
+    #[test]
+    fn run_groups_matches_per_group_run() {
+        let g = crate::graph::DatasetId::Tiny.build(9);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 2);
+        let ops = GcnOperands::dense(
+            g.features.to_dense(),
+            m.adjacency.to_dense(),
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+        )
+        .unwrap();
+        let row: Vec<f32> = (0..ops.feat_dim()).map(|c| (c % 3) as f32).collect();
+        let overlay = [Overlay { node: 5, row: &row }];
+        let b = for_operands(BackendKind::Native, ChecksumScheme::Fused, &ops, 2, None).unwrap();
+        let groups: [&[Overlay<'_>]; 2] = [&[], &overlay];
+        let outs = b.run_groups(&ops, &groups).unwrap();
+        assert_eq!(outs.len(), 2);
+        for (out, group) in outs.iter().zip(groups) {
+            let solo = b.run(&ops, group).unwrap();
+            assert_eq!(out.logits, solo.logits, "run_groups must equal run per group");
+            assert_eq!(out.predicted, solo.predicted);
+            assert_eq!(out.actual, solo.actual);
+        }
     }
 
     #[test]

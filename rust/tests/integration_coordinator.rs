@@ -106,6 +106,44 @@ fn split_scheme_detects_and_recovers_on_native_backend() {
 }
 
 #[test]
+fn mixed_priority_serving_reports_per_class_percentiles() {
+    // Priority-aware continuous batching: a mixed open-loop arrival
+    // stream still answers everything cleanly, and the per-priority
+    // latency percentiles land in ServeMetrics (indexed by rank).
+    let mut cfg = base_cfg();
+    cfg.priority_mix = [0.5, 0.3, 0.2];
+    let s = serve_synthetic(&cfg, 60).unwrap();
+    assert_eq!(s.responses, 60);
+    assert_eq!(s.clean, 60, "{s:?}");
+    let m = &s.metrics;
+    let classed: u64 = m.by_priority.iter().map(|p| p.requests).sum();
+    assert_eq!(classed, 60, "every request lands in exactly one class");
+    assert!(
+        m.by_priority.iter().filter(|p| p.requests > 0).count() >= 2,
+        "the mix must actually produce multiple classes: {:?}",
+        m.by_priority
+    );
+    for p in m.by_priority.iter().filter(|p| p.requests > 0) {
+        assert!(p.p50_secs > 0.0 && p.p99_secs >= p.p50_secs, "{p:?}");
+    }
+    // Overlay-equivalence grouping: batches of coalesced requests run
+    // at least one forward per batch, and the group count is what the
+    // execution tally is based on.
+    assert!(m.overlay_groups >= m.batches);
+    assert!(m.executions >= m.overlay_groups);
+}
+
+#[test]
+fn single_priority_runs_keep_other_classes_empty() {
+    let s = serve_synthetic(&base_cfg(), 24).unwrap();
+    let m = &s.metrics;
+    assert_eq!(m.by_priority[0].requests, 24, "default mix is all-interactive");
+    assert_eq!(m.by_priority[1].requests, 0);
+    assert_eq!(m.by_priority[2].requests, 0);
+    assert!(m.by_priority[1].p50_secs.is_nan());
+}
+
+#[test]
 fn pjrt_backend_refuses_cleanly_without_the_feature() {
     #[cfg(not(feature = "pjrt"))]
     {

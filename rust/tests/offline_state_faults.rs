@@ -1,0 +1,278 @@
+//! Campaign over corrupted **offline check state** (`s_c`, `w_r`, the
+//! base `x_r`, and the split baseline's `h_c`) — the state the paper
+//! assumes is protected (e.g. by ECC), which this repo caches in
+//! [`GcnOperands::check`] at model build.
+//!
+//! The pinned-down behavior (documented in `rust/README.md`):
+//!
+//! * the data path never reads the check state — corrupted state leaves
+//!   the logits **bit-identical** to a clean forward;
+//! * a flip large enough to move a predicted checksum past the serving
+//!   tolerance raises a **persistent false alarm**: every retry fires
+//!   again, so the server answers `VerifyStatus::Failed` and withholds a
+//!   response that was actually correct (fail-stop, an availability
+//!   loss — never a silent wrong answer);
+//! * a flip below the tolerance (low mantissa bits) is benign.
+//!
+//! So an unprotected checker state converts hardware faults into false
+//! alarms, not into undetected errors — the reason the paper's
+//! "offline state is protected" assumption costs availability, not
+//! integrity, when it breaks.
+
+use gcn_abft::coordinator::{
+    run_server, InferenceRequest, ModelState, ServePolicy, ServerConfig, VerifyStatus,
+};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{
+    ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs, NativeBanded, NativeDense, SOperand,
+};
+use gcn_abft::util::rng::Pcg64;
+
+fn flip64(v: &mut f64, bit: u32) {
+    *v = f64::from_bits(v.to_bits() ^ (1u64 << bit));
+}
+
+fn flip32(v: &mut f32, bit: u32) {
+    *v = f32::from_bits(v.to_bits() ^ (1u32 << bit));
+}
+
+fn dense_ops() -> GcnOperands {
+    let g = DatasetId::Tiny.build(11);
+    let m = GcnModel::two_layer(&g, 8, 12);
+    GcnOperands::dense(
+        g.features.to_dense(),
+        m.adjacency.to_dense(),
+        m.layers[0].weights.clone(),
+        m.layers[1].weights.clone(),
+    )
+    .unwrap()
+}
+
+fn banded_ops(bands: usize) -> GcnOperands {
+    let g = DatasetId::Tiny.build(11);
+    let m = GcnModel::two_layer(&g, 8, 12);
+    GcnOperands::sparse(
+        g.features.clone(),
+        &m.adjacency,
+        m.layers[0].weights.clone(),
+        m.layers[1].weights.clone(),
+        bands,
+    )
+    .unwrap()
+}
+
+fn logits_bits(out: &GcnOutputs) -> Vec<u32> {
+    out.logits.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Index where `|s_c[i] · x_r1[i]|` is largest: flipping a high bit of
+/// `s_c` there is guaranteed to move the layer-1 predicted checksum
+/// (a huge-but-finite corrupted operand times an exactly-zero checksum
+/// column entry would contribute nothing).
+fn loudest_s_c_index(s_c: &[f64], x_r1: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = -1.0f64;
+    for (i, (s, x)) in s_c.iter().zip(x_r1).enumerate() {
+        let v = (s * *x as f64).abs();
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    assert!(
+        best_v > 0.0,
+        "degenerate workload: every s_c·x_r product is zero"
+    );
+    best
+}
+
+/// Run one corrupted-state forward and classify the outcome. Asserts
+/// the two campaign invariants: logits untouched, and a fired alarm is
+/// persistent (fires again on re-execution with the same state).
+fn classify(ops: &GcnOperands, scheme: ChecksumScheme, clean_logits: &[u32]) -> bool {
+    let exe = NativeDense::new(2, scheme);
+    let out = exe.run(ops, &[]).unwrap();
+    assert_eq!(
+        logits_bits(&out),
+        clean_logits,
+        "check-state corruption must never reach the data path ({scheme:?})"
+    );
+    let report = ServePolicy::default().verify(&out);
+    if !report.ok {
+        // The alarm is a deterministic function of the corrupted state:
+        // the bounded re-execution the server would attempt fires too.
+        let retry = exe.run(ops, &[]).unwrap();
+        assert!(
+            !ServePolicy::default().verify(&retry).ok,
+            "a check-state alarm must persist across retries ({scheme:?})"
+        );
+    }
+    !report.ok
+}
+
+#[test]
+fn campaign_random_bit_flips_in_offline_state_are_fail_stop() {
+    let base = dense_ops();
+    let n = base.n_nodes();
+    let f = base.feat_dim();
+    let h = base.hidden_dim();
+    let mut clean = Vec::new();
+    for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+        let out = NativeDense::new(2, scheme).run(&base, &[]).unwrap();
+        assert!(ServePolicy::default().verify(&out).ok, "clean baseline alarmed");
+        clean.push(logits_bits(&out));
+    }
+
+    let mut rng = Pcg64::from_seed(0x0FF57A7E);
+    let mut detected = 0usize;
+    let mut benign = 0usize;
+    for _trial in 0..96 {
+        let mut ops = base.clone();
+        match rng.gen_index(5) {
+            0 => flip64(
+                &mut ops.check.s_c[rng.gen_index(n)],
+                rng.gen_index(64) as u32,
+            ),
+            1 => flip32(
+                &mut ops.check.w_r1[rng.gen_index(f)],
+                rng.gen_index(32) as u32,
+            ),
+            2 => flip32(
+                &mut ops.check.w_r2[rng.gen_index(h)],
+                rng.gen_index(32) as u32,
+            ),
+            3 => flip32(
+                &mut ops.check.x_r1[rng.gen_index(n)],
+                rng.gen_index(32) as u32,
+            ),
+            _ => flip64(
+                &mut ops.check.h_c1[rng.gen_index(f)],
+                rng.gen_index(64) as u32,
+            ),
+        }
+        for (sidx, scheme) in [ChecksumScheme::Fused, ChecksumScheme::Split]
+            .into_iter()
+            .enumerate()
+        {
+            if classify(&ops, scheme, &clean[sidx]) {
+                detected += 1;
+            } else {
+                benign += 1;
+            }
+        }
+    }
+    // Both outcomes must occur across the campaign: high bits of a
+    // checksum operand push the predicted value past tolerance (false
+    // alarm → fail-stop), low mantissa bits stay below it (benign).
+    assert!(detected > 0, "no corruption was ever detected");
+    assert!(benign > 0, "every flip alarmed — tolerance model is off");
+    println!(
+        "offline-state campaign: {detected} detected (persistent false alarms), \
+         {benign} benign of {} scheme-trials",
+        detected + benign
+    );
+}
+
+#[test]
+fn forced_exponent_flip_in_s_c_always_alarms_and_mantissa_lsb_never_does() {
+    let base = dense_ops();
+    for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+        let clean = logits_bits(&NativeDense::new(2, scheme).run(&base, &[]).unwrap());
+        // Top exponent bit of the loudest column sum: the predicted
+        // checksum explodes, so the check must fire.
+        let mut ops = base.clone();
+        let i = loudest_s_c_index(&ops.check.s_c, &ops.check.x_r1);
+        flip64(&mut ops.check.s_c[i], 62);
+        assert!(
+            classify(&ops, scheme, &clean),
+            "{scheme:?}: top-exponent s_c flip must alarm"
+        );
+        // The same entry's mantissa LSB: a ~1 ulp wobble, far below the
+        // serving tolerance — must stay quiet.
+        let mut ops = base.clone();
+        flip64(&mut ops.check.s_c[i], 0);
+        assert!(
+            !classify(&ops, scheme, &clean),
+            "{scheme:?}: 1-ulp s_c flip must be benign"
+        );
+    }
+}
+
+#[test]
+fn corrupted_band_s_c_alarms_on_the_banded_backend() {
+    // The row-band-sharded path caches a per-band s_c; corrupting one
+    // band's vector must poison the stitched predicted checksum the
+    // same fail-stop way.
+    let base = banded_ops(3);
+    for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+        let exe = NativeBanded::new(2, scheme);
+        let clean_out = exe.run(&base, &[]).unwrap();
+        assert!(ServePolicy::default().verify(&clean_out).ok);
+        let clean = logits_bits(&clean_out);
+
+        let mut ops = base.clone();
+        let x_r1 = ops.check.x_r1.clone();
+        let SOperand::Banded(bands) = &mut ops.s else {
+            panic!("banded operands expected");
+        };
+        let j = loudest_s_c_index(&bands[1].s_c, &x_r1);
+        flip64(&mut bands[1].s_c[j], 62);
+
+        let out = exe.run(&ops, &[]).unwrap();
+        assert_eq!(
+            logits_bits(&out),
+            clean,
+            "{scheme:?}: band s_c corruption must never reach the logits"
+        );
+        assert!(
+            !ServePolicy::default().verify(&out).ok,
+            "{scheme:?}: corrupted band s_c must alarm"
+        );
+    }
+}
+
+#[test]
+fn serving_with_corrupted_state_fails_stop_instead_of_answering_wrong() {
+    // End to end: a server whose cached s_c took a high-bit hit detects
+    // every pass, exhausts its retry budget, and withholds the answers —
+    // responses come back Failed, never silently wrong.
+    let cfg = ServerConfig {
+        dataset: DatasetId::Tiny,
+        workers: 1,
+        train_epochs: 3,
+        max_retries: 1,
+        ..Default::default()
+    };
+    let mut state = ModelState::build(&cfg).unwrap();
+    let i = loudest_s_c_index(&state.ops.check.s_c, &state.ops.check.x_r1);
+    flip64(&mut state.ops.check.s_c[i], 62);
+
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    for id in 0..8u64 {
+        req_tx.send(InferenceRequest::new(id, vec![0], vec![])).unwrap();
+    }
+    drop(req_tx);
+    let m = run_server(&cfg, &state, req_rx, resp_tx).unwrap();
+
+    let mut responses = 0;
+    while let Ok(r) = resp_rx.recv() {
+        responses += 1;
+        assert_eq!(
+            r.status,
+            VerifyStatus::Failed,
+            "corrupted check state must fail stop, not answer"
+        );
+    }
+    assert_eq!(responses, 8);
+    assert_eq!(
+        m.checks_fired, m.executions,
+        "every execution over corrupted state alarms: {m:?}"
+    );
+    assert_eq!(
+        m.failures, m.overlay_groups,
+        "every forward exhausts its retries: {m:?}"
+    );
+    assert_eq!(m.retries, m.batches, "one retry per group before giving up");
+}

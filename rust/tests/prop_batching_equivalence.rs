@@ -1,0 +1,257 @@
+//! Property: **coalescing is semantically invisible.** Under random
+//! arrival orders, priorities, per-request deadlines and batch policies,
+//! every request's logits and its fused/split alarm decisions are
+//! bit-identical to serving that request alone.
+//!
+//! The scheduling side runs on a [`VirtualClock`] (random submit /
+//! advance / poll interleavings, zero real sleeps); the execution side
+//! replays the server's own overlay-equivalence grouping
+//! ([`overlay_groups`]): requests with bit-identical perturbation sets
+//! share one forward, so a member's outputs are exactly the solo
+//! outputs. This is the serving-path analogue of the paper's overlay
+//! patching guarantee — the checksum scheme must not care *how* the
+//! product was batched.
+
+use gcn_abft::coordinator::{
+    overlay_groups, BatchPolicy, InferenceRequest, Perturbation, Priority, Scheduler,
+    ServePolicy, VirtualClock,
+};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::synth::{generate, SynthSpec};
+use gcn_abft::runtime::{
+    backend, BackendKind, ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs, Overlay,
+};
+use gcn_abft::util::proptest::{check, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+struct Case {
+    spec: SynthSpec,
+    graph_seed: u64,
+    model_seed: u64,
+    traffic_seed: u64,
+    sparse: bool,
+    bands: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    starvation_factor: u32,
+}
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    let n = 16 + rng.gen_index(32);
+    Case {
+        spec: SynthSpec {
+            name: "prop-batch-eq".into(),
+            num_nodes: n,
+            num_edges: 2 * n,
+            feat_dim: 6 + rng.gen_index(16),
+            feat_nnz: 4 * n,
+            num_classes: 2 + rng.gen_index(4),
+            homophily: 0.8,
+            binary_features: rng.gen_bool(0.5),
+            feature_scale: 1.0,
+        },
+        graph_seed: rng.next_u64(),
+        model_seed: rng.next_u64(),
+        traffic_seed: rng.next_u64(),
+        sparse: rng.gen_bool(0.5),
+        bands: 1 + rng.gen_index(4),
+        max_batch: 1 + rng.gen_index(4),
+        max_wait_us: 200 + rng.gen_range(5_000),
+        starvation_factor: 1 + rng.gen_index(4) as u32,
+    }
+}
+
+/// Exact bit patterns of one forward's outputs.
+fn bits(out: &GcnOutputs) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    (
+        out.logits.data().iter().map(|v| v.to_bits()).collect(),
+        out.predicted.iter().map(|v| v.to_bits()).collect(),
+        out.actual.iter().map(|v| v.to_bits()).collect(),
+    )
+}
+
+fn request_overlays(req: &InferenceRequest) -> Vec<Overlay<'_>> {
+    req.perturbations
+        .iter()
+        .map(|p| Overlay {
+            node: p.node,
+            row: p.features.as_slice(),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_coalesced_serving_is_bit_identical_to_solo() {
+    check(
+        &Config {
+            cases: 14,
+            seed: 0xBA7C,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let graph = generate(&case.spec, case.graph_seed);
+            let model = GcnModel::two_layer(&graph, 8, case.model_seed);
+            let w1 = model.layers[0].weights.clone();
+            let w2 = model.layers[1].weights.clone();
+            let ops = if case.sparse {
+                GcnOperands::sparse(
+                    graph.features.clone(),
+                    &model.adjacency,
+                    w1,
+                    w2,
+                    case.bands,
+                )
+            } else {
+                GcnOperands::dense(
+                    graph.features.to_dense(),
+                    model.adjacency.to_dense(),
+                    w1,
+                    w2,
+                )
+            }
+            .map_err(|e| format!("operand build failed: {e}"))?;
+
+            let mut rng = Pcg64::from_seed(case.traffic_seed);
+            let n_nodes = graph.num_nodes;
+            let feat_dim = graph.feat_dim();
+
+            // Random traffic: priorities, deadlines, perturbation sets —
+            // with deliberate duplicates so overlay groups get shared.
+            let n_requests = 5 + rng.gen_index(7);
+            let mut requests: Vec<InferenceRequest> = Vec::new();
+            for id in 0..n_requests {
+                let perturbations = if !requests.is_empty() && rng.gen_bool(0.3) {
+                    // Clone an earlier request's exact perturbation set.
+                    requests[rng.gen_index(requests.len())].perturbations.clone()
+                } else {
+                    (0..rng.gen_index(3))
+                        .map(|_| Perturbation {
+                            node: rng.gen_index(n_nodes),
+                            features: (0..feat_dim)
+                                .map(|_| rng.gen_f32_range(-4.0, 4.0))
+                                .collect(),
+                        })
+                        .collect()
+                };
+                let mut req = InferenceRequest::new(
+                    id as u64,
+                    vec![rng.gen_index(n_nodes)],
+                    perturbations,
+                )
+                .with_priority(Priority::ALL[rng.gen_index(3)]);
+                if rng.gen_bool(0.2) {
+                    req = req.with_deadline(Duration::from_micros(rng.gen_range(2_000)));
+                }
+                requests.push(req);
+            }
+
+            // Solo references: each request served alone, per scheme.
+            let schemes = [ChecksumScheme::Fused, ChecksumScheme::Split];
+            let mut solo: Vec<Vec<((Vec<u32>, Vec<u32>, Vec<u32>), bool)>> = Vec::new();
+            for scheme in schemes {
+                let exe = backend::for_operands(BackendKind::Native, scheme, &ops, 2, None)
+                    .map_err(|e| format!("backend build failed: {e}"))?;
+                let mut per_req = Vec::new();
+                for req in &requests {
+                    let out = exe
+                        .run(&ops, &request_overlays(req))
+                        .map_err(|e| format!("solo run failed: {e}"))?;
+                    let ok = ServePolicy::default().verify(&out).ok;
+                    per_req.push((bits(&out), ok));
+                }
+                solo.push(per_req);
+            }
+
+            // Scheduled side: random arrival order and poll interleaving
+            // on a virtual clock.
+            let sched = Scheduler::new(
+                VirtualClock::new(),
+                BatchPolicy {
+                    max_batch: case.max_batch,
+                    max_wait: Duration::from_micros(case.max_wait_us),
+                    starvation_factor: case.starvation_factor,
+                },
+            );
+            let mut order: Vec<usize> = (0..n_requests).collect();
+            rng.shuffle(&mut order);
+            let mut batches = Vec::new();
+            for &i in &order {
+                sched.submit(requests[i].clone());
+                if rng.gen_bool(0.5) {
+                    sched
+                        .clock()
+                        .advance(Duration::from_micros(rng.gen_range(3_000)));
+                }
+                if rng.gen_bool(0.4) {
+                    while let Some(b) = sched.poll() {
+                        batches.push(b);
+                    }
+                }
+            }
+            sched.shutdown();
+            while let Some(b) = sched.poll() {
+                batches.push(b);
+            }
+
+            // No request lost or duplicated by the scheduler.
+            let mut seen: Vec<u64> = batches
+                .iter()
+                .flat_map(|b| b.requests.iter().map(|r| r.id))
+                .collect();
+            seen.sort_unstable();
+            let expect: Vec<u64> = (0..n_requests as u64).collect();
+            if seen != expect {
+                return Err(format!("requests lost/duplicated: {seen:?}"));
+            }
+
+            // Replay the server's execution: one forward per overlay
+            // group, compared bitwise against each member's solo run.
+            for (sidx, scheme) in schemes.iter().enumerate() {
+                let exe =
+                    backend::for_operands(BackendKind::Native, *scheme, &ops, 2, None)
+                        .map_err(|e| format!("backend build failed: {e}"))?;
+                for batch in &batches {
+                    // One forward per overlay group, through the batched
+                    // call boundary (contract: result[i] == run(groups[i])).
+                    let groups = overlay_groups(batch);
+                    let group_overlays: Vec<Vec<Overlay<'_>>> = groups
+                        .iter()
+                        .map(|members| request_overlays(&batch.requests[members[0]]))
+                        .collect();
+                    let group_refs: Vec<&[Overlay<'_>]> =
+                        group_overlays.iter().map(|g| g.as_slice()).collect();
+                    let outs = exe
+                        .run_groups(&ops, &group_refs)
+                        .map_err(|e| format!("group run failed: {e}"))?;
+                    for (members, out) in groups.iter().zip(&outs) {
+                        let got = bits(out);
+                        let got_ok = ServePolicy::default().verify(out).ok;
+                        for &mi in members {
+                            let id = batch.requests[mi].id as usize;
+                            let (want, want_ok) = &solo[sidx][id];
+                            if got != *want {
+                                return Err(format!(
+                                    "request {id} ({scheme:?}): batched outputs are not \
+                                     bit-identical to solo (batch of {}, group of {})",
+                                    batch.len(),
+                                    members.len()
+                                ));
+                            }
+                            if got_ok != *want_ok {
+                                return Err(format!(
+                                    "request {id} ({scheme:?}): alarm decision changed \
+                                     under batching: solo {want_ok} vs batched {got_ok}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}

@@ -1,0 +1,320 @@
+//! Deterministic scheduler-invariant tests on a [`VirtualClock`]: every
+//! close decision — priority ordering within a batch window, the
+//! deadline-triggered close, the starvation bound, the
+//! already-expired-request edge, and the shutdown drain — is checked by
+//! advancing a virtual clock and polling, with **zero real sleeps**.
+//! (The one blocking `next_batch` call below exercises the drain path,
+//! which returns without consulting time at all.)
+
+use gcn_abft::coordinator::{
+    BatchPolicy, CloseReason, InferenceRequest, Priority, Scheduler, VirtualClock,
+};
+use gcn_abft::util::rng::Pcg64;
+use std::time::Duration;
+
+fn ms(x: u64) -> Duration {
+    Duration::from_millis(x)
+}
+
+fn req(id: u64, priority: Priority) -> InferenceRequest {
+    InferenceRequest::new(id, vec![0], vec![]).with_priority(priority)
+}
+
+fn sched(max_batch: usize, max_wait_ms: u64, k: u32) -> Scheduler<VirtualClock> {
+    Scheduler::new(
+        VirtualClock::new(),
+        BatchPolicy {
+            max_batch,
+            max_wait: ms(max_wait_ms),
+            starvation_factor: k,
+        },
+    )
+}
+
+fn ids(b: &gcn_abft::coordinator::Batch) -> Vec<u64> {
+    b.requests.iter().map(|r| r.id).collect()
+}
+
+#[test]
+fn size_close_fires_without_any_time_passing() {
+    let s = sched(3, 5, 4);
+    s.submit(req(0, Priority::Interactive));
+    s.submit(req(1, Priority::Interactive));
+    assert!(s.poll().is_none(), "2 < max_batch and no deadline passed");
+    s.submit(req(2, Priority::Interactive));
+    let b = s.poll().expect("max_batch reached");
+    assert_eq!(b.closed_by, CloseReason::Size);
+    assert_eq!(ids(&b), vec![0, 1, 2]);
+}
+
+#[test]
+fn deadline_close_tracks_the_oldest_waiter() {
+    let s = sched(100, 5, 4);
+    s.submit(req(0, Priority::Interactive));
+    s.clock().advance(ms(3));
+    s.submit(req(1, Priority::Interactive));
+    assert!(s.poll().is_none(), "oldest waiter at 3 ms < 5 ms");
+    s.clock().advance(ms(2));
+    // Request 0 hits its hold deadline; the batch takes both waiters.
+    let b = s.poll().expect("oldest waiter at 5 ms closes the batch");
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    assert_eq!(ids(&b), vec![0, 1]);
+    assert!(s.poll().is_none(), "queue drained");
+}
+
+#[test]
+fn priority_orders_members_within_a_batch_window() {
+    let s = sched(8, 5, 4);
+    s.submit(req(0, Priority::Background));
+    s.submit(req(1, Priority::Batch));
+    s.submit(req(2, Priority::Interactive));
+    s.submit(req(3, Priority::Background));
+    s.submit(req(4, Priority::Interactive));
+    s.clock().advance(ms(5));
+    let b = s.poll().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    assert_eq!(
+        ids(&b),
+        vec![2, 4, 1, 0, 3],
+        "priority rank first, FIFO within each rank"
+    );
+}
+
+#[test]
+fn size_pressure_defers_low_priority_to_the_next_batch() {
+    let s = sched(2, 5, 4);
+    s.submit(req(0, Priority::Background));
+    s.submit(req(1, Priority::Interactive));
+    s.submit(req(2, Priority::Interactive));
+    let b = s.poll().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Size);
+    assert_eq!(ids(&b), vec![1, 2], "interactive wins the size-closed batch");
+    assert_eq!(s.pending(), 1);
+    // The deferred background request is not dropped: it closes alone
+    // once its own hold deadline passes.
+    s.clock().advance(ms(5));
+    let b = s.poll().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    assert_eq!(ids(&b), vec![0]);
+}
+
+#[test]
+fn starvation_bound_holds_under_interactive_flood() {
+    // max_wait 5 ms, K = 3 → no request may wait in the admission queue
+    // past 15 ms, no matter how much interactive pressure arrives.
+    let (max_wait_ms, k) = (5u64, 3u32);
+    let s = sched(2, max_wait_ms, k);
+    s.submit(req(999, Priority::Background));
+    let submitted_at = s.clock().now();
+
+    let mut next_id = 0u64;
+    let mut included_at = None;
+    // Flood: three fresh interactive requests per millisecond against a
+    // drain rate of one size-closed batch of two — the admission queue
+    // always holds more interactive work than a batch can take, so the
+    // background request keeps losing the priority cut until the
+    // starvation bound promotes it.
+    for step in 0..40 {
+        for _ in 0..3 {
+            s.submit(req(next_id, Priority::Interactive));
+            next_id += 1;
+        }
+        let b = s.poll().expect("flooded queue always closes by size");
+        if b.requests.iter().any(|r| r.id == 999) {
+            assert_eq!(
+                b.closed_by,
+                CloseReason::Starvation,
+                "a promoted member marks the batch"
+            );
+            included_at = Some(s.clock().now());
+            break;
+        }
+        assert!(
+            step < 39,
+            "background request never included under flood"
+        );
+        s.clock().advance(ms(1));
+    }
+
+    let waited = included_at.unwrap().since(submitted_at);
+    let bound = ms(max_wait_ms * k as u64);
+    assert!(
+        waited <= bound,
+        "waited {waited:?} past the starvation bound {bound:?}"
+    );
+    assert!(s.stats().starvation_promotions >= 1);
+}
+
+#[test]
+fn already_expired_request_closes_immediately() {
+    // The old `next_batch` idle-spin edge: a batch whose first member
+    // arrived already past its deadline still waited out a full
+    // `recv_timeout`. With deadlines anchored at arrival, a zero hold
+    // budget closes at the admission tick — no clock advance needed.
+    let s = sched(8, 5, 4);
+    s.submit(req(0, Priority::Interactive).with_deadline(Duration::ZERO));
+    let b = s.poll().expect("expired member must close the batch now");
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    assert_eq!(ids(&b), vec![0]);
+
+    // The expired member also pulls already-queued fresh requests into
+    // the same pass instead of leaving them to wait out their window.
+    s.submit(req(1, Priority::Interactive));
+    assert!(s.poll().is_none());
+    s.submit(req(2, Priority::Interactive).with_deadline(Duration::ZERO));
+    let b = s.poll().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    assert_eq!(b.len(), 2);
+}
+
+#[test]
+fn expired_explicit_deadline_is_promoted_under_size_pressure() {
+    // A caller-declared deadline is honored in member *selection*, not
+    // only in close timing: once it expires, size pressure from
+    // higher-priority traffic can no longer exclude the request (the
+    // starvation bound — 500 ms here — is not what saves it).
+    let s = sched(2, 5, 100);
+    s.submit(req(9, Priority::Background).with_deadline(ms(1)));
+    s.submit(req(0, Priority::Interactive));
+    s.submit(req(1, Priority::Interactive));
+    // Budget not yet spent: the size close picks the interactive pair.
+    let b = s.poll().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Size);
+    assert_eq!(ids(&b), vec![0, 1]);
+    // Budget expired: the next size close must take the request even
+    // though fresh interactive arrivals would otherwise fill the batch.
+    s.clock().advance(ms(1));
+    s.submit(req(2, Priority::Interactive));
+    s.submit(req(3, Priority::Interactive));
+    let b = s.poll().unwrap();
+    assert!(
+        b.requests.iter().any(|r| r.id == 9),
+        "expired-deadline member must be force-included: {:?}",
+        ids(&b)
+    );
+    assert_eq!(
+        b.closed_by,
+        CloseReason::Size,
+        "deadline promotion keeps the close reason (Starvation is for the bound)"
+    );
+    assert_eq!(s.stats().starvation_promotions, 1);
+}
+
+#[test]
+fn loose_deadline_does_not_jump_priority_before_it_expires() {
+    // The promotion condition is the *declared* deadline, not the
+    // max_wait-capped hold budget: a Background request with a generous
+    // 100 ms deadline must keep losing the priority cut long after
+    // max_wait (5 ms) — otherwise any deadline-bearing bulk request
+    // would preempt interactive traffic after just max_wait.
+    let s = sched(2, 5, 1_000); // starvation bound 5 s: out of the picture
+    s.submit(req(9, Priority::Background).with_deadline(ms(100)));
+    for step in 0..20u64 {
+        s.submit(req(step * 2, Priority::Interactive));
+        s.submit(req(step * 2 + 1, Priority::Interactive));
+        let b = s.poll().expect("size pressure closes every wave");
+        assert!(
+            !b.requests.iter().any(|r| r.id == 9),
+            "loose deadline jumped priority at t = {step} ms"
+        );
+        s.clock().advance(ms(1));
+    }
+    // Once the declared budget expires, the next close takes it.
+    s.clock().advance(ms(80)); // t = 100 ms
+    s.submit(req(1_000, Priority::Interactive));
+    s.submit(req(1_001, Priority::Interactive));
+    let b = s.poll().unwrap();
+    assert!(
+        b.requests.iter().any(|r| r.id == 9),
+        "expired declared deadline must promote: {:?}",
+        b.requests.iter().map(|r| r.id).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn per_request_deadline_tightens_the_window() {
+    let s = sched(8, 10, 4);
+    s.submit(req(0, Priority::Interactive).with_deadline(ms(2)));
+    s.clock().advance(ms(1));
+    assert!(s.poll().is_none());
+    s.clock().advance(ms(1));
+    let b = s.poll().expect("2 ms request deadline beats 10 ms max_wait");
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    // A deadline looser than max_wait is capped by the policy.
+    s.submit(req(1, Priority::Interactive).with_deadline(ms(60_000)));
+    s.clock().advance(ms(10));
+    let b = s.poll().expect("policy max_wait still applies");
+    assert_eq!(ids(&b), vec![1]);
+}
+
+#[test]
+fn shutdown_drains_cleanly_and_then_yields_none() {
+    let s = sched(4, 1_000_000, 4); // deadline far away: only drain closes
+    for i in 0..6 {
+        s.submit(req(i, Priority::Interactive));
+    }
+    s.shutdown();
+    // First close is by size (6 > 4), the leftover pair by drain; the
+    // blocking next_batch calls return immediately in both cases.
+    let b = s.next_batch().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Size);
+    assert_eq!(b.len(), 4);
+    let b = s.next_batch().unwrap();
+    assert_eq!(b.closed_by, CloseReason::Drain);
+    assert_eq!(b.len(), 2);
+    assert!(s.next_batch().is_none(), "drained scheduler yields None");
+    assert!(s.next_batch().is_none(), "... and stays drained");
+    assert_eq!(s.stats().submitted, 6);
+    assert_eq!(s.stats().batches, 2);
+}
+
+#[test]
+fn random_schedules_lose_and_duplicate_nothing() {
+    // Mini-property on the virtual clock: under random arrival orders,
+    // priorities, deadlines and poll interleavings, every submitted
+    // request is emitted exactly once, no batch exceeds max_batch, and
+    // members never outstay the starvation bound while polls keep
+    // happening.
+    let mut rng = Pcg64::from_seed(0x5CED);
+    for case in 0..50 {
+        let max_batch = 1 + rng.gen_index(5);
+        let max_wait = 1 + rng.gen_index(8) as u64;
+        let k = 1 + rng.gen_index(4) as u32;
+        let s = sched(max_batch, max_wait, k);
+        let n = 5 + rng.gen_index(20) as u64;
+
+        let mut emitted: Vec<u64> = Vec::new();
+        let mut check_batch = |b: &gcn_abft::coordinator::Batch| {
+            assert!(b.len() <= max_batch, "case {case}: oversized batch");
+            assert!(!b.is_empty(), "case {case}: empty batch emitted");
+            emitted.extend(b.requests.iter().map(|r| r.id));
+        };
+
+        for id in 0..n {
+            let priority = Priority::ALL[rng.gen_index(3)];
+            let mut r = req(id, priority);
+            if rng.gen_bool(0.2) {
+                r = r.with_deadline(Duration::from_millis(rng.gen_range(6)));
+            }
+            s.submit(r);
+            if rng.gen_bool(0.5) {
+                s.clock().advance(Duration::from_micros(rng.gen_range(3000)));
+            }
+            if rng.gen_bool(0.4) {
+                while let Some(b) = s.poll() {
+                    check_batch(&b);
+                }
+            }
+        }
+        s.shutdown();
+        while let Some(b) = s.poll() {
+            check_batch(&b);
+        }
+        assert!(s.poll().is_none());
+
+        emitted.sort_unstable();
+        let expect: Vec<u64> = (0..n).collect();
+        assert_eq!(emitted, expect, "case {case}: requests lost or duplicated");
+        assert_eq!(s.stats().submitted, n);
+    }
+}
