@@ -2,9 +2,15 @@
 //! view of a model and the sparse/dense layer-input dispatch.
 
 use crate::gcn::{Activation, GcnModel};
-use crate::sparse::instrumented::{csr_col_sums_hooked, csr_matvec_hooked, spmm_hooked};
+use crate::sparse::instrumented::{
+    csr_col_sums_hooked, csr_matvec_hooked, csr_matvec_rows_hooked, spmm_hooked,
+    spmm_rows_hooked,
+};
 use crate::sparse::Csr;
-use crate::tensor::instrumented::{col_sums_hooked, matmul_hooked, matvec_hooked, ExecHook};
+use crate::tensor::instrumented::{
+    col_sums_hooked, matmul_hooked, matmul_rows_hooked, matvec_hooked, matvec_rows_hooked,
+    ExecHook,
+};
 use crate::tensor::{Dense, Dense64};
 
 /// A GCN layer input in the f64 engine: sparse for layer 1 (the dataset's
@@ -51,6 +57,45 @@ impl EngineInput {
         match self {
             EngineInput::Sparse(m) => csr_matvec_hooked(m, v, hook),
             EngineInput::Dense(m) => matvec_hooked(m, v, hook),
+        }
+    }
+
+    /// Scheduled nonzeros of the row range `[lo, hi)` — what sizes a
+    /// logical band's slice of the combination-phase op timeline.
+    pub fn nnz_rows(&self, lo: usize, hi: usize) -> usize {
+        match self {
+            EngineInput::Sparse(m) => (lo..hi).map(|r| m.row_nnz(r)).sum(),
+            EngineInput::Dense(m) => (hi - lo) * m.cols(),
+        }
+    }
+
+    /// Instrumented `H · W` restricted to output rows `[lo, hi)` — one
+    /// logical band of the combination phase. Per-row op order matches
+    /// [`EngineInput::matmul_hooked`] exactly.
+    pub fn matmul_rows_hooked<HK: ExecHook>(
+        &self,
+        w: &Dense64,
+        lo: usize,
+        hi: usize,
+        hook: &mut HK,
+    ) -> Dense64 {
+        match self {
+            EngineInput::Sparse(m) => spmm_rows_hooked(m, w, lo, hi, hook),
+            EngineInput::Dense(m) => matmul_rows_hooked(m, w, lo, hi, hook),
+        }
+    }
+
+    /// Instrumented `H · w_r` restricted to rows `[lo, hi)`.
+    pub fn matvec_rows_hooked<HK: ExecHook>(
+        &self,
+        v: &[f64],
+        lo: usize,
+        hi: usize,
+        hook: &mut HK,
+    ) -> Vec<f64> {
+        match self {
+            EngineInput::Sparse(m) => csr_matvec_rows_hooked(m, v, lo, hi, hook),
+            EngineInput::Dense(m) => matvec_rows_hooked(m, v, lo, hi, hook),
         }
     }
 

@@ -17,11 +17,14 @@
 //!
 //! * **size** — ≥ `max_batch` requests are queued;
 //! * **deadline** — some queued request has waited out its hold budget,
-//!   `min(max_wait, request.deadline)`, measured from *arrival* (a
+//!   `min(effective_wait, request.deadline)`, measured from *arrival* (a
 //!   request admitted with an already-expired budget closes the batch
 //!   immediately — the old loop's idle-spin edge, where the first
 //!   member's expired deadline still waited out a full `recv_timeout`,
-//!   is gone);
+//!   is gone). `effective_wait` is the configured `max_wait`, or — under
+//!   [`AdaptiveWait`] (`--adaptive-wait`) — an auto-tuned budget derived
+//!   from an EWMA of the observed inter-arrival times, clamped to
+//!   `[min_wait, max_wait]`;
 //! * **drain** — the scheduler was shut down; whatever is queued is
 //!   released without waiting.
 //!
@@ -53,6 +56,9 @@ pub struct BatchPolicy {
     /// A request older than `starvation_factor × max_wait` is force
     /// included in the next batch regardless of priority pressure.
     pub starvation_factor: u32,
+    /// Auto-tune the hold budget from the observed arrival rate
+    /// (`--adaptive-wait`); `None` = the fixed `max_wait` governs.
+    pub adaptive: Option<AdaptiveWait>,
 }
 
 impl Default for BatchPolicy {
@@ -61,15 +67,43 @@ impl Default for BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             starvation_factor: 4,
+            adaptive: None,
         }
     }
 }
 
 impl BatchPolicy {
     /// The absolute age past which a queued request is starved:
-    /// `starvation_factor × max_wait` (factor clamped to ≥ 1).
+    /// `starvation_factor × max_wait` (factor clamped to ≥ 1; always
+    /// anchored at the *configured* `max_wait`, so the fairness bound
+    /// stays stable while the adaptive hold budget moves).
     pub fn starvation_bound(&self) -> Duration {
         self.max_wait * self.starvation_factor.max(1)
+    }
+}
+
+/// Adaptive hold-budget policy: the scheduler keeps an EWMA of the
+/// inter-arrival time and holds a non-full batch for
+/// `ewma × (max_batch − 1)` — the time a full batch takes to assemble
+/// at the observed rate — clamped to `[min_wait, max_wait]`. Under an
+/// arrival flood the budget collapses toward `min_wait` (arrivals fill
+/// batches by size anyway); under a trickle it rises toward `max_wait`
+/// but never past the configured ceiling, so worst-case latency is
+/// unchanged. The EWMA update is pinned by a `VirtualClock` test.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveWait {
+    /// EWMA smoothing factor in (0, 1]: `ewma ← α·dt + (1−α)·ewma`.
+    pub alpha: f64,
+    /// Lower clamp for the effective hold budget.
+    pub min_wait: Duration,
+}
+
+impl Default for AdaptiveWait {
+    fn default() -> Self {
+        Self {
+            alpha: 0.2,
+            min_wait: Duration::from_micros(200),
+        }
     }
 }
 
@@ -125,12 +159,13 @@ struct Queued {
 
 impl Queued {
     /// How long the scheduler may hold this request before a close is
-    /// forced: the policy-wide `max_wait`, tightened by the request's
-    /// own deadline when one is set.
-    fn hold_deadline(&self, p: &BatchPolicy) -> Tick {
+    /// forced: the effective hold budget (`max_wait`, or the adaptive
+    /// tuning of it), tightened by the request's own deadline when one
+    /// is set.
+    fn hold_deadline(&self, eff_wait: Duration) -> Tick {
         let budget = match self.req.deadline {
-            Some(d) => d.min(p.max_wait),
-            None => p.max_wait,
+            Some(d) => d.min(eff_wait),
+            None => eff_wait,
         };
         self.arrived.after(budget)
     }
@@ -154,6 +189,11 @@ struct State {
     shutdown: bool,
     next_seq: u64,
     stats: SchedStats,
+    /// EWMA of inter-arrival time in ns (adaptive policy only; `None`
+    /// until two arrivals have been observed).
+    ewma_arrival_ns: Option<f64>,
+    /// Tick of the most recent arrival.
+    last_arrival: Option<Tick>,
 }
 
 /// The continuous-batching scheduler. Shared by reference between the
@@ -195,10 +235,21 @@ impl<C: Clock> Scheduler<C> {
     }
 
     /// Admit one request. Never blocks on an executing forward; stamps
-    /// the arrival tick used by every close decision.
+    /// the arrival tick used by every close decision and (adaptive
+    /// policy) folds the inter-arrival gap into the EWMA.
     pub fn submit(&self, req: InferenceRequest) {
         let arrived = self.clock.now();
         let mut st = self.state.lock().unwrap();
+        if let Some(aw) = self.policy.adaptive {
+            if let Some(prev) = st.last_arrival {
+                let dt = arrived.since(prev).as_nanos() as f64;
+                st.ewma_arrival_ns = Some(match st.ewma_arrival_ns {
+                    Some(e) => aw.alpha * dt + (1.0 - aw.alpha) * e,
+                    None => dt,
+                });
+            }
+            st.last_arrival = Some(arrived);
+        }
         let seq = st.next_seq;
         st.next_seq += 1;
         st.stats.submitted += 1;
@@ -222,6 +273,30 @@ impl<C: Clock> Scheduler<C> {
 
     pub fn stats(&self) -> SchedStats {
         self.state.lock().unwrap().stats.clone()
+    }
+
+    /// The hold budget currently in force: the configured `max_wait`,
+    /// or — under the adaptive policy — `ewma_interarrival ×
+    /// (max_batch − 1)` clamped to `[min_wait, max_wait]`.
+    pub fn effective_wait(&self) -> Duration {
+        let st = self.state.lock().unwrap();
+        Self::effective_wait_inner(&self.policy, &st)
+    }
+
+    fn effective_wait_inner(p: &BatchPolicy, st: &State) -> Duration {
+        match (p.adaptive, st.ewma_arrival_ns) {
+            (Some(aw), Some(ewma)) => {
+                let target = ewma * p.max_batch.saturating_sub(1).max(1) as f64;
+                // f64→u64 casts saturate, so an absurd EWMA clamps to
+                // max_wait instead of wrapping.
+                let target = Duration::from_nanos(target as u64);
+                let lo = aw.min_wait.min(p.max_wait);
+                target.clamp(lo, p.max_wait)
+            }
+            // No two arrivals observed yet (or fixed policy): the
+            // configured ceiling governs.
+            _ => p.max_wait,
+        }
     }
 
     /// Non-blocking pull: close and return a batch if the policy says
@@ -258,9 +333,10 @@ impl<C: Clock> Scheduler<C> {
         if st.queue.is_empty() {
             return None;
         }
+        let eff = Self::effective_wait_inner(p, st);
         let reason = if st.queue.len() >= p.max_batch.max(1) {
             CloseReason::Size
-        } else if st.queue.iter().any(|q| now >= q.hold_deadline(p)) {
+        } else if st.queue.iter().any(|q| now >= q.hold_deadline(eff)) {
             CloseReason::Deadline
         } else if st.shutdown {
             CloseReason::Drain
@@ -273,9 +349,10 @@ impl<C: Clock> Scheduler<C> {
     /// Sleep budget until the next time-driven close (None: queue empty,
     /// only a submit or shutdown can make progress).
     fn next_wakeup(st: &State, p: &BatchPolicy, now: Tick) -> Option<Duration> {
+        let eff = Self::effective_wait_inner(p, st);
         st.queue
             .iter()
-            .map(|q| q.hold_deadline(p))
+            .map(|q| q.hold_deadline(eff))
             .min()
             .map(|dl| dl.since(now).max(Duration::from_micros(10)))
     }
@@ -382,6 +459,23 @@ mod tests {
                 max_batch,
                 max_wait: ms(max_wait_ms),
                 starvation_factor: k,
+                adaptive: None,
+            },
+        )
+    }
+
+    fn adaptive_sched(
+        max_batch: usize,
+        max_wait_ms: u64,
+        aw: AdaptiveWait,
+    ) -> Scheduler<VirtualClock> {
+        Scheduler::new(
+            VirtualClock::new(),
+            BatchPolicy {
+                max_batch,
+                max_wait: ms(max_wait_ms),
+                starvation_factor: 4,
+                adaptive: Some(aw),
             },
         )
     }
@@ -488,6 +582,56 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.submitted, 5);
         assert_eq!(st.batches, 3);
+    }
+
+    #[test]
+    fn adaptive_wait_pins_the_ewma_update() {
+        let aw = AdaptiveWait {
+            alpha: 0.5,
+            min_wait: ms(1),
+        };
+        let s = adaptive_sched(5, 100, aw);
+        // Before two arrivals there is no interval to average: the
+        // configured ceiling governs.
+        assert_eq!(s.effective_wait(), ms(100));
+        s.submit(req(0));
+        assert_eq!(s.effective_wait(), ms(100));
+        // dt = 4 ms → ewma = 4 ms → hold = 4 ms × (max_batch−1) = 16 ms.
+        s.clock().advance(ms(4));
+        s.submit(req(1));
+        assert_eq!(s.effective_wait(), ms(16));
+        // dt = 2 ms → ewma = 0.5·2 + 0.5·4 = 3 ms → hold = 12 ms.
+        s.clock().advance(ms(2));
+        s.submit(req(2));
+        assert_eq!(s.effective_wait(), ms(12));
+    }
+
+    #[test]
+    fn adaptive_wait_clamps_to_min_and_max() {
+        let aw = AdaptiveWait {
+            alpha: 1.0,
+            min_wait: ms(2),
+        };
+        // Fast arrivals: 100 µs gaps → raw hold = 0.7 ms → clamps to
+        // min_wait, and the deadline close fires at the clamped budget,
+        // far before the 50 ms ceiling.
+        let s = adaptive_sched(8, 50, aw);
+        s.submit(req(0));
+        s.clock().advance(Duration::from_micros(100));
+        s.submit(req(1));
+        assert_eq!(s.effective_wait(), ms(2));
+        assert!(s.poll().is_none(), "inside the adaptive budget");
+        s.clock().advance(ms(2));
+        let b = s.poll().expect("adaptive budget expired for request 0");
+        assert_eq!(b.closed_by, CloseReason::Deadline);
+        assert_eq!(b.len(), 2);
+
+        // Slow arrivals: 10 s gap → clamps to the configured ceiling.
+        let s = adaptive_sched(8, 50, aw);
+        s.submit(req(0));
+        s.clock().advance(Duration::from_secs(10));
+        s.submit(req(1));
+        assert_eq!(s.effective_wait(), ms(50));
     }
 
     #[test]

@@ -87,12 +87,34 @@ pub struct ServeMetrics {
     pub executions: u64,
     pub checks_fired: u64,
     pub retries: u64,
-    /// Forwards whose verification never passed within the retry budget.
+    /// Forwards answered `Failed`: verification never passed within the
+    /// retry budget, or — fail-stop — the forward could not execute at
+    /// all (`shard_failures` separates out the latter when sharded).
     pub failures: u64,
     pub injected_faults: u64,
     /// Requests the scheduler force-included over priority order
     /// (starvation bound or expired per-request deadline).
     pub starvation_promotions: u64,
+    /// Shard-tier fail-stop events: forward passes the sharded backend
+    /// could not execute — in practice a shard dying mid-request — each
+    /// answered with `Failed` responses for the whole batch (never a
+    /// silent partial stitch). Always 0 when serving unsharded —
+    /// backend errors there count in `failures` only.
+    pub shard_failures: u64,
+    /// Seconds the shard tier spent blocked on each shard (proc: socket
+    /// round-trip; inproc: the band's compute), indexed by shard.
+    /// Empty when serving unsharded.
+    pub shard_wait_secs: Vec<f64>,
+    /// Seconds the shard tier spent stitching band results.
+    pub shard_stitch_secs: f64,
+    /// Aggregation phases the shard tier executed (2 per forward) —
+    /// the divisor that turns the cumulative wait/stitch seconds into
+    /// per-phase costs.
+    pub shard_aggregates: u64,
+    /// The scheduler's effective hold budget at drain, in ms — equals
+    /// `--max-wait-ms` unless `--adaptive-wait` tuned it from the
+    /// observed arrival rate.
+    pub effective_wait_ms: f64,
     pub exec_secs: f64,
     pub verify_secs: f64,
     pub wall_secs: f64,

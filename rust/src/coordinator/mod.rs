@@ -9,15 +9,22 @@ pub mod clock;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod shard;
 pub mod verify;
 
-pub use batcher::{Batch, BatchPolicy, CloseReason, SchedStats, Scheduler};
+pub use batcher::{AdaptiveWait, Batch, BatchPolicy, CloseReason, SchedStats, Scheduler};
 pub use clock::{Clock, MonotonicClock, Tick, VirtualClock};
 pub use metrics::{LatencyHistogram, PriorityLatency, ServeMetrics};
 pub use request::{
     InferenceRequest, InferenceResponse, Perturbation, Priority, VerifyStatus,
 };
 pub use server::{overlay_groups, run_server, ModelState, ServerConfig};
+pub use shard::{
+    run_shard_worker, InProcTransport, ShardPlan, ShardTransport, ShardTransportKind,
+    ShardedBackend,
+};
+#[cfg(unix)]
+pub use shard::ProcTransport;
 pub use verify::{ServePolicy, VerifyReport};
 
 use crate::graph::DatasetId;
@@ -57,6 +64,43 @@ pub fn serve_cli(args: &Args) -> Result<String> {
     if starvation_factor == 0 {
         return Err(anyhow!("--starvation-factor must be ≥ 1"));
     }
+    if args.get("min-wait-ms").is_some() && !args.has_flag("adaptive-wait") {
+        // A floor with no adaptive policy would silently do nothing.
+        return Err(anyhow!(
+            "--min-wait-ms only applies with --adaptive-wait"
+        ));
+    }
+    let adaptive = if args.has_flag("adaptive-wait") {
+        let min_wait_ms = args
+            .get_f64("min-wait-ms", 0.2)
+            .map_err(|e| anyhow!("{e}"))?;
+        if !(min_wait_ms > 0.0 && min_wait_ms <= max_wait_ms) {
+            return Err(anyhow!(
+                "--min-wait-ms must be in (0, max-wait-ms] (got {min_wait_ms})"
+            ));
+        }
+        Some(AdaptiveWait {
+            min_wait: Duration::from_secs_f64(min_wait_ms / 1e3),
+            ..Default::default()
+        })
+    } else {
+        None
+    };
+    let shards = args.get_usize("shards", 0).map_err(|e| anyhow!("{e}"))?;
+    if shards > 256 {
+        return Err(anyhow!("--shards must be ≤ 256 (got {shards})"));
+    }
+    let shard_transport = ShardTransportKind::parse(&args.get_str("shard-transport", "inproc"))
+        .ok_or_else(|| anyhow!("unknown --shard-transport (inproc, proc)"))?;
+    let kill_shard_after = match args.get("kill-shard-after") {
+        Some(v) => Some(v.parse::<u64>().map_err(|e| anyhow!("kill-shard-after: {e}"))?),
+        None => None,
+    };
+    if kill_shard_after.is_some() && shards == 0 {
+        // A fail-stop rehearsal that silently cannot fire would let an
+        // operator believe the drill ran.
+        return Err(anyhow!("--kill-shard-after requires --shards"));
+    }
     let priority_mix = parse_priority_mix(&args.get_str("priority-mix", "1,0,0"))?;
     let workers = args.get_usize("workers", 2).map_err(|e| anyhow!("{e}"))?;
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!("{e}"))?;
@@ -87,6 +131,7 @@ pub fn serve_cli(args: &Args) -> Result<String> {
             max_batch,
             max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
             starvation_factor: starvation_factor as u32,
+            adaptive,
         },
         workers,
         inject_every,
@@ -98,6 +143,9 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         backend,
         scheme,
         priority_mix,
+        shards,
+        shard_transport,
+        kill_shard_after,
         ..Default::default()
     };
     let summary = serve_synthetic(&cfg, requests)?;
@@ -149,6 +197,11 @@ pub struct ServeSummary {
     pub sparse: bool,
     /// Row bands of `S` (1 for dense).
     pub bands: usize,
+    /// Row-band shards served through the shard tier (0 = the classic
+    /// in-process path).
+    pub shards: usize,
+    /// Shard transport name when the shard tier is on.
+    pub shard_transport: &'static str,
     /// Resident graph-operand footprint (S + features) in bytes.
     pub operand_bytes: usize,
     /// Which execution backend served the run.
@@ -163,7 +216,7 @@ impl ServeSummary {
         let mut out = format!(
             "SERVE {} — {} requests in {:.2}s ({:.1} req/s)\n\
              backend: {} (scheme {}) | operands: {} ({:.1} MB resident{})\n\
-             batches {} (mean size {:.1}) | groups {} | executions {} | \
+             batches {} (mean size {:.1}, eff-wait {:.2} ms) | groups {} | executions {} | \
              p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
              verification: {:.3}% of execute time | checks fired {} | injected {} | \
              retries {} | failures {} | starvation promotions {}\n\
@@ -183,6 +236,7 @@ impl ServeSummary {
             },
             m.batches,
             m.mean_batch(),
+            m.effective_wait_ms,
             m.overlay_groups,
             m.executions,
             m.p50_secs * 1e3,
@@ -198,6 +252,23 @@ impl ServeSummary {
             self.recovered,
             self.failed,
         );
+        if self.shards > 0 {
+            let m = &self.metrics;
+            let waits: Vec<String> = m
+                .shard_wait_secs
+                .iter()
+                .map(|s| format!("{:.2}", s * 1e3))
+                .collect();
+            out.push_str(&format!(
+                "\nshard tier: {} shards over {} | stitch {:.2} ms | \
+                 per-shard wait [{}] ms | shard failures {}",
+                self.shards,
+                self.shard_transport,
+                m.shard_stitch_secs * 1e3,
+                waits.join(", "),
+                m.shard_failures,
+            ));
+        }
         let mut prio_line = String::new();
         for (rank, pl) in m.by_priority.iter().enumerate() {
             if pl.requests == 0 {
@@ -244,6 +315,16 @@ impl ServeSummary {
             ("scheme", Json::from(self.scheme.to_string())),
             ("sparse", Json::Bool(self.sparse)),
             ("bands", Json::from(self.bands)),
+            ("shards", Json::from(self.shards)),
+            ("shard_transport", Json::from(self.shard_transport)),
+            ("shard_failures", Json::from(m.shard_failures)),
+            (
+                "shard_wait_secs",
+                Json::Arr(m.shard_wait_secs.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            ("shard_stitch_secs", Json::Num(m.shard_stitch_secs)),
+            ("shard_aggregates", Json::from(m.shard_aggregates)),
+            ("effective_wait_ms", Json::Num(m.effective_wait_ms)),
             ("operand_bytes", Json::from(self.operand_bytes)),
             ("requests", Json::from(m.requests)),
             ("wall_secs", Json::Num(m.wall_secs)),
@@ -352,6 +433,19 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
         failed,
         sparse: state.ops.is_sparse(),
         bands: state.ops.band_count(),
+        // The achieved shard count: the row partition clamps a --shards
+        // larger than the band arithmetic can honor (ceil(n/ceil(n/s))
+        // bands), so report what actually serves, not what was asked.
+        shards: if cfg.shards > 0 {
+            state.ops.band_count()
+        } else {
+            0
+        },
+        shard_transport: if cfg.shards > 0 {
+            cfg.shard_transport.name()
+        } else {
+            "-"
+        },
         operand_bytes: state.ops.operand_bytes(),
         backend: cfg.backend.name(),
         scheme: cfg.scheme.name(),

@@ -41,6 +41,7 @@
 use super::batcher::{Batch, BatchPolicy, Scheduler};
 use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
+use super::shard::{self, ShardTransport, ShardTransportKind};
 use super::verify::ServePolicy;
 use crate::graph::DatasetId;
 use crate::runtime::backend;
@@ -52,7 +53,7 @@ use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Server configuration.
@@ -86,6 +87,23 @@ pub struct ServerConfig {
     /// Priority mix of the synthetic client driver
     /// (interactive/batch/background weights, `--priority-mix`).
     pub priority_mix: [f64; 3],
+    /// Row-band shards of `S` served through the shard tier
+    /// ([`super::shard`]); 0 = the classic in-process path. Sharding
+    /// runs on CSR operands (`--mode dense` is refused) and the native
+    /// backend.
+    pub shards: usize,
+    /// Where the shards run (`--shard-transport inproc|proc`).
+    pub shard_transport: ShardTransportKind,
+    /// Worker binary the proc transport spawns. `None` = the running
+    /// executable (right for the `gcn-abft` binary; tests and benches
+    /// pass `env!("CARGO_BIN_EXE_gcn-abft")`, since *their* executable
+    /// has no `shard-worker` subcommand).
+    pub shard_worker_bin: Option<PathBuf>,
+    /// Fault injection for fail-stop tests: tear down shard 0 just
+    /// before the batch with this 0-based index executes. Requests
+    /// already answered stay answered; everything after gets
+    /// `VerifyStatus::Failed` while the coordinator keeps serving.
+    pub kill_shard_after: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -106,6 +124,10 @@ impl Default for ServerConfig {
             backend: BackendKind::Native,
             scheme: ChecksumScheme::Fused,
             priority_mix: [1.0, 0.0, 0.0],
+            shards: 0,
+            shard_transport: ShardTransportKind::InProc,
+            shard_worker_bin: None,
+            kill_shard_after: None,
         }
     }
 }
@@ -170,12 +192,27 @@ impl ModelState {
         } else {
             (spec.num_nodes, spec.num_edges, spec.feat_nnz)
         };
+        // Sharded serving distributes the row bands of a CSR `S`
+        // (that is the whole point — the bands and their checksum
+        // partials are the unit of distribution), so `--shards` forces
+        // the sparse representation.
+        let mode = if cfg.shards > 0 {
+            if cfg.mode == ExecMode::Dense {
+                bail!(
+                    "sharded serving (--shards) runs on CSR operands; \
+                     use --mode auto or sparse"
+                );
+            }
+            ExecMode::Sparse
+        } else {
+            cfg.mode
+        };
         let plan = OperandPlan::choose(
             n_est,
             spec.feat_dim,
             2 * edges_est + n_est, // S nnz: every edge twice + self-loops
             feat_nnz_est,
-            cfg.mode,
+            mode,
             cfg.mem_budget_mb.saturating_mul(1 << 20),
         )?;
 
@@ -197,7 +234,14 @@ impl ModelState {
             classes: w2.cols(),
         };
         let ops = if plan.sparse {
-            GcnOperands::sparse(graph.features, &model.adjacency, w1, w2, cfg.workers.max(1))?
+            // One row band per shard when the shard tier is on (the
+            // bands ARE the shards); otherwise one per worker as before.
+            let bands = if cfg.shards > 0 {
+                cfg.shards
+            } else {
+                cfg.workers.max(1)
+            };
+            GcnOperands::sparse(graph.features, &model.adjacency, w1, w2, bands)?
         } else {
             GcnOperands::dense(
                 graph.features.to_dense(),
@@ -292,6 +336,22 @@ pub fn run_server_with_ready(
     ready: Option<Sender<()>>,
 ) -> Result<ServeMetrics> {
     let wall_start = Instant::now();
+    // The shard tier is built once, up front (the proc transport spawns
+    // its worker subprocesses here), and shared with the executor. A
+    // transport that cannot come up is a server-build error; a shard
+    // that dies *later* is a per-request fail-stop, not a crash.
+    let shard_tier: Option<Arc<dyn ShardTransport>> = if cfg.shards > 0 {
+        if cfg.backend != BackendKind::Native {
+            bail!(
+                "sharded serving runs on the native backend \
+                 (got --backend {})",
+                cfg.backend.name()
+            );
+        }
+        Some(shard::build_transport(cfg, &state.ops)?)
+    } else {
+        None
+    };
     let sched = Scheduler::with_policy(cfg.batch);
     let metrics = Mutex::new(ServeMetrics::default());
     let latency = Mutex::new(LatencyHistogram::new());
@@ -348,11 +408,22 @@ pub fn run_server_with_ready(
             let batch_counter = &batch_counter;
             let cfg = cfg.clone();
             let state = state;
+            let shard_tier = shard_tier.clone();
             handles.push(scope.spawn(move || -> Result<()> {
                 // Each executor owns its own backend (one accelerator per
                 // worker; a hard requirement on the PJRT backend whose
-                // client handle is not Send).
-                let exe = match build_worker_backend(&cfg, state, intra_threads) {
+                // client handle is not Send). With the shard tier on,
+                // the (single) executor runs the sharded backend over
+                // the shared transport instead.
+                let build = match &shard_tier {
+                    Some(t) => Ok(Box::new(shard::ShardedBackend::new(
+                        t.clone(),
+                        cfg.scheme,
+                        intra_threads,
+                    )) as Box<dyn backend::GcnBackend>),
+                    None => build_worker_backend(&cfg, state, intra_threads),
+                };
+                let exe = match build {
                     Ok(exe) => exe,
                     Err(err) => {
                         // A worker that cannot build its backend must not
@@ -384,6 +455,13 @@ pub fn run_server_with_ready(
                 while let Some(batch) = sched.next_batch() {
                     let bidx =
                         batch_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    // Scheduled shard teardown (`--kill-shard-after`):
+                    // fail-stop fault injection for the shard tier.
+                    if let (Some(t), Some(kill_at)) = (&shard_tier, cfg.kill_shard_after) {
+                        if bidx == kill_at {
+                            t.kill_shard(0);
+                        }
+                    }
                     let bsize = batch.len();
                     // Overlay-equivalence groups: one forward per distinct
                     // perturbation set, so coalescing never changes what
@@ -408,7 +486,49 @@ pub fn run_server_with_ready(
                     let group_refs: Vec<&[Overlay<'_>]> =
                         group_overlays.iter().map(|g| g.as_slice()).collect();
                     let t0 = Instant::now();
-                    let mut outs = exe.run_groups(&state.ops, &group_refs)?;
+                    // Fail-stop: a forward that cannot execute at all —
+                    // above all a shard dying mid-request — must never
+                    // become a silently stitched partial answer. Every
+                    // member of the batch is answered `Failed` and the
+                    // coordinator keeps serving subsequent batches.
+                    let mut outs = match exe.run_groups(&state.ops, &group_refs) {
+                        Ok(outs) => outs,
+                        Err(err) => {
+                            eprintln!(
+                                "serve: forward failed ({err:#}); \
+                                 answering fail-stop Failed"
+                            );
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.exec_secs += t0.elapsed().as_secs_f64();
+                                // shard_failures tracks shard-tier
+                                // health specifically; an unsharded
+                                // backend error is failures-only.
+                                if shard_tier.is_some() {
+                                    m.shard_failures += 1;
+                                }
+                                m.failures += groups.len() as u64;
+                            }
+                            for req in &batch.requests {
+                                let lat = req.submitted.elapsed().as_secs_f64();
+                                local_lat.record(lat);
+                                local_prio[req.priority.rank()].record(lat);
+                                let _ = responses.send(InferenceResponse {
+                                    id: req.id,
+                                    priority: req.priority,
+                                    classes: req
+                                        .query_nodes
+                                        .iter()
+                                        .map(|&n| (n, usize::MAX))
+                                        .collect(),
+                                    status: VerifyStatus::Failed,
+                                    latency_secs: lat,
+                                    batch_size: bsize,
+                                });
+                            }
+                            continue;
+                        }
+                    };
                     let exec_dt = t0.elapsed().as_secs_f64();
                     // A backend override returning the wrong arity would
                     // otherwise silently drop requests in the zip below.
@@ -501,7 +621,21 @@ pub fn run_server_with_ready(
                             }
                             metrics.lock().unwrap().retries += 1;
                             let t0 = Instant::now();
-                            current = exe.run(&state.ops, overlays)?;
+                            current = match exe.run(&state.ops, overlays) {
+                                Ok(out) => out,
+                                Err(err) => {
+                                    // A shard died between the batched
+                                    // pass and this retry: fail-stop.
+                                    eprintln!(
+                                        "serve: retry forward failed ({err:#}); \
+                                         answering fail-stop Failed"
+                                    );
+                                    if shard_tier.is_some() {
+                                        metrics.lock().unwrap().shard_failures += 1;
+                                    }
+                                    break (VerifyStatus::Failed, None);
+                                }
+                            };
                             let dt = t0.elapsed().as_secs_f64();
                             {
                                 let mut m = metrics.lock().unwrap();
@@ -565,6 +699,13 @@ pub fn run_server_with_ready(
         m.set_priority_percentiles(rank, h);
     }
     m.starvation_promotions = sched.stats().starvation_promotions;
+    m.effective_wait_ms = sched.effective_wait().as_secs_f64() * 1e3;
+    if let Some(t) = &shard_tier {
+        let tm = t.timings();
+        m.shard_wait_secs = tm.wait_secs;
+        m.shard_stitch_secs = tm.stitch_secs;
+        m.shard_aggregates = tm.aggregates;
+    }
     Ok(m)
 }
 

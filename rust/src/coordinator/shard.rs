@@ -1,0 +1,1184 @@
+//! The shard tier: location-transparent row-band sharding of the
+//! propagation matrix.
+//!
+//! PR 2 proved the algebra: the fused checksum `eᵀ·(S·X·W)·e` and its
+//! cached partials are **additive over row bands of `S`**, so a banded
+//! aggregation stitches back exactly (logits by concatenation, checksum
+//! partials by summation). Until now that blueprint lived as scoped
+//! threads buried inside the operand kernel
+//! ([`crate::runtime::operands::SOperand::aggregate`]); this module
+//! makes the band/partial-checksum boundary a first-class interface:
+//!
+//! * [`ShardPlan`] — the row-band partition of a resident
+//!   [`GcnOperands`] set (derived from the banded `S` the memory
+//!   planner already builds), with per-shard resident and per-request
+//!   payload footprints;
+//! * [`ShardTransport`] — *where* the bands run: [`InProcTransport`]
+//!   (today's scoped-thread fan-out, now a trait impl) or
+//!   [`ProcTransport`] (spawned `gcn-abft shard-worker` subprocesses
+//!   speaking a length-prefixed JSON + raw-little-endian-float protocol
+//!   over Unix domain sockets — std-only, no serialization crates);
+//! * [`ShardedBackend`] — a [`GcnBackend`] that runs the ordinary
+//!   native forward ([`native::forward_with`]) with the two `S·X`
+//!   aggregation phases routed through a transport.
+//!
+//! **Bit-identity.** Every transport computes each band with
+//! [`RowBand::aggregate_into`] — the same serial per-row kernel the
+//! in-process path uses — and the coordinator stitches in fixed band
+//! order, so `serve --shards N --shard-transport inproc|proc` produces
+//! logits bit-identical to unsharded serving and identical fused/split
+//! alarm decisions (`tests/prop_shard_equivalence.rs`). The two
+//! transports are bit-identical to *each other* including the stitched
+//! checksum bits.
+//!
+//! **Fail-stop.** A shard that dies mid-request (socket error, killed
+//! worker, poisoned in-proc band) fails the whole aggregation: the
+//! coordinator answers the affected requests with
+//! [`VerifyStatus::Failed`](super::request::VerifyStatus) and keeps
+//! serving — never a silently stitched partial answer. A checksum
+//! corrupted *inside* a shard surfaces through the ordinary GCN-ABFT
+//! verification of the stitched sums, since the band partials add into
+//! the global predicted/actual pair.
+//!
+//! The wire protocol (one frame = `u32` little-endian header length,
+//! UTF-8 JSON header, raw payload of `header.payload` bytes):
+//!
+//! ```text
+//! coordinator → worker   {"type":"init", shard, row0, rows, cols, nnz, payload}
+//!                        payload = row_ptr u64[rows+1] · col_idx u64[nnz]
+//!                                  · values f32[nnz] · s_c f64[cols]
+//! worker → coordinator   {"type":"ready", shard}
+//! coordinator → worker   {"type":"agg", rows, cols, payload}
+//!                        payload = x f32[rows·cols] · x_r f32[rows]
+//! worker → coordinator   {"type":"band", rows, cols, payload}
+//!                        payload = z f32[rows·cols] · pred f64 · actual f64
+//! coordinator → worker   {"type":"shutdown"}
+//! ```
+//!
+//! Floats cross the wire as raw little-endian bit patterns (never as
+//! decimal text), which is what keeps the proc transport bit-identical.
+
+use crate::runtime::backend::native;
+use crate::runtime::backend::{self, ChecksumScheme, ExecPlan, GcnBackend, Overlay};
+use crate::runtime::{GcnOperands, GcnOutputs, SOperand};
+use crate::tensor::Dense;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Transport selector for configs and the `--shard-transport` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardTransportKind {
+    /// Scoped threads inside the coordinator process (zero copies).
+    InProc,
+    /// One `gcn-abft shard-worker` subprocess per shard, over Unix
+    /// domain sockets.
+    Proc,
+}
+
+impl ShardTransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardTransportKind::InProc => "inproc",
+            ShardTransportKind::Proc => "proc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardTransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "thread" | "threads" => Some(ShardTransportKind::InProc),
+            "proc" | "process" | "uds" => Some(ShardTransportKind::Proc),
+            _ => None,
+        }
+    }
+}
+
+/// Cumulative transport observability (surfaced in
+/// [`super::metrics::ServeMetrics`] so proc-transport overhead is
+/// measured, not guessed).
+#[derive(Debug, Clone, Default)]
+pub struct ShardTimings {
+    /// Aggregation phases executed.
+    pub aggregates: u64,
+    /// Seconds the stitcher spent blocked on each shard (proc: socket
+    /// round-trip; inproc: the band's compute on its scoped worker).
+    pub wait_secs: Vec<f64>,
+    /// Seconds spent stitching band results (row copies + partial sums).
+    pub stitch_secs: f64,
+}
+
+/// One shard's slice of the [`ShardPlan`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardBand {
+    /// First global row of `S` this shard owns.
+    pub row0: usize,
+    /// Rows of `S` this shard owns.
+    pub rows: usize,
+    /// Stored nonzeros of the band.
+    pub nnz: usize,
+    /// Resident bytes at the shard: the band CSR plus its `s_c` vector.
+    pub resident_bytes: usize,
+}
+
+/// The row-band partition of one resident operand set across shards —
+/// the deployment-facing view of what each worker holds and what each
+/// request ships.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub shards: usize,
+    /// Total rows of `S` (= N nodes).
+    pub n: usize,
+    pub bands: Vec<ShardBand>,
+}
+
+impl ShardPlan {
+    /// Derive the plan from a resident operand set. The operand planner
+    /// already partitioned a CSR `S` into row bands (one per requested
+    /// shard); dense operands have no band structure to distribute.
+    pub fn for_operands(ops: &GcnOperands) -> Result<ShardPlan> {
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!(
+                "sharded serving needs CSR operands with a row-banded S \
+                 (got dense operands; use --mode sparse)"
+            );
+        };
+        let plan_bands = bands
+            .iter()
+            .map(|b| ShardBand {
+                row0: b.row0,
+                rows: b.s.rows(),
+                nnz: b.s.nnz(),
+                resident_bytes: b.s.heap_bytes() + b.s_c.len() * std::mem::size_of::<f64>(),
+            })
+            .collect();
+        Ok(ShardPlan {
+            shards: bands.len(),
+            n: ops.n_nodes(),
+            bands: plan_bands,
+        })
+    }
+
+    /// Largest per-shard resident footprint (bytes).
+    pub fn max_resident_bytes(&self) -> usize {
+        self.bands.iter().map(|b| b.resident_bytes).max().unwrap_or(0)
+    }
+
+    /// Bytes shipped to **each** shard per request on the proc
+    /// transport: both aggregation phases' `x` + `x_r` payloads.
+    pub fn request_payload_bytes(&self, ops: &GcnOperands) -> usize {
+        let per_phase = |width: usize| (self.n * width + self.n) * std::mem::size_of::<f32>();
+        per_phase(ops.hidden_dim()) + per_phase(ops.num_classes())
+    }
+}
+
+/// Where the row bands of `S` execute. One `aggregate` call is one
+/// `z = S·x` phase: the transport computes every band (wherever its
+/// shards live), stitches `z` by row-band concatenation and the fused
+/// checksum partials `(s_c[band]·x_r, eᵀ·z[band]·e)` by summation in
+/// band order, and returns the stitched triple. Any shard failing fails
+/// the whole phase (fail-stop — the coordinator never sees a partial
+/// stitch).
+pub trait ShardTransport: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn shards(&self) -> usize;
+
+    /// One aggregation phase over the resident operands' band partition.
+    fn aggregate(&self, ops: &GcnOperands, x: &Dense, x_r: &[f32]) -> Result<(Dense, f64, f64)>;
+
+    /// Tear down one shard (fault injection for fail-stop tests): every
+    /// subsequent `aggregate` touching the shard must error. Returns
+    /// `false` when the shard index is out of range.
+    fn kill_shard(&self, shard: usize) -> bool;
+
+    /// Cumulative timings snapshot.
+    fn timings(&self) -> ShardTimings;
+}
+
+/// Today's scoped-thread band fan-out, as a [`ShardTransport`]: each
+/// band of the resident `S` aggregates on its own scoped worker writing
+/// a disjoint row slice of `z`. This is the same machinery
+/// [`SOperand::aggregate`] runs for the unsharded sparse path — one
+/// band's compute is the serial [`RowBand::aggregate_into`] either way —
+/// so the in-proc shard tier is bit-identical to unsharded serving,
+/// checksum bits included, whenever the band partitions match.
+///
+/// [`RowBand::aggregate_into`]: crate::runtime::operands::RowBand::aggregate_into
+#[derive(Debug)]
+pub struct InProcTransport {
+    shards: usize,
+    /// Poisoned shards ([`ShardTransport::kill_shard`]): the in-proc
+    /// analogue of a dead worker process.
+    down: Vec<AtomicBool>,
+    timings: Mutex<ShardTimings>,
+}
+
+impl InProcTransport {
+    /// Transport over an operand set whose `S` is banded into the
+    /// desired shard count.
+    pub fn new(ops: &GcnOperands) -> Result<InProcTransport> {
+        let plan = ShardPlan::for_operands(ops)?;
+        Ok(InProcTransport {
+            shards: plan.shards,
+            down: (0..plan.shards).map(|_| AtomicBool::new(false)).collect(),
+            timings: Mutex::new(ShardTimings {
+                wait_secs: vec![0.0; plan.shards],
+                ..Default::default()
+            }),
+        })
+    }
+}
+
+impl ShardTransport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn aggregate(&self, ops: &GcnOperands, x: &Dense, x_r: &[f32]) -> Result<(Dense, f64, f64)> {
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("inproc shard transport got dense operands");
+        };
+        if bands.len() != self.shards {
+            bail!(
+                "operand band count {} != shard count {}",
+                bands.len(),
+                self.shards
+            );
+        }
+        for (k, d) in self.down.iter().enumerate() {
+            if d.load(Ordering::SeqCst) {
+                bail!("shard {k} is down");
+            }
+        }
+        let mut out = Dense::zeros(ops.n_nodes(), x.cols());
+        // THE band fan-out — the same helper the unsharded sparse path
+        // runs, so inproc sharding is bit-identical by construction.
+        let partials =
+            crate::runtime::operands::aggregate_bands_timed(bands, x, x_r, out.data_mut());
+        let t_stitch = Instant::now();
+        let pred = partials.iter().map(|p| p.0).sum();
+        let actual = partials.iter().map(|p| p.1).sum();
+        let stitch = t_stitch.elapsed().as_secs_f64();
+        {
+            let mut tm = self.timings.lock().unwrap();
+            tm.aggregates += 1;
+            tm.stitch_secs += stitch;
+            for (acc, p) in tm.wait_secs.iter_mut().zip(&partials) {
+                *acc += p.2;
+            }
+        }
+        Ok((out, pred, actual))
+    }
+
+    fn kill_shard(&self, shard: usize) -> bool {
+        match self.down.get(shard) {
+            Some(d) => {
+                d.store(true, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn timings(&self) -> ShardTimings {
+        self.timings.lock().unwrap().clone()
+    }
+}
+
+/// A [`GcnBackend`] running the ordinary native forward with both `S·X`
+/// aggregation phases routed through a [`ShardTransport`]. Combination
+/// matmuls, overlay patching and (split scheme) phase-1 checks are the
+/// exact in-process code ([`native::forward_with`]), so the transport
+/// can change *where* bands run but never *what* a forward computes.
+pub struct ShardedBackend {
+    transport: Arc<dyn ShardTransport>,
+    scheme: ChecksumScheme,
+    threads: usize,
+}
+
+impl ShardedBackend {
+    pub fn new(
+        transport: Arc<dyn ShardTransport>,
+        scheme: ChecksumScheme,
+        threads: usize,
+    ) -> ShardedBackend {
+        ShardedBackend {
+            transport,
+            scheme,
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn transport(&self) -> &Arc<dyn ShardTransport> {
+        &self.transport
+    }
+}
+
+impl GcnBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "native-sharded"
+    }
+
+    fn plan(&self, ops: &GcnOperands) -> Result<ExecPlan> {
+        if ops.band_count() != self.transport.shards() {
+            bail!(
+                "operand band count {} != shard count {}",
+                ops.band_count(),
+                self.transport.shards()
+            );
+        }
+        Ok(backend::plan_with_profile(
+            self.name(),
+            crate::opcount::backend::BackendProfile::Native,
+            self.scheme,
+            ops,
+            self.transport.shards(),
+            self.threads,
+        ))
+    }
+
+    fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs> {
+        native::forward_with(ops, overlays, self.threads, self.scheme, |x, x_r| {
+            self.transport.aggregate(ops, x, x_r)
+        })
+    }
+}
+
+/// Build the transport a server config selects, over the resident
+/// operands. The band partition is derived from `--shards` at operand
+/// build, but [`row_band_bounds`] may legitimately produce *fewer*
+/// bands than requested (`ceil(n/ceil(n/shards))` — e.g. 64 nodes at
+/// `--shards 48` yield 32 two-row bands); the operands' actual band
+/// count is the source of truth, never a startup refusal.
+///
+/// [`row_band_bounds`]: crate::runtime::operands::row_band_bounds
+pub fn build_transport(
+    cfg: &super::server::ServerConfig,
+    ops: &GcnOperands,
+) -> Result<Arc<dyn ShardTransport>> {
+    let plan = ShardPlan::for_operands(ops)?;
+    // The operand build derives its bands from cfg.shards, and the
+    // partition arithmetic can only clamp downward.
+    debug_assert!(plan.shards <= cfg.shards.max(1));
+    match cfg.shard_transport {
+        ShardTransportKind::InProc => Ok(Arc::new(InProcTransport::new(ops)?)),
+        #[cfg(unix)]
+        ShardTransportKind::Proc => Ok(Arc::new(ProcTransport::spawn(
+            ops,
+            cfg.shard_worker_bin.as_deref(),
+        )?)),
+        #[cfg(not(unix))]
+        ShardTransportKind::Proc => bail!("the proc shard transport is only available on unix"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire protocol (shared by the proc transport and the worker binary).
+// ---------------------------------------------------------------------
+
+/// Sanity ceiling on frame payloads (covers Nell-scale phases with slack;
+/// a corrupt length must not trigger a huge allocation).
+const MAX_PAYLOAD_BYTES: usize = 1 << 31;
+const MAX_HEADER_BYTES: usize = 1 << 16;
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_u64s(buf: &mut Vec<u8>, xs: &[usize]) {
+    for &x in xs {
+        buf.extend_from_slice(&(x as u64).to_le_bytes());
+    }
+}
+
+/// Sequential reader over a frame payload.
+struct Wire<'a>(&'a [u8]);
+
+impl<'a> Wire<'a> {
+    fn chunk(&mut self, bytes: usize) -> Result<&'a [u8]> {
+        if self.0.len() < bytes {
+            bail!("frame payload truncated ({} < {bytes} bytes)", self.0.len());
+        }
+        let (head, tail) = self.0.split_at(bytes);
+        self.0 = tail;
+        Ok(head)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.chunk(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let raw = self.chunk(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(self.f64s(1)?[0])
+    }
+
+    fn usizes(&mut self, n: usize) -> Result<Vec<usize>> {
+        let raw = self.chunk(n * 8)?;
+        raw.chunks_exact(8)
+            .map(|c| {
+                usize::try_from(u64::from_le_bytes(c.try_into().unwrap()))
+                    .map_err(|_| anyhow!("index overflows usize"))
+            })
+            .collect()
+    }
+
+    fn done(&self) -> Result<()> {
+        if !self.0.is_empty() {
+            bail!("{} trailing bytes in frame payload", self.0.len());
+        }
+        Ok(())
+    }
+}
+
+/// Encode one frame: header length, JSON header, raw payload. The
+/// header's `payload` field must equal `payload.len()`.
+fn encode_frame(header: &Json, payload: &[u8]) -> Vec<u8> {
+    let h = header.to_string();
+    let mut buf = Vec::with_capacity(4 + h.len() + payload.len());
+    buf.extend_from_slice(&(h.len() as u32).to_le_bytes());
+    buf.extend_from_slice(h.as_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary (the
+/// peer hung up between requests).
+fn read_frame(r: &mut impl std::io::Read) -> Result<Option<(Json, Vec<u8>)>> {
+    let mut len4 = [0u8; 4];
+    // Distinguish "no next frame" from "died mid-frame".
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len4[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => bail!("peer closed mid-frame"),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen == 0 || hlen > MAX_HEADER_BYTES {
+        bail!("implausible frame header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    r.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow!("bad frame header: {e}"))?;
+    let plen = header
+        .get("payload")
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    if plen > MAX_PAYLOAD_BYTES {
+        bail!("implausible frame payload length {plen}");
+    }
+    let mut payload = vec![0u8; plen];
+    r.read_exact(&mut payload)?;
+    Ok(Some((header, payload)))
+}
+
+fn header_field(h: &Json, key: &str) -> Result<usize> {
+    h.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("frame header missing {key:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Proc transport (Unix domain sockets; unix-only).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+pub use proc_transport::{run_shard_worker, ProcTransport};
+
+#[cfg(unix)]
+mod proc_transport {
+    use super::*;
+    use crate::runtime::operands::RowBand;
+    use crate::sparse::Csr;
+    use anyhow::{anyhow, bail};
+    use std::io::Write as _;
+    use std::os::unix::net::{UnixListener, UnixStream};
+    use std::path::{Path, PathBuf};
+    use std::process::{Child, Command, Stdio};
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    /// How long the coordinator waits for workers to connect and for
+    /// per-request replies before declaring a shard dead.
+    const IO_TIMEOUT: Duration = Duration::from_secs(60);
+    const ACCEPT_TIMEOUT: Duration = Duration::from_secs(15);
+
+    static SOCKET_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+    struct ProcShard {
+        child: Child,
+        /// `None` once the shard is known dead.
+        stream: Option<UnixStream>,
+        row0: usize,
+        rows: usize,
+    }
+
+    /// Read and fully validate one `band` reply: `(z rows, pred,
+    /// actual)`. Every failure mode — EOF, wire error, worker-reported
+    /// error, wrong frame type, mismatched shape, short payload — is an
+    /// `Err`, so the caller poisons the shard on any of them.
+    fn read_band_reply(
+        stream: &mut UnixStream,
+        rows: usize,
+        width: usize,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        let (hdr, body) = read_frame(stream)?.ok_or_else(|| anyhow!("hung up"))?;
+        match hdr.get("type").and_then(Json::as_str) {
+            Some("band") => {}
+            Some("error") => {
+                bail!(
+                    "worker reported: {}",
+                    hdr.get("msg").and_then(Json::as_str).unwrap_or("?")
+                );
+            }
+            other => bail!("unexpected frame type {other:?}"),
+        }
+        if header_field(&hdr, "rows")? != rows || header_field(&hdr, "cols")? != width {
+            bail!("mismatched band shape");
+        }
+        let mut wire = Wire(&body);
+        let z = wire.f32s(rows * width)?;
+        let p = wire.f64()?;
+        let a = wire.f64()?;
+        wire.done()?;
+        Ok((z, p, a))
+    }
+
+    /// One `gcn-abft shard-worker` subprocess per shard, each holding
+    /// only its band of `S` (plus the band's `s_c`), shipped once at
+    /// spawn over a Unix domain socket. Per request the coordinator
+    /// streams each phase's `x`/`x_r` and stitches the returned band
+    /// rows + checksum partials — concat/sum, exactly like the in-proc
+    /// path, and bit-identical to it because the worker computes its
+    /// band with the same serial kernel.
+    pub struct ProcTransport {
+        shards_total: usize,
+        n: usize,
+        shards: Mutex<Vec<ProcShard>>,
+        timings: Mutex<ShardTimings>,
+        socket_dir: PathBuf,
+    }
+
+    impl ProcTransport {
+        /// Spawn one worker per band of the resident operands and ship
+        /// each its band. `worker_bin` defaults to the running
+        /// executable (correct for the `gcn-abft` binary itself; tests
+        /// and benches pass `env!("CARGO_BIN_EXE_gcn-abft")`).
+        pub fn spawn(ops: &GcnOperands, worker_bin: Option<&Path>) -> Result<ProcTransport> {
+            let SOperand::Banded(bands) = &ops.s else {
+                bail!("proc shard transport needs CSR operands with a banded S");
+            };
+            let bin = match worker_bin {
+                Some(p) => p.to_path_buf(),
+                None => std::env::current_exe()?,
+            };
+            let dir = std::env::temp_dir().join(format!(
+                "gcn-abft-shards-{}-{}",
+                std::process::id(),
+                SOCKET_COUNTER.fetch_add(1, Ordering::Relaxed)
+            ));
+            // Mode 0700: connecting to the socket requires traversing
+            // this directory, so only this user's processes can reach
+            // the (otherwise unauthenticated) shard protocol — a forged
+            // band would verify Clean, which is exactly what an
+            // integrity checker must not allow.
+            {
+                use std::os::unix::fs::{DirBuilderExt, PermissionsExt};
+                let mut builder = std::fs::DirBuilder::new();
+                builder.mode(0o700);
+                match builder.create(&dir) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                        // Stale dir from a crashed run under a recycled
+                        // pid: reclaim it (same user — 0700) and clear
+                        // the old socket so bind succeeds.
+                        std::fs::set_permissions(
+                            &dir,
+                            std::fs::Permissions::from_mode(0o700),
+                        )?;
+                        let _ = std::fs::remove_file(dir.join("coordinator.sock"));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            let socket_path = dir.join("coordinator.sock");
+            let mut children: Vec<Child> = Vec::new();
+            let mut shards: Vec<ProcShard> = Vec::new();
+            if let Err(e) =
+                Self::spawn_and_init(bands, &bin, &socket_path, &mut children, &mut shards)
+            {
+                // Nothing of a failed spawn may outlive the error: no
+                // orphan worker processes, no stale socket directory.
+                for c in children
+                    .iter_mut()
+                    .chain(shards.iter_mut().map(|s| &mut s.child))
+                {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                let _ = std::fs::remove_file(&socket_path);
+                let _ = std::fs::remove_dir(&dir);
+                return Err(e);
+            }
+
+            Ok(ProcTransport {
+                shards_total: shards.len(),
+                n: ops.n_nodes(),
+                timings: Mutex::new(ShardTimings {
+                    wait_secs: vec![0.0; shards.len()],
+                    ..Default::default()
+                }),
+                shards: Mutex::new(shards),
+                socket_dir: dir,
+            })
+        }
+
+        /// The fallible part of [`ProcTransport::spawn`]: bind, launch
+        /// one worker per band, accept each connection, ship its band
+        /// and collect the ready/pid handshake. Children and completed
+        /// shards accumulate in the caller's vectors so an error can
+        /// tear everything down.
+        fn spawn_and_init(
+            bands: &[RowBand],
+            bin: &Path,
+            socket_path: &Path,
+            children: &mut Vec<Child>,
+            shards: &mut Vec<ProcShard>,
+        ) -> Result<()> {
+            let listener = UnixListener::bind(socket_path)?;
+            listener.set_nonblocking(true)?;
+
+            for _ in 0..bands.len() {
+                let child = Command::new(bin)
+                    .arg("shard-worker")
+                    .arg("--socket")
+                    .arg(socket_path)
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::inherit())
+                    .spawn()
+                    .map_err(|e| anyhow!("spawning shard worker {bin:?}: {e}"))?;
+                children.push(child);
+            }
+
+            // Accept one connection per worker (workers are identical
+            // until they receive their band, so accept order assigns
+            // shard indices) and ship band k to the k-th connection.
+            let deadline = Instant::now() + ACCEPT_TIMEOUT;
+            for (k, band) in bands.iter().enumerate() {
+                let mut stream = loop {
+                    match listener.accept() {
+                        Ok((s, _)) => break s,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            for (ci, c) in children.iter_mut().enumerate() {
+                                if let Ok(Some(status)) = c.try_wait() {
+                                    bail!(
+                                        "shard worker {ci} exited before connecting \
+                                         ({status})"
+                                    );
+                                }
+                            }
+                            if Instant::now() > deadline {
+                                bail!("timed out waiting for shard workers to connect");
+                            }
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                };
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(IO_TIMEOUT))?;
+                stream.set_write_timeout(Some(IO_TIMEOUT))?;
+
+                let mut payload = Vec::with_capacity(
+                    (band.s.rows() + 1) * 8 + band.s.nnz() * 12 + band.s_c.len() * 8,
+                );
+                push_u64s(&mut payload, band.s.row_ptr());
+                push_u64s(&mut payload, band.s.col_idx());
+                push_f32s(&mut payload, band.s.values());
+                push_f64s(&mut payload, &band.s_c);
+                let header = Json::obj(vec![
+                    ("type", Json::from("init")),
+                    ("shard", Json::from(k)),
+                    ("row0", Json::from(band.row0)),
+                    ("rows", Json::from(band.s.rows())),
+                    ("cols", Json::from(band.s.cols())),
+                    ("nnz", Json::from(band.s.nnz())),
+                    ("payload", Json::from(payload.len())),
+                ]);
+                stream.write_all(&encode_frame(&header, &payload))?;
+                let (ready, _) = read_frame(&mut stream)?
+                    .ok_or_else(|| anyhow!("shard {k} hung up during init"))?;
+                if ready.get("type").and_then(Json::as_str) != Some("ready") {
+                    bail!("shard {k} sent {:?} instead of ready", ready.to_string());
+                }
+                // Accept order is arbitrary, so pair this shard with the
+                // child whose pid the worker echoed in its ready frame
+                // (kill_shard must hit the process actually serving the
+                // band).
+                let pid = header_field(&ready, "pid")?;
+                let ci = children
+                    .iter()
+                    .position(|c| c.id() as usize == pid)
+                    .ok_or_else(|| anyhow!("shard {k} echoed unknown pid {pid}"))?;
+                shards.push(ProcShard {
+                    child: children.remove(ci),
+                    stream: Some(stream),
+                    row0: band.row0,
+                    rows: band.s.rows(),
+                });
+            }
+            Ok(())
+        }
+
+        /// Worker process ids, in shard order (fault-injection tests
+        /// kill these externally).
+        pub fn worker_pids(&self) -> Vec<u32> {
+            self.shards.lock().unwrap().iter().map(|s| s.child.id()).collect()
+        }
+    }
+
+    impl ShardTransport for ProcTransport {
+        fn name(&self) -> &'static str {
+            "proc"
+        }
+
+        fn shards(&self) -> usize {
+            self.shards_total
+        }
+
+        fn aggregate(
+            &self,
+            ops: &GcnOperands,
+            x: &Dense,
+            x_r: &[f32],
+        ) -> Result<(Dense, f64, f64)> {
+            if ops.n_nodes() != self.n {
+                bail!("operands changed shape under a running proc transport");
+            }
+            let width = x.cols();
+            let mut payload = Vec::with_capacity(x.data().len() * 4 + x_r.len() * 4);
+            push_f32s(&mut payload, x.data());
+            push_f32s(&mut payload, x_r);
+            let header = Json::obj(vec![
+                ("type", Json::from("agg")),
+                ("rows", Json::from(x.rows())),
+                ("cols", Json::from(width)),
+                ("payload", Json::from(payload.len())),
+            ]);
+            let frame = encode_frame(&header, &payload);
+
+            let mut shards = self.shards.lock().unwrap();
+            // Nothing is sent unless every shard is believed alive: a
+            // request half-streamed before discovering a dead shard
+            // would leave orphan replies queued in the healthy workers'
+            // sockets, and the transport must stay request/reply
+            // lockstep to stay bit-exact.
+            for (k, sh) in shards.iter().enumerate() {
+                if sh.stream.is_none() {
+                    bail!("shard {k} is down");
+                }
+            }
+            // Phase 1: stream the request to every shard, concurrently —
+            // sequential sends would add (shards−1) × transfer-time of
+            // pure latency on wide phases (Nell's X₂ is ~60 MB). One
+            // shared frame buffer; a worker only writes after reading a
+            // full request, so sends cannot deadlock against replies.
+            let send_errs: Vec<Option<String>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = shards
+                    .iter_mut()
+                    .map(|sh| {
+                        let frame = &frame;
+                        let stream = sh.stream.as_mut().expect("checked alive above");
+                        scope.spawn(move || {
+                            stream.write_all(frame).err().map(|e| e.to_string())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let mut first_err: Option<(usize, String)> = None;
+            for (k, err) in send_errs.into_iter().enumerate() {
+                if let Some(e) = err {
+                    shards[k].stream = None;
+                    if first_err.is_none() {
+                        first_err = Some((k, e));
+                    }
+                }
+            }
+            if let Some((k, e)) = first_err {
+                bail!("shard {k} died mid-request ({e})");
+            }
+            // Phase 2: collect band results in band order and stitch.
+            // ANY reply-side failure — wire error, malformed frame,
+            // short payload — permanently poisons the shard: with it
+            // marked down, the all-alive pre-check blocks every later
+            // aggregate, so a stale queued reply can never be stitched
+            // into a subsequent forward (the lockstep/desync guarantee).
+            let mut out = Dense::zeros(self.n, width);
+            let mut pred = 0f64;
+            let mut actual = 0f64;
+            let mut waits = vec![0f64; shards.len()];
+            let mut stitch = 0f64;
+            for (k, sh) in shards.iter_mut().enumerate() {
+                let t0 = Instant::now();
+                let stream = sh.stream.as_mut().expect("sends succeeded above");
+                let reply = read_band_reply(stream, sh.rows, width);
+                waits[k] = t0.elapsed().as_secs_f64();
+                let (z, p, a) = match reply {
+                    Ok(v) => v,
+                    Err(e) => {
+                        sh.stream = None;
+                        bail!("shard {k} failed mid-request ({e})");
+                    }
+                };
+                let t1 = Instant::now();
+                out.data_mut()[sh.row0 * width..(sh.row0 + sh.rows) * width]
+                    .copy_from_slice(&z);
+                pred += p;
+                actual += a;
+                stitch += t1.elapsed().as_secs_f64();
+            }
+            drop(shards);
+            {
+                let mut tm = self.timings.lock().unwrap();
+                tm.aggregates += 1;
+                tm.stitch_secs += stitch;
+                for (acc, w) in tm.wait_secs.iter_mut().zip(&waits) {
+                    *acc += w;
+                }
+            }
+            Ok((out, pred, actual))
+        }
+
+        fn kill_shard(&self, shard: usize) -> bool {
+            let mut shards = self.shards.lock().unwrap();
+            match shards.get_mut(shard) {
+                Some(sh) => {
+                    // Kill the process but keep the (now broken) socket:
+                    // the next aggregate experiences the wire-level
+                    // failure exactly as an externally crashed worker.
+                    let _ = sh.child.kill();
+                    let _ = sh.child.wait();
+                    true
+                }
+                None => false,
+            }
+        }
+
+        fn timings(&self) -> ShardTimings {
+            self.timings.lock().unwrap().clone()
+        }
+    }
+
+    impl Drop for ProcTransport {
+        fn drop(&mut self) {
+            let mut shards = self.shards.lock().unwrap();
+            for sh in shards.iter_mut() {
+                if let Some(mut stream) = sh.stream.take() {
+                    let header = Json::obj(vec![
+                        ("type", Json::from("shutdown")),
+                        ("payload", Json::from(0usize)),
+                    ]);
+                    let _ = stream.write_all(&encode_frame(&header, &[]));
+                    // Stream drops here: the worker sees EOF and exits.
+                }
+            }
+            for sh in shards.iter_mut() {
+                // Give the worker a moment to exit on its own, then
+                // force the issue so drop never hangs.
+                let deadline = Instant::now() + Duration::from_secs(2);
+                loop {
+                    match sh.child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        _ => {
+                            let _ = sh.child.kill();
+                            let _ = sh.child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            let _ = std::fs::remove_file(self.socket_dir.join("coordinator.sock"));
+            let _ = std::fs::remove_dir(&self.socket_dir);
+        }
+    }
+
+    /// The `gcn-abft shard-worker` main loop: connect to the
+    /// coordinator's socket, receive this worker's band of `S` (plus its
+    /// `s_c`), then serve aggregation requests until shutdown/EOF. The
+    /// band compute is [`RowBand::aggregate_into`] — the identical
+    /// serial kernel one in-proc band runs — which is what makes the
+    /// proc transport bit-identical to in-proc sharding.
+    pub fn run_shard_worker(socket: &Path) -> Result<()> {
+        let mut stream = UnixStream::connect(socket)
+            .map_err(|e| anyhow!("connecting to coordinator at {socket:?}: {e}"))?;
+
+        let (init, body) = read_frame(&mut stream)?
+            .ok_or_else(|| anyhow!("coordinator hung up before init"))?;
+        if init.get("type").and_then(Json::as_str) != Some("init") {
+            bail!("expected init frame, got {}", init.to_string());
+        }
+        let shard = header_field(&init, "shard")?;
+        let rows = header_field(&init, "rows")?;
+        let cols = header_field(&init, "cols")?;
+        let nnz = header_field(&init, "nnz")?;
+        let mut wire = Wire(&body);
+        let row_ptr = wire.usizes(rows + 1)?;
+        let col_idx = wire.usizes(nnz)?;
+        let values = wire.f32s(nnz)?;
+        let s_c = wire.f64s(cols)?;
+        wire.done()?;
+        let band = RowBand {
+            // Local band coordinates; the coordinator owns the global
+            // row offset for stitching.
+            row0: 0,
+            s: Csr::from_raw_parts(rows, cols, row_ptr, col_idx, values)
+                .map_err(|e| anyhow!("bad band CSR in init frame: {e}"))?,
+            s_c,
+        };
+        let ready = Json::obj(vec![
+            ("type", Json::from("ready")),
+            ("shard", Json::from(shard)),
+            ("pid", Json::from(std::process::id() as usize)),
+            ("payload", Json::from(0usize)),
+        ]);
+        stream.write_all(&encode_frame(&ready, &[]))?;
+
+        loop {
+            let Some((hdr, body)) = read_frame(&mut stream)? else {
+                return Ok(()); // coordinator hung up — normal shutdown
+            };
+            match hdr.get("type").and_then(Json::as_str) {
+                Some("shutdown") => return Ok(()),
+                Some("agg") => {
+                    if let Err(e) = handle_agg(&mut stream, &band, cols, rows, &hdr, &body)
+                    {
+                        // Best-effort error frame so the coordinator
+                        // logs the cause instead of a bare hang-up.
+                        let msg = format!("{e:#}");
+                        let err = Json::obj(vec![
+                            ("type", Json::from("error")),
+                            ("msg", Json::from(msg.as_str())),
+                            ("payload", Json::from(0usize)),
+                        ]);
+                        let _ = stream.write_all(&encode_frame(&err, &[]));
+                        return Err(e);
+                    }
+                }
+                other => bail!("unexpected frame type {other:?}"),
+            }
+        }
+    }
+
+    /// One `agg` request: validate, aggregate the band, reply.
+    fn handle_agg(
+        stream: &mut UnixStream,
+        band: &RowBand,
+        cols: usize,
+        rows: usize,
+        hdr: &Json,
+        body: &[u8],
+    ) -> Result<()> {
+        let n = header_field(hdr, "rows")?;
+        let width = header_field(hdr, "cols")?;
+        if n != cols {
+            bail!("agg frame rows {n} != band cols {cols}");
+        }
+        let mut wire = Wire(body);
+        let x = Dense::from_vec(n, width, wire.f32s(n * width)?);
+        let x_r = wire.f32s(n)?;
+        wire.done()?;
+        let mut z = vec![0f32; rows * width];
+        let (pred, actual) = band.aggregate_into(&x, &x_r, &mut z);
+        let mut payload = Vec::with_capacity(z.len() * 4 + 16);
+        push_f32s(&mut payload, &z);
+        push_f64s(&mut payload, &[pred, actual]);
+        let reply = Json::obj(vec![
+            ("type", Json::from("band")),
+            ("rows", Json::from(rows)),
+            ("cols", Json::from(width)),
+            ("payload", Json::from(payload.len())),
+        ]);
+        stream.write_all(&encode_frame(&reply, &payload))?;
+        Ok(())
+    }
+}
+
+#[cfg(not(unix))]
+mod proc_stub {
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// The proc transport needs Unix domain sockets.
+    pub fn run_shard_worker(_socket: &Path) -> Result<()> {
+        bail!("the proc shard transport is only available on unix")
+    }
+}
+
+#[cfg(not(unix))]
+pub use proc_stub::run_shard_worker;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServePolicy;
+    use crate::graph::DatasetId;
+    use crate::runtime::backend::{for_operands, BackendKind};
+
+    fn workload(bands: usize) -> GcnOperands {
+        let g = DatasetId::Tiny.build(11);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 3);
+        GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            bands,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_partitions_all_rows_and_nnz() {
+        let ops = workload(3);
+        let plan = ShardPlan::for_operands(&ops).unwrap();
+        assert_eq!(plan.shards, 3);
+        assert_eq!(plan.bands.iter().map(|b| b.rows).sum::<usize>(), plan.n);
+        assert_eq!(
+            plan.bands.iter().map(|b| b.nnz).sum::<usize>(),
+            ops.s.nnz()
+        );
+        assert!(plan.max_resident_bytes() > 0);
+        assert!(plan.request_payload_bytes(&ops) > 0);
+        // Dense operands have nothing to shard.
+        let dense = GcnOperands::dense(
+            crate::tensor::Dense::zeros(4, 3),
+            crate::tensor::Dense::eye(4),
+            crate::tensor::Dense::zeros(3, 2),
+            crate::tensor::Dense::zeros(2, 2),
+        )
+        .unwrap();
+        assert!(ShardPlan::for_operands(&dense).is_err());
+    }
+
+    #[test]
+    fn inproc_sharded_backend_is_bit_identical_to_native_banded() {
+        for shards in [1usize, 2, 4] {
+            let ops = workload(shards);
+            let reference = for_operands(BackendKind::Native, ChecksumScheme::Fused, &ops, 2, None)
+                .unwrap();
+            let transport: Arc<dyn ShardTransport> =
+                Arc::new(InProcTransport::new(&ops).unwrap());
+            let sharded = ShardedBackend::new(transport, ChecksumScheme::Fused, 2);
+            let row: Vec<f32> = (0..ops.feat_dim()).map(|c| (c % 5) as f32 * 0.5).collect();
+            for overlays in [&[][..], &[Overlay { node: 3, row: &row }][..]] {
+                let a = reference.run(&ops, overlays).unwrap();
+                let b = sharded.run(&ops, overlays).unwrap();
+                assert_eq!(a.logits, b.logits, "shards={shards}");
+                assert_eq!(a.predicted, b.predicted, "shards={shards}");
+                assert_eq!(a.actual, b.actual, "shards={shards}");
+                assert!(ServePolicy::default().verify(&b).ok);
+            }
+            let plan = sharded.plan(&ops).unwrap();
+            assert_eq!(plan.bands, shards);
+            assert_eq!(plan.backend, "native-sharded");
+        }
+    }
+
+    #[test]
+    fn killed_inproc_shard_fails_stop() {
+        let ops = workload(2);
+        let transport = Arc::new(InProcTransport::new(&ops).unwrap());
+        let backend = ShardedBackend::new(
+            transport.clone() as Arc<dyn ShardTransport>,
+            ChecksumScheme::Fused,
+            1,
+        );
+        assert!(backend.run(&ops, &[]).is_ok());
+        assert!(transport.kill_shard(1));
+        assert!(!transport.kill_shard(9), "out-of-range shard");
+        let err = backend.run(&ops, &[]).unwrap_err();
+        assert!(err.to_string().contains("down"), "{err}");
+        let tm = transport.timings();
+        assert_eq!(tm.aggregates, 2, "one run = two aggregation phases");
+        assert_eq!(tm.wait_secs.len(), 2);
+    }
+
+    #[test]
+    fn frames_round_trip_bit_exactly() {
+        let header = Json::obj(vec![
+            ("type", Json::from("agg")),
+            ("rows", Json::from(3usize)),
+            ("cols", Json::from(2usize)),
+            ("payload", Json::from(32usize)),
+        ]);
+        let xs = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-20];
+        let ys = [std::f64::consts::PI, -1e-300];
+        let mut payload = Vec::new();
+        push_f32s(&mut payload, &xs);
+        push_f64s(&mut payload, &ys);
+        let frame = encode_frame(&header, &payload);
+        let mut cursor = std::io::Cursor::new(frame);
+        let (h, body) = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(h.get("type").and_then(Json::as_str), Some("agg"));
+        assert_eq!(header_field(&h, "rows").unwrap(), 3);
+        let mut wire = Wire(&body);
+        let got32 = wire.f32s(4).unwrap();
+        let got64 = wire.f64s(2).unwrap();
+        wire.done().unwrap();
+        for (a, b) in xs.iter().zip(&got32) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ys.iter().zip(&got64) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Clean EOF at a frame boundary is None, not an error.
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+        // A truncated frame is an error.
+        let mut trunc = std::io::Cursor::new(vec![9u8, 0, 0]);
+        assert!(read_frame(&mut trunc).is_err());
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(ShardTransportKind::parse("inproc"), Some(ShardTransportKind::InProc));
+        assert_eq!(ShardTransportKind::parse("PROC"), Some(ShardTransportKind::Proc));
+        assert_eq!(ShardTransportKind::parse("tcp"), None);
+        assert_eq!(ShardTransportKind::Proc.name(), "proc");
+    }
+}

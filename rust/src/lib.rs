@@ -23,7 +23,7 @@
 //! | [`opcount`] | analytic op-count model (Table II) + per-(backend, scheme) overhead matrix |
 //! | [`fault`] | pluggable fault models (bit-flip/multi-bit/stuck-at) + campaign runner (Table I) |
 //! | [`runtime`] | the `GcnBackend` trait + its implementations: native dense/banded f32, instrumented f64 (band-parallel, deterministic fault timeline), optional PJRT (`pjrt` feature) |
-//! | [`coordinator`] | serving layer: priority-aware continuous-batching scheduler (virtual-clock-testable) + workers + online verification |
+//! | [`coordinator`] | serving layer: priority-aware continuous-batching scheduler (virtual-clock-testable, adaptive hold budget) + workers + shard tier (multi-process row-band sharding over a pluggable transport) + online verification |
 //! | [`report`] | table/figure rendering (Table I/II, Fig. 3) |
 //!
 //! The Python side (`python/compile/`) authors the L1 Pallas kernels and

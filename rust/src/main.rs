@@ -9,8 +9,11 @@
 //! * `serve`   — end-to-end serving demo: priority-aware continuous
 //!   batching with online GCN-ABFT verification (`--backend
 //!   native|instrumented|pjrt`, `--scheme fused|split`, `--max-batch
-//!   --max-wait-ms --starvation-factor --priority-mix`, no artifacts
-//!   needed for native);
+//!   --max-wait-ms --starvation-factor --priority-mix --adaptive-wait`,
+//!   no artifacts needed for native), optionally row-band-sharded
+//!   across subprocesses (`--shards N --shard-transport inproc|proc`);
+//! * `shard-worker` — one shard of a sharded serve (spawned by the
+//!   coordinator, not invoked by hand);
 //! * `train`   — train the synthetic workloads and print the curves;
 //! * `info`    — dataset statistics.
 
@@ -35,6 +38,7 @@ fn main() {
         "opcount" => cmd_opcount(rest),
         "fig3" => cmd_fig3(rest),
         "serve" => cmd_serve(rest),
+        "shard-worker" => cmd_shard_worker(rest),
         "train" => cmd_train(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -80,6 +84,9 @@ SUBCOMMANDS
            --dataset tiny|cora|citeseer|pubmed|nell  --requests N (64)
            --max-batch B (8, alias --batch)  --max-wait-ms T (5)
            --starvation-factor K (4)
+           --adaptive-wait (auto-tune the hold budget from an EWMA of
+           inter-arrival times, clamped to [--min-wait-ms (0.2),
+           --max-wait-ms])
            --priority-mix I,B,BG (1,0,0 — client-driver weights for
            interactive/batch/background requests)
            --workers W (2)  --artifacts DIR (artifacts)
@@ -87,6 +94,17 @@ SUBCOMMANDS
            --mem-budget-mb M (512)  --train-epochs E (10)
            --backend native|instrumented|pjrt (native)
            --scheme fused|split (fused)
+           --shards N (0 = unsharded)  --shard-transport inproc|proc
+           (inproc). Sharding splits the CSR S into N row bands, one
+           per shard; proc spawns one shard-worker subprocess per band
+           over Unix sockets. Bit-identical to unsharded serving; a
+           dead shard fail-stops (Failed responses, coordinator keeps
+           serving). --kill-shard-after B tears down shard 0 before
+           batch B (fail-stop fault injection).
+  shard-worker  (internal) one shard of a sharded serve: connects to
+           the coordinator, receives its row band of S, serves
+           aggregation requests until shutdown
+           --socket PATH (Unix domain socket of the coordinator)
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves
            --datasets ...  --epochs E (30)  --seed S
   info     dataset statistics (nodes/edges/features/classes/nnz)
@@ -348,6 +366,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "batch",
             "max-batch",
             "max-wait-ms",
+            "min-wait-ms",
             "starvation-factor",
             "priority-mix",
             "workers",
@@ -360,8 +379,11 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "train-epochs",
             "backend",
             "scheme",
+            "shards",
+            "shard-transport",
+            "kill-shard-after",
         ],
-        flags: vec!["json"],
+        flags: vec!["json", "adaptive-wait"],
     };
     let a = parse_or_die(rest, &spec);
     match gcn_abft::coordinator::serve_cli(&a) {
@@ -371,6 +393,25 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
         }
         Err(e) => {
             eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_shard_worker(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec!["socket"],
+        flags: vec![],
+    };
+    let a = parse_or_die(rest, &spec);
+    let Some(socket) = a.get("socket") else {
+        eprintln!("shard-worker requires --socket PATH");
+        return 2;
+    };
+    match gcn_abft::coordinator::run_shard_worker(std::path::Path::new(socket)) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("shard-worker failed: {e:#}");
             1
         }
     }

@@ -272,46 +272,139 @@ impl InstrumentedEngine {
             let w_r = &self.w_r[li];
 
             // ---- combination segment (+ split phase-1 check) ----------
-            let a_ops = seg_a_ops(
-                scheme,
-                li,
-                input.nnz() as u64,
-                w.rows() as u64,
-                cols as u64,
-                n64,
-            );
-            let mut hook_a = SegmentHook::new(events, cursor, cursor + a_ops);
-            let (x, x_r) = match scheme {
-                ChecksumScheme::Fused => {
-                    let x = input.matmul_hooked(w, &mut hook_a);
-                    let x_r = input.matvec_hooked(w_r, &mut hook_a);
-                    (x, x_r)
-                }
+            // Parallel over the same fixed logical row bands as the
+            // aggregation phase: the matmul and the x_r matvec are both
+            // row-decomposable, and a band's op counts
+            // (2·nnz(rows)·cols and 2·nnz(rows)) are pure functions of
+            // the workload, so every band's prefix offset on the global
+            // op timeline is analytic and detections stay bit-identical
+            // at any worker count. The serial op order is preserved
+            // exactly: [h_c (split, layer ≥ 1)] · matmul rows in order ·
+            // matvec rows in order · [split checker tail].
+            let nnz_in = input.nnz() as u64;
+            let cols64 = cols as u64;
+            let a_ops = seg_a_ops(scheme, li, nnz_in, w.rows() as u64, cols64, n64);
+            let a_end = cursor + a_ops;
+
+            let hc_ops = if scheme == ChecksumScheme::Split && li > 0 {
+                nnz_in
+            } else {
+                0
+            };
+            let h_c: Option<Vec<f64>> = match scheme {
+                ChecksumScheme::Fused => None,
+                // Static layer-1 input: h_c is the offline vector (no
+                // hooked ops), exactly as before.
+                ChecksumScheme::Split if li == 0 => Some(h_c1.to_vec()),
                 ChecksumScheme::Split => {
-                    // Same op order as the baseline split executor:
-                    // h_c, X, x_r, h_c·[W|w_r], checksum of X.
-                    let h_c: Vec<f64> = if li == 0 {
-                        h_c1.to_vec()
-                    } else {
-                        input.col_sums_hooked(&mut hook_a)
-                    };
-                    let x = input.matmul_hooked(w, &mut hook_a);
-                    let x_r = input.matvec_hooked(w_r, &mut hook_a);
-                    let _hc_w = vecmat_hooked(&h_c, w, &mut hook_a);
-                    let pred_x = dot_hooked(&h_c, w_r, &mut hook_a);
-                    let actual_x = block_checksum_hooked(&x, cols, &mut hook_a);
-                    checks.push(CheckRecord {
-                        layer: li,
-                        point: CheckPoint::AfterCombination,
-                        predicted: pred_x,
-                        actual: actual_x,
-                    });
-                    (x, x_r)
+                    let mut hook = SegmentHook::new(events, cursor, cursor + hc_ops);
+                    let h_c = input.col_sums_hooked(&mut hook);
+                    debug_assert_eq!(hook.ops_seen(), hc_ops, "h_c segment drifted");
+                    hits.append(&mut hook.hits);
+                    Some(h_c)
                 }
             };
-            debug_assert_eq!(hook_a.ops_seen(), a_ops, "combination segment drifted");
-            cursor += a_ops;
-            hits.append(&mut hook_a.hits);
+
+            let bounds = super::super::operands::row_band_bounds(self.n, LOGICAL_BANDS);
+            let band_nnz: Vec<u64> = bounds
+                .iter()
+                .map(|&(lo, hi)| input.nnz_rows(lo, hi) as u64)
+                .collect();
+            let mm0 = cursor + hc_ops;
+            let mv0 = mm0 + 2 * nnz_in * cols64;
+            let mut mm_starts = Vec::with_capacity(bounds.len());
+            let mut mv_starts = Vec::with_capacity(bounds.len());
+            {
+                let (mut mm, mut mv) = (mm0, mv0);
+                for &bz in &band_nnz {
+                    mm_starts.push(mm);
+                    mm += 2 * bz * cols64;
+                    mv_starts.push(mv);
+                    mv += 2 * bz;
+                }
+                debug_assert_eq!(mm, mv0, "matmul band prefix drifted");
+                debug_assert_eq!(mv, mv0 + 2 * nnz_in, "matvec band prefix drifted");
+            }
+            let run_comb = |k: usize| -> (Dense64, Vec<f64>, SegmentHook, SegmentHook) {
+                let (lo, hi) = bounds[k];
+                let mm_ops = 2 * band_nnz[k] * cols64;
+                let mut hook_m =
+                    SegmentHook::new(events, mm_starts[k], mm_starts[k] + mm_ops);
+                let x_band = input.matmul_rows_hooked(w, lo, hi, &mut hook_m);
+                debug_assert_eq!(hook_m.ops_seen(), mm_ops, "matmul band {k} drifted");
+                let mv_ops = 2 * band_nnz[k];
+                let mut hook_v =
+                    SegmentHook::new(events, mv_starts[k], mv_starts[k] + mv_ops);
+                let xr_band = input.matvec_rows_hooked(w_r, lo, hi, &mut hook_v);
+                debug_assert_eq!(hook_v.ops_seen(), mv_ops, "matvec band {k} drifted");
+                (x_band, xr_band, hook_m, hook_v)
+            };
+            let nb = bounds.len();
+            let mut comb: Vec<Option<(Dense64, Vec<f64>, SegmentHook, SegmentHook)>> =
+                Vec::with_capacity(nb);
+            comb.resize_with(nb, || None);
+            let phys = workers.clamp(1, nb);
+            if phys <= 1 {
+                for (k, slot) in comb.iter_mut().enumerate() {
+                    *slot = Some(run_comb(k));
+                }
+            } else {
+                let chunk = nb.div_ceil(phys);
+                std::thread::scope(|scope| {
+                    for (ci, slots) in comb.chunks_mut(chunk).enumerate() {
+                        let run_comb = &run_comb;
+                        scope.spawn(move || {
+                            for (j, slot) in slots.iter_mut().enumerate() {
+                                *slot = Some(run_comb(ci * chunk + j));
+                            }
+                        });
+                    }
+                });
+            }
+            let mut x = Dense64::zeros(self.n, cols);
+            let mut x_r = vec![0f64; self.n];
+            let mut mv_hooks = Vec::with_capacity(nb);
+            for (k, slot) in comb.into_iter().enumerate() {
+                let (x_band, xr_band, mut hook_m, hook_v) =
+                    slot.expect("combination band not executed");
+                let (lo, hi) = bounds[k];
+                for r in lo..hi {
+                    x.row_mut(r).copy_from_slice(x_band.row(r - lo));
+                }
+                x_r[lo..hi].copy_from_slice(&xr_band);
+                hits.append(&mut hook_m.hits);
+                mv_hooks.push(hook_v);
+            }
+            // Every matvec op follows every matmul op on the timeline,
+            // so their hits append after all matmul hits, in band order.
+            for mut hook in mv_hooks {
+                hits.append(&mut hook.hits);
+            }
+
+            // Split tail: h_c·[W|w_r] and the after-combination check
+            // (cross-column accumulations — serial, like the checker
+            // segment).
+            if let Some(h_c) = &h_c {
+                let mut hook_t = SegmentHook::new(events, mv0 + 2 * nnz_in, a_end);
+                let _hc_w = vecmat_hooked(h_c, w, &mut hook_t);
+                let pred_x = dot_hooked(h_c, w_r, &mut hook_t);
+                let actual_x = block_checksum_hooked(&x, cols, &mut hook_t);
+                debug_assert_eq!(
+                    hook_t.ops_seen(),
+                    a_end - (mv0 + 2 * nnz_in),
+                    "split combination tail drifted"
+                );
+                hits.append(&mut hook_t.hits);
+                checks.push(CheckRecord {
+                    layer: li,
+                    point: CheckPoint::AfterCombination,
+                    predicted: pred_x,
+                    actual: actual_x,
+                });
+            } else {
+                debug_assert_eq!(mv0 + 2 * nnz_in, a_end, "fused combination drifted");
+            }
+            cursor = a_end;
 
             // ---- aggregation: logical bands at fixed prefix offsets ---
             let band_ops: Vec<u64> = self
@@ -648,6 +741,63 @@ mod tests {
             for (a, b) in base.checks.iter().zip(&par.checks) {
                 assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
                 assert_eq!(a.actual.to_bits(), b.actual.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn combination_faults_are_bit_identical_at_any_worker_count() {
+        // Events landing INSIDE the combination phase (now band-parallel
+        // like the aggregation): the first layer's matmul occupies ops
+        // [0, 2·nnz·cols) and its x_r matvec the following 2·nnz ops.
+        // Outputs, check records and fault hits must be bit-identical
+        // serial or parallel, and the flips must actually land.
+        let (m, g) = setup();
+        let engine = InstrumentedEngine::from_model(&m, &g.features);
+        let nnz = g.features.nnz() as u64;
+        let cols = m.layers[0].weights.cols() as u64;
+        let mm_ops = 2 * nnz * cols;
+        for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+            let events = [
+                FaultEvent {
+                    // mid-matmul (fused: segment starts at 0; split
+                    // layer 0 has no hooked h_c, so same offset)
+                    op_index: mm_ops / 2,
+                    kind: FaultKind::BitFlip { bit32: 30, bit64: 62 },
+                },
+                FaultEvent {
+                    // inside the x_r matvec sub-segment
+                    op_index: mm_ops + 3,
+                    kind: FaultKind::BitFlip { bit32: 28, bit64: 60 },
+                },
+            ];
+            let base = engine.forward(scheme, &events, 1);
+            assert!(
+                !base.hits.is_empty(),
+                "{scheme:?}: combination faults must land"
+            );
+            for workers in [2, 3, 8, 16] {
+                let par = engine.forward(scheme, &events, workers);
+                for (a, b) in base.preacts.iter().zip(&par.preacts) {
+                    assert!(
+                        a.identical(b),
+                        "{scheme:?} workers={workers} changed outputs"
+                    );
+                }
+                assert_eq!(
+                    base.hits, par.hits,
+                    "{scheme:?} workers={workers} changed fault hits"
+                );
+                for (a, b) in base.checks.iter().zip(&par.checks) {
+                    assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+                    assert_eq!(a.actual.to_bits(), b.actual.to_bits());
+                }
+            }
+            // A fault-free parallel run still matches the serial one.
+            let clean_serial = engine.forward(scheme, &[], 1);
+            let clean_par = engine.forward(scheme, &[], 8);
+            for (a, b) in clean_serial.preacts.iter().zip(&clean_par.preacts) {
+                assert!(a.identical(b));
             }
         }
     }

@@ -23,7 +23,7 @@ use super::super::client::GcnOutputs;
 use super::super::operands::GcnOperands;
 use super::{plan_with_profile, validate_overlays, ChecksumScheme, ExecPlan, GcnBackend, Overlay};
 use crate::opcount::backend::BackendProfile;
-use crate::tensor::ops;
+use crate::tensor::{ops, Dense};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -42,6 +42,30 @@ pub fn forward(
     threads: usize,
     scheme: ChecksumScheme,
 ) -> Result<GcnOutputs> {
+    forward_with(model, overlays, threads, scheme, |x, x_r| {
+        Ok(model.s.aggregate(x, x_r, &model.check.s_c, threads))
+    })
+}
+
+/// As [`forward`], with the two `S·X` aggregation phases routed through
+/// `aggregate` instead of the resident operands' own kernel. This is the
+/// seam the coordinator's shard tier plugs into: `aggregate` returns the
+/// stitched `(z, predicted, actual)` triple for one phase — computed
+/// in-process today, or fanned out over shard workers on another
+/// transport — while the combination matmuls, overlay patching and
+/// (split scheme) phase-1 checks stay exactly the in-process code above,
+/// so a transport can never change what a forward computes, only *where*
+/// the row bands of `S` ran.
+pub fn forward_with<A>(
+    model: &GcnOperands,
+    overlays: &[Overlay<'_>],
+    threads: usize,
+    scheme: ChecksumScheme,
+    aggregate: A,
+) -> Result<GcnOutputs>
+where
+    A: Fn(&Dense, &[f32]) -> Result<(Dense, f64, f64)>,
+{
     validate_overlays(model, overlays)?;
     let split = scheme == ChecksumScheme::Split;
     let mut predicted: Vec<f32> = Vec::with_capacity(if split { 4 } else { 2 });
@@ -79,7 +103,7 @@ pub fn forward(
 
     // Layer 1 aggregation + fused checksum, Eq. (4):
     // s_c·H·w_r vs eᵀ·Z₁·e (band-stitched when S is sharded).
-    let (mut z1, pred1, actual1) = model.s.aggregate(&x1, &x_r1, &model.check.s_c, threads);
+    let (mut z1, pred1, actual1) = aggregate(&x1, &x_r1)?;
     predicted.push(pred1 as f32);
     actual.push(actual1 as f32);
 
@@ -95,7 +119,7 @@ pub fn forward(
         predicted.push(ops::dot_mixed(&h_c2, &model.check.w_r2) as f32);
         actual.push(x2.checksum_f64() as f32);
     }
-    let (logits, pred2, actual2) = model.s.aggregate(&x2, &x_r2, &model.check.s_c, threads);
+    let (logits, pred2, actual2) = aggregate(&x2, &x_r2)?;
     predicted.push(pred2 as f32);
     actual.push(actual2 as f32);
 

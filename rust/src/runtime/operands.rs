@@ -267,6 +267,48 @@ pub enum SOperand {
     Banded(Vec<RowBand>),
 }
 
+/// Fan one aggregation phase out over the row bands — each band on its
+/// own scoped worker, writing a disjoint row slice of `out` (assumed
+/// zeroed, `rows(S)·x.cols()` long) — and return each band's
+/// `(pred, actual, seconds)` partials in band order.
+///
+/// This is THE band fan-out: [`SOperand::aggregate`] (the unsharded
+/// sparse serving path) and the coordinator's in-proc shard transport
+/// both call it, so the two stay bit-identical by construction — a
+/// change to the slicing or stitch order here changes both sides at
+/// once, never one of them.
+pub fn aggregate_bands_timed(
+    bands: &[RowBand],
+    x: &Dense,
+    x_r: &[f32],
+    out: &mut [f32],
+) -> Vec<(f64, f64, f64)> {
+    let width = x.cols();
+    let mut partials = vec![(0f64, 0f64, 0f64); bands.len()];
+    if bands.len() <= 1 {
+        if let Some(band) = bands.first() {
+            let t0 = std::time::Instant::now();
+            let (p, a) = band.aggregate_into(x, x_r, out);
+            partials[0] = (p, a, t0.elapsed().as_secs_f64());
+        }
+    } else {
+        std::thread::scope(|scope| {
+            let mut rest: &mut [f32] = out;
+            for (band, slot) in bands.iter().zip(partials.iter_mut()) {
+                let (chunk, tail) =
+                    std::mem::take(&mut rest).split_at_mut(band.s.rows() * width);
+                rest = tail;
+                scope.spawn(move || {
+                    let t0 = std::time::Instant::now();
+                    let (p, a) = band.aggregate_into(x, x_r, chunk);
+                    *slot = (p, a, t0.elapsed().as_secs_f64());
+                });
+            }
+        });
+    }
+    partials
+}
+
 /// Contiguous row-band boundaries: at most `nbands` bands of
 /// `ceil(n/nbands)` rows each (the last possibly short). The single
 /// source of the partition arithmetic, shared by the serving-path
@@ -399,24 +441,8 @@ impl SOperand {
                 (z, pred, actual)
             }
             SOperand::Banded(bands) => {
-                let width = x.cols();
-                let mut out = Dense::zeros(self.rows(), width);
-                let mut partials = vec![(0f64, 0f64); bands.len()];
-                if bands.len() <= 1 {
-                    if let Some(band) = bands.first() {
-                        partials[0] = band.aggregate_into(x, x_r, out.data_mut());
-                    }
-                } else {
-                    std::thread::scope(|scope| {
-                        let mut rest: &mut [f32] = out.data_mut();
-                        for (band, slot) in bands.iter().zip(partials.iter_mut()) {
-                            let (chunk, tail) =
-                                std::mem::take(&mut rest).split_at_mut(band.s.rows() * width);
-                            rest = tail;
-                            scope.spawn(move || *slot = band.aggregate_into(x, x_r, chunk));
-                        }
-                    });
-                }
+                let mut out = Dense::zeros(self.rows(), x.cols());
+                let partials = aggregate_bands_timed(bands, x, x_r, out.data_mut());
                 let pred = partials.iter().map(|p| p.0).sum();
                 let actual = partials.iter().map(|p| p.1).sum();
                 (out, pred, actual)

@@ -99,6 +99,49 @@ impl Csr {
     pub fn values_mut(&mut self) -> &mut [f32] {
         &mut self.values
     }
+    /// Row-pointer array (len rows+1) — the CSR wire format of the shard
+    /// protocol ships these arrays verbatim.
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+    /// Column-index array (len nnz).
+    pub fn col_idx(&self) -> &[usize] {
+        &self.col_idx
+    }
+
+    /// Rebuild a CSR from its raw arrays (the shard-worker side of the
+    /// wire format). Validates the invariants `row_iter` relies on, so a
+    /// corrupt frame fails loudly instead of panicking mid-SpMM.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<usize>,
+        values: Vec<f32>,
+    ) -> Result<Self, String> {
+        if row_ptr.len() != rows + 1 {
+            return Err(format!("row_ptr len {} != rows+1 {}", row_ptr.len(), rows + 1));
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap() != values.len() {
+            return Err("row_ptr must span [0, nnz]".into());
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr must be monotone".into());
+        }
+        if col_idx.len() != values.len() {
+            return Err(format!("col_idx len {} != values len {}", col_idx.len(), values.len()));
+        }
+        if col_idx.iter().any(|&c| c >= cols) {
+            return Err(format!("column index out of range for {cols} cols"));
+        }
+        Ok(Self {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        })
+    }
 
     /// Non-zeros of row r as (col, value) pairs.
     pub fn row_iter(&self, r: usize) -> impl Iterator<Item = (usize, f32)> + '_ {

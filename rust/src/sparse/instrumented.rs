@@ -13,6 +13,19 @@ use crate::tensor::instrumented::ExecHook;
 
 /// Instrumented `S · B` (CSR × dense → dense).
 pub fn spmm_hooked<H: ExecHook>(s: &Csr, b: &Dense64, hook: &mut H) -> Dense64 {
+    spmm_rows_hooked(s, b, 0, s.rows(), hook)
+}
+
+/// Instrumented SpMM over the output-row range `[lo, hi)` — the unit
+/// the banded combination phase hands each logical band. Per-row op
+/// order matches the full [`spmm_hooked`] exactly.
+pub fn spmm_rows_hooked<H: ExecHook>(
+    s: &Csr,
+    b: &Dense64,
+    lo: usize,
+    hi: usize,
+    hook: &mut H,
+) -> Dense64 {
     assert_eq!(
         s.cols(),
         b.rows(),
@@ -20,10 +33,11 @@ pub fn spmm_hooked<H: ExecHook>(s: &Csr, b: &Dense64, hook: &mut H) -> Dense64 {
         s.shape(),
         b.shape()
     );
+    assert!(lo <= hi && hi <= s.rows(), "row range out of bounds");
     let n = b.cols();
-    let mut out = Dense64::zeros(s.rows(), n);
-    for r in 0..s.rows() {
-        let out_row = out.row_mut(r);
+    let mut out = Dense64::zeros(hi - lo, n);
+    for r in lo..hi {
+        let out_row = out.row_mut(r - lo);
         for (c, v) in s.row_iter(r) {
             let v = v as f64;
             let b_row = b.row(c);
@@ -54,8 +68,20 @@ pub fn csr_col_sums_hooked<H: ExecHook>(m: &Csr, hook: &mut H) -> Vec<f64> {
 /// array as the rest of the combination phase, one multiply + one
 /// accumulate per nonzero.
 pub fn csr_matvec_hooked<H: ExecHook>(m: &Csr, v: &[f64], hook: &mut H) -> Vec<f64> {
+    csr_matvec_rows_hooked(m, v, 0, m.rows(), hook)
+}
+
+/// Instrumented CSR matvec over the row range `[lo, hi)`.
+pub fn csr_matvec_rows_hooked<H: ExecHook>(
+    m: &Csr,
+    v: &[f64],
+    lo: usize,
+    hi: usize,
+    hook: &mut H,
+) -> Vec<f64> {
     assert_eq!(v.len(), m.cols(), "matvec shape mismatch");
-    (0..m.rows())
+    assert!(lo <= hi && hi <= m.rows(), "row range out of bounds");
+    (lo..hi)
         .map(|r| {
             let mut acc = 0f64;
             for (c, x) in m.row_iter(r) {

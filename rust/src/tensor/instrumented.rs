@@ -93,6 +93,20 @@ impl CountingHook {
 /// Instrumented dense·dense matmul. Every product and every accumulator
 /// update is an individually observable operation.
 pub fn matmul_hooked<H: ExecHook>(a: &Dense64, b: &Dense64, hook: &mut H) -> Dense64 {
+    matmul_rows_hooked(a, b, 0, a.rows(), hook)
+}
+
+/// Instrumented matmul over the output-row range `[lo, hi)` of
+/// `a · b` — the unit the banded combination phase hands each logical
+/// band. Per-row op order is identical to the full [`matmul_hooked`]
+/// (rows are independent), so band outputs stitch bit-exactly.
+pub fn matmul_rows_hooked<H: ExecHook>(
+    a: &Dense64,
+    b: &Dense64,
+    lo: usize,
+    hi: usize,
+    hook: &mut H,
+) -> Dense64 {
     assert_eq!(
         a.cols(),
         b.rows(),
@@ -100,15 +114,16 @@ pub fn matmul_hooked<H: ExecHook>(a: &Dense64, b: &Dense64, hook: &mut H) -> Den
         a.shape(),
         b.shape()
     );
-    let (m, k) = a.shape();
+    assert!(lo <= hi && hi <= a.rows(), "row range out of bounds");
+    let k = a.cols();
     let n = b.cols();
-    let mut out = Dense64::zeros(m, n);
-    for i in 0..m {
+    let mut out = Dense64::zeros(hi - lo, n);
+    for i in lo..hi {
         let a_row = a.row(i);
         for kk in 0..k {
             let aik = a_row[kk];
             let b_row = b.row(kk);
-            let out_row = out.row_mut(i);
+            let out_row = out.row_mut(i - lo);
             for j in 0..n {
                 let p = hook.mul(aik * b_row[j]);
                 out_row[j] = hook.add(out_row[j] + p);
@@ -121,8 +136,20 @@ pub fn matmul_hooked<H: ExecHook>(a: &Dense64, b: &Dense64, hook: &mut H) -> Den
 /// Instrumented dense `M · v` (data path): the `H·w_r` / `S·x_r` check
 /// columns ride the same MAC array as the rest of the multiplication.
 pub fn matvec_hooked<H: ExecHook>(m: &Dense64, v: &[f64], hook: &mut H) -> Vec<f64> {
+    matvec_rows_hooked(m, v, 0, m.rows(), hook)
+}
+
+/// Instrumented dense matvec over the row range `[lo, hi)`.
+pub fn matvec_rows_hooked<H: ExecHook>(
+    m: &Dense64,
+    v: &[f64],
+    lo: usize,
+    hi: usize,
+    hook: &mut H,
+) -> Vec<f64> {
     assert_eq!(v.len(), m.cols(), "matvec shape mismatch");
-    (0..m.rows())
+    assert!(lo <= hi && hi <= m.rows(), "row range out of bounds");
+    (lo..hi)
         .map(|r| {
             let mut acc = 0f64;
             for (&x, &y) in m.row(r).iter().zip(v) {

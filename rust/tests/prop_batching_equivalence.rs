@@ -173,6 +173,7 @@ fn prop_coalesced_serving_is_bit_identical_to_solo() {
                     max_batch: case.max_batch,
                     max_wait: Duration::from_micros(case.max_wait_us),
                     starvation_factor: case.starvation_factor,
+                    adaptive: None,
                 },
             );
             let mut order: Vec<usize> = (0..n_requests).collect();

@@ -1,0 +1,304 @@
+//! Property: **sharding is location-transparent.** Serving through the
+//! shard tier — any shard count, either transport — is bit-identical to
+//! unsharded serving: logits match bit for bit and the fused/split
+//! alarm decisions are identical. The two transports are additionally
+//! bit-identical to *each other* including the stitched checksum bits
+//! (the proc workers compute each band with the same serial kernel the
+//! in-proc scoped threads run, and floats cross the wire as raw bit
+//! patterns).
+//!
+//! Plus the fail-stop contract: killing a shard worker mid-campaign
+//! turns the affected requests into `Failed` responses while the
+//! coordinator survives and keeps answering.
+
+// The proc transport runs on Unix domain sockets.
+#![cfg(unix)]
+
+use gcn_abft::coordinator::shard::{
+    InProcTransport, ProcTransport, ShardPlan, ShardTransport, ShardTransportKind,
+    ShardedBackend,
+};
+use gcn_abft::coordinator::{
+    serve_synthetic, BatchPolicy, ServePolicy, ServerConfig, VerifyStatus,
+};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::synth::{generate, SynthSpec};
+use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{
+    backend, BackendKind, ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs, Overlay,
+};
+use gcn_abft::util::proptest::{check, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The `gcn-abft` binary the proc transport spawns as shard workers
+/// (the test executable itself has no `shard-worker` subcommand).
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_gcn-abft"))
+}
+
+fn bits(out: &GcnOutputs) -> Vec<u32> {
+    out.logits.data().iter().map(|v| v.to_bits()).collect()
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    spec: SynthSpec,
+    graph_seed: u64,
+    model_seed: u64,
+    overlay_seed: u64,
+    /// Band count of the unsharded reference operands — deliberately
+    /// allowed to differ from every shard count under test.
+    ref_bands: usize,
+}
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    let n = 16 + rng.gen_index(40);
+    Case {
+        spec: SynthSpec {
+            name: "prop-shard-eq".into(),
+            num_nodes: n,
+            num_edges: 2 * n + rng.gen_index(n),
+            feat_dim: 6 + rng.gen_index(14),
+            feat_nnz: 4 * n,
+            num_classes: 2 + rng.gen_index(4),
+            homophily: 0.8,
+            binary_features: rng.gen_bool(0.5),
+            feature_scale: 1.0,
+        },
+        graph_seed: rng.next_u64(),
+        model_seed: rng.next_u64(),
+        overlay_seed: rng.next_u64(),
+        ref_bands: 1 + rng.gen_index(3),
+    }
+}
+
+/// Build the operand set of one case at a given band count.
+fn build_ops(case: &Case, bands: usize) -> Result<GcnOperands, String> {
+    let graph = generate(&case.spec, case.graph_seed);
+    let model = GcnModel::two_layer(&graph, 8, case.model_seed);
+    GcnOperands::sparse(
+        graph.features.clone(),
+        &model.adjacency,
+        model.layers[0].weights.clone(),
+        model.layers[1].weights.clone(),
+        bands,
+    )
+    .map_err(|e| format!("operand build failed: {e}"))
+}
+
+fn random_overlay_rows(case: &Case, n_nodes: usize, feat_dim: usize) -> Vec<(usize, Vec<f32>)> {
+    let mut rng = Pcg64::from_seed(case.overlay_seed);
+    (0..rng.gen_index(3))
+        .map(|_| {
+            (
+                rng.gen_index(n_nodes),
+                (0..feat_dim).map(|_| rng.gen_f32_range(-4.0, 4.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sharded_serving_is_bit_identical_to_unsharded() {
+    check(
+        &Config {
+            cases: 6,
+            seed: 0x5A4D,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let ops_ref = build_ops(case, case.ref_bands)?;
+            let rows = random_overlay_rows(case, case.spec.num_nodes, case.spec.feat_dim);
+            let overlays: Vec<Overlay<'_>> = rows
+                .iter()
+                .map(|(node, row)| Overlay {
+                    node: *node,
+                    row: row.as_slice(),
+                })
+                .collect();
+
+            for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+                // Unsharded reference: exactly what `serve` without
+                // --shards runs (native backend over banded CSR ops).
+                let reference =
+                    backend::for_operands(BackendKind::Native, scheme, &ops_ref, 2, None)
+                        .map_err(|e| format!("reference backend: {e}"))?;
+                let want = reference
+                    .run(&ops_ref, &overlays)
+                    .map_err(|e| format!("reference run: {e}"))?;
+                let want_bits = bits(&want);
+                let want_ok = ServePolicy::default().verify(&want).ok;
+                if !want_ok {
+                    return Err("fault-free reference run alarmed".into());
+                }
+
+                for shards in [1usize, 2, 4] {
+                    let ops = build_ops(case, shards)?;
+                    let plan = ShardPlan::for_operands(&ops)
+                        .map_err(|e| format!("plan: {e}"))?;
+                    if plan.shards != shards.min(case.spec.num_nodes) {
+                        return Err(format!(
+                            "plan has {} shards, wanted {shards}",
+                            plan.shards
+                        ));
+                    }
+
+                    let inproc: Arc<dyn ShardTransport> = Arc::new(
+                        InProcTransport::new(&ops).map_err(|e| format!("inproc: {e}"))?,
+                    );
+                    let proc: Arc<dyn ShardTransport> = Arc::new(
+                        ProcTransport::spawn(&ops, Some(worker_bin().as_path()))
+                            .map_err(|e| format!("proc spawn: {e}"))?,
+                    );
+                    let mut per_transport = Vec::new();
+                    for transport in [inproc, proc] {
+                        let tname = transport.name();
+                        let exe = ShardedBackend::new(transport, scheme, 2);
+                        let got = exe
+                            .run(&ops, &overlays)
+                            .map_err(|e| format!("{tname} run: {e}"))?;
+                        // Logits: bit-identical to unsharded serving.
+                        if bits(&got) != want_bits {
+                            return Err(format!(
+                                "{scheme:?} shards={shards} {tname}: logits are not \
+                                 bit-identical to unsharded"
+                            ));
+                        }
+                        // Alarm decisions: identical (fault-free ⇒ quiet).
+                        let ok = ServePolicy::default().verify(&got).ok;
+                        if ok != want_ok {
+                            return Err(format!(
+                                "{scheme:?} shards={shards} {tname}: alarm decision \
+                                 diverged from unsharded"
+                            ));
+                        }
+                        per_transport.push(got);
+                    }
+                    // The transports are bit-identical to each other,
+                    // checksum bits included (same band partition, same
+                    // per-band kernel, raw-bit wire format).
+                    let (a, b) = (&per_transport[0], &per_transport[1]);
+                    if a.logits != b.logits
+                        || a.predicted
+                            .iter()
+                            .zip(&b.predicted)
+                            .any(|(x, y)| x.to_bits() != y.to_bits())
+                        || a.actual
+                            .iter()
+                            .zip(&b.actual)
+                            .any(|(x, y)| x.to_bits() != y.to_bits())
+                    {
+                        return Err(format!(
+                            "{scheme:?} shards={shards}: proc transport diverged \
+                             from inproc"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn killed_proc_worker_fails_the_aggregation_not_the_process() {
+    let case = Case {
+        spec: SynthSpec {
+            name: "kill-proc".into(),
+            num_nodes: 48,
+            num_edges: 96,
+            feat_dim: 12,
+            feat_nnz: 192,
+            num_classes: 3,
+            homophily: 0.8,
+            binary_features: false,
+            feature_scale: 1.0,
+        },
+        graph_seed: 11,
+        model_seed: 12,
+        overlay_seed: 13,
+        ref_bands: 1,
+    };
+    let ops = build_ops(&case, 2).unwrap();
+    let transport =
+        Arc::new(ProcTransport::spawn(&ops, Some(worker_bin().as_path())).unwrap());
+    assert_eq!(transport.shards(), 2);
+    assert_eq!(transport.worker_pids().len(), 2);
+    let exe = ShardedBackend::new(
+        transport.clone() as Arc<dyn ShardTransport>,
+        ChecksumScheme::Fused,
+        1,
+    );
+    // Healthy: serves and verifies.
+    let out = exe.run(&ops, &[]).unwrap();
+    assert!(ServePolicy::default().verify(&out).ok);
+    // Kill worker 1 (the real subprocess dies); the next forward must
+    // error — never a silently stitched partial answer.
+    assert!(transport.kill_shard(1));
+    let err = exe.run(&ops, &[]).unwrap_err().to_string();
+    assert!(
+        err.contains("shard 1") || err.contains("down"),
+        "unexpected error: {err}"
+    );
+    // And it stays failed (the shard is marked down).
+    assert!(exe.run(&ops, &[]).is_err());
+    let tm = transport.timings();
+    assert!(tm.aggregates >= 2, "healthy run = two aggregation phases");
+}
+
+/// Drive the REAL coordinator — scheduler, executor, verification —
+/// with a shard being torn down mid-campaign, over both transports.
+/// Requests answered before the kill are Clean; everything after is
+/// fail-stop `Failed`; the coordinator survives to the end (run returns
+/// metrics, every request gets a response).
+#[test]
+fn killed_shard_mid_campaign_fail_stops_and_coordinator_survives() {
+    for transport in [ShardTransportKind::InProc, ShardTransportKind::Proc] {
+        let requests = 10usize;
+        let kill_after = 3u64;
+        let cfg = ServerConfig {
+            dataset: DatasetId::Tiny,
+            shards: 2,
+            shard_transport: transport,
+            shard_worker_bin: Some(worker_bin()),
+            kill_shard_after: Some(kill_after),
+            // One request per batch so "batches before the kill" maps
+            // 1:1 onto requests.
+            batch: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            workers: 1,
+            train_epochs: 2,
+            ..Default::default()
+        };
+        let s = serve_synthetic(&cfg, requests).unwrap_or_else(|e| {
+            panic!("{:?}: coordinator must survive a dead shard: {e:#}", transport)
+        });
+        assert_eq!(s.responses, requests, "{transport:?}: every request answered");
+        assert_eq!(
+            s.clean, kill_after as usize,
+            "{transport:?}: requests before the kill are clean: {s:?}"
+        );
+        assert_eq!(
+            s.failed,
+            requests - kill_after as usize,
+            "{transport:?}: requests after the kill fail stop: {s:?}"
+        );
+        assert_eq!(s.recovered, 0, "{transport:?}: a dead shard is not retryable");
+        assert!(
+            s.metrics.shard_failures >= 1,
+            "{transport:?}: shard failures must be observable: {s:?}"
+        );
+        assert_eq!(s.shards, 2);
+        assert_eq!(s.shard_transport, transport.name());
+        assert_eq!(s.metrics.shard_wait_secs.len(), 2);
+        let _ = VerifyStatus::Failed; // part of the pinned contract
+    }
+}

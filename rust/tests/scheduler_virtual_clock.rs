@@ -7,7 +7,7 @@
 //! which returns without consulting time at all.)
 
 use gcn_abft::coordinator::{
-    BatchPolicy, CloseReason, InferenceRequest, Priority, Scheduler, VirtualClock,
+    AdaptiveWait, BatchPolicy, CloseReason, InferenceRequest, Priority, Scheduler, VirtualClock,
 };
 use gcn_abft::util::rng::Pcg64;
 use std::time::Duration;
@@ -27,6 +27,7 @@ fn sched(max_batch: usize, max_wait_ms: u64, k: u32) -> Scheduler<VirtualClock> 
             max_batch,
             max_wait: ms(max_wait_ms),
             starvation_factor: k,
+            adaptive: None,
         },
     )
 }
@@ -317,4 +318,45 @@ fn random_schedules_lose_and_duplicate_nothing() {
         assert_eq!(emitted, expect, "case {case}: requests lost or duplicated");
         assert_eq!(s.stats().submitted, n);
     }
+}
+
+#[test]
+fn adaptive_wait_ewma_is_pinned_on_the_virtual_clock() {
+    // --adaptive-wait: the hold budget is ewma(interarrival) ×
+    // (max_batch − 1), clamped to [min_wait, max_wait]. Every update is
+    // deterministic on the virtual clock, so the exact EWMA values are
+    // pinned here.
+    let s = Scheduler::new(
+        VirtualClock::new(),
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: ms(20),
+            starvation_factor: 4,
+            adaptive: Some(AdaptiveWait {
+                alpha: 0.25,
+                min_wait: ms(1),
+            }),
+        },
+    );
+    // No interval observed yet: the configured ceiling governs.
+    assert_eq!(s.effective_wait(), ms(20));
+    s.submit(req(0, Priority::Interactive));
+    assert_eq!(s.effective_wait(), ms(20));
+    // First gap seeds the EWMA: 4 ms → budget 4 × 3 = 12 ms.
+    s.clock().advance(ms(4));
+    s.submit(req(1, Priority::Interactive));
+    assert_eq!(s.effective_wait(), ms(12));
+    // Second gap folds in: 0.25·8 + 0.75·4 = 5 ms → 15 ms.
+    s.clock().advance(ms(8));
+    s.submit(req(2, Priority::Interactive));
+    assert_eq!(s.effective_wait(), ms(15));
+    // A long quiet period pushes the raw budget past the ceiling — it
+    // clamps to max_wait, so the worst case never regresses.
+    s.clock().advance(ms(4000));
+    s.submit(req(3, Priority::Interactive));
+    assert_eq!(s.effective_wait(), ms(20));
+    // Size close still wins over any budget: max_batch reached.
+    let b = s.poll().expect("four queued requests close by size");
+    assert_eq!(b.closed_by, CloseReason::Size);
+    assert_eq!(b.len(), 4);
 }
