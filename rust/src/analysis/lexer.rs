@@ -1,0 +1,459 @@
+//! Lexer-level Rust source scanning for the architectural lint pass.
+//!
+//! This is deliberately *not* a parser: the lint rules in
+//! [`super::rules`] only need a comment/string-stripped token stream
+//! with line numbers, plus two side channels — the lint directives
+//! hiding in `//` comments and the line ranges covered by
+//! `#[cfg(test)]` items (so test-only code can be exempted from the
+//! production-path rules). A full AST (`syn`) would pull in a
+//! dependency tree the offline workspace cannot resolve; a token
+//! stream is enough to match the handful of idioms the contracts
+//! forbid (`Instant :: now`, `. unwrap`, `as f32`, `== 0.0`, …).
+
+/// Kind of a lexed token. Only the distinctions the rules need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unwrap`, `as`, `HashMap`, …).
+    Ident,
+    /// Numeric literal. `is_float_literal` refines this for D4.
+    Num,
+    /// Punctuation, including the two-char combinations the rules
+    /// match on (`::`, `==`, `!=`, `->`, `..`, …).
+    Punct,
+    /// Lifetime (`'a`, `'static`) — lexed so `'` disambiguation is
+    /// explicit, never matched by any rule.
+    Lifetime,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub text: String,
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+/// A `//` comment captured during lexing (block comments are dropped —
+/// lint directives must be line comments so they attach to a line).
+#[derive(Debug, Clone)]
+pub struct LineComment {
+    pub text: String,
+    pub line: u32,
+}
+
+/// Result of lexing one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+    /// Inclusive 1-based line ranges covered by `#[cfg(test)]` items
+    /// (attribute line through the matching closing brace).
+    pub test_ranges: Vec<(u32, u32)>,
+}
+
+impl Lexed {
+    /// Is `line` inside any `#[cfg(test)]` item?
+    pub fn in_test_region(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// Two-character punctuation tokens the rules care about (or that must
+/// not be split so single-char matching stays unambiguous — e.g. `=>`
+/// must not lex as `=`,`>`, and `..` must not look like a float dot).
+const PUNCT2: &[&str] = &[
+    "::", "==", "!=", "<=", ">=", "=>", "->", "..", "&&", "||", "<<", ">>", "+=", "-=", "*=",
+    "/=", "%=", "^=", "|=", "&=",
+];
+
+/// Lex `src`, stripping comments and string/char literals.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    // Advance over `n` chars, counting newlines.
+    macro_rules! bump {
+        ($n:expr) => {{
+            for _ in 0..$n {
+                if i < chars.len() {
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        }};
+    }
+
+    while i < chars.len() {
+        let c = chars[i];
+        let c1 = chars.get(i + 1).copied();
+
+        // Whitespace.
+        if c.is_whitespace() {
+            bump!(1);
+            continue;
+        }
+
+        // Line comment — captured for directive parsing.
+        if c == '/' && c1 == Some('/') {
+            let start_line = line;
+            let mut text = String::new();
+            while i < chars.len() && chars[i] != '\n' {
+                text.push(chars[i]);
+                i += 1;
+            }
+            out.comments.push(LineComment {
+                text,
+                line: start_line,
+            });
+            continue;
+        }
+
+        // Block comment, possibly nested (Rust nests them).
+        if c == '/' && c1 == Some('*') {
+            let mut depth = 1usize;
+            bump!(2);
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    bump!(2);
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    bump!(2);
+                } else {
+                    bump!(1);
+                }
+            }
+            continue;
+        }
+
+        // Identifier / keyword — may turn out to prefix a string
+        // literal (r"", b"", br#""#, c"", cr#""#).
+        if c.is_alphabetic() || c == '_' {
+            let start_line = line;
+            let mut text = String::new();
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                text.push(chars[i]);
+                i += 1;
+            }
+            let is_str_prefix = matches!(text.as_str(), "r" | "b" | "br" | "c" | "cr");
+            if is_str_prefix && matches!(chars.get(i), Some('"') | Some('#')) {
+                // Raw/byte/C string: swallow it whole, emit nothing.
+                let mut hashes = 0usize;
+                while chars.get(i) == Some(&'#') {
+                    hashes += 1;
+                    bump!(1);
+                }
+                if chars.get(i) == Some(&'"') {
+                    bump!(1);
+                    skip_string_body(&chars, &mut i, &mut line, hashes, text.starts_with('r') || text.starts_with("br") || text.starts_with("cr"));
+                }
+                continue;
+            }
+            out.tokens.push(Tok {
+                text,
+                kind: TokKind::Ident,
+                line: start_line,
+            });
+            continue;
+        }
+
+        // Plain string literal.
+        if c == '"' {
+            bump!(1);
+            skip_string_body(&chars, &mut i, &mut line, 0, false);
+            continue;
+        }
+
+        // `'`: char literal or lifetime.
+        if c == '\'' {
+            let start_line = line;
+            if c1 == Some('\\') {
+                // Escaped char literal: '\n', '\u{..}', '\'', …
+                bump!(2); // ' and backslash
+                // consume escape body up to closing quote
+                while i < chars.len() && chars[i] != '\'' {
+                    bump!(1);
+                }
+                bump!(1); // closing '
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') && c1.is_some() {
+                // Simple char literal 'x' (including '"' and ' ').
+                bump!(3);
+                continue;
+            }
+            // Lifetime: 'ident
+            bump!(1);
+            let mut text = String::from("'");
+            while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                text.push(chars[i]);
+                i += 1;
+            }
+            out.tokens.push(Tok {
+                text,
+                kind: TokKind::Lifetime,
+                line: start_line,
+            });
+            continue;
+        }
+
+        // Numeric literal. `.` is folded in only when followed by a
+        // digit (so ranges `0..n` and method calls `1.max(x)` lex
+        // as separate tokens); `e`/`E` exponents may carry a sign.
+        if c.is_ascii_digit() {
+            let start_line = line;
+            let mut text = String::new();
+            while i < chars.len() {
+                let d = chars[i];
+                if d.is_alphanumeric() || d == '_' {
+                    text.push(d);
+                    i += 1;
+                    // signed exponent: `1e-9`, `2.5E+3` (decimal only)
+                    if (d == 'e' || d == 'E')
+                        && !text.starts_with("0x")
+                        && !text.starts_with("0b")
+                        && !text.starts_with("0o")
+                        && matches!(chars.get(i), Some('+') | Some('-'))
+                        && chars.get(i + 1).is_some_and(|n| n.is_ascii_digit())
+                    {
+                        text.push(chars[i]);
+                        i += 1;
+                    }
+                } else if d == '.' && chars.get(i + 1).is_some_and(|n| n.is_ascii_digit()) {
+                    text.push(d);
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Tok {
+                text,
+                kind: TokKind::Num,
+                line: start_line,
+            });
+            continue;
+        }
+
+        // Punctuation: longest-match against the two-char table.
+        let start_line = line;
+        if let Some(n1) = c1 {
+            let pair: String = [c, n1].iter().collect();
+            if PUNCT2.contains(&pair.as_str()) {
+                bump!(2);
+                out.tokens.push(Tok {
+                    text: pair,
+                    kind: TokKind::Punct,
+                    line: start_line,
+                });
+                continue;
+            }
+        }
+        bump!(1);
+        out.tokens.push(Tok {
+            text: c.to_string(),
+            kind: TokKind::Punct,
+            line: start_line,
+        });
+    }
+
+    out.test_ranges = find_test_ranges(&out.tokens);
+    out
+}
+
+/// Consume a string body after the opening `"`. For raw strings
+/// (`raw == true`) the terminator is `"` followed by `hashes` `#`s and
+/// escapes are inert; otherwise `\"` and `\\` are honoured.
+fn skip_string_body(chars: &[char], i: &mut usize, line: &mut u32, hashes: usize, raw: bool) {
+    while *i < chars.len() {
+        let c = chars[*i];
+        if c == '\n' {
+            *line += 1;
+            *i += 1;
+            continue;
+        }
+        if !raw && c == '\\' {
+            // Skip the escaped char; a `\<newline>` line-continuation
+            // still has to count its newline.
+            if chars.get(*i + 1) == Some(&'\n') {
+                *line += 1;
+            }
+            *i += 2;
+            continue;
+        }
+        if c == '"' {
+            // Check for the required number of trailing hashes.
+            let mut ok = true;
+            for k in 0..hashes {
+                if chars.get(*i + 1 + k) != Some(&'#') {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                *i += 1 + hashes;
+                return;
+            }
+        }
+        *i += 1;
+    }
+}
+
+/// Locate `#[cfg(test)]` attributes and brace-match the item that
+/// follows each, returning inclusive line ranges. Handles both
+/// `#[cfg(test)] mod tests { … }` and attribute-stacked forms.
+fn find_test_ranges(tokens: &[Tok]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let texts: Vec<&str> = tokens.iter().map(|t| t.text.as_str()).collect();
+    let mut idx = 0usize;
+    while idx + 6 < tokens.len() {
+        let is_cfg_test = texts[idx] == "#"
+            && texts[idx + 1] == "["
+            && texts[idx + 2] == "cfg"
+            && texts[idx + 3] == "("
+            && texts[idx + 4] == "test"
+            && texts[idx + 5] == ")"
+            && texts[idx + 6] == "]";
+        if !is_cfg_test {
+            idx += 1;
+            continue;
+        }
+        let start_line = tokens[idx].line;
+        // Find the opening brace of the annotated item, skipping any
+        // further attributes and the item header. Parenthesised
+        // stretches (fn args, where-clauses with parens) are skipped
+        // so stray `{` inside them can't mislead — at token level a
+        // `{` before the body only appears in const-generic or
+        // struct-literal positions we don't hit in item headers.
+        let mut j = idx + 7;
+        let mut open = None;
+        while j < tokens.len() {
+            match texts[j] {
+                "{" => {
+                    open = Some(j);
+                    break;
+                }
+                ";" => break, // e.g. `#[cfg(test)] use …;` — zero-length range
+                _ => j += 1,
+            }
+        }
+        let Some(open_j) = open else {
+            // Attribute on a braceless item: cover just its lines.
+            ranges.push((start_line, tokens[j.min(tokens.len() - 1)].line));
+            idx += 7;
+            continue;
+        };
+        let mut depth = 0i64;
+        let mut end_line = tokens[open_j].line;
+        let mut k = open_j;
+        while k < tokens.len() {
+            match texts[k] {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end_line = tokens[k].line;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        if depth != 0 {
+            // Unbalanced (mid-edit file): cover to EOF.
+            end_line = tokens.last().map(|t| t.line).unwrap_or(start_line);
+        }
+        ranges.push((start_line, end_line));
+        idx = k.max(idx + 7);
+    }
+    ranges
+}
+
+/// Does a numeric token denote a float literal? (`0.0`, `1e-9`,
+/// `2f32`, `3.5f64` — but not `0xff`, `10`, `1_000u64`.)
+pub fn is_float_literal(tok: &Tok) -> bool {
+    if tok.kind != TokKind::Num {
+        return false;
+    }
+    let t = tok.text.as_str();
+    if t.starts_with("0x") || t.starts_with("0b") || t.starts_with("0o") {
+        return false;
+    }
+    t.contains('.') || t.ends_with("f32") || t.ends_with("f64") || t.contains('e') || t.contains('E')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let toks = texts("let x = \"Instant::now()\"; // Instant::now()\n/* Instant::now() */ y");
+        assert_eq!(toks, vec!["let", "x", "=", ";", "y"]);
+    }
+
+    #[test]
+    fn raw_strings_swallowed() {
+        let toks = texts("let s = r#\"fn f() { x.unwrap() }\"#; done");
+        assert_eq!(toks, vec!["let", "s", "=", ";", "done"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = texts("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        assert!(toks.contains(&"'a".to_string()));
+        // char literals are swallowed whole — no stray quote or 'x tokens
+        assert!(!toks.contains(&"'x".to_string()));
+        assert!(!toks.contains(&"'".to_string()));
+    }
+
+    #[test]
+    fn multichar_punct_and_ranges() {
+        let toks = texts("a == b; c != d; for i in 0..n {} x::y");
+        assert!(toks.contains(&"==".to_string()));
+        assert!(toks.contains(&"!=".to_string()));
+        assert!(toks.contains(&"..".to_string()));
+        assert!(toks.contains(&"::".to_string()));
+    }
+
+    #[test]
+    fn float_literal_detection() {
+        let l = lex("a = 0.0; b = 1e-9; c = 2f32; d = 10; e = 0xff; f = 1_000u64;");
+        let nums: Vec<&Tok> = l.tokens.iter().filter(|t| t.kind == TokKind::Num).collect();
+        let flags: Vec<bool> = nums.iter().map(|t| is_float_literal(t)).collect();
+        assert_eq!(flags, vec![true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn line_numbers_tracked() {
+        let l = lex("a\nb\n\nc");
+        let lines: Vec<u32> = l.tokens.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn comments_captured_with_lines() {
+        let l = lex("x // gcn-lint: allow(D1, reason=\"why\")\ny");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[0].text.contains("gcn-lint"));
+    }
+
+    #[test]
+    fn cfg_test_region_found() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n  fn t() {}\n}\nfn after() {}";
+        let l = lex(src);
+        assert_eq!(l.test_ranges, vec![(2, 5)]);
+        assert!(l.in_test_region(3));
+        assert!(!l.in_test_region(1));
+        assert!(!l.in_test_region(6));
+    }
+}

@@ -1,0 +1,152 @@
+//! `gcn-abft analyze` — the std-only architectural lint pass.
+//!
+//! The repo's two load-bearing promises — every scaling mechanism is
+//! bit-identical to the simple path, and every fault is fail-stop,
+//! never silent — are invariants of the *source*, not just of any one
+//! test run. This subsystem mechanizes them as lexer-level lint rules
+//! (see [`rules::RULES`]) over a comment/string-stripped token stream
+//! ([`lexer`]), reported as human text or a stable tagged-enum JSON
+//! document ([`report`]). The scanner is deliberately dependency-free
+//! (no `syn`): the offline workspace vendors nothing but `anyhow`,
+//! and a token stream is enough to match the forbidden idioms.
+//!
+//! Entry points: [`analyze_paths`] for library/tests use and
+//! [`run_cli`] behind the `analyze` subcommand. Exit status: 0 clean,
+//! 1 unsuppressed findings, 2 usage/IO error.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::{Report, SCHEMA_VERSION};
+pub use rules::{scan_source, Finding, Suppressed, RULES};
+
+use crate::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+/// Collect every `.rs` file under `root` (or `root` itself if it is a
+/// file), sorted so scan order — and therefore report order — is
+/// deterministic across filesystems.
+fn collect_rs_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    if !root.is_dir() {
+        return Err(format!("no such file or directory: {}", root.display()));
+    }
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        paths.sort();
+        for p in paths {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Display path for a scanned file: relative to the current directory
+/// when possible, always forward-slashed.
+fn display_path(p: &Path) -> String {
+    let rel = std::env::current_dir()
+        .ok()
+        .and_then(|cwd| p.strip_prefix(&cwd).ok().map(|r| r.to_path_buf()))
+        .unwrap_or_else(|| p.to_path_buf());
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Analyze every `.rs` file under the given roots.
+pub fn analyze_paths<P: AsRef<Path>>(roots: &[P]) -> Result<Report, String> {
+    let mut rep = Report::default();
+    for root in roots {
+        let root = root.as_ref();
+        rep.roots.push(display_path(root));
+        for file in collect_rs_files(root)? {
+            let src = std::fs::read_to_string(&file)
+                .map_err(|e| format!("read {}: {e}", file.display()))?;
+            let (mut f, mut s) = scan_source(&display_path(&file), &src);
+            rep.files_scanned += 1;
+            rep.findings.append(&mut f);
+            rep.suppressed.append(&mut s);
+        }
+    }
+    Ok(rep)
+}
+
+/// Default scan roots: the crate's `src` and `tests` trees. Resolved
+/// against the current directory first (`rust/src` when invoked from
+/// the repo root, `src` when invoked from `rust/`), falling back to
+/// the crate's own location so `cargo run -- analyze` works from
+/// anywhere inside the workspace.
+pub fn default_roots() -> Vec<PathBuf> {
+    let candidates: [&[&str]; 3] = [
+        &["rust/src", "rust/tests"],
+        &["src", "tests"],
+        &[concat!(env!("CARGO_MANIFEST_DIR"), "/src"), concat!(env!("CARGO_MANIFEST_DIR"), "/tests")],
+    ];
+    for set in candidates {
+        let paths: Vec<PathBuf> = set.iter().map(PathBuf::from).collect();
+        if paths.iter().all(|p| p.is_dir()) {
+            return paths;
+        }
+    }
+    vec![PathBuf::from("src"), PathBuf::from("tests")]
+}
+
+/// CLI driver behind `gcn-abft analyze [--json] [paths…]`.
+pub fn run_cli(args: &Args) -> i32 {
+    let roots: Vec<PathBuf> = if args.positional.is_empty() {
+        default_roots()
+    } else {
+        args.positional.iter().map(PathBuf::from).collect()
+    };
+    let rep = match analyze_paths(&roots) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("gcn-abft analyze: {e}");
+            return 2;
+        }
+    };
+    if args.has_flag("json") {
+        println!("{}", rep.to_json().to_pretty());
+    } else {
+        print!("{}", rep.render());
+    }
+    if rep.clean() {
+        0
+    } else {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_is_sorted_and_recursive() {
+        // Scan our own module directory deterministically.
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src/analysis"));
+        let files = collect_rs_files(dir).expect("walk");
+        assert!(files.len() >= 4);
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+
+    #[test]
+    fn missing_root_is_an_error() {
+        assert!(analyze_paths(&[Path::new("/nonexistent/gcn-abft-xyz")]).is_err());
+    }
+}

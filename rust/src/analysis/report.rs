@@ -1,0 +1,234 @@
+//! Rendering for the analyze pass: human text and the stable
+//! tagged-enum JSON schema.
+//!
+//! The JSON shape mirrors the tagged message enums the report tooling
+//! already consumes elsewhere (`{"type": …, "data": {…}}` per node),
+//! so future `BENCH_*`/report pipelines can diff contract drift
+//! across PRs without a schema negotiation. Schema changes bump
+//! `SCHEMA_VERSION`.
+
+use super::rules::{Finding, Suppressed, RULES};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Bumped whenever the JSON layout changes shape.
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// Aggregated result of analyzing a set of roots.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub roots: Vec<String>,
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<Suppressed>,
+}
+
+impl Report {
+    /// Clean means zero unsuppressed findings — the exit-0 criterion.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Per-rule counts over all known rules (zero-filled so the JSON
+    /// keys are stable across runs).
+    fn counts(items: impl Iterator<Item = String>) -> BTreeMap<String, usize> {
+        let mut by_rule: BTreeMap<String, usize> =
+            RULES.iter().map(|r| (r.id.to_string(), 0)).collect();
+        for rule in items {
+            *by_rule.entry(rule).or_insert(0) += 1;
+        }
+        by_rule
+    }
+
+    /// The stable tagged-enum JSON document.
+    pub fn to_json(&self) -> Json {
+        let by_rule = Self::counts(self.findings.iter().map(|f| f.rule.clone()));
+        let suppressed_by_rule = Self::counts(self.suppressed.iter().map(|s| s.rule.clone()));
+        let count_obj = |m: &BTreeMap<String, usize>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(k, v)| (k.clone(), Json::Int(*v as i64)))
+                    .collect(),
+            )
+        };
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("type", "finding".into()),
+                        (
+                            "data",
+                            Json::obj(vec![
+                                ("rule", f.rule.as_str().into()),
+                                ("path", f.path.as_str().into()),
+                                ("line", Json::Int(f.line as i64)),
+                                ("message", f.message.as_str().into()),
+                                ("snippet", f.snippet.as_str().into()),
+                            ]),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let suppressed = Json::Arr(
+            self.suppressed
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("type", "suppressed".into()),
+                        (
+                            "data",
+                            Json::obj(vec![
+                                ("rule", s.rule.as_str().into()),
+                                ("path", s.path.as_str().into()),
+                                ("line", Json::Int(s.line as i64)),
+                                ("reason", s.reason.as_str().into()),
+                            ]),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let summary = Json::obj(vec![
+            ("type", "summary".into()),
+            (
+                "data",
+                Json::obj(vec![
+                    ("by_rule", count_obj(&by_rule)),
+                    ("suppressed_by_rule", count_obj(&suppressed_by_rule)),
+                    ("total", Json::Int(self.findings.len() as i64)),
+                    ("suppressed_total", Json::Int(self.suppressed.len() as i64)),
+                    ("clean", Json::Bool(self.clean())),
+                ]),
+            ),
+        ]);
+        Json::obj(vec![
+            ("type", "analysis_report".into()),
+            (
+                "data",
+                Json::obj(vec![
+                    ("version", Json::Int(SCHEMA_VERSION)),
+                    (
+                        "roots",
+                        Json::Arr(self.roots.iter().map(|r| r.as_str().into()).collect()),
+                    ),
+                    ("files_scanned", Json::Int(self.files_scanned as i64)),
+                    ("findings", findings),
+                    ("suppressed", suppressed),
+                    ("summary", summary),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable rendering, one finding per block.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "gcn-abft analyze: scanned {} files under [{}]\n",
+            self.files_scanned,
+            self.roots.join(", ")
+        ));
+        for f in &self.findings {
+            let name = RULES
+                .iter()
+                .find(|r| r.id == f.rule)
+                .map(|r| r.name)
+                .unwrap_or("?");
+            out.push_str(&format!(
+                "  [{} {}] {}:{}: {}\n",
+                f.rule, name, f.path, f.line, f.message
+            ));
+            if !f.snippet.is_empty() {
+                out.push_str(&format!("      > {}\n", f.snippet));
+            }
+        }
+        for s in &self.suppressed {
+            out.push_str(&format!(
+                "  suppressed [{}] {}:{} — reason: {}\n",
+                s.rule, s.path, s.line, s.reason
+            ));
+        }
+        if self.clean() {
+            out.push_str(&format!(
+                "PASS: 0 findings ({} suppressed with reason)\n",
+                self.suppressed.len()
+            ));
+        } else {
+            out.push_str(&format!(
+                "FAIL: {} finding(s) ({} suppressed with reason)\n",
+                self.findings.len(),
+                self.suppressed.len()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            roots: vec!["src".into()],
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: "F1".into(),
+                path: "src/coordinator/server.rs".into(),
+                line: 10,
+                message: "unwrap".into(),
+                snippet: "m.lock().unwrap()".into(),
+            }],
+            suppressed: vec![Suppressed {
+                rule: "D1".into(),
+                path: "src/util/bench.rs".into(),
+                line: 5,
+                reason: "wall clock is the measurement".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn json_schema_shape() {
+        let j = sample().to_json();
+        assert_eq!(j.get("type").and_then(|t| t.as_str()), Some("analysis_report"));
+        let data = j.get("data").expect("data");
+        assert_eq!(
+            data.get("version").and_then(|v| v.as_f64()),
+            Some(SCHEMA_VERSION as f64)
+        );
+        let summary = data.get("summary").expect("summary");
+        assert_eq!(summary.get("type").and_then(|t| t.as_str()), Some("summary"));
+        let sd = summary.get("data").expect("summary data");
+        assert_eq!(sd.get("total").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(sd.get("suppressed_total").and_then(|v| v.as_f64()), Some(1.0));
+        // Zero-filled per-rule keys are stable.
+        let by_rule = sd.get("by_rule").expect("by_rule");
+        for r in RULES {
+            assert!(by_rule.get(r.id).is_some(), "missing rule key {}", r.id);
+        }
+        // Round-trips through the JSON parser.
+        let text = j.to_pretty();
+        let back = Json::parse(&text).expect("parse back");
+        assert_eq!(
+            back.get("type").and_then(|t| t.as_str()),
+            Some("analysis_report")
+        );
+    }
+
+    #[test]
+    fn render_flags_pass_fail() {
+        let r = sample();
+        let text = r.render();
+        assert!(text.contains("FAIL: 1 finding(s)"));
+        assert!(text.contains("[F1 fail-stop-not-panic]"));
+        assert!(text.contains("suppressed [D1]"));
+        let clean = Report {
+            findings: vec![],
+            ..sample()
+        };
+        assert!(clean.render().contains("PASS: 0 findings"));
+    }
+}

@@ -1,0 +1,550 @@
+//! The architectural lint rules and the suppression machinery.
+//!
+//! Each rule mechanizes one contract the repo's tests and README have
+//! so far enforced only by convention:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `D1` | all time comes from the `Clock` trait so `VirtualClock` tests stay authoritative |
+//! | `D2` | no hash-order iteration where accumulation order defines bit-identity |
+//! | `D3` | checksum partial sums accumulate in f64 — additivity over row bands is only exact there |
+//! | `D4` | no `==`/`!=` against float literals outside tests — use thresholds or `total_cmp` |
+//! | `F1` | coordinator request paths fail stop (`Failed` responses), never panic |
+//! | `C1` | only scoped threads outside the sanctioned spawn sites — no detached workers |
+//!
+//! Suppression is inline and *reasoned*:
+//! `// gcn-lint: allow(RULE, reason="…")` on the finding's line or the
+//! line above. A directive without a reason is itself a finding
+//! (`LINT`) that cannot be suppressed — the report surfaces every
+//! accepted reason so drift stays reviewable.
+
+use super::lexer::{is_float_literal, lex, Lexed, Tok, TokKind};
+
+/// An unsuppressed rule violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+    pub snippet: String,
+}
+
+/// A violation silenced by a reasoned `gcn-lint: allow` directive.
+#[derive(Debug, Clone)]
+pub struct Suppressed {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub reason: String,
+}
+
+/// Static description of one rule, for docs and the report header.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub contract: &'static str,
+}
+
+/// Every rule the pass knows, in report order. `LINT` is the
+/// meta-rule for malformed directives.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D1",
+        name: "no-raw-clock",
+        contract: "Instant::now/SystemTime::now only in coordinator/clock.rs; \
+                   everything else reads time through the Clock trait",
+    },
+    RuleInfo {
+        id: "D2",
+        name: "deterministic-iteration",
+        contract: "no HashMap/HashSet in abft/ or the shard wire path; \
+                   hash-order iteration breaks bit-identical accumulation",
+    },
+    RuleInfo {
+        id: "D3",
+        name: "f64-accumulation",
+        contract: "no `as f32` narrowing in abft checksum partial-sum paths; \
+                   band additivity is only exact in f64",
+    },
+    RuleInfo {
+        id: "D4",
+        name: "no-float-eq",
+        contract: "no ==/!= against float literals outside tests; \
+                   use thresholds or total_cmp",
+    },
+    RuleInfo {
+        id: "F1",
+        name: "fail-stop-not-panic",
+        contract: "no unwrap/expect/panic!/unreachable! in coordinator \
+                   request paths; errors become Failed responses",
+    },
+    RuleInfo {
+        id: "C1",
+        name: "scoped-threads-only",
+        contract: "thread::spawn only in util/parallel.rs and the shard \
+                   transports; all other parallelism is scoped",
+    },
+    RuleInfo {
+        id: "LINT",
+        name: "well-formed-suppression",
+        contract: "every gcn-lint directive parses and carries a reason",
+    },
+];
+
+/// A parsed (or rejected) `gcn-lint:` directive.
+#[derive(Debug)]
+enum Directive {
+    Allow { rule: String, reason: String, line: u32 },
+    Malformed { line: u32, detail: String },
+}
+
+/// Parse every `gcn-lint:` directive out of the file's line comments.
+/// A directive must *start* the comment (after the `//`/`///`/`//!`
+/// marker) so prose that merely mentions the syntax is inert.
+fn parse_directives(lexed: &Lexed) -> Vec<Directive> {
+    let mut out = Vec::new();
+    for c in &lexed.comments {
+        let head = c
+            .text
+            .trim_start_matches(|ch| ch == '/' || ch == '!')
+            .trim_start();
+        let Some(body) = head.strip_prefix("gcn-lint:") else {
+            continue;
+        };
+        out.push(parse_allow(body.trim(), c.line));
+    }
+    out
+}
+
+/// Parse `allow(RULE, reason="…")`. Anything else is `Malformed`.
+fn parse_allow(body: &str, line: u32) -> Directive {
+    let malformed = |detail: &str| Directive::Malformed {
+        line,
+        detail: detail.to_string(),
+    };
+    let Some(rest) = body.strip_prefix("allow") else {
+        return malformed("expected `allow(rule, reason=\"…\")`");
+    };
+    let rest = rest.trim_start();
+    let Some(rest) = rest.strip_prefix('(') else {
+        return malformed("expected `(` after `allow`");
+    };
+    let Some(inner) = rest.rfind(')').map(|p| &rest[..p]) else {
+        return malformed("unclosed `allow(`");
+    };
+    let Some((rule_part, reason_part)) = inner.split_once(',') else {
+        return malformed("missing `, reason=\"…\"` — suppressions must be justified");
+    };
+    let rule = rule_part.trim().to_string();
+    if rule.is_empty() || !RULES.iter().any(|r| r.id == rule) {
+        return malformed(&format!("unknown rule `{rule}`"));
+    }
+    if rule == "LINT" {
+        return malformed("the LINT meta-rule cannot be suppressed");
+    }
+    let reason_part = reason_part.trim();
+    let Some(q) = reason_part.strip_prefix("reason=") else {
+        return malformed("expected `reason=\"…\"`");
+    };
+    let q = q.trim();
+    let reason = q
+        .strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .map(|s| s.trim().to_string());
+    match reason {
+        Some(r) if !r.is_empty() => Directive::Allow { rule, reason: r, line },
+        _ => malformed("reason must be a non-empty quoted string"),
+    }
+}
+
+/// Normalize a path for suffix matching: forward slashes only.
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+fn ends_with_any(path: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| path.ends_with(s))
+}
+
+/// Scope predicates — which files each rule watches or exempts.
+fn d1_exempt(path: &str) -> bool {
+    ends_with_any(path, &["coordinator/clock.rs"])
+}
+fn d2_scope(path: &str) -> bool {
+    path.contains("/abft/") || path.starts_with("abft/") || path.ends_with("coordinator/shard.rs")
+}
+fn d3_scope(path: &str) -> bool {
+    ends_with_any(path, &["abft/checksum.rs", "abft/fused.rs", "abft/split.rs"])
+}
+fn d4_exempt_file(path: &str) -> bool {
+    // Integration tests (tests/) assert bit-identity with exact float
+    // equality on purpose; in-crate #[cfg(test)] regions are excluded
+    // per-line instead.
+    path.contains("/tests/") || path.starts_with("tests/")
+}
+fn f1_scope(path: &str) -> bool {
+    ends_with_any(
+        path,
+        &[
+            "coordinator/server.rs",
+            "coordinator/shard.rs",
+            "coordinator/batcher.rs",
+            "coordinator/mod.rs",
+        ],
+    )
+}
+fn c1_exempt(path: &str) -> bool {
+    ends_with_any(path, &["util/parallel.rs", "coordinator/shard.rs"])
+}
+
+/// Scan one file's source. `path` is the display path (repo-relative
+/// where possible); scoping matches on its suffix.
+pub fn scan_source(path: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
+    let path = norm(path);
+    let lexed = lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let snippet = |line: u32| -> String {
+        lines
+            .get(line.saturating_sub(1) as usize)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    };
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut push = |rule: &str, line: u32, message: String| {
+        raw.push(Finding {
+            rule: rule.to_string(),
+            path: path.clone(),
+            line,
+            message,
+            snippet: snippet(line),
+        });
+    };
+
+    let toks = &lexed.tokens;
+    let text = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+    let seq = |j: usize, pat: &[&str]| (0..pat.len()).all(|k| text(j + k) == pat[k]);
+
+    for j in 0..toks.len() {
+        let t = &toks[j];
+
+        // D1 no-raw-clock — applies everywhere (tests included: the
+        // VirtualClock harness is what keeps the batching tests
+        // deterministic) except clock.rs itself.
+        if !d1_exempt(&path)
+            && (seq(j, &["Instant", "::", "now"]) || seq(j, &["SystemTime", "::", "now"]))
+        {
+            push(
+                "D1",
+                t.line,
+                format!(
+                    "raw `{}::now()` bypasses the Clock trait — inject a Clock \
+                     (MonotonicClock/VirtualClock) instead",
+                    t.text
+                ),
+            );
+        }
+
+        // D2 deterministic-iteration — hash collections anywhere in
+        // the checksum/wire scope, tests included (a hash-ordered
+        // test would assert order-dependent sums).
+        if d2_scope(&path)
+            && t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+        {
+            push(
+                "D2",
+                t.line,
+                format!(
+                    "`{}` iteration order is nondeterministic — use BTreeMap/BTreeSet \
+                     or a sorted Vec so accumulation order is pinned",
+                    t.text
+                ),
+            );
+        }
+
+        // D3 f64-accumulation — `as f32` narrowing in checksum files,
+        // outside #[cfg(test)] (tests narrow deliberately to build
+        // f32 inputs).
+        if d3_scope(&path)
+            && !lexed.in_test_region(t.line)
+            && (seq(j, &["as", "f32"]) || seq(j, &["sum", "::", "<", "f32", ">"]))
+        {
+            push(
+                "D3",
+                t.line,
+                "f32 narrowing in a checksum partial-sum path — band additivity \
+                 (eᵀSHWe summed over bands) is only exact in f64"
+                    .to_string(),
+            );
+        }
+
+        // D4 no-float-eq — ==/!= adjacent to a float literal, outside
+        // tests.
+        if !d4_exempt_file(&path)
+            && !lexed.in_test_region(t.line)
+            && (t.text == "==" || t.text == "!=")
+            && t.kind == TokKind::Punct
+        {
+            let prev_float = j > 0 && is_float_literal(&toks[j - 1]);
+            let next_float = toks.get(j + 1).map(is_float_literal).unwrap_or(false);
+            if prev_float || next_float {
+                push(
+                    "D4",
+                    t.line,
+                    format!(
+                        "`{}` against a float literal — exact float comparison; \
+                         use a threshold or restructure (annotate if exactness is the point)",
+                        t.text
+                    ),
+                );
+            }
+        }
+
+        // F1 fail-stop-not-panic — coordinator request paths only,
+        // outside #[cfg(test)].
+        if f1_scope(&path) && !lexed.in_test_region(t.line) {
+            let prev_dot = j > 0 && text(j - 1) == ".";
+            if prev_dot && t.kind == TokKind::Ident && (t.text == "unwrap" || t.text == "expect") {
+                push(
+                    "F1",
+                    t.line,
+                    format!(
+                        "`.{}()` in a coordinator request path can abort the server — \
+                         propagate the error into a Failed response \
+                         (recover lock poison explicitly)",
+                        t.text
+                    ),
+                );
+            }
+            if t.kind == TokKind::Ident
+                && (t.text == "panic" || t.text == "unreachable")
+                && text(j + 1) == "!"
+            {
+                push(
+                    "F1",
+                    t.line,
+                    format!(
+                        "`{}!` in a coordinator request path — the fail-stop contract \
+                         requires a Failed response, not a crash",
+                        t.text
+                    ),
+                );
+            }
+        }
+
+        // C1 scoped-threads-only — `thread::spawn` outside the
+        // sanctioned spawn sites (scope.spawn is a method call and
+        // never matches this token sequence).
+        if !c1_exempt(&path) && !lexed.in_test_region(t.line) && seq(j, &["thread", "::", "spawn"])
+        {
+            push(
+                "C1",
+                t.line,
+                "detached `thread::spawn` — use std::thread::scope (or the \
+                 util::parallel helpers) so worker lifetimes are bounded"
+                    .to_string(),
+            );
+        }
+    }
+
+    // Apply suppressions: a reasoned allow on the finding's line or
+    // the line directly above silences it (and is surfaced in the
+    // report); malformed directives become LINT findings.
+    let directives = parse_directives(&lexed);
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+    for f in raw {
+        let hit = directives.iter().find_map(|d| match d {
+            Directive::Allow { rule, reason, line }
+                if *rule == f.rule && (*line == f.line || *line + 1 == f.line) =>
+            {
+                Some(reason.clone())
+            }
+            _ => None,
+        });
+        match hit {
+            Some(reason) => suppressed.push(Suppressed {
+                rule: f.rule,
+                path: f.path,
+                line: f.line,
+                reason,
+            }),
+            None => findings.push(f),
+        }
+    }
+    for d in &directives {
+        if let Directive::Malformed { line, detail } = d {
+            findings.push(Finding {
+                rule: "LINT".to_string(),
+                path: path.clone(),
+                line: *line,
+                message: format!("malformed gcn-lint directive: {detail}"),
+                snippet: snippet(*line),
+            });
+        }
+    }
+    findings.sort_by_key(|f| f.line);
+    (findings, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Fixtures are assembled by joining lines (so this file's own
+    // scan — string literals are stripped — stays clean regardless).
+    fn src(lines: &[&str]) -> String {
+        lines.join("\n")
+    }
+
+    fn findings_for(path: &str, lines: &[&str]) -> Vec<Finding> {
+        scan_source(path, &src(lines)).0
+    }
+
+    #[test]
+    fn d1_positive_and_exempt() {
+        let code = ["fn f() {", "let t = Instant::now();", "}"];
+        let f = findings_for("src/coordinator/server.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D1");
+        assert_eq!(f[0].line, 2);
+        assert!(findings_for("src/coordinator/clock.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn d1_suppressed_with_reason() {
+        let code = [
+            "// gcn-lint: allow(D1, reason=\"wall-clock is the measurement\")",
+            "let t = Instant::now();",
+        ];
+        let (f, s) = scan_source("src/util/bench.rs", &src(&code));
+        assert!(f.is_empty());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].rule, "D1");
+        assert_eq!(s[0].reason, "wall-clock is the measurement");
+    }
+
+    #[test]
+    fn suppression_without_reason_rejected() {
+        let code = ["// gcn-lint: allow(D1)", "let t = Instant::now();"];
+        let f = findings_for("src/util/bench.rs", &code);
+        // Both the original D1 and a LINT finding survive.
+        assert!(f.iter().any(|x| x.rule == "D1"));
+        assert!(f.iter().any(|x| x.rule == "LINT"));
+    }
+
+    #[test]
+    fn suppression_of_unknown_rule_rejected() {
+        let code = ["// gcn-lint: allow(Z9, reason=\"nope\")"];
+        let f = findings_for("src/lib.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "LINT");
+    }
+
+    #[test]
+    fn d2_positive_and_out_of_scope() {
+        let code = ["use std::collections::HashMap;"];
+        assert_eq!(findings_for("src/abft/fused.rs", &code).len(), 1);
+        assert_eq!(findings_for("src/coordinator/shard.rs", &code).len(), 1);
+        assert!(findings_for("src/graph/synth.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn d3_positive_and_test_region_exempt() {
+        let code = ["fn f(x: f64) -> f32 {", "x as f32", "}"];
+        let f = findings_for("src/abft/checksum.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D3");
+        let test_code = [
+            "#[cfg(test)]",
+            "mod tests {",
+            "fn f(x: f64) -> f32 { x as f32 }",
+            "}",
+        ];
+        assert!(findings_for("src/abft/checksum.rs", &test_code).is_empty());
+        // Out-of-scope file: no D3.
+        assert!(findings_for("src/tensor/ops.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn d4_positive_negative_and_tests_exempt() {
+        let pos = ["if x == 0.0 { return; }"];
+        let f = findings_for("src/sparse/csr.rs", &pos);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D4");
+        // Threshold comparison is fine.
+        assert!(findings_for("src/sparse/csr.rs", &["if x <= 1e-7 { return; }"]).is_empty());
+        // Integer equality is fine.
+        assert!(findings_for("src/sparse/csr.rs", &["if n == 0 { return; }"]).is_empty());
+        // Integration tests assert bit-identity deliberately.
+        assert!(findings_for("tests/prop_pin.rs", &pos).is_empty());
+    }
+
+    #[test]
+    fn f1_positive_negative_and_scope() {
+        let code = ["fn f() {", "let g = m.lock().unwrap();", "}"];
+        let f = findings_for("src/coordinator/batcher.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "F1");
+        // Poison recovery does not trip the rule.
+        let ok = ["let g = m.lock().unwrap_or_else(|p| p.into_inner());"];
+        assert!(findings_for("src/coordinator/batcher.rs", &ok).is_empty());
+        // Out of scope: unwrap is allowed elsewhere.
+        assert!(findings_for("src/gcn/train.rs", &code).is_empty());
+        // panic!/unreachable! in scope.
+        let p = ["fn f() {", "panic!(\"boom\");", "unreachable!()", "}"];
+        assert_eq!(findings_for("src/coordinator/mod.rs", &p).len(), 2);
+    }
+
+    #[test]
+    fn f1_test_region_exempt() {
+        let code = [
+            "#[cfg(test)]",
+            "mod tests {",
+            "fn t() { m.lock().unwrap(); }",
+            "}",
+        ];
+        assert!(findings_for("src/coordinator/server.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn c1_positive_and_exempt() {
+        let code = ["let h = std::thread::spawn(|| {});"];
+        let f = findings_for("src/coordinator/mod.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "C1");
+        assert!(findings_for("src/util/parallel.rs", &code).is_empty());
+        assert!(findings_for("src/coordinator/shard.rs", &code).is_empty());
+        // scope.spawn is a method call — clean.
+        assert!(findings_for(
+            "src/coordinator/mod.rs",
+            &["std::thread::scope(|s| { s.spawn(|| {}); });"]
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn suppression_line_above_or_same_line() {
+        let above = [
+            "// gcn-lint: allow(C1, reason=\"driver outlives scope\")",
+            "let h = std::thread::spawn(|| {});",
+        ];
+        let (f, s) = scan_source("src/coordinator/mod.rs", &src(&above));
+        assert!(f.is_empty());
+        assert_eq!(s.len(), 1);
+        let same = ["let h = std::thread::spawn(|| {}); // gcn-lint: allow(C1, reason=\"x\")"];
+        let (f2, s2) = scan_source("src/coordinator/mod.rs", &src(&same));
+        assert!(f2.is_empty());
+        assert_eq!(s2.len(), 1);
+    }
+
+    #[test]
+    fn lint_rule_itself_not_suppressible() {
+        let code = ["// gcn-lint: allow(LINT, reason=\"meta\")"];
+        let f = findings_for("src/lib.rs", &code);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "LINT");
+    }
+}

@@ -42,6 +42,7 @@
 //! (`tests/scheduler_virtual_clock.rs`).
 
 use super::clock::{Clock, MonotonicClock, Tick};
+use super::lock_recover;
 use super::request::InferenceRequest;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
@@ -239,7 +240,7 @@ impl<C: Clock> Scheduler<C> {
     /// policy) folds the inter-arrival gap into the EWMA.
     pub fn submit(&self, req: InferenceRequest) {
         let arrived = self.clock.now();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         if let Some(aw) = self.policy.adaptive {
             if let Some(prev) = st.last_arrival {
                 let dt = arrived.since(prev).as_nanos() as f64;
@@ -261,25 +262,25 @@ impl<C: Clock> Scheduler<C> {
     /// waiting out deadlines) and then [`next_batch`](Self::next_batch)
     /// returns `None`.
     pub fn shutdown(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         st.shutdown = true;
         self.cv.notify_all();
     }
 
     /// Requests currently queued.
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_recover(&self.state).queue.len()
     }
 
     pub fn stats(&self) -> SchedStats {
-        self.state.lock().unwrap().stats.clone()
+        lock_recover(&self.state).stats.clone()
     }
 
     /// The hold budget currently in force: the configured `max_wait`,
     /// or — under the adaptive policy — `ewma_interarrival ×
     /// (max_batch − 1)` clamped to `[min_wait, max_wait]`.
     pub fn effective_wait(&self) -> Duration {
-        let st = self.state.lock().unwrap();
+        let st = lock_recover(&self.state);
         Self::effective_wait_inner(&self.policy, &st)
     }
 
@@ -304,7 +305,7 @@ impl<C: Clock> Scheduler<C> {
     /// surface a virtual-clock test needs.
     pub fn poll(&self) -> Option<Batch> {
         let now = self.clock.now();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         Self::close_ready(&mut st, &self.policy, now)
     }
 
@@ -312,7 +313,7 @@ impl<C: Clock> Scheduler<C> {
     /// [`MonotonicClock`]) until a batch closes, and returns `None`
     /// once the scheduler is shut down and drained.
     pub fn next_batch(&self) -> Option<Batch> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         loop {
             let now = self.clock.now();
             if let Some(b) = Self::close_ready(&mut st, &self.policy, now) {
@@ -322,8 +323,15 @@ impl<C: Clock> Scheduler<C> {
                 return None;
             }
             st = match Self::next_wakeup(&st, &self.policy, now) {
-                Some(wait) => self.cv.wait_timeout(st, wait).unwrap().0,
-                None => self.cv.wait(st).unwrap(),
+                // A poisoned condvar wait means some other holder panicked;
+                // the queue itself is still consistent — recover and keep
+                // serving (fail-stop lives at the response layer, not here).
+                Some(wait) => self
+                    .cv
+                    .wait_timeout(st, wait)
+                    .unwrap_or_else(|p| p.into_inner())
+                    .0,
+                None => self.cv.wait(st).unwrap_or_else(|p| p.into_inner()),
             };
         }
     }
@@ -440,6 +448,8 @@ impl<C: Clock> Scheduler<C> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
     use super::super::clock::VirtualClock;
     use super::super::request::Priority;
     use super::*;
@@ -645,4 +655,30 @@ mod tests {
         };
         assert_eq!(p.starvation_bound(), p.max_wait, "factor clamps to 1");
     }
+
+    /// Regression: a thread panicking while it holds the scheduler's
+    /// state lock used to poison every later submit/poll into a
+    /// coordinator-wide abort. The scheduler now recovers the lock and
+    /// keeps serving.
+    #[test]
+    fn poisoned_state_lock_no_longer_aborts_the_scheduler() {
+        let s = std::sync::Arc::new(sched(4, 50, 4));
+        s.submit(req(0));
+        let s2 = std::sync::Arc::clone(&s);
+        let joined = std::thread::spawn(move || {
+            let _guard = s2.state.lock().unwrap();
+            panic!("poison the scheduler state");
+        })
+        .join();
+        assert!(joined.is_err());
+        assert!(s.state.lock().is_err(), "lock must actually be poisoned");
+        for i in 1..4 {
+            s.submit(req(i));
+        }
+        let b = s.poll().expect("scheduler still drains after poisoning");
+        assert_eq!(b.len(), 4);
+        let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
 }

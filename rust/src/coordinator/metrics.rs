@@ -39,7 +39,7 @@ impl LatencyHistogram {
             return f64::NAN;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx.min(s.len() - 1)]
     }

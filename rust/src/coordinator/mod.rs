@@ -3,6 +3,19 @@
 //! GCN-ABFT verification** of every response — the deployment shape the
 //! paper's checker is built for (detect-before-release, re-execute on
 //! transient faults).
+//!
+//! The whole coordinator is a **request path**: a fault must become a
+//! `Failed` response, never a panic that takes the server down. That
+//! fail-stop contract is enforced twice — by `gcn-abft analyze` (lint
+//! rule F1) and by the clippy restriction lints below, which propagate
+//! to every `coordinator::*` submodule.
+
+#![deny(
+    clippy::unwrap_used,
+    clippy::expect_used,
+    clippy::panic,
+    clippy::unreachable
+)]
 
 pub mod batcher;
 pub mod clock;
@@ -32,8 +45,19 @@ use crate::runtime::{BackendKind, ChecksumScheme, ExecMode};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
-use anyhow::{anyhow, Result};
-use std::time::{Duration, Instant};
+use anyhow::{anyhow, bail, Result};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Take a mutex even if a previous holder panicked. The coordinator's
+/// shared state (metrics, histograms, the scheduler queue) is only ever
+/// updated in small self-consistent critical sections, so a poisoned
+/// lock means some worker died mid-section boundary — a fault the
+/// fail-stop contract answers with `Failed` responses, never by
+/// propagating the panic into the whole server.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Synthetic client driver + server, used by `gcn-abft serve` and the
 /// `serve_inference` example. Returns a human-readable summary.
@@ -362,51 +386,54 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
     // Client driver thread: bursty request arrivals with random what-if
     // perturbations, query sets and priorities. Held back until every
     // worker has compiled so latencies measure steady-state serving, not
-    // executable warm-up.
+    // executable warm-up. The driver runs on a scoped thread so its
+    // lifetime is bounded by this function (contract C1: no detached
+    // spawns); if the server errors out early, dropping `ready_tx` and
+    // `req_rx` unblocks the driver immediately, so the scope exit never
+    // deadlocks.
     let seed = cfg.seed;
     let priority_mix = cfg.priority_mix;
-    let driver = std::thread::spawn(move || {
-        let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
-        let mut rng = Pcg64::from_seed(seed ^ 0xD21u64);
-        let mix_total: f64 = priority_mix.iter().sum();
-        for id in 0..n_requests {
-            let n_pert = rng.gen_index(3);
-            let perturbations = (0..n_pert)
-                .map(|_| Perturbation {
-                    node: rng.gen_index(n_nodes),
-                    features: (0..feat_dim)
-                        .map(|_| if rng.gen_bool(0.05) { 16.0 } else { 0.0 })
-                        .collect(),
-                })
-                .collect();
-            let k = 1 + rng.gen_index(4);
-            let query_nodes = rng.sample_indices(n_nodes, k);
-            let priority = if mix_total > 0.0 {
-                Priority::ALL[rng.gen_weighted(&priority_mix)]
-            } else {
-                Priority::Interactive
-            };
-            let req = InferenceRequest {
-                id: id as u64,
-                priority,
-                deadline: None,
-                query_nodes,
-                perturbations,
-                submitted: Instant::now(),
-            };
-            if req_tx.send(req).is_err() {
-                return;
+    let metrics = std::thread::scope(|scope| -> Result<ServeMetrics> {
+        let driver = scope.spawn(move || {
+            let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
+            let mut rng = Pcg64::from_seed(seed ^ 0xD21u64);
+            let mix_total: f64 = priority_mix.iter().sum();
+            for id in 0..n_requests {
+                let n_pert = rng.gen_index(3);
+                let perturbations = (0..n_pert)
+                    .map(|_| Perturbation {
+                        node: rng.gen_index(n_nodes),
+                        features: (0..feat_dim)
+                            .map(|_| if rng.gen_bool(0.05) { 16.0 } else { 0.0 })
+                            .collect(),
+                    })
+                    .collect();
+                let k = 1 + rng.gen_index(4);
+                let query_nodes = rng.sample_indices(n_nodes, k);
+                let priority = if mix_total > 0.0 {
+                    Priority::ALL[rng.gen_weighted(&priority_mix)]
+                } else {
+                    Priority::Interactive
+                };
+                let req = InferenceRequest::new(id as u64, query_nodes, perturbations)
+                    .with_priority(priority);
+                if req_tx.send(req).is_err() {
+                    return;
+                }
+                // Bursty arrivals: small jitter between sends.
+                if rng.gen_bool(0.3) {
+                    std::thread::sleep(std::time::Duration::from_micros(rng.gen_range(400)));
+                }
             }
-            // Bursty arrivals: small jitter between sends.
-            if rng.gen_bool(0.3) {
-                std::thread::sleep(std::time::Duration::from_micros(rng.gen_range(400)));
-            }
-        }
-    });
+        });
 
-    let metrics =
-        server::run_server_with_ready(cfg, &state, req_rx, resp_tx, Some(ready_tx))?;
-    driver.join().expect("driver panicked");
+        let metrics =
+            server::run_server_with_ready(cfg, &state, req_rx, resp_tx, Some(ready_tx))?;
+        if driver.join().is_err() {
+            bail!("client driver panicked");
+        }
+        Ok(metrics)
+    })?;
 
     let mut clean = 0;
     let mut recovered = 0;
@@ -451,4 +478,29 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
         scheme: cfg.scheme.name(),
         metrics,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_yields_the_data_after_a_poisoning_panic() {
+        let m = Arc::new(Mutex::new(41u32));
+        let m2 = Arc::clone(&m);
+        let joined = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(joined.is_err(), "the poisoning thread must have panicked");
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // The recovered guard sees the pre-panic data and the mutex
+        // keeps working — fail-stop handles the *fault*, not the lock.
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 42);
+    }
 }

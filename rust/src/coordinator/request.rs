@@ -91,6 +91,7 @@ impl InferenceRequest {
             deadline: None,
             query_nodes,
             perturbations,
+            // gcn-lint: allow(D1, reason="client-side submit stamp: the latency epoch reported back to callers, read only via elapsed(); scheduler decisions use the Clock-trait arrival tick instead")
             submitted: Instant::now(),
         }
     }

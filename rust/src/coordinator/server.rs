@@ -39,6 +39,8 @@
 //! `VerifyStatus::Failed` rather than silently wrong logits.
 
 use super::batcher::{Batch, BatchPolicy, Scheduler};
+use super::clock::{Clock, MonotonicClock};
+use super::lock_recover;
 use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
 use super::shard::{self, ShardTransport, ShardTransportKind};
@@ -54,7 +56,6 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -257,25 +258,44 @@ impl ModelState {
     /// list order (later overlays of the same node win, matching the
     /// historical copy-and-patch semantics). The base feature matrix is
     /// never cloned per forward — backends apply these algebraically.
-    pub fn request_overlays<'a>(&self, req: &'a InferenceRequest) -> Vec<Overlay<'a>> {
+    ///
+    /// A malformed perturbation (wrong feature width, node out of
+    /// range) is an error, not a panic: the executor answers the
+    /// request `Failed` and keeps serving the rest of the batch.
+    pub fn request_overlays<'a>(&self, req: &'a InferenceRequest) -> Result<Vec<Overlay<'a>>> {
         let f = self.ops.feat_dim();
         let n = self.ops.n_nodes();
-        req.perturbations
-            .iter()
-            .map(|p| {
-                assert_eq!(
-                    p.features.len(),
-                    f,
-                    "perturbation width mismatch for node {}",
-                    p.node
+        let mut overlays = Vec::with_capacity(req.perturbations.len());
+        for p in &req.perturbations {
+            if p.features.len() != f {
+                bail!(
+                    "perturbation width mismatch for node {}: got {}, feature dim is {f}",
+                    p.node,
+                    p.features.len()
                 );
-                assert!(p.node < n, "perturbation node {} out of range", p.node);
-                Overlay {
-                    node: p.node,
-                    row: p.features.as_slice(),
-                }
-            })
-            .collect()
+            }
+            if p.node >= n {
+                bail!("perturbation node {} out of range (n = {n})", p.node);
+            }
+            overlays.push(Overlay {
+                node: p.node,
+                row: p.features.as_slice(),
+            });
+        }
+        Ok(overlays)
+    }
+}
+
+/// A `Failed` fail-stop response for `req`: the client sees the fault
+/// (classes withheld) instead of silence or a coordinator crash.
+fn failed_response(req: &InferenceRequest, lat: f64, bsize: usize) -> InferenceResponse {
+    InferenceResponse {
+        id: req.id,
+        priority: req.priority,
+        classes: req.query_nodes.iter().map(|&n| (n, usize::MAX)).collect(),
+        status: VerifyStatus::Failed,
+        latency_secs: lat,
+        batch_size: bsize,
     }
 }
 
@@ -335,7 +355,11 @@ pub fn run_server_with_ready(
     responses: Sender<InferenceResponse>,
     ready: Option<Sender<()>>,
 ) -> Result<ServeMetrics> {
-    let wall_start = Instant::now();
+    // One time base for the whole serve: the scheduler's decisions and
+    // the wall/exec/verify timings all read the same Clock (contract
+    // D1 — tests substitute a VirtualClock at the scheduler layer).
+    let clock = MonotonicClock::new();
+    let wall_start = clock.now();
     // The shard tier is built once, up front (the proc transport spawns
     // its worker subprocesses here), and shared with the executor. A
     // transport that cannot come up is a server-build error; a shard
@@ -352,7 +376,7 @@ pub fn run_server_with_ready(
     } else {
         None
     };
-    let sched = Scheduler::with_policy(cfg.batch);
+    let sched = Scheduler::new(clock.clone(), cfg.batch);
     let metrics = Mutex::new(ServeMetrics::default());
     let latency = Mutex::new(LatencyHistogram::new());
     let prio_latency = Mutex::new([
@@ -401,6 +425,7 @@ pub fn run_server_with_ready(
         let mut handles = Vec::new();
         for _worker_id in 0..pool {
             let sched = &sched;
+            let clock = &clock;
             let metrics = &metrics;
             let latency = &latency;
             let prio_latency = &prio_latency;
@@ -431,12 +456,12 @@ pub fn run_server_with_ready(
                         // sender unblocks the client driver immediately,
                         // so the build error surfaces instead of a
                         // recv_timeout stall.
-                        ready.lock().unwrap().take();
+                        lock_recover(ready).take();
                         return Err(err);
                     }
                 };
                 if compiled.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 == pool {
-                    if let Some(tx) = ready.lock().unwrap().take() {
+                    if let Some(tx) = lock_recover(ready).take() {
                         let _ = tx.send(());
                     }
                 }
@@ -468,24 +493,51 @@ pub fn run_server_with_ready(
                     // any member would have answered alone.
                     let groups = overlay_groups(&batch);
                     {
-                        let mut m = metrics.lock().unwrap();
+                        let mut m = lock_recover(metrics);
                         m.batches += 1;
                         m.requests += bsize as u64;
                         m.overlay_groups += groups.len() as u64;
+                    }
+                    // A group with malformed perturbations is answered
+                    // Failed up front (per-request fail-stop); the rest
+                    // of the batch still serves.
+                    let mut group_overlays: Vec<Vec<Overlay<'_>>> =
+                        Vec::with_capacity(groups.len());
+                    let mut live_groups: Vec<Vec<usize>> = Vec::with_capacity(groups.len());
+                    for members in &groups {
+                        match state.request_overlays(&batch.requests[members[0]]) {
+                            Ok(o) => {
+                                group_overlays.push(o);
+                                live_groups.push(members.clone());
+                            }
+                            Err(err) => {
+                                eprintln!(
+                                    "serve: malformed request ({err:#}); \
+                                     answering fail-stop Failed"
+                                );
+                                lock_recover(metrics).failures += 1;
+                                for &mi in members {
+                                    let req = &batch.requests[mi];
+                                    let lat = req.submitted.elapsed().as_secs_f64();
+                                    local_lat.record(lat);
+                                    local_prio[req.priority.rank()].record(lat);
+                                    let _ =
+                                        responses.send(failed_response(req, lat, bsize));
+                                }
+                            }
+                        }
+                    }
+                    let groups = live_groups;
+                    if groups.is_empty() {
+                        continue;
                     }
                     // Initial pass: the whole batch through the batched
                     // call boundary — one forward per overlay group
                     // (`result[i] == run(groups[i])` by the
                     // [`backend::GcnBackend::run_groups`] contract).
-                    let group_overlays: Vec<Vec<Overlay<'_>>> = groups
-                        .iter()
-                        .map(|members| {
-                            state.request_overlays(&batch.requests[members[0]])
-                        })
-                        .collect();
                     let group_refs: Vec<&[Overlay<'_>]> =
                         group_overlays.iter().map(|g| g.as_slice()).collect();
-                    let t0 = Instant::now();
+                    let t0 = clock.now();
                     // Fail-stop: a forward that cannot execute at all —
                     // above all a shard dying mid-request — must never
                     // become a silently stitched partial answer. Every
@@ -499,8 +551,8 @@ pub fn run_server_with_ready(
                                  answering fail-stop Failed"
                             );
                             {
-                                let mut m = metrics.lock().unwrap();
-                                m.exec_secs += t0.elapsed().as_secs_f64();
+                                let mut m = lock_recover(metrics);
+                                m.exec_secs += clock.now().since(t0).as_secs_f64();
                                 // shard_failures tracks shard-tier
                                 // health specifically; an unsharded
                                 // backend error is failures-only.
@@ -509,37 +561,49 @@ pub fn run_server_with_ready(
                                 }
                                 m.failures += groups.len() as u64;
                             }
-                            for req in &batch.requests {
-                                let lat = req.submitted.elapsed().as_secs_f64();
-                                local_lat.record(lat);
-                                local_prio[req.priority.rank()].record(lat);
-                                let _ = responses.send(InferenceResponse {
-                                    id: req.id,
-                                    priority: req.priority,
-                                    classes: req
-                                        .query_nodes
-                                        .iter()
-                                        .map(|&n| (n, usize::MAX))
-                                        .collect(),
-                                    status: VerifyStatus::Failed,
-                                    latency_secs: lat,
-                                    batch_size: bsize,
-                                });
+                            for members in &groups {
+                                for &mi in members {
+                                    let req = &batch.requests[mi];
+                                    let lat = req.submitted.elapsed().as_secs_f64();
+                                    local_lat.record(lat);
+                                    local_prio[req.priority.rank()].record(lat);
+                                    let _ =
+                                        responses.send(failed_response(req, lat, bsize));
+                                }
                             }
                             continue;
                         }
                     };
-                    let exec_dt = t0.elapsed().as_secs_f64();
+                    let exec_dt = clock.now().since(t0).as_secs_f64();
                     // A backend override returning the wrong arity would
-                    // otherwise silently drop requests in the zip below.
-                    assert_eq!(
-                        outs.len(),
-                        groups.len(),
-                        "{}: run_groups must return one output per group",
-                        exe.name()
-                    );
+                    // otherwise silently drop requests in the zip below:
+                    // answer every member Failed and keep serving.
+                    if outs.len() != groups.len() {
+                        eprintln!(
+                            "serve: {} returned {} outputs for {} groups; \
+                             answering fail-stop Failed",
+                            exe.name(),
+                            outs.len(),
+                            groups.len()
+                        );
+                        {
+                            let mut m = lock_recover(metrics);
+                            m.exec_secs += exec_dt;
+                            m.failures += groups.len() as u64;
+                        }
+                        for members in &groups {
+                            for &mi in members {
+                                let req = &batch.requests[mi];
+                                let lat = req.submitted.elapsed().as_secs_f64();
+                                local_lat.record(lat);
+                                local_prio[req.priority.rank()].record(lat);
+                                let _ = responses.send(failed_response(req, lat, bsize));
+                            }
+                        }
+                        continue;
+                    }
                     {
-                        let mut m = metrics.lock().unwrap();
+                        let mut m = lock_recover(metrics);
                         m.executions += outs.len() as u64;
                         m.exec_secs += exec_dt;
                     }
@@ -573,9 +637,7 @@ pub fn run_server_with_ready(
                                 .data()
                                 .iter()
                                 .enumerate()
-                                .max_by(|a, b| {
-                                    delta(*a.1).partial_cmp(&delta(*b.1)).unwrap()
-                                })
+                                .max_by(|a, b| delta(*a.1).total_cmp(&delta(*b.1)))
                                 .map(|(i, _)| i)
                                 .unwrap_or(0);
                             let (r, c) =
@@ -583,7 +645,7 @@ pub fn run_server_with_ready(
                             let v = out.logits.get(r, c);
                             out.logits
                                 .set(r, c, f32::from_bits(v.to_bits() ^ (1 << 30)));
-                            metrics.lock().unwrap().injected_faults += 1;
+                            lock_recover(metrics).injected_faults += 1;
                         }
                     }
 
@@ -597,11 +659,11 @@ pub fn run_server_with_ready(
                         let mut attempts = 0usize;
                         let mut current = first_out;
                         let (status, outputs) = loop {
-                            let t1 = Instant::now();
+                            let t1 = clock.now();
                             let report = cfg.policy.verify(&current);
-                            let verify_dt = t1.elapsed().as_secs_f64();
+                            let verify_dt = clock.now().since(t1).as_secs_f64();
                             {
-                                let mut m = metrics.lock().unwrap();
+                                let mut m = lock_recover(metrics);
                                 m.verify_secs += verify_dt;
                                 if !report.ok {
                                     m.checks_fired += 1;
@@ -619,8 +681,8 @@ pub fn run_server_with_ready(
                             if attempts > cfg.max_retries {
                                 break (VerifyStatus::Failed, None);
                             }
-                            metrics.lock().unwrap().retries += 1;
-                            let t0 = Instant::now();
+                            lock_recover(metrics).retries += 1;
+                            let t0 = clock.now();
                             current = match exe.run(&state.ops, overlays) {
                                 Ok(out) => out,
                                 Err(err) => {
@@ -631,20 +693,20 @@ pub fn run_server_with_ready(
                                          answering fail-stop Failed"
                                     );
                                     if shard_tier.is_some() {
-                                        metrics.lock().unwrap().shard_failures += 1;
+                                        lock_recover(metrics).shard_failures += 1;
                                     }
                                     break (VerifyStatus::Failed, None);
                                 }
                             };
-                            let dt = t0.elapsed().as_secs_f64();
+                            let dt = clock.now().since(t0).as_secs_f64();
                             {
-                                let mut m = metrics.lock().unwrap();
+                                let mut m = lock_recover(metrics);
                                 m.executions += 1;
                                 m.exec_secs += dt;
                             }
                         };
                         if status == VerifyStatus::Failed {
-                            metrics.lock().unwrap().failures += 1;
+                            lock_recover(metrics).failures += 1;
                         }
 
                         // Respond per member of this overlay group.
@@ -675,9 +737,9 @@ pub fn run_server_with_ready(
                         }
                     }
                 }
-                latency.lock().unwrap().merge(&local_lat);
+                lock_recover(latency).merge(&local_lat);
                 {
-                    let mut g = prio_latency.lock().unwrap();
+                    let mut g = lock_recover(prio_latency);
                     for (a, b) in g.iter_mut().zip(&local_prio) {
                         a.merge(b);
                     }
@@ -687,15 +749,26 @@ pub fn run_server_with_ready(
         }
         drop(responses);
         for h in handles {
-            h.join().expect("worker panicked")?;
+            // A panicking executor is a coordinator bug, but fail-stop
+            // still applies: surface it as an error result, never a
+            // process abort out of a poisoned join.
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("executor thread panicked"),
+            }
         }
         Ok(())
     })?;
 
-    let mut m = metrics.into_inner().unwrap();
-    m.wall_secs = wall_start.elapsed().as_secs_f64();
-    m.set_latency_percentiles(&latency.into_inner().unwrap());
-    for (rank, h) in prio_latency.into_inner().unwrap().iter().enumerate() {
+    let mut m = metrics.into_inner().unwrap_or_else(|p| p.into_inner());
+    m.wall_secs = clock.now().since(wall_start).as_secs_f64();
+    m.set_latency_percentiles(&latency.into_inner().unwrap_or_else(|p| p.into_inner()));
+    for (rank, h) in prio_latency
+        .into_inner()
+        .unwrap_or_else(|p| p.into_inner())
+        .iter()
+        .enumerate()
+    {
         m.set_priority_percentiles(rank, h);
     }
     m.starvation_promotions = sched.stats().starvation_promotions;
@@ -711,6 +784,8 @@ pub fn run_server_with_ready(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::super::batcher::CloseReason;
     use super::*;
     use crate::coordinator::request::Perturbation;
@@ -762,7 +837,7 @@ mod tests {
                 },
             ],
         );
-        let overlays = state.request_overlays(&req);
+        let overlays = state.request_overlays(&req).unwrap();
         assert_eq!(overlays.len(), 2);
         assert_eq!(
             overlays[0],
@@ -783,7 +858,6 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "perturbation width mismatch")]
     fn request_overlays_reject_bad_width() {
         let state = tiny_state();
         let req = req_with(
@@ -793,11 +867,11 @@ mod tests {
                 features: vec![1.0],
             }],
         );
-        state.request_overlays(&req);
+        let err = state.request_overlays(&req).unwrap_err();
+        assert!(err.to_string().contains("width mismatch"), "{err}");
     }
 
     #[test]
-    #[should_panic(expected = "out of range")]
     fn request_overlays_reject_bad_node() {
         let state = tiny_state();
         let req = req_with(
@@ -807,7 +881,8 @@ mod tests {
                 features: vec![1.0, 2.0, 3.0],
             }],
         );
-        state.request_overlays(&req);
+        let err = state.request_overlays(&req).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]

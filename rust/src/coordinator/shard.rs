@@ -63,10 +63,11 @@ use crate::runtime::backend::{self, ChecksumScheme, ExecPlan, GcnBackend, Overla
 use crate::runtime::{GcnOperands, GcnOutputs, SOperand};
 use crate::tensor::Dense;
 use crate::util::json::Json;
+use super::clock::{Clock, MonotonicClock};
+use super::lock_recover;
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// Transport selector for configs and the `--shard-transport` CLI flag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -213,6 +214,7 @@ pub struct InProcTransport {
     /// analogue of a dead worker process.
     down: Vec<AtomicBool>,
     timings: Mutex<ShardTimings>,
+    clock: MonotonicClock,
 }
 
 impl InProcTransport {
@@ -227,6 +229,7 @@ impl InProcTransport {
                 wait_secs: vec![0.0; plan.shards],
                 ..Default::default()
             }),
+            clock: MonotonicClock::new(),
         })
     }
 }
@@ -261,12 +264,12 @@ impl ShardTransport for InProcTransport {
         // runs, so inproc sharding is bit-identical by construction.
         let partials =
             crate::runtime::operands::aggregate_bands_timed(bands, x, x_r, out.data_mut());
-        let t_stitch = Instant::now();
+        let t_stitch = self.clock.now();
         let pred = partials.iter().map(|p| p.0).sum();
         let actual = partials.iter().map(|p| p.1).sum();
-        let stitch = t_stitch.elapsed().as_secs_f64();
+        let stitch = self.clock.now().since(t_stitch).as_secs_f64();
         {
-            let mut tm = self.timings.lock().unwrap();
+            let mut tm = lock_recover(&self.timings);
             tm.aggregates += 1;
             tm.stitch_secs += stitch;
             for (acc, p) in tm.wait_secs.iter_mut().zip(&partials) {
@@ -287,7 +290,7 @@ impl ShardTransport for InProcTransport {
     }
 
     fn timings(&self) -> ShardTimings {
-        self.timings.lock().unwrap().clone()
+        lock_recover(&self.timings).clone()
     }
 }
 
@@ -422,7 +425,7 @@ impl<'a> Wire<'a> {
         let raw = self.chunk(n * 4)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 
@@ -430,7 +433,7 @@ impl<'a> Wire<'a> {
         let raw = self.chunk(n * 8)?;
         Ok(raw
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
             .collect())
     }
 
@@ -442,8 +445,8 @@ impl<'a> Wire<'a> {
         let raw = self.chunk(n * 8)?;
         raw.chunks_exact(8)
             .map(|c| {
-                usize::try_from(u64::from_le_bytes(c.try_into().unwrap()))
-                    .map_err(|_| anyhow!("index overflows usize"))
+                let raw = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+                usize::try_from(raw).map_err(|_| anyhow!("index overflows usize"))
             })
             .collect()
     }
@@ -587,6 +590,7 @@ mod proc_transport {
         shards: Mutex<Vec<ProcShard>>,
         timings: Mutex<ShardTimings>,
         socket_dir: PathBuf,
+        clock: MonotonicClock,
     }
 
     impl ProcTransport {
@@ -632,11 +636,17 @@ mod proc_transport {
                 }
             }
             let socket_path = dir.join("coordinator.sock");
+            let clock = MonotonicClock::new();
             let mut children: Vec<Child> = Vec::new();
             let mut shards: Vec<ProcShard> = Vec::new();
-            if let Err(e) =
-                Self::spawn_and_init(bands, &bin, &socket_path, &mut children, &mut shards)
-            {
+            if let Err(e) = Self::spawn_and_init(
+                bands,
+                &bin,
+                &socket_path,
+                &clock,
+                &mut children,
+                &mut shards,
+            ) {
                 // Nothing of a failed spawn may outlive the error: no
                 // orphan worker processes, no stale socket directory.
                 for c in children
@@ -660,6 +670,7 @@ mod proc_transport {
                 }),
                 shards: Mutex::new(shards),
                 socket_dir: dir,
+                clock,
             })
         }
 
@@ -672,6 +683,7 @@ mod proc_transport {
             bands: &[RowBand],
             bin: &Path,
             socket_path: &Path,
+            clock: &MonotonicClock,
             children: &mut Vec<Child>,
             shards: &mut Vec<ProcShard>,
         ) -> Result<()> {
@@ -694,7 +706,7 @@ mod proc_transport {
             // Accept one connection per worker (workers are identical
             // until they receive their band, so accept order assigns
             // shard indices) and ship band k to the k-th connection.
-            let deadline = Instant::now() + ACCEPT_TIMEOUT;
+            let deadline = clock.now().after(ACCEPT_TIMEOUT);
             for (k, band) in bands.iter().enumerate() {
                 let mut stream = loop {
                     match listener.accept() {
@@ -708,7 +720,7 @@ mod proc_transport {
                                     );
                                 }
                             }
-                            if Instant::now() > deadline {
+                            if clock.now() > deadline {
                                 bail!("timed out waiting for shard workers to connect");
                             }
                             std::thread::sleep(Duration::from_millis(2));
@@ -764,7 +776,7 @@ mod proc_transport {
         /// Worker process ids, in shard order (fault-injection tests
         /// kill these externally).
         pub fn worker_pids(&self) -> Vec<u32> {
-            self.shards.lock().unwrap().iter().map(|s| s.child.id()).collect()
+            lock_recover(&self.shards).iter().map(|s| s.child.id()).collect()
         }
     }
 
@@ -798,7 +810,20 @@ mod proc_transport {
             ]);
             let frame = encode_frame(&header, &payload);
 
-            let mut shards = self.shards.lock().unwrap();
+            let mut shards = match self.shards.lock() {
+                Ok(g) => g,
+                Err(poisoned) => {
+                    // A panic while streaming leaves the request/reply
+                    // lockstep in an unknown state; poison every shard
+                    // so no later aggregate can stitch a stale queued
+                    // reply (fail-stop, never a process abort).
+                    let mut g = poisoned.into_inner();
+                    for sh in g.iter_mut() {
+                        sh.stream = None;
+                    }
+                    g
+                }
+            };
             // Nothing is sent unless every shard is believed alive: a
             // request half-streamed before discovering a dead shard
             // would leave orphan replies queued in the healthy workers'
@@ -819,13 +844,24 @@ mod proc_transport {
                     .iter_mut()
                     .map(|sh| {
                         let frame = &frame;
-                        let stream = sh.stream.as_mut().expect("checked alive above");
-                        scope.spawn(move || {
-                            stream.write_all(frame).err().map(|e| e.to_string())
+                        // Alive per the pre-check above; a None here is
+                        // recorded as a dead send rather than a panic.
+                        sh.stream.as_mut().map(|stream| {
+                            scope.spawn(move || {
+                                stream.write_all(frame).err().map(|e| e.to_string())
+                            })
                         })
                     })
                     .collect();
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
+                handles
+                    .into_iter()
+                    .map(|h| match h {
+                        None => Some("shard stream missing".to_string()),
+                        Some(h) => h
+                            .join()
+                            .unwrap_or_else(|_| Some("send thread panicked".to_string())),
+                    })
+                    .collect()
             });
             let mut first_err: Option<(usize, String)> = None;
             for (k, err) in send_errs.into_iter().enumerate() {
@@ -851,10 +887,12 @@ mod proc_transport {
             let mut waits = vec![0f64; shards.len()];
             let mut stitch = 0f64;
             for (k, sh) in shards.iter_mut().enumerate() {
-                let t0 = Instant::now();
-                let stream = sh.stream.as_mut().expect("sends succeeded above");
+                let t0 = self.clock.now();
+                let Some(stream) = sh.stream.as_mut() else {
+                    bail!("shard {k} is down");
+                };
                 let reply = read_band_reply(stream, sh.rows, width);
-                waits[k] = t0.elapsed().as_secs_f64();
+                waits[k] = self.clock.now().since(t0).as_secs_f64();
                 let (z, p, a) = match reply {
                     Ok(v) => v,
                     Err(e) => {
@@ -862,16 +900,16 @@ mod proc_transport {
                         bail!("shard {k} failed mid-request ({e})");
                     }
                 };
-                let t1 = Instant::now();
+                let t1 = self.clock.now();
                 out.data_mut()[sh.row0 * width..(sh.row0 + sh.rows) * width]
                     .copy_from_slice(&z);
                 pred += p;
                 actual += a;
-                stitch += t1.elapsed().as_secs_f64();
+                stitch += self.clock.now().since(t1).as_secs_f64();
             }
             drop(shards);
             {
-                let mut tm = self.timings.lock().unwrap();
+                let mut tm = lock_recover(&self.timings);
                 tm.aggregates += 1;
                 tm.stitch_secs += stitch;
                 for (acc, w) in tm.wait_secs.iter_mut().zip(&waits) {
@@ -882,7 +920,7 @@ mod proc_transport {
         }
 
         fn kill_shard(&self, shard: usize) -> bool {
-            let mut shards = self.shards.lock().unwrap();
+            let mut shards = lock_recover(&self.shards);
             match shards.get_mut(shard) {
                 Some(sh) => {
                     // Kill the process but keep the (now broken) socket:
@@ -897,13 +935,14 @@ mod proc_transport {
         }
 
         fn timings(&self) -> ShardTimings {
-            self.timings.lock().unwrap().clone()
+            lock_recover(&self.timings).clone()
         }
     }
 
     impl Drop for ProcTransport {
         fn drop(&mut self) {
-            let mut shards = self.shards.lock().unwrap();
+            // Even a poisoned registry still gets its children reaped.
+            let mut shards = lock_recover(&self.shards);
             for sh in shards.iter_mut() {
                 if let Some(mut stream) = sh.stream.take() {
                     let header = Json::obj(vec![
@@ -917,11 +956,11 @@ mod proc_transport {
             for sh in shards.iter_mut() {
                 // Give the worker a moment to exit on its own, then
                 // force the issue so drop never hangs.
-                let deadline = Instant::now() + Duration::from_secs(2);
+                let deadline = self.clock.now().after(Duration::from_secs(2));
                 loop {
                     match sh.child.try_wait() {
                         Ok(Some(_)) => break,
-                        Ok(None) if Instant::now() < deadline => {
+                        Ok(None) if self.clock.now() < deadline => {
                             std::thread::sleep(Duration::from_millis(5));
                         }
                         _ => {
@@ -1054,6 +1093,8 @@ pub use proc_stub::run_shard_worker;
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::coordinator::ServePolicy;
     use crate::graph::DatasetId;

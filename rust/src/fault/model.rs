@@ -356,7 +356,9 @@ impl SegmentHook {
         // exact-zero values (within this segment only).
         if self.next < self.points.len() && self.points[self.next].op_index <= idx {
             let zero = match site {
+                // gcn-lint: allow(D4, reason="deliberate exact-zero test: a bit flip on a +-0.0 value is a no-op the fault model must defer past, so tolerance comparison would be wrong")
                 FaultSite::ChecksumAcc => out == 0.0,
+                // gcn-lint: allow(D4, reason="same exact-zero deferral, on the value as stored in f32")
                 _ => out as f32 == 0.0,
             };
             if !zero {

@@ -25,6 +25,7 @@
 //! | [`runtime`] | the `GcnBackend` trait + its implementations: native dense/banded f32, instrumented f64 (band-parallel, deterministic fault timeline), optional PJRT (`pjrt` feature) |
 //! | [`coordinator`] | serving layer: priority-aware continuous-batching scheduler (virtual-clock-testable, adaptive hold budget) + workers + shard tier (multi-process row-band sharding over a pluggable transport) + online verification |
 //! | [`report`] | table/figure rendering (Table I/II, Fig. 3) |
+//! | [`analysis`] | `gcn-abft analyze`: lexer-level lint pass mechanizing the determinism / fail-stop / f64-checksum contracts |
 //!
 //! The Python side (`python/compile/`) authors the L1 Pallas kernels and
 //! the L2 JAX model and AOT-lowers them to HLO text whose shape manifest
@@ -43,6 +44,7 @@
 )]
 
 pub mod abft;
+pub mod analysis;
 pub mod opcount;
 pub mod coordinator;
 pub mod fault;

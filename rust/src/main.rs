@@ -15,7 +15,10 @@
 //! * `shard-worker` — one shard of a sharded serve (spawned by the
 //!   coordinator, not invoked by hand);
 //! * `train`   — train the synthetic workloads and print the curves;
-//! * `info`    — dataset statistics.
+//! * `info`    — dataset statistics;
+//! * `analyze` — architectural lint pass enforcing the determinism,
+//!   fail-stop and f64-checksum contracts (`--json` for the stable
+//!   tagged-enum report schema).
 
 use gcn_abft::fault::FaultModelKind;
 use gcn_abft::graph::DatasetId;
@@ -33,6 +36,7 @@ fn main() {
         }
     };
     let code = match cmd.as_str() {
+        "analyze" => cmd_analyze(rest),
         "table1" => cmd_table1(rest),
         "table2" => cmd_table2(rest),
         "opcount" => cmd_opcount(rest),
@@ -108,6 +112,14 @@ SUBCOMMANDS
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves
            --datasets ...  --epochs E (30)  --seed S
   info     dataset statistics (nodes/edges/features/classes/nnz)
+  analyze  architectural lint pass: enforce the determinism, fail-stop
+           and f64-checksum contracts over the source tree (lexer-level,
+           std-only; rules D1 no-raw-clock, D2 deterministic-iteration,
+           D3 f64-accumulation, D4 no-float-eq, F1 fail-stop-not-panic,
+           C1 scoped-threads-only). Suppress a finding inline with
+           `gcn-lint: allow(RULE, reason=\"...\")` (reason mandatory).
+           Exits 0 clean, 1 on unsuppressed findings, 2 on usage error.
+           [paths...] (default: the crate's src and tests trees)  --json
 "
     );
 }
@@ -139,6 +151,15 @@ fn parse_or_die(rest: Vec<String>, spec: &Spec) -> Args {
             std::process::exit(2);
         }
     }
+}
+
+fn cmd_analyze(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec![],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    gcn_abft::analysis::run_cli(&a)
 }
 
 fn cmd_table1(rest: Vec<String>) -> i32 {

@@ -48,6 +48,7 @@ pub fn matmul_par(a: &Dense, b: &Dense, threads: usize) -> Dense {
             for (r, out_row) in band.chunks_mut(n).enumerate() {
                 let a_row = a.row(first_row + r);
                 for (kk, &aik) in a_row[kb..kb_end].iter().enumerate() {
+                    // gcn-lint: allow(D4, reason="skip is bit-exact: x*0.0 contributes exactly 0.0 to the f32 accumulator, so eliding the multiply cannot change output bits")
                     if aik == 0.0 {
                         continue;
                     }
@@ -151,6 +152,7 @@ pub fn vecmat_f64(v: &[f32], m: &Dense) -> Vec<f32> {
     assert_eq!(v.len(), m.rows(), "vecmat shape mismatch");
     let mut acc = vec![0f64; m.cols()];
     for (r, &vr) in v.iter().enumerate() {
+        // gcn-lint: allow(D4, reason="skip is bit-exact: a 0.0 row contributes exactly 0.0 to the f64 accumulator")
         if vr == 0.0 {
             continue;
         }

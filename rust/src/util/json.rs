@@ -206,6 +206,7 @@ impl Json {
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Int(i) if *i >= 0 => Some(*i as usize),
+            // gcn-lint: allow(D4, reason="exact integrality test: fract()==0.0 is the definition of a whole number, no tolerance belongs here")
             Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
             _ => None,
         }

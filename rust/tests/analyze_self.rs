@@ -1,0 +1,126 @@
+//! The analyze pass applied to this repository itself.
+//!
+//! This is what turns the architectural contracts from documentation
+//! into an enforced invariant: the tier-1 test suite fails the moment a
+//! raw clock read, a nondeterministic iteration, an f32 checksum
+//! accumulation, a float equality, a coordinator panic path, or a
+//! detached thread lands in the tree without a reasoned
+//! `// gcn-lint: allow(...)` suppression. CI runs the same sweep via
+//! `gcn-abft analyze --json`.
+
+use gcn_abft::analysis::{analyze_paths, SCHEMA_VERSION};
+use gcn_abft::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn the_tree_passes_its_own_contracts() {
+    let report = analyze_paths(&[crate_root().join("src"), crate_root().join("tests")])
+        .expect("analyzing the real tree");
+    // Guard the walk itself: an empty scan would vacuously "pass".
+    assert!(
+        report.files_scanned > 40,
+        "suspiciously few files scanned ({}) — did the walk break?",
+        report.files_scanned
+    );
+    assert!(
+        report.clean(),
+        "contract violations in the tree:\n{}",
+        report.render()
+    );
+    // The sweep leans on inline suppressions, and the analyzer only
+    // accepts them with a reason — double-check none slipped through
+    // empty (the parser should already reject these as LINT findings).
+    assert!(
+        !report.suppressed.is_empty(),
+        "expected the tree's reasoned suppressions to be visible"
+    );
+    for s in &report.suppressed {
+        assert!(
+            !s.reason.trim().is_empty(),
+            "reasonless suppression at {}:{}",
+            s.path,
+            s.line
+        );
+    }
+}
+
+#[test]
+fn analyzer_flags_a_seeded_violation() {
+    // End-to-end negative control over a real temp file: the self-scan
+    // above proves "clean tree exits clean"; this proves the same
+    // `analyze_paths` entry point still *finds* things.
+    let dir = std::env::temp_dir().join(format!("gcn-abft-analyze-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("seeded.rs");
+    std::fs::write(
+        &bad,
+        "pub fn f() -> std::time::Instant { std::time::Instant::now() }\n",
+    )
+    .unwrap();
+    let report = analyze_paths(&[&bad]).expect("analyzing the seeded file");
+    std::fs::remove_file(&bad).ok();
+    std::fs::remove_dir(&dir).ok();
+    assert!(!report.clean(), "seeded D1 violation must be found");
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "D1");
+}
+
+#[test]
+fn checked_in_sample_matches_the_live_schema() {
+    let sample_path = crate_root().join("docs/analyze.sample.json");
+    let text = std::fs::read_to_string(&sample_path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", sample_path.display()));
+    let sample = Json::parse(&text).expect("sample must be valid JSON");
+    assert_eq!(
+        sample.get("type").and_then(Json::as_str),
+        Some("analysis_report")
+    );
+    let sample_data = sample.get("data").expect("sample data");
+    assert_eq!(
+        sample_data.get("version").and_then(Json::as_f64),
+        Some(SCHEMA_VERSION as f64),
+        "sample documents a stale schema version — regenerate it"
+    );
+
+    // A live report serializes with exactly the top-level and summary
+    // keys the sample documents, in the same order.
+    let live = analyze_paths(&[crate_root().join("src/analysis")])
+        .expect("analyzing src/analysis")
+        .to_json();
+    let keys = |j: &Json, path: &[&str]| -> Vec<String> {
+        let mut node = j.clone();
+        for k in path {
+            node = node.get(k).unwrap_or_else(|| panic!("missing {k}")).clone();
+        }
+        node.entries()
+            .expect("object")
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect()
+    };
+    assert_eq!(keys(&live, &["data"]), keys(&sample, &["data"]));
+    assert_eq!(
+        keys(&live, &["data", "summary", "data"]),
+        keys(&sample, &["data", "summary", "data"])
+    );
+    assert_eq!(
+        keys(&live, &["data", "summary", "data", "by_rule"]),
+        keys(&sample, &["data", "summary", "data", "by_rule"])
+    );
+}
+
+#[test]
+fn default_roots_resolve_from_the_crate_root() {
+    // `gcn-abft analyze` with no paths must find the same tree the
+    // self-scan covers, wherever it is launched from.
+    let roots = gcn_abft::analysis::default_roots();
+    assert!(!roots.is_empty());
+    assert!(
+        roots.iter().any(|r| r.ends_with(Path::new("src")) && r.is_dir()),
+        "default roots {roots:?} must include an existing src dir"
+    );
+}
