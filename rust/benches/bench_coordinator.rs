@@ -81,6 +81,27 @@ fn run(
 }
 
 fn main() {
+    // `cargo bench --bench bench_coordinator -- --json` emits the same
+    // machine-readable document `gcn-abft report bench` writes to
+    // BENCH_serve.json (stdout only; nothing is written to disk), so
+    // scripted consumers get one schema from either entry point.
+    if std::env::args().any(|a| a == "--json") {
+        let opts = gcn_abft::report::ExperimentOpts {
+            datasets: vec![DatasetId::Tiny],
+            seed: 7,
+            scale: 1.0,
+            train_epochs: 0,
+        };
+        match gcn_abft::report::bench::bench_document(DatasetId::Tiny, &opts, 24, 4) {
+            Ok(doc) => println!("{}", doc.to_pretty()),
+            Err(e) => {
+                eprintln!("bench --json failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
     bench_header("bench_coordinator — serving throughput/latency (native runtime)");
 
     println!("-- batch-size sweep (2 workers, auto operands) --");

@@ -11,6 +11,7 @@
 //! | `D4` | no `==`/`!=` against float literals outside tests — use thresholds or `total_cmp` |
 //! | `F1` | coordinator request paths fail stop (`Failed` responses), never panic |
 //! | `C1` | only scoped threads outside the sanctioned spawn sites — no detached workers |
+//! | `M1` | resident operand/check-state mutation only through `runtime/mutate.rs` — serving paths go through `GraphDelta` + the epoch fence |
 //!
 //! Suppression is inline and *reasoned*:
 //! `// gcn-lint: allow(RULE, reason="…")` on the finding's line or the
@@ -84,6 +85,15 @@ pub const RULES: &[RuleInfo] = &[
         name: "scoped-threads-only",
         contract: "thread::spawn only in util/parallel.rs and the shard \
                    transports; all other parallelism is scoped",
+    },
+    RuleInfo {
+        id: "M1",
+        name: "mutation-only-in-mutate",
+        contract: "GcnOperands/CheckState mutation primitives (mutate::apply, \
+                   .swap_weights, CheckState::build) only inside runtime/mutate.rs \
+                   and runtime/operands.rs; serving paths mutate through \
+                   GraphDelta + EpochFence so every patch is epoch-fenced and \
+                   bit-identical to a rebuild",
     },
     RuleInfo {
         id: "LINT",
@@ -196,6 +206,13 @@ fn f1_scope(path: &str) -> bool {
 }
 fn c1_exempt(path: &str) -> bool {
     ends_with_any(path, &["util/parallel.rs", "coordinator/shard.rs"])
+}
+fn m1_exempt(path: &str) -> bool {
+    // The mutation subsystem itself and the operand type that owns the
+    // primitives. Integration tests exercise the primitives directly.
+    ends_with_any(path, &["runtime/mutate.rs", "runtime/operands.rs"])
+        || path.contains("/tests/")
+        || path.starts_with("tests/")
 }
 
 /// Scan one file's source. `path` is the display path (repo-relative
@@ -330,6 +347,44 @@ pub fn scan_source(path: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
                          requires a Failed response, not a crash",
                         t.text
                     ),
+                );
+            }
+        }
+
+        // M1 mutation-only-in-mutate — the in-place operand mutation
+        // primitives outside the sanctioned module, outside tests.
+        // Serving paths must route mutation through GraphDelta + the
+        // EpochFence so patches are fenced and bit-identical to a
+        // rebuild; direct calls bypass both.
+        if !m1_exempt(&path) && !lexed.in_test_region(t.line) {
+            if seq(j, &["mutate", "::", "apply"]) {
+                push(
+                    "M1",
+                    t.line,
+                    "direct `mutate::apply` on resident operands bypasses the \
+                     epoch fence — go through EpochFence::apply (annotate \
+                     offline tooling that owns its operands)"
+                        .to_string(),
+                );
+            }
+            let prev_dot = j > 0 && text(j - 1) == ".";
+            if prev_dot && t.kind == TokKind::Ident && t.text == "swap_weights" {
+                push(
+                    "M1",
+                    t.line,
+                    "`.swap_weights()` outside runtime/mutate.rs mutates resident \
+                     operands unfenced — submit GraphDelta::SwapWeights instead"
+                        .to_string(),
+                );
+            }
+            if seq(j, &["CheckState", "::", "build"]) {
+                push(
+                    "M1",
+                    t.line,
+                    "`CheckState::build` outside the operand module rebuilds \
+                     checksum state out of band — the cached state in \
+                     GcnOperands is the single source of truth"
+                        .to_string(),
                 );
             }
         }
@@ -523,6 +578,51 @@ mod tests {
             &["std::thread::scope(|s| { s.spawn(|| {}); });"]
         )
         .is_empty());
+    }
+
+    #[test]
+    fn m1_positive_exempt_and_suppressed() {
+        let patch = ["let o = mutate::apply(&mut ops, &delta)?;"];
+        let f = findings_for("src/coordinator/server.rs", &patch);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "M1");
+        // The sanctioned module, the operand type and tests are exempt.
+        assert!(findings_for("src/runtime/mutate.rs", &patch).is_empty());
+        assert!(findings_for("src/runtime/operands.rs", &patch).is_empty());
+        assert!(findings_for("tests/prop_incremental_operands.rs", &patch).is_empty());
+        let test_region = [
+            "#[cfg(test)]",
+            "mod tests {",
+            "fn t() { mutate::apply(&mut ops, &d).unwrap(); }",
+            "}",
+        ];
+        assert!(findings_for("src/coordinator/shard.rs", &test_region).is_empty());
+        // Reasoned suppression works like any other rule.
+        let allowed = [
+            "// gcn-lint: allow(M1, reason=\"offline verifier owns the operands\")",
+            "let o = mutate::apply(&mut ops, &delta)?;",
+        ];
+        let (f2, s2) = scan_source("src/main.rs", &src(&allowed));
+        assert!(f2.is_empty());
+        assert_eq!(s2.len(), 1);
+        assert_eq!(s2[0].rule, "M1");
+    }
+
+    #[test]
+    fn m1_swap_weights_and_check_state_build() {
+        let swap = ["ops.swap_weights(w1, w2)?;"];
+        let f = findings_for("src/coordinator/server.rs", &swap);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "M1");
+        // Declaring a fn named swap_weights is not a call on operands.
+        assert!(
+            findings_for("src/coordinator/server.rs", &["fn swap_weights() {}"]).is_empty()
+        );
+        let build = ["let c = CheckState::build(&f, &s, &w1, &w2);"];
+        let f2 = findings_for("src/runtime/backend/native.rs", &build);
+        assert_eq!(f2.len(), 1);
+        assert_eq!(f2[0].rule, "M1");
+        assert!(findings_for("src/runtime/operands.rs", &build).is_empty());
     }
 
     #[test]

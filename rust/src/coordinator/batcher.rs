@@ -44,7 +44,7 @@
 use super::clock::{Clock, MonotonicClock, Tick};
 use super::lock_recover;
 use super::request::InferenceRequest;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Duration;
 
 /// Batching policy.
@@ -206,6 +206,14 @@ pub struct Scheduler<C: Clock = MonotonicClock> {
     policy: BatchPolicy,
     state: Mutex<State>,
     cv: Condvar,
+    /// The epoch gate (dynamic graphs): executors hold a **read** lock
+    /// for the duration of each batch execution; a graph-delta applier
+    /// takes the **write** lock, which waits for every in-flight batch
+    /// to drain before resident state (the published operand snapshot
+    /// *and* any shard-worker-held bands) may move to the next epoch.
+    /// Admission is untouched — requests keep queueing while the fence
+    /// is held, they just execute against the next graph version.
+    epoch_gate: RwLock<()>,
 }
 
 impl Scheduler<MonotonicClock> {
@@ -222,7 +230,27 @@ impl<C: Clock> Scheduler<C> {
             policy,
             state: Mutex::new(State::default()),
             cv: Condvar::new(),
+            epoch_gate: RwLock::new(()),
         }
+    }
+
+    /// Enter batch execution: hold the returned guard for exactly the
+    /// span in which a batch touches a graph-version snapshot (or the
+    /// shard transport's resident bands). Many batches may execute
+    /// concurrently; an epoch boundary ([`Self::epoch_guard`]) waits
+    /// for all of them. Lock poison is recovered — the gate carries no
+    /// data, so a panicked holder leaves nothing inconsistent.
+    pub fn batch_guard(&self) -> RwLockReadGuard<'_, ()> {
+        self.epoch_gate.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enter an epoch boundary: blocks until every in-flight batch
+    /// drops its [`Self::batch_guard`], then holds executors out until
+    /// the guard is dropped. The delta applier holds this across
+    /// operand publication *and* shard delta routing, so a batch never
+    /// observes a half-applied graph version.
+    pub fn epoch_guard(&self) -> RwLockWriteGuard<'_, ()> {
+        self.epoch_gate.write().unwrap_or_else(|p| p.into_inner())
     }
 
     /// The scheduler's clock — tests advance a
@@ -654,6 +682,28 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(p.starvation_bound(), p.max_wait, "factor clamps to 1");
+    }
+
+    #[test]
+    fn epoch_gate_waits_for_inflight_batches() {
+        let s = std::sync::Arc::new(sched(4, 50, 4));
+        // Concurrent batch guards coexist.
+        let g1 = s.batch_guard();
+        let g2 = s.batch_guard();
+        // An epoch boundary cannot be entered while batches execute.
+        assert!(s.epoch_gate.try_write().is_err());
+        drop(g1);
+        assert!(s.epoch_gate.try_write().is_err());
+        drop(g2);
+        {
+            let _fence = s.epoch_guard();
+            // While the fence is held, executors are held out...
+            assert!(s.epoch_gate.try_read().is_err());
+            // ...but admission keeps flowing.
+            s.submit(req(0));
+            assert_eq!(s.pending(), 1);
+        }
+        let _g = s.batch_guard();
     }
 
     /// Regression: a thread panicking while it holds the scheduler's

@@ -115,6 +115,19 @@ pub struct ServeMetrics {
     /// `--max-wait-ms` unless `--adaptive-wait` tuned it from the
     /// observed arrival rate.
     pub effective_wait_ms: f64,
+    /// Final graph epoch at drain (dynamic graphs): the number of
+    /// deltas successfully published through the epoch fence.
+    pub epoch: u64,
+    /// Graph deltas applied during the run (== `epoch` today; kept
+    /// separate so a future snapshot-restore can start above 0).
+    pub deltas_applied: u64,
+    /// Deltas that failed validation or shard routing — each one is
+    /// fail-stop (epoch unchanged, serving continues on the old
+    /// version), never a partial application.
+    pub delta_failures: u64,
+    /// Seconds spent inside the epoch fence applying deltas (drain
+    /// wait + patch + shard re-ship).
+    pub delta_apply_secs: f64,
     pub exec_secs: f64,
     pub verify_secs: f64,
     pub wall_secs: f64,

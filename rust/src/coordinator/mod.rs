@@ -31,7 +31,10 @@ pub use metrics::{LatencyHistogram, PriorityLatency, ServeMetrics};
 pub use request::{
     InferenceRequest, InferenceResponse, Perturbation, Priority, VerifyStatus,
 };
-pub use server::{overlay_groups, run_server, ModelState, ServerConfig};
+pub use server::{
+    overlay_groups, request_overlays, run_server, run_server_with_updates, ModelState,
+    ServerConfig,
+};
 pub use shard::{
     run_shard_worker, InProcTransport, ShardPlan, ShardTransport, ShardTransportKind,
     ShardedBackend,
@@ -41,7 +44,8 @@ pub use shard::ProcTransport;
 pub use verify::{ServePolicy, VerifyReport};
 
 use crate::graph::DatasetId;
-use crate::runtime::{BackendKind, ChecksumScheme, ExecMode};
+use crate::runtime::mutate::{self, ScheduledDelta};
+use crate::runtime::{BackendKind, ChecksumScheme, ExecMode, GraphDelta};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -148,6 +152,10 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         Some(v) => Some(v.parse::<u64>().map_err(|e| anyhow!("inject-every: {e}"))?),
         None => None,
     };
+    let delta_source = match args.get("deltas") {
+        Some(path) => delta_source_from_path(std::path::Path::new(&path))?,
+        None => DeltaSource::None,
+    };
     let cfg = ServerConfig {
         dataset,
         artifacts_dir: args.get_str("artifacts", "artifacts").into(),
@@ -172,12 +180,31 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         kill_shard_after,
         ..Default::default()
     };
-    let summary = serve_synthetic(&cfg, requests)?;
+    let summary = serve_synthetic_with_deltas(&cfg, requests, delta_source)?;
     if args.has_flag("json") {
         Ok(summary.json().to_pretty())
     } else {
         Ok(summary.render())
     }
+}
+
+/// Classify `--deltas <path>`: a Unix domain socket streams deltas
+/// live; a regular file is a JSONL schedule loaded up front (one delta
+/// per line, `{"after_request": k, "add_edges": ...}` — see
+/// [`crate::runtime::mutate::load_delta_file`]).
+fn delta_source_from_path(path: &std::path::Path) -> Result<DeltaSource> {
+    let meta = std::fs::metadata(path).map_err(|e| anyhow!("--deltas {path:?}: {e}"))?;
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileTypeExt;
+        if meta.file_type().is_socket() {
+            return Ok(DeltaSource::Socket(path.to_path_buf()));
+        }
+    }
+    if !meta.is_file() {
+        bail!("--deltas {path:?} is neither a regular file nor a unix socket");
+    }
+    Ok(DeltaSource::Scheduled(mutate::load_delta_file(path)?))
 }
 
 /// Parse `--priority-mix i,b,bg` into the three driver weights.
@@ -293,6 +320,16 @@ impl ServeSummary {
                 m.shard_failures,
             ));
         }
+        if m.epoch > 0 || m.deltas_applied > 0 || m.delta_failures > 0 {
+            out.push_str(&format!(
+                "\ndynamic graph: epoch {} | deltas applied {} (rejected {}) | \
+                 apply time {:.2} ms",
+                m.epoch,
+                m.deltas_applied,
+                m.delta_failures,
+                m.delta_apply_secs * 1e3,
+            ));
+        }
         let mut prio_line = String::new();
         for (rank, pl) in m.by_priority.iter().enumerate() {
             if pl.requests == 0 {
@@ -349,6 +386,10 @@ impl ServeSummary {
             ("shard_stitch_secs", Json::Num(m.shard_stitch_secs)),
             ("shard_aggregates", Json::from(m.shard_aggregates)),
             ("effective_wait_ms", Json::Num(m.effective_wait_ms)),
+            ("epoch", Json::from(m.epoch)),
+            ("deltas_applied", Json::from(m.deltas_applied)),
+            ("delta_failures", Json::from(m.delta_failures)),
+            ("delta_apply_secs", Json::Num(m.delta_apply_secs)),
             ("operand_bytes", Json::from(self.operand_bytes)),
             ("requests", Json::from(m.requests)),
             ("wall_secs", Json::Num(m.wall_secs)),
@@ -373,15 +414,59 @@ impl ServeSummary {
     }
 }
 
+/// Where a serve run's graph deltas come from (`serve --deltas`).
+#[derive(Debug)]
+pub enum DeltaSource {
+    /// Static graph (the default).
+    None,
+    /// A preloaded schedule: each delta is injected once the driver has
+    /// submitted `after_request` requests, so the interleaving against
+    /// the request stream is reproducible.
+    Scheduled(Vec<ScheduledDelta>),
+    /// A Unix domain socket the coordinator connects to; one delta JSON
+    /// per line, applied as it arrives (`after_request` is ignored — the
+    /// feed's own pacing is the schedule).
+    #[cfg(unix)]
+    Socket(std::path::PathBuf),
+}
+
 /// Drive the server with `n_requests` synthetic what-if queries.
 pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSummary> {
+    serve_synthetic_with_deltas(cfg, n_requests, DeltaSource::None)
+}
+
+/// As [`serve_synthetic`], with a graph-delta feed (dynamic graphs).
+pub fn serve_synthetic_with_deltas(
+    cfg: &ServerConfig,
+    n_requests: usize,
+    delta_source: DeltaSource,
+) -> Result<ServeSummary> {
     let state = ModelState::build(cfg)?;
     let feat_dim = state.ops.feat_dim();
     let n_nodes = state.ops.n_nodes();
 
+    let mut schedule: Vec<ScheduledDelta> = Vec::new();
+    #[cfg(unix)]
+    let mut socket_path: Option<std::path::PathBuf> = None;
+    match delta_source {
+        DeltaSource::None => {}
+        DeltaSource::Scheduled(s) => schedule = s,
+        #[cfg(unix)]
+        DeltaSource::Socket(p) => socket_path = Some(p),
+    }
+    // Deterministic injection order regardless of how the schedule was
+    // assembled (load_delta_file already sorts; API callers may not).
+    schedule.sort_by_key(|d| d.after_request);
+    #[cfg(unix)]
+    let dynamic = !schedule.is_empty() || socket_path.is_some();
+    #[cfg(not(unix))]
+    let dynamic = !schedule.is_empty();
+
     let (req_tx, req_rx) = std::sync::mpsc::channel();
     let (resp_tx, resp_rx) = std::sync::mpsc::channel();
     let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+    let (delta_tx, delta_rx) = std::sync::mpsc::channel::<GraphDelta>();
+    let updates = if dynamic { Some(delta_rx) } else { None };
 
     // Client driver thread: bursty request arrivals with random what-if
     // perturbations, query sets and priorities. Held back until every
@@ -393,11 +478,28 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
     // deadlocks.
     let seed = cfg.seed;
     let priority_mix = cfg.priority_mix;
+    // Lets the socket feeder exit once serving has drained, even if the
+    // external feed never closes its end.
+    let feed_done = std::sync::atomic::AtomicBool::new(false);
     let metrics = std::thread::scope(|scope| -> Result<ServeMetrics> {
+        #[cfg(unix)]
+        if let Some(path) = socket_path {
+            let delta_tx = delta_tx.clone();
+            let feed_done = &feed_done;
+            scope.spawn(move || feed_deltas_from_socket(&path, &delta_tx, feed_done));
+        }
         let driver = scope.spawn(move || {
             let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
             let mut rng = Pcg64::from_seed(seed ^ 0xD21u64);
             let mix_total: f64 = priority_mix.iter().sum();
+            // Scheduled deltas interleave with submission: everything
+            // due at or before the submitted-request count is injected
+            // right after that request goes in.
+            let mut next_delta = 0usize;
+            while next_delta < schedule.len() && schedule[next_delta].after_request == 0 {
+                let _ = delta_tx.send(schedule[next_delta].delta.clone());
+                next_delta += 1;
+            }
             for id in 0..n_requests {
                 let n_pert = rng.gen_index(3);
                 let perturbations = (0..n_pert)
@@ -420,15 +522,39 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
                 if req_tx.send(req).is_err() {
                     return;
                 }
+                let submitted = id as u64 + 1;
+                while next_delta < schedule.len()
+                    && schedule[next_delta].after_request <= submitted
+                {
+                    let _ = delta_tx.send(schedule[next_delta].delta.clone());
+                    next_delta += 1;
+                }
                 // Bursty arrivals: small jitter between sends.
                 if rng.gen_bool(0.3) {
                     std::thread::sleep(std::time::Duration::from_micros(rng.gen_range(400)));
                 }
             }
+            // Anything scheduled past the last request still applies
+            // before the stream closes.
+            while next_delta < schedule.len() {
+                let _ = delta_tx.send(schedule[next_delta].delta.clone());
+                next_delta += 1;
+            }
         });
 
-        let metrics =
-            server::run_server_with_ready(cfg, &state, req_rx, resp_tx, Some(ready_tx))?;
+        let metrics = server::run_server_with_updates(
+            cfg,
+            &state,
+            req_rx,
+            resp_tx,
+            Some(ready_tx),
+            updates,
+        );
+        // Release the feeder before propagating any server error — the
+        // scope joins it, and an open-ended external feed would
+        // otherwise hold this function hostage.
+        feed_done.store(true, std::sync::atomic::Ordering::SeqCst);
+        let metrics = metrics?;
         if driver.join().is_err() {
             bail!("client driver panicked");
         }
@@ -478,6 +604,82 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
         scheme: cfg.scheme.name(),
         metrics,
     })
+}
+
+/// Feed deltas from a connected Unix-socket stream into the server's
+/// update channel: newline-delimited delta JSON, forwarded as it
+/// arrives. Read timeouts let the feeder notice `done` (set when
+/// serving drains), so an external feed that never closes cannot wedge
+/// the serve scope.
+#[cfg(unix)]
+fn feed_deltas_from_socket(
+    path: &std::path::Path,
+    deltas: &std::sync::mpsc::Sender<GraphDelta>,
+    done: &std::sync::atomic::AtomicBool,
+) {
+    use std::io::Read as _;
+    let mut stream = match std::os::unix::net::UnixStream::connect(path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: cannot connect to delta socket {path:?}: {e}");
+            return;
+        }
+    };
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut pending: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        if done.load(std::sync::atomic::Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break, // feed closed — flush whatever is buffered
+            Ok(n) => {
+                pending.extend_from_slice(&chunk[..n]);
+                while let Some(nl) = pending.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = pending.drain(..=nl).collect();
+                    forward_delta_line(&line, deltas);
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => {
+                eprintln!("serve: delta socket read failed: {e}");
+                return;
+            }
+        }
+    }
+    if !pending.is_empty() {
+        forward_delta_line(&pending, deltas);
+    }
+}
+
+/// Parse one socket line into a delta and forward it. A malformed line
+/// is skipped loudly — a streamed feed must not take serving down.
+#[cfg(unix)]
+fn forward_delta_line(raw: &[u8], deltas: &std::sync::mpsc::Sender<GraphDelta>) {
+    let Ok(text) = std::str::from_utf8(raw) else {
+        eprintln!("serve: delta line is not UTF-8; skipped");
+        return;
+    };
+    let line = text.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return;
+    }
+    let parsed = Json::parse(line)
+        .map_err(|e| anyhow!("{e}"))
+        .and_then(|j| mutate::parse_scheduled(&j));
+    match parsed {
+        Ok(s) => {
+            let _ = deltas.send(s.delta);
+        }
+        Err(e) => eprintln!("serve: bad delta line skipped ({e:#})"),
+    }
 }
 
 #[cfg(test)]

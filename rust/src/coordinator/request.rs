@@ -132,6 +132,10 @@ pub struct InferenceResponse {
     pub latency_secs: f64,
     /// Size of the scheduling batch this request rode in.
     pub batch_size: usize,
+    /// Graph version this request executed against (dynamic graphs):
+    /// the epoch fence guarantees the whole batch — logits, checks,
+    /// retries — ran on exactly this version. 0 until the first delta.
+    pub epoch: u64,
 }
 
 #[cfg(test)]

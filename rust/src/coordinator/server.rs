@@ -48,8 +48,8 @@ use super::verify::ServePolicy;
 use crate::graph::DatasetId;
 use crate::runtime::backend;
 use crate::runtime::{
-    BackendKind, ChecksumScheme, ExecMode, GcnOperands, Manifest, ModelEntry, OperandPlan,
-    Overlay,
+    BackendKind, ChecksumScheme, EpochFence, ExecMode, GcnOperands, GraphDelta, Manifest,
+    ModelEntry, OperandPlan, Overlay,
 };
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -254,41 +254,57 @@ impl ModelState {
         Ok(ModelState { ops, entry })
     }
 
-    /// Collect one request's perturbations as feature-row overlays, in
-    /// list order (later overlays of the same node win, matching the
-    /// historical copy-and-patch semantics). The base feature matrix is
-    /// never cloned per forward — backends apply these algebraically.
-    ///
-    /// A malformed perturbation (wrong feature width, node out of
-    /// range) is an error, not a panic: the executor answers the
-    /// request `Failed` and keeps serving the rest of the batch.
+    /// Collect one request's perturbations as feature-row overlays
+    /// against this state's resident operands — see [`request_overlays`]
+    /// (the serving path validates against its epoch *snapshot* instead,
+    /// so a node added mid-stream is addressable from the next epoch on).
     pub fn request_overlays<'a>(&self, req: &'a InferenceRequest) -> Result<Vec<Overlay<'a>>> {
-        let f = self.ops.feat_dim();
-        let n = self.ops.n_nodes();
-        let mut overlays = Vec::with_capacity(req.perturbations.len());
-        for p in &req.perturbations {
-            if p.features.len() != f {
-                bail!(
-                    "perturbation width mismatch for node {}: got {}, feature dim is {f}",
-                    p.node,
-                    p.features.len()
-                );
-            }
-            if p.node >= n {
-                bail!("perturbation node {} out of range (n = {n})", p.node);
-            }
-            overlays.push(Overlay {
-                node: p.node,
-                row: p.features.as_slice(),
-            });
-        }
-        Ok(overlays)
+        request_overlays(&self.ops, req)
     }
+}
+
+/// Collect one request's perturbations as feature-row overlays, in
+/// list order (later overlays of the same node win, matching the
+/// historical copy-and-patch semantics). The base feature matrix is
+/// never cloned per forward — backends apply these algebraically.
+///
+/// A malformed perturbation (wrong feature width, node out of
+/// range) is an error, not a panic: the executor answers the
+/// request `Failed` and keeps serving the rest of the batch.
+pub fn request_overlays<'a>(
+    ops: &GcnOperands,
+    req: &'a InferenceRequest,
+) -> Result<Vec<Overlay<'a>>> {
+    let f = ops.feat_dim();
+    let n = ops.n_nodes();
+    let mut overlays = Vec::with_capacity(req.perturbations.len());
+    for p in &req.perturbations {
+        if p.features.len() != f {
+            bail!(
+                "perturbation width mismatch for node {}: got {}, feature dim is {f}",
+                p.node,
+                p.features.len()
+            );
+        }
+        if p.node >= n {
+            bail!("perturbation node {} out of range (n = {n})", p.node);
+        }
+        overlays.push(Overlay {
+            node: p.node,
+            row: p.features.as_slice(),
+        });
+    }
+    Ok(overlays)
 }
 
 /// A `Failed` fail-stop response for `req`: the client sees the fault
 /// (classes withheld) instead of silence or a coordinator crash.
-fn failed_response(req: &InferenceRequest, lat: f64, bsize: usize) -> InferenceResponse {
+fn failed_response(
+    req: &InferenceRequest,
+    lat: f64,
+    bsize: usize,
+    epoch: u64,
+) -> InferenceResponse {
     InferenceResponse {
         id: req.id,
         priority: req.priority,
@@ -296,6 +312,7 @@ fn failed_response(req: &InferenceRequest, lat: f64, bsize: usize) -> InferenceR
         status: VerifyStatus::Failed,
         latency_secs: lat,
         batch_size: bsize,
+        epoch,
     }
 }
 
@@ -341,7 +358,7 @@ pub fn run_server(
     requests: Receiver<InferenceRequest>,
     responses: Sender<InferenceResponse>,
 ) -> Result<ServeMetrics> {
-    run_server_with_ready(cfg, state, requests, responses, None)
+    run_server_with_updates(cfg, state, requests, responses, None, None)
 }
 
 /// As [`run_server`], additionally signalling on `ready` once every
@@ -354,6 +371,26 @@ pub fn run_server_with_ready(
     requests: Receiver<InferenceRequest>,
     responses: Sender<InferenceResponse>,
     ready: Option<Sender<()>>,
+) -> Result<ServeMetrics> {
+    run_server_with_updates(cfg, state, requests, responses, ready, None)
+}
+
+/// As [`run_server_with_ready`], additionally accepting graph deltas on
+/// `updates` (dynamic graphs). Each delta is applied behind the epoch
+/// fence: the applier waits out in-flight batches (admission keeps
+/// coalescing), patches a copy-on-write clone of the operands
+/// ([`crate::runtime::mutate::apply`] — bit-identical to a rebuild),
+/// re-ships mutated bands through the shard tier when one is running,
+/// and publishes the next epoch. Every response records the epoch its
+/// batch executed against; a rejected delta is fail-stop (epoch
+/// unchanged, serving continues on the old graph version).
+pub fn run_server_with_updates(
+    cfg: &ServerConfig,
+    state: &ModelState,
+    requests: Receiver<InferenceRequest>,
+    responses: Sender<InferenceResponse>,
+    ready: Option<Sender<()>>,
+    updates: Option<Receiver<GraphDelta>>,
 ) -> Result<ServeMetrics> {
     // One time base for the whole serve: the scheduler's decisions and
     // the wall/exec/verify timings all read the same Clock (contract
@@ -377,6 +414,14 @@ pub fn run_server_with_ready(
         None
     };
     let sched = Scheduler::new(clock.clone(), cfg.batch);
+    // The graph-version fence (dynamic graphs): executors snapshot
+    // `(epoch, ops)` per batch; the delta applier publishes new
+    // versions copy-on-write, so a snapshot is immutable for as long as
+    // any batch holds it.
+    let fence = EpochFence::new(state.ops.clone());
+    // Set once the executors have drained: lets the delta applier exit
+    // even when the caller keeps its updates sender open.
+    let serving_done = std::sync::atomic::AtomicBool::new(false);
     let metrics = Mutex::new(ServeMetrics::default());
     let latency = Mutex::new(LatencyHistogram::new());
     let prio_latency = Mutex::new([
@@ -419,6 +464,63 @@ pub fn run_server_with_ready(
             });
         }
 
+        // Delta applier (dynamic graphs): serializes graph updates
+        // behind the scheduler's epoch gate. Taking the write side
+        // waits out every in-flight batch — admission keeps coalescing
+        // the whole time — so each batch executes against exactly one
+        // graph version, and the next batch to close sees the new one.
+        if let Some(updates) = updates {
+            let sched = &sched;
+            let clock = &clock;
+            let metrics = &metrics;
+            let fence = &fence;
+            let serving_done = &serving_done;
+            let shard_tier = shard_tier.clone();
+            scope.spawn(move || {
+                use std::sync::mpsc::RecvTimeoutError;
+                loop {
+                    let delta =
+                        match updates.recv_timeout(std::time::Duration::from_millis(20)) {
+                            Ok(d) => d,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                            Err(RecvTimeoutError::Timeout) => {
+                                if serving_done.load(std::sync::atomic::Ordering::SeqCst) {
+                                    break;
+                                }
+                                continue;
+                            }
+                        };
+                    let t0 = clock.now();
+                    let gate = sched.epoch_guard();
+                    // Shard re-ship runs pre-publish: a delta the shard
+                    // tier cannot take is rejected whole — fail-stop,
+                    // epoch unchanged, serving continues on the old
+                    // graph version.
+                    let applied = fence.apply_with(&delta, |ops, outcome| match &shard_tier {
+                        Some(t) => t.apply_delta(ops, outcome),
+                        None => Ok(()),
+                    });
+                    drop(gate);
+                    let dt = clock.now().since(t0).as_secs_f64();
+                    let mut m = lock_recover(metrics);
+                    m.delta_apply_secs += dt;
+                    match applied {
+                        Ok((epoch, _, _)) => {
+                            m.deltas_applied += 1;
+                            m.epoch = epoch;
+                        }
+                        Err(err) => {
+                            eprintln!(
+                                "serve: delta rejected ({err:#}); serving continues \
+                                 on the current graph version"
+                            );
+                            m.delta_failures += 1;
+                        }
+                    }
+                }
+            });
+        }
+
         // Executors.
         let compiled = &compiled;
         let ready = &ready;
@@ -426,6 +528,7 @@ pub fn run_server_with_ready(
         for _worker_id in 0..pool {
             let sched = &sched;
             let clock = &clock;
+            let fence = &fence;
             let metrics = &metrics;
             let latency = &latency;
             let prio_latency = &prio_latency;
@@ -478,6 +581,14 @@ pub fn run_server_with_ready(
                 // (size / deadline / starvation / drain) the moment this
                 // worker is free for it.
                 while let Some(batch) = sched.next_batch() {
+                    // Hold the read side of the epoch gate for the whole
+                    // batch and pin one graph version: everything below —
+                    // overlay validation, forwards, verification, retries —
+                    // reads this snapshot, so a delta landing mid-batch
+                    // cannot change what any admitted request answers.
+                    let _inflight = sched.batch_guard();
+                    let (epoch, ops) = fence.snapshot();
+                    let ops = &*ops;
                     let bidx =
                         batch_counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     // Scheduled shard teardown (`--kill-shard-after`):
@@ -505,7 +616,7 @@ pub fn run_server_with_ready(
                         Vec::with_capacity(groups.len());
                     let mut live_groups: Vec<Vec<usize>> = Vec::with_capacity(groups.len());
                     for members in &groups {
-                        match state.request_overlays(&batch.requests[members[0]]) {
+                        match request_overlays(ops, &batch.requests[members[0]]) {
                             Ok(o) => {
                                 group_overlays.push(o);
                                 live_groups.push(members.clone());
@@ -521,8 +632,8 @@ pub fn run_server_with_ready(
                                     let lat = req.submitted.elapsed().as_secs_f64();
                                     local_lat.record(lat);
                                     local_prio[req.priority.rank()].record(lat);
-                                    let _ =
-                                        responses.send(failed_response(req, lat, bsize));
+                                    let _ = responses
+                                        .send(failed_response(req, lat, bsize, epoch));
                                 }
                             }
                         }
@@ -543,7 +654,7 @@ pub fn run_server_with_ready(
                     // become a silently stitched partial answer. Every
                     // member of the batch is answered `Failed` and the
                     // coordinator keeps serving subsequent batches.
-                    let mut outs = match exe.run_groups(&state.ops, &group_refs) {
+                    let mut outs = match exe.run_groups(ops, &group_refs) {
                         Ok(outs) => outs,
                         Err(err) => {
                             eprintln!(
@@ -567,8 +678,8 @@ pub fn run_server_with_ready(
                                     let lat = req.submitted.elapsed().as_secs_f64();
                                     local_lat.record(lat);
                                     local_prio[req.priority.rank()].record(lat);
-                                    let _ =
-                                        responses.send(failed_response(req, lat, bsize));
+                                    let _ = responses
+                                        .send(failed_response(req, lat, bsize, epoch));
                                 }
                             }
                             continue;
@@ -597,7 +708,8 @@ pub fn run_server_with_ready(
                                 let lat = req.submitted.elapsed().as_secs_f64();
                                 local_lat.record(lat);
                                 local_prio[req.priority.rank()].record(lat);
-                                let _ = responses.send(failed_response(req, lat, bsize));
+                                let _ =
+                                    responses.send(failed_response(req, lat, bsize, epoch));
                             }
                         }
                         continue;
@@ -683,7 +795,7 @@ pub fn run_server_with_ready(
                             }
                             lock_recover(metrics).retries += 1;
                             let t0 = clock.now();
-                            current = match exe.run(&state.ops, overlays) {
+                            current = match exe.run(ops, overlays) {
                                 Ok(out) => out,
                                 Err(err) => {
                                     // A shard died between the batched
@@ -732,6 +844,7 @@ pub fn run_server_with_ready(
                                 status,
                                 latency_secs: lat,
                                 batch_size: bsize,
+                                epoch,
                             };
                             let _ = responses.send(resp);
                         }
@@ -748,16 +861,24 @@ pub fn run_server_with_ready(
             }));
         }
         drop(responses);
+        let mut result = Ok(());
         for h in handles {
             // A panicking executor is a coordinator bug, but fail-stop
             // still applies: surface it as an error result, never a
             // process abort out of a poisoned join.
-            match h.join() {
-                Ok(r) => r?,
-                Err(_) => bail!("executor thread panicked"),
+            let joined = match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("executor thread panicked")),
+            };
+            if let (Err(e), true) = (joined, result.is_ok()) {
+                result = Err(e);
             }
         }
-        Ok(())
+        // Executors are done (cleanly or not) — release the delta
+        // applier even if the caller still holds its updates sender, so
+        // the scope can close and any error above can surface.
+        serving_done.store(true, std::sync::atomic::Ordering::SeqCst);
+        result
     })?;
 
     let mut m = metrics.into_inner().unwrap_or_else(|p| p.into_inner());

@@ -53,13 +53,25 @@
 //! worker → coordinator   {"type":"band", rows, cols, payload}
 //!                        payload = z f32[rows·cols] · pred f64 · actual f64
 //! coordinator → worker   {"type":"shutdown"}
+//! coordinator → worker   {"type":"delta", shard, row0, rows, cols, nnz, payload}
+//!                        payload = row_ptr u64[rows+1] · col_idx u64[nnz]
+//!                                  · values f32[nnz] · s_c f64[cols]
+//! worker → coordinator   {"type":"ack", shard}
 //! ```
+//!
+//! The `delta`/`ack` pair is the dynamic-graph path
+//! ([`crate::runtime::mutate`]): after the coordinator patches the
+//! resident operands inside the epoch fence, it re-ships each mutated
+//! band (same payload layout as `init`) and waits for the ack in the
+//! same lockstep discipline as `agg`/`band` — a failed re-ship poisons
+//! the shard so no later aggregate can stitch mixed-version bands.
 //!
 //! Floats cross the wire as raw little-endian bit patterns (never as
 //! decimal text), which is what keeps the proc transport bit-identical.
 
 use crate::runtime::backend::native;
 use crate::runtime::backend::{self, ChecksumScheme, ExecPlan, GcnBackend, Overlay};
+use crate::runtime::mutate::DeltaOutcome;
 use crate::runtime::{GcnOperands, GcnOutputs, SOperand};
 use crate::tensor::Dense;
 use crate::util::json::Json;
@@ -194,6 +206,17 @@ pub trait ShardTransport: Send + Sync {
     /// `false` when the shard index is out of range.
     fn kill_shard(&self, shard: usize) -> bool;
 
+    /// Bring every shard onto a new graph version after a
+    /// [`crate::runtime::mutate::GraphDelta`] patched the resident
+    /// operands. The coordinator calls this *inside* the epoch fence —
+    /// no `aggregate` can interleave — passing the already-patched
+    /// operands plus the patch outcome naming which bands changed.
+    /// Fail-stop: on error the delta is rejected (the epoch does not
+    /// advance) and any shard whose resident version is now unknown is
+    /// poisoned, so a later aggregate can never stitch mixed-version
+    /// bands.
+    fn apply_delta(&self, ops: &GcnOperands, outcome: &DeltaOutcome) -> Result<()>;
+
     /// Cumulative timings snapshot.
     fn timings(&self) -> ShardTimings;
 }
@@ -287,6 +310,25 @@ impl ShardTransport for InProcTransport {
             }
             None => false,
         }
+    }
+
+    fn apply_delta(&self, ops: &GcnOperands, _outcome: &DeltaOutcome) -> Result<()> {
+        // In-proc shards read their bands straight from the resident
+        // operands on every aggregate, so there is nothing to re-ship —
+        // only the band-partition invariant to enforce now, rather than
+        // letting a collapsed partition surface one request later.
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("inproc shard transport got dense operands");
+        };
+        if bands.len() != self.shards {
+            bail!(
+                "delta changed the band partition ({} bands != {} shards); \
+                 restart the shard tier",
+                bands.len(),
+                self.shards
+            );
+        }
+        Ok(())
     }
 
     fn timings(&self) -> ShardTimings {
@@ -528,7 +570,7 @@ mod proc_transport {
     use std::os::unix::net::{UnixListener, UnixStream};
     use std::path::{Path, PathBuf};
     use std::process::{Child, Command, Stdio};
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
     use std::time::Duration;
 
     /// How long the coordinator waits for workers to connect and for
@@ -544,6 +586,69 @@ mod proc_transport {
         stream: Option<UnixStream>,
         row0: usize,
         rows: usize,
+    }
+
+    /// Encode an `init` or `delta` frame carrying one band of `S` plus
+    /// its cached `s_c` — the two frame types share the payload layout,
+    /// so a worker's resident band is replaced by exactly the bytes the
+    /// coordinator would have shipped at spawn.
+    fn encode_band_frame(kind: &str, shard: usize, band: &RowBand) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(
+            (band.s.rows() + 1) * 8 + band.s.nnz() * 12 + band.s_c.len() * 8,
+        );
+        push_u64s(&mut payload, band.s.row_ptr());
+        push_u64s(&mut payload, band.s.col_idx());
+        push_f32s(&mut payload, band.s.values());
+        push_f64s(&mut payload, &band.s_c);
+        let header = Json::obj(vec![
+            ("type", Json::from(kind)),
+            ("shard", Json::from(shard)),
+            ("row0", Json::from(band.row0)),
+            ("rows", Json::from(band.s.rows())),
+            ("cols", Json::from(band.s.cols())),
+            ("nnz", Json::from(band.s.nnz())),
+            ("payload", Json::from(payload.len())),
+        ]);
+        encode_frame(&header, &payload)
+    }
+
+    /// Parse the band carried by an `init` or `delta` frame into the
+    /// worker's resident form: `(rows, cols, band-with-local-row0)`.
+    fn parse_band_frame(hdr: &Json, body: &[u8]) -> Result<(usize, usize, RowBand)> {
+        let rows = header_field(hdr, "rows")?;
+        let cols = header_field(hdr, "cols")?;
+        let nnz = header_field(hdr, "nnz")?;
+        let mut wire = Wire(body);
+        let row_ptr = wire.usizes(rows + 1)?;
+        let col_idx = wire.usizes(nnz)?;
+        let values = wire.f32s(nnz)?;
+        let s_c = wire.f64s(cols)?;
+        wire.done()?;
+        let band = RowBand {
+            // Local band coordinates; the coordinator owns the global
+            // row offset for stitching.
+            row0: 0,
+            s: Csr::from_raw_parts(rows, cols, row_ptr, col_idx, values)
+                .map_err(|e| anyhow!("bad band CSR: {e}"))?,
+            s_c,
+        };
+        Ok((rows, cols, band))
+    }
+
+    /// Ship one mutated band to its worker and wait for the ack —
+    /// the same lockstep discipline as `agg`/`band`, so any failure
+    /// names the culprit shard.
+    fn ship_band_delta(stream: &mut UnixStream, shard: usize, band: &RowBand) -> Result<()> {
+        stream.write_all(&encode_band_frame("delta", shard, band))?;
+        let (ack, _) = read_frame(stream)?.ok_or_else(|| anyhow!("hung up"))?;
+        match ack.get("type").and_then(Json::as_str) {
+            Some("ack") => Ok(()),
+            Some("error") => bail!(
+                "worker reported: {}",
+                ack.get("msg").and_then(Json::as_str).unwrap_or("?")
+            ),
+            other => bail!("unexpected frame type {other:?}"),
+        }
     }
 
     /// Read and fully validate one `band` reply: `(z rows, pred,
@@ -586,7 +691,9 @@ mod proc_transport {
     /// band with the same serial kernel.
     pub struct ProcTransport {
         shards_total: usize,
-        n: usize,
+        /// Rows of the resident `S` (= N nodes); mutable because a
+        /// node-adding delta grows the graph under a running transport.
+        n: AtomicUsize,
         shards: Mutex<Vec<ProcShard>>,
         timings: Mutex<ShardTimings>,
         socket_dir: PathBuf,
@@ -663,7 +770,7 @@ mod proc_transport {
 
             Ok(ProcTransport {
                 shards_total: shards.len(),
-                n: ops.n_nodes(),
+                n: AtomicUsize::new(ops.n_nodes()),
                 timings: Mutex::new(ShardTimings {
                     wait_secs: vec![0.0; shards.len()],
                     ..Default::default()
@@ -732,23 +839,7 @@ mod proc_transport {
                 stream.set_read_timeout(Some(IO_TIMEOUT))?;
                 stream.set_write_timeout(Some(IO_TIMEOUT))?;
 
-                let mut payload = Vec::with_capacity(
-                    (band.s.rows() + 1) * 8 + band.s.nnz() * 12 + band.s_c.len() * 8,
-                );
-                push_u64s(&mut payload, band.s.row_ptr());
-                push_u64s(&mut payload, band.s.col_idx());
-                push_f32s(&mut payload, band.s.values());
-                push_f64s(&mut payload, &band.s_c);
-                let header = Json::obj(vec![
-                    ("type", Json::from("init")),
-                    ("shard", Json::from(k)),
-                    ("row0", Json::from(band.row0)),
-                    ("rows", Json::from(band.s.rows())),
-                    ("cols", Json::from(band.s.cols())),
-                    ("nnz", Json::from(band.s.nnz())),
-                    ("payload", Json::from(payload.len())),
-                ]);
-                stream.write_all(&encode_frame(&header, &payload))?;
+                stream.write_all(&encode_band_frame("init", k, band))?;
                 let (ready, _) = read_frame(&mut stream)?
                     .ok_or_else(|| anyhow!("shard {k} hung up during init"))?;
                 if ready.get("type").and_then(Json::as_str) != Some("ready") {
@@ -795,8 +886,12 @@ mod proc_transport {
             x: &Dense,
             x_r: &[f32],
         ) -> Result<(Dense, f64, f64)> {
-            if ops.n_nodes() != self.n {
-                bail!("operands changed shape under a running proc transport");
+            let n = self.n.load(Ordering::SeqCst);
+            if ops.n_nodes() != n {
+                bail!(
+                    "operands changed shape under a running proc transport \
+                     (apply the delta through the transport first)"
+                );
             }
             let width = x.cols();
             let mut payload = Vec::with_capacity(x.data().len() * 4 + x_r.len() * 4);
@@ -881,7 +976,7 @@ mod proc_transport {
             // marked down, the all-alive pre-check blocks every later
             // aggregate, so a stale queued reply can never be stitched
             // into a subsequent forward (the lockstep/desync guarantee).
-            let mut out = Dense::zeros(self.n, width);
+            let mut out = Dense::zeros(n, width);
             let mut pred = 0f64;
             let mut actual = 0f64;
             let mut waits = vec![0f64; shards.len()];
@@ -917,6 +1012,64 @@ mod proc_transport {
                 }
             }
             Ok((out, pred, actual))
+        }
+
+        fn apply_delta(&self, ops: &GcnOperands, outcome: &DeltaOutcome) -> Result<()> {
+            let SOperand::Banded(bands) = &ops.s else {
+                bail!("proc shard transport needs CSR operands with a banded S");
+            };
+            if bands.len() != self.shards_total {
+                bail!(
+                    "delta changed the band partition ({} bands != {} shards); \
+                     restart the shard tier",
+                    bands.len(),
+                    self.shards_total
+                );
+            }
+            let mut shards = match self.shards.lock() {
+                Ok(g) => g,
+                Err(poisoned) => {
+                    // Same recovery as aggregate: a panic mid-protocol
+                    // leaves the lockstep state unknown, so poison
+                    // everything rather than risk a stale reply.
+                    let mut g = poisoned.into_inner();
+                    for sh in g.iter_mut() {
+                        sh.stream = None;
+                    }
+                    g
+                }
+            };
+            // All-alive precheck, like aggregate: re-shipping to a
+            // subset while a shard is down would leave the survivors on
+            // a newer graph version than the epoch fence ever publishes.
+            for (k, sh) in shards.iter().enumerate() {
+                if sh.stream.is_none() {
+                    bail!("shard {k} is down");
+                }
+            }
+            // A resize moves band boundaries everywhere; a pure edge
+            // patch touches only the bands the outcome names.
+            let targets: Vec<usize> = if outcome.resized {
+                (0..bands.len()).collect()
+            } else {
+                outcome.affected_bands.clone()
+            };
+            for &k in &targets {
+                let (Some(band), Some(sh)) = (bands.get(k), shards.get_mut(k)) else {
+                    bail!("delta outcome names band {k} of {}", bands.len());
+                };
+                let Some(stream) = sh.stream.as_mut() else {
+                    bail!("shard {k} is down");
+                };
+                if let Err(e) = ship_band_delta(stream, k, band) {
+                    sh.stream = None;
+                    bail!("shard {k} failed during delta re-ship ({e})");
+                }
+                sh.row0 = band.row0;
+                sh.rows = band.s.rows();
+            }
+            self.n.store(ops.n_nodes(), Ordering::SeqCst);
+            Ok(())
         }
 
         fn kill_shard(&self, shard: usize) -> bool {
@@ -992,23 +1145,8 @@ mod proc_transport {
             bail!("expected init frame, got {}", init.to_string());
         }
         let shard = header_field(&init, "shard")?;
-        let rows = header_field(&init, "rows")?;
-        let cols = header_field(&init, "cols")?;
-        let nnz = header_field(&init, "nnz")?;
-        let mut wire = Wire(&body);
-        let row_ptr = wire.usizes(rows + 1)?;
-        let col_idx = wire.usizes(nnz)?;
-        let values = wire.f32s(nnz)?;
-        let s_c = wire.f64s(cols)?;
-        wire.done()?;
-        let band = RowBand {
-            // Local band coordinates; the coordinator owns the global
-            // row offset for stitching.
-            row0: 0,
-            s: Csr::from_raw_parts(rows, cols, row_ptr, col_idx, values)
-                .map_err(|e| anyhow!("bad band CSR in init frame: {e}"))?,
-            s_c,
-        };
+        let (mut rows, mut cols, mut band) = parse_band_frame(&init, &body)
+            .map_err(|e| anyhow!("bad init frame: {e}"))?;
         let ready = Json::obj(vec![
             ("type", Json::from("ready")),
             ("shard", Json::from(shard)),
@@ -1038,6 +1176,38 @@ mod proc_transport {
                         return Err(e);
                     }
                 }
+                Some("delta") => match parse_band_frame(&hdr, &body) {
+                    Ok((new_rows, new_cols, new_band)) => {
+                        // The new band fully replaces the resident one —
+                        // identical bytes to what an `init` at the new
+                        // graph version would have shipped, which is what
+                        // keeps post-delta serving bit-identical to a
+                        // freshly spawned shard tier.
+                        rows = new_rows;
+                        cols = new_cols;
+                        band = new_band;
+                        let ack = Json::obj(vec![
+                            ("type", Json::from("ack")),
+                            ("shard", Json::from(shard)),
+                            ("payload", Json::from(0usize)),
+                        ]);
+                        stream.write_all(&encode_frame(&ack, &[]))?;
+                    }
+                    Err(e) => {
+                        // A malformed delta must not leave this worker
+                        // serving a half-replaced band: report and exit
+                        // (the coordinator poisons the shard on the
+                        // failed ack — fail-stop).
+                        let msg = format!("{e:#}");
+                        let err = Json::obj(vec![
+                            ("type", Json::from("error")),
+                            ("msg", Json::from(msg.as_str())),
+                            ("payload", Json::from(0usize)),
+                        ]);
+                        let _ = stream.write_all(&encode_frame(&err, &[]));
+                        return Err(e);
+                    }
+                },
                 other => bail!("unexpected frame type {other:?}"),
             }
         }
@@ -1213,6 +1383,40 @@ mod tests {
         // A truncated frame is an error.
         let mut trunc = std::io::Cursor::new(vec![9u8, 0, 0]);
         assert!(read_frame(&mut trunc).is_err());
+    }
+
+    #[test]
+    fn inproc_delta_keeps_serving_and_rejects_partition_drift() {
+        use crate::runtime::mutate::{self, GraphDelta};
+        let mut ops = workload(2);
+        let transport: Arc<dyn ShardTransport> = Arc::new(InProcTransport::new(&ops).unwrap());
+        let backend = ShardedBackend::new(transport.clone(), ChecksumScheme::Fused, 1);
+        let before = backend.run(&ops, &[]).unwrap();
+        let delta = GraphDelta::Edges {
+            add: vec![(0, 7, 0.4)],
+            remove: vec![],
+        };
+        let outcome = mutate::apply(&mut ops, &delta).unwrap();
+        transport.apply_delta(&ops, &outcome).unwrap();
+        let after = backend.run(&ops, &[]).unwrap();
+        assert_ne!(before.logits, after.logits, "edge add must change the forward");
+        // Post-delta serving is bit-identical to a from-scratch rebuild
+        // served over a fresh transport.
+        let rebuilt = mutate::rebuild(&ops).unwrap();
+        let fresh = ShardedBackend::new(
+            Arc::new(InProcTransport::new(&rebuilt).unwrap()),
+            ChecksumScheme::Fused,
+            1,
+        );
+        let reference = fresh.run(&rebuilt, &[]).unwrap();
+        assert_eq!(after.logits, reference.logits);
+        assert_eq!(after.predicted, reference.predicted);
+        assert_eq!(after.actual, reference.actual);
+        // A band partition that no longer matches the shard count is
+        // rejected fail-stop instead of surfacing one request later.
+        let drifted = workload(3);
+        let err = transport.apply_delta(&drifted, &outcome).unwrap_err();
+        assert!(err.to_string().contains("band partition"), "{err}");
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //!   across subprocesses (`--shards N --shard-transport inproc|proc`);
 //! * `shard-worker` — one shard of a sharded serve (spawned by the
 //!   coordinator, not invoked by hand);
+//! * `mutate`  — offline dynamic-graph verification: apply a delta
+//!   sequence incrementally and prove the patched operands + checksum
+//!   state bit-identical to a from-scratch rebuild;
+//! * `report`  — machine-readable report artifacts (`report bench`
+//!   writes `BENCH_serve.json`);
 //! * `train`   — train the synthetic workloads and print the curves;
 //! * `info`    — dataset statistics;
 //! * `analyze` — architectural lint pass enforcing the determinism,
@@ -43,6 +48,8 @@ fn main() {
         "fig3" => cmd_fig3(rest),
         "serve" => cmd_serve(rest),
         "shard-worker" => cmd_shard_worker(rest),
+        "mutate" => cmd_mutate(rest),
+        "report" => cmd_report(rest),
         "train" => cmd_train(rest),
         "info" => cmd_info(rest),
         "help" | "--help" | "-h" => {
@@ -105,10 +112,33 @@ SUBCOMMANDS
            dead shard fail-stops (Failed responses, coordinator keeps
            serving). --kill-shard-after B tears down shard 0 before
            batch B (fail-stop fault injection).
+           --deltas PATH streams graph mutations into the running
+           server: a JSONL file of scheduled deltas (applied after the
+           request id they name has been submitted) or a Unix socket
+           producing delta lines live. Each delta is applied behind an
+           epoch fence — in-flight batches drain, the patched operands
+           publish atomically, and every response records the epoch it
+           executed against. A rejected delta leaves the epoch and the
+           graph unchanged (fail-stop).
   shard-worker  (internal) one shard of a sharded serve: connects to
            the coordinator, receives its row band of S, serves
            aggregation requests until shutdown
            --socket PATH (Unix domain socket of the coordinator)
+  mutate   offline dynamic-graph verification: apply a delta sequence
+           incrementally (patching only the touched CSR rows and their
+           additive checksum contributions), then rebuild the operands
+           from scratch and require *bit* identity — raw matrices,
+           per-band s_c, x_r1, h_c1, everything. Prints patch-vs-rebuild
+           timing; exits 0 on bit-identity, 1 on divergence.
+           --dataset tiny|cora|citeseer|pubmed|nell (tiny)
+           --random N (8 seeded random deltas) | --deltas FILE (JSONL)
+           --mode sparse|dense (sparse)  --bands B (2)  --seed S (7)
+           --scale F (1.0)  --train-epochs E (0)  --json
+  report   machine-readable report artifacts
+           bench  aggregate serve throughput + delta patch-vs-rebuild
+                  timing sweep into BENCH_serve.json (repo root)
+                  --dataset D (tiny)  --requests N (48)  --seed S (7)
+                  --scale F (1.0)  --deltas K (6)  --out PATH  --json
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves
            --datasets ...  --epochs E (30)  --seed S
   info     dataset statistics (nodes/edges/features/classes/nnz)
@@ -116,7 +146,8 @@ SUBCOMMANDS
            and f64-checksum contracts over the source tree (lexer-level,
            std-only; rules D1 no-raw-clock, D2 deterministic-iteration,
            D3 f64-accumulation, D4 no-float-eq, F1 fail-stop-not-panic,
-           C1 scoped-threads-only). Suppress a finding inline with
+           C1 scoped-threads-only, M1 mutation-only-in-mutate).
+           Suppress a finding inline with
            `gcn-lint: allow(RULE, reason=\"...\")` (reason mandatory).
            Exits 0 clean, 1 on unsuppressed findings, 2 on usage error.
            [paths...] (default: the crate's src and tests trees)  --json
@@ -403,6 +434,7 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "shards",
             "shard-transport",
             "kill-shard-after",
+            "deltas",
         ],
         flags: vec!["json", "adaptive-wait"],
     };
@@ -434,6 +466,194 @@ fn cmd_shard_worker(rest: Vec<String>) -> i32 {
         Err(e) => {
             eprintln!("shard-worker failed: {e:#}");
             1
+        }
+    }
+}
+
+fn cmd_mutate(rest: Vec<String>) -> i32 {
+    let spec = Spec {
+        options: vec![
+            "dataset",
+            "seed",
+            "scale",
+            "bands",
+            "mode",
+            "deltas",
+            "random",
+            "train-epochs",
+        ],
+        flags: vec!["json"],
+    };
+    let a = parse_or_die(rest, &spec);
+    match run_mutate(&a) {
+        Ok((out, identical)) => {
+            println!("{out}");
+            if identical {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("mutate failed: {e:#}");
+            2
+        }
+    }
+}
+
+/// Offline patch-vs-rebuild verification: build a workload, run a delta
+/// sequence through the incremental path, rebuild from scratch, and
+/// demand bit identity. Returns (rendered report, bit-identical?).
+fn run_mutate(a: &Args) -> anyhow::Result<(String, bool)> {
+    use gcn_abft::coordinator::{Clock, MonotonicClock};
+    use gcn_abft::runtime::{mutate, GcnOperands};
+    use gcn_abft::util::rng::Pcg64;
+
+    let name = a.get_str("dataset", "tiny");
+    let dataset =
+        DatasetId::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown dataset: {name}"))?;
+    let err = |e: gcn_abft::util::cli::CliError| anyhow::anyhow!("{e}");
+    let opts = ExperimentOpts {
+        datasets: vec![dataset],
+        seed: a.get_u64("seed", 7).map_err(err)?,
+        scale: a.get_f64("scale", 1.0).map_err(err)?,
+        train_epochs: a.get_usize("train-epochs", 0).map_err(err)?,
+    };
+    let bands = a.get_usize("bands", 2).map_err(err)?.max(1);
+    let mode = a.get_str("mode", "sparse");
+
+    let (graph, model) = report::build_workload(dataset, &opts);
+    let w1 = model.layers[0].weights.clone();
+    let w2 = model.layers[1].weights.clone();
+    let mut ops = match mode.as_str() {
+        "dense" => GcnOperands::dense(
+            graph.features.to_dense(),
+            model.adjacency.to_dense(),
+            w1,
+            w2,
+        )?,
+        "sparse" => GcnOperands::sparse(graph.features.clone(), &model.adjacency, w1, w2, bands)?,
+        other => anyhow::bail!("--mode must be sparse or dense (got {other})"),
+    };
+    let n0 = ops.n_nodes();
+
+    let from_file = match a.get("deltas") {
+        Some(path) => Some(
+            mutate::load_delta_file(std::path::Path::new(path))?
+                .into_iter()
+                .map(|s| s.delta)
+                .collect::<Vec<_>>(),
+        ),
+        None => None,
+    };
+    let count = match &from_file {
+        Some(v) => v.len(),
+        None => a.get_usize("random", 8).map_err(err)?,
+    };
+
+    let clock = MonotonicClock::new();
+    let mut rng = Pcg64::from_seed(opts.seed ^ 0x4D55_5441);
+    let mut apply_secs = 0.0f64;
+    let (mut edges_added, mut edges_removed, mut nodes_added, mut swaps) = (0usize, 0, 0, 0);
+    for i in 0..count {
+        let delta = match &from_file {
+            Some(v) => v[i].clone(),
+            None => mutate::random_delta(
+                &mut rng,
+                ops.n_nodes(),
+                ops.feat_dim(),
+                ops.hidden_dim(),
+                ops.num_classes(),
+            ),
+        };
+        let t0 = clock.now();
+        // gcn-lint: allow(M1, reason="offline patch-vs-rebuild verifier owns these operands; no server attached")
+        let outcome = mutate::apply(&mut ops, &delta)
+            .map_err(|e| anyhow::anyhow!("delta {i} ({}) rejected: {e:#}", delta.kind()))?;
+        apply_secs += clock.now().since(t0).as_secs_f64();
+        edges_added += outcome.edges_added;
+        edges_removed += outcome.edges_removed;
+        nodes_added += outcome.nodes_added;
+        swaps += usize::from(outcome.weights_swapped);
+    }
+
+    let t0 = clock.now();
+    let rebuilt = mutate::rebuild(&ops)?;
+    let rebuild_secs = clock.now().since(t0).as_secs_f64();
+    let verdict = mutate::bit_identical(&ops, &rebuilt);
+
+    if a.has_flag("json") {
+        let j = Json::obj(vec![
+            ("dataset", Json::from(dataset.name())),
+            ("mode", Json::from(mode.clone())),
+            ("bands", Json::from(bands)),
+            ("deltas", Json::from(count)),
+            ("edges_added", Json::from(edges_added)),
+            ("edges_removed", Json::from(edges_removed)),
+            ("nodes_added", Json::from(nodes_added)),
+            ("weight_swaps", Json::from(swaps)),
+            ("nodes_before", Json::from(n0)),
+            ("nodes_after", Json::from(ops.n_nodes())),
+            ("apply_secs", Json::Num(apply_secs)),
+            ("rebuild_secs", Json::Num(rebuild_secs)),
+            ("bit_identical", Json::from(verdict.is_ok())),
+            (
+                "divergence",
+                match &verdict {
+                    Ok(()) => Json::Null,
+                    Err(d) => Json::from(d.clone()),
+                },
+            ),
+        ]);
+        return Ok((j.to_pretty(), verdict.is_ok()));
+    }
+    let mut out = format!(
+        "MUTATE {} ({mode}, {bands} band{}) — {count} deltas: +{edges_added}/-{edges_removed} \
+         edges, +{nodes_added} nodes ({n0} -> {}), {swaps} weight swap{}\n\
+         patch {:.3} ms total ({:.3} ms/delta) vs rebuild {:.3} ms",
+        dataset.name(),
+        if bands == 1 { "" } else { "s" },
+        ops.n_nodes(),
+        if swaps == 1 { "" } else { "s" },
+        apply_secs * 1e3,
+        apply_secs * 1e3 / count.max(1) as f64,
+        rebuild_secs * 1e3,
+    );
+    match &verdict {
+        Ok(()) => out.push_str("\npatch vs rebuild: bit-identical"),
+        Err(d) => out.push_str(&format!("\npatch vs rebuild: DIVERGED — {d}")),
+    }
+    Ok((out, verdict.is_ok()))
+}
+
+fn cmd_report(rest: Vec<String>) -> i32 {
+    let (sub, rest) = match rest.split_first() {
+        Some((s, r)) => (s.clone(), r.to_vec()),
+        None => {
+            eprintln!("report requires a subcommand (bench)");
+            return 2;
+        }
+    };
+    match sub.as_str() {
+        "bench" => {
+            let spec = Spec {
+                options: vec![
+                    "dataset",
+                    "requests",
+                    "seed",
+                    "scale",
+                    "deltas",
+                    "train-epochs",
+                    "out",
+                ],
+                flags: vec!["json"],
+            };
+            let a = parse_or_die(rest, &spec);
+            gcn_abft::report::bench::run_cli(&a)
+        }
+        other => {
+            eprintln!("unknown report subcommand: {other} (expected: bench)");
+            2
         }
     }
 }

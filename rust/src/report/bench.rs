@@ -1,0 +1,327 @@
+//! `gcn-abft report bench` — the machine-readable serving benchmark.
+//!
+//! Aggregates two sweeps into one stable JSON document
+//! (`BENCH_serve.json` at the repo root by default):
+//!
+//! * **serve** — end-to-end coordinator throughput/latency on a static
+//!   graph, on a dynamic graph (scheduled deltas streaming in behind
+//!   the epoch fence), and on the sharded tier with deltas routed to
+//!   the row bands;
+//! * **delta_sweep** — the dynamic-graph cost model: incremental
+//!   patch (`runtime::mutate::apply`) vs from-scratch rebuild
+//!   (`runtime::mutate::rebuild`) over growing delta batches and band
+//!   counts, with the bit-identity verdict recorded per cell.
+//!
+//! The same rows back `bench_coordinator --json`, so the cargo bench
+//! target and the CLI aggregator cannot drift apart.
+
+use crate::coordinator::{
+    serve_synthetic_with_deltas, BatchPolicy, Clock, DeltaSource, MonotonicClock, ServeSummary,
+    ServerConfig, ShardTransportKind,
+};
+use crate::graph::DatasetId;
+use crate::report::{build_workload, ExperimentOpts};
+use crate::runtime::{mutate, ExecMode, GcnOperands, ScheduledDelta};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Context, Result};
+
+/// Schema version of the `BENCH_serve.json` document.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// One serve-sweep row as stable JSON — shared by `report bench` and
+/// `bench_coordinator --json`.
+pub fn serve_row_json(label: &str, shards: usize, transport: &str, s: &ServeSummary) -> Json {
+    let m = &s.metrics;
+    Json::obj(vec![
+        ("label", Json::from(label)),
+        ("dataset", Json::from(s.dataset.clone())),
+        ("shards", Json::from(shards)),
+        ("transport", Json::from(transport)),
+        ("responses", Json::from(s.responses)),
+        ("throughput_rps", Json::Num(m.throughput_rps())),
+        ("p50_ms", Json::Num(m.p50_secs * 1e3)),
+        ("p95_ms", Json::Num(m.p95_secs * 1e3)),
+        ("verify_overhead", Json::Num(m.verify_overhead())),
+        ("epoch", Json::from(m.epoch)),
+        ("deltas_applied", Json::from(m.deltas_applied)),
+        ("delta_failures", Json::from(m.delta_failures)),
+        ("delta_apply_ms", Json::Num(m.delta_apply_secs * 1e3)),
+    ])
+}
+
+/// A reproducible schedule of `count` random deltas spread across the
+/// request stream (one delta after every few requests).
+fn delta_schedule(
+    dataset: DatasetId,
+    opts: &ExperimentOpts,
+    requests: usize,
+    count: usize,
+) -> Result<Vec<ScheduledDelta>> {
+    let (graph, model) = build_workload(dataset, opts);
+    let ops = GcnOperands::sparse(
+        graph.features.clone(),
+        &model.adjacency,
+        model.layers[0].weights.clone(),
+        model.layers[1].weights.clone(),
+        2,
+    )?;
+    // Track the node count a graph following this schedule would have,
+    // so node-referencing deltas stay in range as the graph grows.
+    let mut n = ops.n_nodes();
+    let mut rng = Pcg64::from_seed(opts.seed ^ 0xBE4C_0DE5);
+    let stride = (requests / count.max(1)).max(1);
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let delta = mutate::random_delta(
+            &mut rng,
+            n,
+            ops.feat_dim(),
+            ops.hidden_dim(),
+            ops.num_classes(),
+        );
+        if let mutate::GraphDelta::AddNodes(adds) = &delta {
+            n += adds.len();
+        }
+        out.push(ScheduledDelta {
+            after_request: ((i + 1) * stride) as u64,
+            delta,
+        });
+    }
+    Ok(out)
+}
+
+/// The dynamic-graph cost model: apply `count` random deltas
+/// incrementally, then rebuild once from scratch; report both times
+/// and the bit-identity verdict. One row per band count.
+pub fn delta_sweep(
+    dataset: DatasetId,
+    opts: &ExperimentOpts,
+    bands_list: &[usize],
+    count: usize,
+) -> Result<Vec<Json>> {
+    let (graph, model) = build_workload(dataset, opts);
+    let clock = MonotonicClock::new();
+    let mut rows = Vec::new();
+    for &bands in bands_list {
+        let mut ops = GcnOperands::sparse(
+            graph.features.clone(),
+            &model.adjacency,
+            model.layers[0].weights.clone(),
+            model.layers[1].weights.clone(),
+            bands,
+        )?;
+        let n0 = ops.n_nodes();
+        let mut rng = Pcg64::from_seed(opts.seed ^ 0xD317_A5EE);
+        let mut apply_secs = 0.0f64;
+        for _ in 0..count {
+            let delta = mutate::random_delta(
+                &mut rng,
+                ops.n_nodes(),
+                ops.feat_dim(),
+                ops.hidden_dim(),
+                ops.num_classes(),
+            );
+            let t0 = clock.now();
+            // gcn-lint: allow(M1, reason="the timing sweep owns these operands; it measures the sanctioned primitive itself")
+            mutate::apply(&mut ops, &delta)
+                .map_err(|e| anyhow!("delta rejected during sweep: {e:#}"))?;
+            apply_secs += clock.now().since(t0).as_secs_f64();
+        }
+        let t0 = clock.now();
+        let rebuilt = mutate::rebuild(&ops)?;
+        let rebuild_secs = clock.now().since(t0).as_secs_f64();
+        let identical = mutate::bit_identical(&ops, &rebuilt).is_ok();
+        rows.push(Json::obj(vec![
+            ("dataset", Json::from(dataset.name())),
+            ("bands", Json::from(bands)),
+            ("deltas", Json::from(count)),
+            ("nodes_before", Json::from(n0)),
+            ("nodes_after", Json::from(ops.n_nodes())),
+            ("apply_ms_total", Json::Num(apply_secs * 1e3)),
+            (
+                "apply_ms_per_delta",
+                Json::Num(apply_secs * 1e3 / count.max(1) as f64),
+            ),
+            ("rebuild_ms", Json::Num(rebuild_secs * 1e3)),
+            (
+                "rebuild_over_apply_per_delta",
+                Json::Num(rebuild_secs / (apply_secs / count.max(1) as f64).max(1e-12)),
+            ),
+            ("bit_identical", Json::from(identical)),
+        ]));
+    }
+    Ok(rows)
+}
+
+/// Assemble the full `BENCH_serve.json` document.
+pub fn bench_document(
+    dataset: DatasetId,
+    opts: &ExperimentOpts,
+    requests: usize,
+    delta_count: usize,
+) -> Result<Json> {
+    let base_cfg = |shards: usize| ServerConfig {
+        dataset,
+        seed: opts.seed,
+        scale: opts.scale,
+        train_epochs: opts.train_epochs,
+        mode: ExecMode::Sparse,
+        batch: BatchPolicy {
+            max_batch: 8,
+            ..Default::default()
+        },
+        workers: 2,
+        shards,
+        shard_transport: ShardTransportKind::InProc,
+        ..Default::default()
+    };
+
+    let mut serve_rows = Vec::new();
+    let s = serve_synthetic_with_deltas(&base_cfg(0), requests, DeltaSource::None)?;
+    serve_rows.push(serve_row_json("static", 0, "none", &s));
+
+    let sched = delta_schedule(dataset, opts, requests, delta_count)?;
+    let s = serve_synthetic_with_deltas(
+        &base_cfg(0),
+        requests,
+        DeltaSource::Scheduled(sched.clone()),
+    )?;
+    serve_rows.push(serve_row_json("dynamic", 0, "none", &s));
+
+    let s = serve_synthetic_with_deltas(&base_cfg(2), requests, DeltaSource::Scheduled(sched))?;
+    serve_rows.push(serve_row_json("dynamic-sharded", 2, "inproc", &s));
+
+    let sweep = delta_sweep(dataset, opts, &[1, 2, 4], delta_count.max(4))?;
+
+    Ok(Json::obj(vec![
+        ("type", Json::from("bench_serve")),
+        (
+            "data",
+            Json::obj(vec![
+                ("version", Json::from(BENCH_SCHEMA_VERSION as usize)),
+                ("dataset", Json::from(dataset.name())),
+                ("requests", Json::from(requests)),
+                ("seed", Json::from(opts.seed)),
+                ("scale", Json::Num(opts.scale)),
+                ("serve", Json::Arr(serve_rows)),
+                ("delta_sweep", Json::Arr(sweep)),
+            ]),
+        ),
+    ]))
+}
+
+/// Default output path: `BENCH_serve.json` at the repo root (the
+/// crate's parent directory), falling back to the working directory.
+fn default_out() -> std::path::PathBuf {
+    let crate_root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    match crate_root.parent() {
+        Some(p) if p.is_dir() => p.join("BENCH_serve.json"),
+        _ => std::path::PathBuf::from("BENCH_serve.json"),
+    }
+}
+
+/// `gcn-abft report bench` entry point.
+pub fn run_cli(a: &Args) -> i32 {
+    match run(a) {
+        Ok(msg) => {
+            println!("{msg}");
+            0
+        }
+        Err(e) => {
+            eprintln!("report bench failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn run(a: &Args) -> Result<String> {
+    let name = a.get_str("dataset", "tiny");
+    let dataset = DatasetId::parse(&name).ok_or_else(|| anyhow!("unknown dataset: {name}"))?;
+    let err = |e: crate::util::cli::CliError| anyhow!("{e}");
+    let opts = ExperimentOpts {
+        datasets: vec![dataset],
+        seed: a.get_u64("seed", 7).map_err(err)?,
+        scale: a.get_f64("scale", 1.0).map_err(err)?,
+        train_epochs: a.get_usize("train-epochs", 0).map_err(err)?,
+    };
+    let requests = a.get_usize("requests", 48).map_err(err)?;
+    let delta_count = a.get_usize("deltas", 6).map_err(err)?;
+    let out_path = match a.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_out(),
+    };
+
+    let doc = bench_document(dataset, &opts, requests, delta_count)?;
+    let text = doc.to_pretty();
+    std::fs::write(&out_path, format!("{text}\n"))
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    if a.has_flag("json") {
+        Ok(text)
+    } else {
+        let rows = |key: &str| {
+            doc.get("data")
+                .and_then(|d| d.get(key))
+                .and_then(Json::items)
+                .map(|v| v.len())
+                .unwrap_or(0)
+        };
+        Ok(format!(
+            "wrote {} ({} serve rows, {} delta-sweep rows)",
+            out_path.display(),
+            rows("serve"),
+            rows("delta_sweep"),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> ExperimentOpts {
+        ExperimentOpts {
+            datasets: vec![DatasetId::Tiny],
+            seed: 7,
+            scale: 1.0,
+            train_epochs: 0,
+        }
+    }
+
+    #[test]
+    fn delta_sweep_rows_are_bit_identical() {
+        let rows = delta_sweep(DatasetId::Tiny, &quick_opts(), &[1, 2], 4).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.get("bit_identical"), Some(&Json::Bool(true)));
+            assert!(r.get("apply_ms_total").and_then(Json::as_f64).unwrap() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn bench_document_shape() {
+        let doc = bench_document(DatasetId::Tiny, &quick_opts(), 12, 2).unwrap();
+        assert_eq!(doc.get("type").and_then(Json::as_str), Some("bench_serve"));
+        let data = doc.get("data").unwrap();
+        let serve = data.get("serve").and_then(Json::items).unwrap();
+        assert_eq!(serve.len(), 3);
+        // The dynamic rows actually applied deltas; the static row did not.
+        let applied = |i: usize| {
+            serve[i]
+                .get("deltas_applied")
+                .and_then(Json::as_usize)
+                .unwrap()
+        };
+        assert_eq!(applied(0), 0);
+        assert!(applied(1) > 0, "dynamic row applied no deltas");
+        assert!(applied(2) > 0, "sharded dynamic row applied no deltas");
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_sized() {
+        let sched = delta_schedule(DatasetId::Tiny, &quick_opts(), 48, 6).unwrap();
+        assert_eq!(sched.len(), 6);
+        assert!(sched.windows(2).all(|w| w[0].after_request <= w[1].after_request));
+    }
+}

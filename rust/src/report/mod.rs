@@ -1,6 +1,7 @@
 //! Rendering and orchestration of the paper's evaluation artifacts
 //! (Table I, Table II, Fig. 3).
 
+pub mod bench;
 pub mod experiments;
 pub mod fig3;
 pub mod table;

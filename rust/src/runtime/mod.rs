@@ -15,6 +15,7 @@
 pub mod artifact;
 pub mod backend;
 pub mod client;
+pub mod mutate;
 pub mod operands;
 
 pub use artifact::{Manifest, ModelEntry};
@@ -23,6 +24,9 @@ pub use backend::{
     NativeBanded, NativeDense, Overlay,
 };
 pub use client::{GcnExecutable, GcnOutputs, Runtime};
+pub use mutate::{
+    DeltaOutcome, EpochFence, GraphDelta, NodeAddition, ScheduledDelta,
+};
 pub use operands::{
     CheckState, ExecMode, GcnOperands, Operand, OperandPlan, RowBand, SOperand,
 };

@@ -1,0 +1,924 @@
+//! First-class graph mutation: patch resident [`GcnOperands`] and the
+//! cached offline check state incrementally under a graph delta —
+//! bit-identical to a from-scratch rebuild **by construction** — and
+//! publish each patched operand set to the serving path through an
+//! epoch fence, so detection stays always-on while the graph evolves.
+//!
+//! Why patching can be *exact* (not merely close): every cached
+//! quantity is an order-pinned fold over the stored entries, and f64
+//! addition is deterministic for a fixed operand order. So instead of
+//! the classic subtract-old/add-new update (which changes the fold
+//! order and therefore the bits), each patch *re-runs the same fold
+//! over the same storage in the same order*, touching only the
+//! affected region:
+//!
+//! * `Csr::col_sums_f64` folds `(col_idx, values)` in storage order —
+//!   per column that is row-major order. A band whose rows changed
+//!   re-folds just that band; untouched bands keep their cached `s_c`.
+//! * The global `s_c` of a banded `S` is the element-wise sum of the
+//!   per-band vectors **in band order** ([`SOperand::col_sums_f64`]) —
+//!   exactly what `CheckState::build` computes on a fresh rebuild.
+//! * `x_r1 = H·w_r1` is a per-row-independent fold, so node additions
+//!   append new rows' folds and leave existing entries untouched.
+//! * `h_c1 = eᵀH` folds rows outer, so appending node feature rows
+//!   *continues* the fold — the prefix is already in the accumulator.
+//!
+//! The epoch fence ([`EpochFence`]) is copy-on-write: a delta clones
+//! the resident operands, patches the clone, and publishes it under a
+//! bumped epoch. In-flight batches keep their `Arc` snapshot, so each
+//! batch executes against exactly one graph version (epoch isolation);
+//! the `Scheduler`'s epoch gate (see `coordinator::batcher`) drains
+//! executing batches before shard-resident state is re-shipped.
+//!
+//! Lint rule `M1` (see `gcn-abft analyze`) pins the architecture: this
+//! module is the only sanctioned site of resident operand/check-state
+//! mutation; everything else goes through the fence.
+
+use crate::runtime::operands::{GcnOperands, Operand, SOperand};
+use crate::sparse::Csr;
+use crate::tensor::{ops, Dense};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// One node joining the graph: its feature row plus its incident edges
+/// in the propagation matrix.
+#[derive(Debug, Clone)]
+pub struct NodeAddition {
+    /// Dense feature row, length = `feat_dim` (exact zeros stay
+    /// unstored in the CSR representation).
+    pub features: Vec<f32>,
+    /// The new node's own row of `S`: `(col, weight)` with
+    /// `col < n_old + k` (may reference other nodes added in the same
+    /// delta). Duplicate columns are summed, matching `Csr::from_coo`.
+    pub out_edges: Vec<(usize, f32)>,
+    /// Edges *into* the new node from existing rows: `(row, weight)`
+    /// with `row < n_old` — they land at column `n_old + i` of the
+    /// named row.
+    pub in_edges: Vec<(usize, f32)>,
+}
+
+/// A graph mutation. One delta is one epoch bump.
+#[derive(Debug, Clone)]
+pub enum GraphDelta {
+    /// Set / clear entries of `S` (set semantics: `add` overwrites
+    /// `S[r][c] = w`, last write wins; `remove` clears the entry and is
+    /// a no-op when the entry is already absent).
+    Edges {
+        add: Vec<(usize, usize, f32)>,
+        remove: Vec<(usize, usize)>,
+    },
+    /// Append nodes (rows of `H` and rows+columns of `S`).
+    AddNodes(Vec<NodeAddition>),
+    /// Hot-swap both weight matrices (shape-preserving).
+    SwapWeights { w1: Dense, w2: Dense },
+}
+
+impl GraphDelta {
+    /// Short tag for logs and metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GraphDelta::Edges { .. } => "edges",
+            GraphDelta::AddNodes(_) => "add_nodes",
+            GraphDelta::SwapWeights { .. } => "swap_weights",
+        }
+    }
+}
+
+/// What [`apply`] actually changed — the shard tier uses
+/// `affected_bands`/`resized` to re-ship exactly the bands a delta
+/// touched.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaOutcome {
+    /// Band indices whose resident CSR changed (all bands when the
+    /// graph was resized). Empty for a pure weight swap.
+    pub affected_bands: Vec<usize>,
+    pub nodes_added: usize,
+    pub edges_added: usize,
+    pub edges_removed: usize,
+    pub weights_swapped: bool,
+    /// Node count changed — every band boundary moved, so shard
+    /// transports must re-ship all bands and re-size their outputs.
+    pub resized: bool,
+}
+
+/// Apply one delta to a resident operand set, patching the cached
+/// check state incrementally. The result is bit-identical to
+/// [`rebuild`] of the mutated operands (the property tests pin this
+/// against an independently constructed ground truth as well).
+///
+/// This function is the single sanctioned mutation entry point; the
+/// serving path must go through [`EpochFence::apply`] instead (lint
+/// rule `M1`).
+pub fn apply(ops: &mut GcnOperands, delta: &GraphDelta) -> Result<DeltaOutcome> {
+    match delta {
+        GraphDelta::Edges { add, remove } => apply_edges(ops, add, remove),
+        GraphDelta::AddNodes(adds) => apply_add_nodes(ops, adds),
+        GraphDelta::SwapWeights { w1, w2 } => {
+            ops.swap_weights(w1.clone(), w2.clone())?;
+            Ok(DeltaOutcome {
+                weights_swapped: true,
+                ..DeltaOutcome::default()
+            })
+        }
+    }
+}
+
+fn apply_edges(
+    ops: &mut GcnOperands,
+    add: &[(usize, usize, f32)],
+    remove: &[(usize, usize)],
+) -> Result<DeltaOutcome> {
+    let n = ops.n_nodes();
+    // Per-row change list in application order: Some(w) sets, None
+    // clears. Later changes to the same (row, col) win.
+    let mut by_row: BTreeMap<usize, Vec<(usize, Option<f32>)>> = BTreeMap::new();
+    for &(r, c, w) in add {
+        ensure!(r < n && c < n, "edge ({r},{c}) out of range for {n} nodes");
+        by_row.entry(r).or_default().push((c, Some(w)));
+    }
+    for &(r, c) in remove {
+        ensure!(r < n && c < n, "edge removal ({r},{c}) out of range for {n} nodes");
+        by_row.entry(r).or_default().push((c, None));
+    }
+    let mut affected = Vec::new();
+    match &mut ops.s {
+        SOperand::Dense(d) => {
+            for (&r, changes) in &by_row {
+                for &(c, ch) in changes {
+                    d.set(r, c, ch.unwrap_or(0.0));
+                }
+            }
+            if !by_row.is_empty() {
+                affected.push(0);
+            }
+        }
+        SOperand::Banded(bands) => {
+            for (bi, band) in bands.iter_mut().enumerate() {
+                let lo = band.row0;
+                let hi = band.row0 + band.s.rows();
+                let mut reps: Vec<(usize, Vec<f32>)> = Vec::new();
+                for (&r, changes) in by_row.range(lo..hi) {
+                    // Materialize the current row densely, apply the
+                    // changes in order, and hand it back to
+                    // `with_rows_replaced` — the same storage the
+                    // from-scratch CSR would hold for this row.
+                    let mut row = vec![0f32; n];
+                    for (c, v) in band.s.row_iter(r - lo) {
+                        row[c] = v;
+                    }
+                    for &(c, ch) in changes {
+                        row[c] = ch.unwrap_or(0.0);
+                    }
+                    reps.push((r - lo, row));
+                }
+                if reps.is_empty() {
+                    continue;
+                }
+                let borrowed: Vec<(usize, &[f32])> =
+                    reps.iter().map(|(r, row)| (*r, row.as_slice())).collect();
+                band.s = band.s.with_rows_replaced(&borrowed);
+                // Re-fold only this band's column sums — the same fold
+                // a fresh `SOperand::banded` would run on it.
+                band.s_c = band.s.col_sums_f64();
+                affected.push(bi);
+            }
+        }
+    }
+    // Global s_c = per-band vectors summed in band order (banded) or a
+    // full dense re-fold — exactly what `CheckState::build` computes.
+    ops.check.s_c = ops.s.col_sums_f64();
+    Ok(DeltaOutcome {
+        affected_bands: affected,
+        edges_added: add.len(),
+        edges_removed: remove.len(),
+        ..DeltaOutcome::default()
+    })
+}
+
+fn apply_add_nodes(ops: &mut GcnOperands, adds: &[NodeAddition]) -> Result<DeltaOutcome> {
+    if adds.is_empty() {
+        return Ok(DeltaOutcome::default());
+    }
+    let n_old = ops.n_nodes();
+    let k = adds.len();
+    let n_new = n_old + k;
+    let f_dim = ops.feat_dim();
+    for (i, a) in adds.iter().enumerate() {
+        ensure!(
+            a.features.len() == f_dim,
+            "added node {i}: feature row len {} != feat dim {f_dim}",
+            a.features.len()
+        );
+        for &(c, _) in &a.out_edges {
+            ensure!(c < n_new, "added node {i}: out-edge col {c} out of range for {n_new} nodes");
+        }
+        for &(r, _) in &a.in_edges {
+            ensure!(r < n_old, "added node {i}: in-edge row {r} must name an existing node (< {n_old})");
+        }
+    }
+    let mut edges_added = 0usize;
+
+    // --- S: widen columns, patch in-edge rows, append out-edge rows.
+    match &ops.s {
+        SOperand::Banded(bands) => {
+            let nbands = bands.len();
+            let full = ops.s.to_csr(); // vstack of the bands — the exact original arrays
+            let wide = match full.with_cols(n_new) {
+                Ok(w) => w,
+                Err(e) => bail!("widening S: {e}"),
+            };
+            let mut by_row: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
+            for (i, a) in adds.iter().enumerate() {
+                for &(r, w) in &a.in_edges {
+                    by_row.entry(r).or_default().push((n_old + i, w));
+                }
+                edges_added += a.in_edges.len() + a.out_edges.len();
+            }
+            let mut reps: Vec<(usize, Vec<f32>)> = Vec::new();
+            for (&r, sets) in &by_row {
+                let mut row = vec![0f32; n_new];
+                for (c, v) in wide.row_iter(r) {
+                    row[c] = v;
+                }
+                for &(c, w) in sets {
+                    row[c] = w;
+                }
+                reps.push((r, row));
+            }
+            let borrowed: Vec<(usize, &[f32])> =
+                reps.iter().map(|(r, row)| (*r, row.as_slice())).collect();
+            let patched = wide.with_rows_replaced(&borrowed);
+            let mut coo = Vec::new();
+            for (i, a) in adds.iter().enumerate() {
+                for &(c, w) in &a.out_edges {
+                    coo.push((i, c, w));
+                }
+            }
+            let new_rows = Csr::from_coo(k, n_new, coo);
+            let stacked = Csr::vstack(&[&patched, &new_rows]);
+            // Keep the *current* band count: the shard tier's band ↔
+            // worker mapping is immutable while serving. The partition
+            // arithmetic (`row_band_bounds`) re-balances the grown row
+            // range exactly as a from-scratch `banded` call would.
+            ops.s = SOperand::banded(&stacked, nbands);
+        }
+        SOperand::Dense(d) => {
+            let mut grown = Dense::zeros(n_new, n_new);
+            for r in 0..n_old {
+                grown.row_mut(r)[..n_old].copy_from_slice(d.row(r));
+            }
+            for (i, a) in adds.iter().enumerate() {
+                for &(r, w) in &a.in_edges {
+                    grown.set(r, n_old + i, w);
+                }
+                for &(c, w) in &a.out_edges {
+                    // Duplicate columns sum, matching `Csr::from_coo`.
+                    grown.set(n_old + i, c, grown.get(n_old + i, c) + w);
+                }
+                edges_added += a.in_edges.len() + a.out_edges.len();
+            }
+            ops.s = SOperand::Dense(grown);
+        }
+    }
+
+    // --- Features: append the new rows; x_r1 appends the new rows'
+    // folds; h_c1 continues its rows-outer fold with the new rows.
+    match &mut ops.features {
+        Operand::Sparse(h) => {
+            let mut coo = Vec::new();
+            for (i, a) in adds.iter().enumerate() {
+                for (c, &v) in a.features.iter().enumerate() {
+                    coo.push((i, c, v)); // from_coo drops exact zeros
+                }
+            }
+            let new_h = Csr::from_coo(k, f_dim, coo);
+            ops.check.x_r1.extend(new_h.matvec(&ops.check.w_r1));
+            for r in 0..k {
+                for (c, v) in new_h.row_iter(r) {
+                    ops.check.h_c1[c] += v as f64;
+                }
+            }
+            let grown = Csr::vstack(&[&*h, &new_h]);
+            *h = grown;
+        }
+        Operand::Dense(d) => {
+            let mut block = Vec::with_capacity(k * f_dim);
+            for a in adds {
+                block.extend_from_slice(&a.features);
+            }
+            let new_h = Dense::from_vec(k, f_dim, block);
+            ops.check.x_r1.extend(ops::matvec_f64(&new_h, &ops.check.w_r1));
+            for r in 0..k {
+                for (a, &x) in ops.check.h_c1.iter_mut().zip(new_h.row(r)) {
+                    *a += x as f64;
+                }
+            }
+            let mut grown = d.clone();
+            for r in 0..k {
+                grown = grown.with_appended_row(new_h.row(r));
+            }
+            *d = grown;
+        }
+    }
+
+    // Every band boundary moved, so s_c is re-folded band by band
+    // inside `banded` above; the global vector sums them in band order.
+    ops.check.s_c = ops.s.col_sums_f64();
+    Ok(DeltaOutcome {
+        affected_bands: (0..ops.band_count()).collect(),
+        nodes_added: k,
+        edges_added,
+        resized: true,
+        ..DeltaOutcome::default()
+    })
+}
+
+/// From-scratch rebuild of every derived quantity (band partition,
+/// per-band and global `s_c`, `w_r`, `x_r1`, `h_c1`) from the raw
+/// matrices of `ops` — the reference an incremental [`apply`] must be
+/// bit-identical to.
+pub fn rebuild(ops: &GcnOperands) -> Result<GcnOperands> {
+    let s = match &ops.s {
+        SOperand::Dense(d) => SOperand::Dense(d.clone()),
+        SOperand::Banded(bands) => SOperand::banded(&ops.s.to_csr(), bands.len()),
+    };
+    GcnOperands::from_parts(ops.features.clone(), s, ops.w1.clone(), ops.w2.clone())
+}
+
+/// Compare two operand sets for *bit* identity — every float via
+/// `to_bits`, every index array verbatim. Returns the first divergence
+/// as an error string.
+pub fn bit_identical(a: &GcnOperands, b: &GcnOperands) -> Result<(), String> {
+    fn f32s(tag: &str, a: &[f32], b: &[f32]) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("{tag}: len {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{tag}[{i}]: {x} vs {y} (bits differ)"));
+            }
+        }
+        Ok(())
+    }
+    fn f64s(tag: &str, a: &[f64], b: &[f64]) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("{tag}: len {} vs {}", a.len(), b.len()));
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("{tag}[{i}]: {x} vs {y} (bits differ)"));
+            }
+        }
+        Ok(())
+    }
+    fn csr_eq(tag: &str, a: &Csr, b: &Csr) -> Result<(), String> {
+        if a.shape() != b.shape() {
+            return Err(format!("{tag}: shape {:?} vs {:?}", a.shape(), b.shape()));
+        }
+        if a.row_ptr() != b.row_ptr() {
+            return Err(format!("{tag}: row_ptr differs"));
+        }
+        if a.col_idx() != b.col_idx() {
+            return Err(format!("{tag}: col_idx differs"));
+        }
+        f32s(&format!("{tag}.values"), a.values(), b.values())
+    }
+    fn dense_eq(tag: &str, a: &Dense, b: &Dense) -> Result<(), String> {
+        if a.shape() != b.shape() {
+            return Err(format!("{tag}: shape {:?} vs {:?}", a.shape(), b.shape()));
+        }
+        f32s(&format!("{tag}.data"), a.data(), b.data())
+    }
+
+    match (&a.features, &b.features) {
+        (Operand::Dense(x), Operand::Dense(y)) => dense_eq("features", x, y)?,
+        (Operand::Sparse(x), Operand::Sparse(y)) => csr_eq("features", x, y)?,
+        _ => return Err("features: representation differs".into()),
+    }
+    match (&a.s, &b.s) {
+        (SOperand::Dense(x), SOperand::Dense(y)) => dense_eq("S", x, y)?,
+        (SOperand::Banded(x), SOperand::Banded(y)) => {
+            if x.len() != y.len() {
+                return Err(format!("S: band count {} vs {}", x.len(), y.len()));
+            }
+            for (i, (ba, bb)) in x.iter().zip(y).enumerate() {
+                if ba.row0 != bb.row0 {
+                    return Err(format!("S band {i}: row0 {} vs {}", ba.row0, bb.row0));
+                }
+                csr_eq(&format!("S band {i}"), &ba.s, &bb.s)?;
+                f64s(&format!("S band {i}.s_c"), &ba.s_c, &bb.s_c)?;
+            }
+        }
+        _ => return Err("S: representation differs".into()),
+    }
+    dense_eq("w1", &a.w1, &b.w1)?;
+    dense_eq("w2", &a.w2, &b.w2)?;
+    f64s("check.s_c", &a.check.s_c, &b.check.s_c)?;
+    f32s("check.w_r1", &a.check.w_r1, &b.check.w_r1)?;
+    f32s("check.w_r2", &a.check.w_r2, &b.check.w_r2)?;
+    f32s("check.x_r1", &a.check.x_r1, &b.check.x_r1)?;
+    f64s("check.h_c1", &a.check.h_c1, &b.check.h_c1)?;
+    Ok(())
+}
+
+/// The epoch fence: copy-on-write publication of operand versions. The
+/// serving path snapshots `(epoch, Arc<ops>)` per batch; a delta
+/// patches a clone and publishes it under the next epoch. Snapshots
+/// are never mutated, so an in-flight batch is isolated from every
+/// later delta by construction.
+pub struct EpochFence {
+    inner: RwLock<(u64, Arc<GcnOperands>)>,
+}
+
+impl EpochFence {
+    pub fn new(ops: GcnOperands) -> EpochFence {
+        EpochFence {
+            inner: RwLock::new((0, Arc::new(ops))),
+        }
+    }
+
+    /// The current `(epoch, operands)` pair. Cheap: bumps an Arc.
+    pub fn snapshot(&self) -> (u64, Arc<GcnOperands>) {
+        let g = self.inner.read().unwrap_or_else(|p| p.into_inner());
+        (g.0, g.1.clone())
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.inner.read().unwrap_or_else(|p| p.into_inner()).0
+    }
+
+    /// Apply a delta behind the fence: clone-on-write, patch, bump,
+    /// publish. Returns the new epoch, what changed, and the published
+    /// operands (for shard re-shipping). On error nothing is published
+    /// and the epoch does not move.
+    pub fn apply(&self, delta: &GraphDelta) -> Result<(u64, DeltaOutcome, Arc<GcnOperands>)> {
+        self.apply_with(delta, |_, _| Ok(()))
+    }
+
+    /// As [`EpochFence::apply`], running `pre_publish` on the patched
+    /// operands *before* the new epoch becomes visible — the hook for
+    /// shard re-shipping, so a delta the shard tier cannot take is
+    /// rejected whole: fail-stop, epoch unchanged, serving continues on
+    /// the old graph version.
+    pub fn apply_with(
+        &self,
+        delta: &GraphDelta,
+        pre_publish: impl FnOnce(&GcnOperands, &DeltaOutcome) -> Result<()>,
+    ) -> Result<(u64, DeltaOutcome, Arc<GcnOperands>)> {
+        let mut g = self.inner.write().unwrap_or_else(|p| p.into_inner());
+        let mut next = (*g.1).clone();
+        let outcome = apply(&mut next, delta)?;
+        pre_publish(&next, &outcome)?;
+        g.0 += 1;
+        g.1 = Arc::new(next);
+        Ok((g.0, outcome, g.1.clone()))
+    }
+}
+
+/// A delta scheduled against the request stream: applied once `k`
+/// requests have been admitted (`serve --deltas`).
+#[derive(Debug, Clone)]
+pub struct ScheduledDelta {
+    pub after_request: u64,
+    pub delta: GraphDelta,
+}
+
+fn edge3(j: &Json) -> Result<(usize, usize, f32)> {
+    let Json::Arr(items) = j else { bail!("edge must be [row, col, weight]") };
+    match items.as_slice() {
+        [r, c, w] => match (r.as_usize(), c.as_usize(), w.as_f64()) {
+            (Some(r), Some(c), Some(w)) => Ok((r, c, w as f32)),
+            _ => bail!("edge must be [row, col, weight] with numeric entries"),
+        },
+        _ => bail!("edge must be [row, col, weight]"),
+    }
+}
+
+fn edge2(j: &Json) -> Result<(usize, usize)> {
+    let Json::Arr(items) = j else { bail!("edge removal must be [row, col]") };
+    match items.as_slice() {
+        [r, c] => match (r.as_usize(), c.as_usize()) {
+            (Some(r), Some(c)) => Ok((r, c)),
+            _ => bail!("edge removal must be [row, col] with integer entries"),
+        },
+        _ => bail!("edge removal must be [row, col]"),
+    }
+}
+
+fn pair(j: &Json, what: &str) -> Result<(usize, f32)> {
+    let Json::Arr(items) = j else { bail!("{what} must be [index, weight]") };
+    match items.as_slice() {
+        [i, w] => match (i.as_usize(), w.as_f64()) {
+            (Some(i), Some(w)) => Ok((i, w as f32)),
+            _ => bail!("{what} must be [index, weight] with numeric entries"),
+        },
+        _ => bail!("{what} must be [index, weight]"),
+    }
+}
+
+/// Parse one delta from its JSON object form (one JSONL line of a
+/// `--deltas` file, `after_request` key included):
+///
+/// ```text
+/// {"after_request": 3, "add_edges": [[r,c,w],…], "remove_edges": [[r,c],…]}
+/// {"after_request": 5, "add_nodes": [{"features": [..], "out_edges": [[c,w],…], "in_edges": [[r,w],…]}]}
+/// ```
+///
+/// Weight swaps carry whole matrices and are not expressible in the
+/// stream format; use `gcn-abft mutate` or the in-process API.
+pub fn parse_scheduled(j: &Json) -> Result<ScheduledDelta> {
+    let after_request = j
+        .get("after_request")
+        .and_then(|v| v.as_usize())
+        .map(|v| v as u64)
+        .unwrap_or(0);
+    let has_edges = j.get("add_edges").is_some() || j.get("remove_edges").is_some();
+    let has_nodes = j.get("add_nodes").is_some();
+    let delta = match (has_edges, has_nodes) {
+        (_, false) => {
+            // Edge delta (possibly empty — a pure epoch bump).
+            let mut add = Vec::new();
+            let mut remove = Vec::new();
+            if let Some(Json::Arr(items)) = j.get("add_edges") {
+                for it in items {
+                    add.push(edge3(it)?);
+                }
+            }
+            if let Some(Json::Arr(items)) = j.get("remove_edges") {
+                for it in items {
+                    remove.push(edge2(it)?);
+                }
+            }
+            GraphDelta::Edges { add, remove }
+        }
+        (false, true) => {
+            let Some(Json::Arr(items)) = j.get("add_nodes") else {
+                bail!("add_nodes must be an array of node objects");
+            };
+            let mut adds = Vec::new();
+            for it in items {
+                let Some(Json::Arr(feats)) = it.get("features") else {
+                    bail!("add_nodes entry needs a numeric \"features\" array");
+                };
+                let mut features = Vec::with_capacity(feats.len());
+                for f in feats {
+                    match f.as_f64() {
+                        Some(v) => features.push(v as f32),
+                        None => bail!("features entries must be numeric"),
+                    }
+                }
+                let mut out_edges = Vec::new();
+                if let Some(Json::Arr(es)) = it.get("out_edges") {
+                    for e in es {
+                        out_edges.push(pair(e, "out_edges entry")?);
+                    }
+                }
+                let mut in_edges = Vec::new();
+                if let Some(Json::Arr(es)) = it.get("in_edges") {
+                    for e in es {
+                        in_edges.push(pair(e, "in_edges entry")?);
+                    }
+                }
+                adds.push(NodeAddition {
+                    features,
+                    out_edges,
+                    in_edges,
+                });
+            }
+            GraphDelta::AddNodes(adds)
+        }
+        (true, true) => bail!("a delta line carries either edges or add_nodes, not both"),
+    };
+    Ok(ScheduledDelta {
+        after_request,
+        delta,
+    })
+}
+
+/// Load a JSONL delta file: one delta object per line; blank lines and
+/// `#` comment lines are skipped. Returned sorted by `after_request`
+/// (stable, so same-trigger deltas keep file order).
+pub fn load_delta_file(path: &std::path::Path) -> Result<Vec<ScheduledDelta>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading deltas {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => bail!("deltas line {}: {e}", ln + 1),
+        };
+        out.push(parse_scheduled(&j).map_err(|e| anyhow::anyhow!("deltas line {}: {e}", ln + 1))?);
+    }
+    out.sort_by_key(|d| d.after_request);
+    Ok(out)
+}
+
+/// Generate a random delta against a graph with `n` nodes, `feat_dim`
+/// features, `hidden`-wide W1 and `classes`-wide W2 — shared by the
+/// property tests, `gcn-abft mutate --random`, and the bench sweep so
+/// they all draw from the same delta distribution.
+pub fn random_delta(
+    rng: &mut Pcg64,
+    n: usize,
+    feat_dim: usize,
+    hidden: usize,
+    classes: usize,
+) -> GraphDelta {
+    match rng.gen_index(5) {
+        // Edge churn is the common case.
+        0 | 1 | 2 => {
+            let n_add = 1 + rng.gen_index(4);
+            let n_rm = rng.gen_index(3);
+            let add = (0..n_add)
+                .map(|_| {
+                    (
+                        rng.gen_index(n),
+                        rng.gen_index(n),
+                        rng.gen_f32_range(0.05, 1.0),
+                    )
+                })
+                .collect();
+            let remove = (0..n_rm)
+                .map(|_| (rng.gen_index(n), rng.gen_index(n)))
+                .collect();
+            GraphDelta::Edges { add, remove }
+        }
+        3 => {
+            let k = 1 + rng.gen_index(2);
+            let adds = (0..k)
+                .map(|_| {
+                    let features = (0..feat_dim)
+                        .map(|_| {
+                            if rng.gen_bool(0.3) {
+                                rng.gen_f32_range(-1.0, 1.0)
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect();
+                    let out_edges = (0..1 + rng.gen_index(3))
+                        .map(|_| (rng.gen_index(n + k), rng.gen_f32_range(0.05, 1.0)))
+                        .collect();
+                    let in_edges = (0..rng.gen_index(3))
+                        .map(|_| (rng.gen_index(n), rng.gen_f32_range(0.05, 1.0)))
+                        .collect();
+                    NodeAddition {
+                        features,
+                        out_edges,
+                        in_edges,
+                    }
+                })
+                .collect();
+            GraphDelta::AddNodes(adds)
+        }
+        _ => GraphDelta::SwapWeights {
+            w1: Dense::from_fn(feat_dim, hidden, |_, _| rng.gen_f32_range(-0.5, 0.5)),
+            w2: Dense::from_fn(hidden, classes, |_, _| rng.gen_f32_range(-0.5, 0.5)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DatasetId;
+
+    fn sparse_ops(bands: usize) -> GcnOperands {
+        let g = DatasetId::Tiny.build(11);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 12);
+        let w1 = m.layers[0].weights.clone();
+        let w2 = m.layers[1].weights.clone();
+        GcnOperands::sparse(g.features, &m.adjacency, w1, w2, bands).unwrap()
+    }
+
+    fn dense_ops() -> GcnOperands {
+        let g = DatasetId::Tiny.build(11);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 12);
+        let w1 = m.layers[0].weights.clone();
+        let w2 = m.layers[1].weights.clone();
+        GcnOperands::dense(
+            g.features.to_dense(),
+            m.adjacency.to_dense(),
+            w1,
+            w2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn edge_patch_matches_rebuild_banded() {
+        let mut ops = sparse_ops(3);
+        let n = ops.n_nodes();
+        let delta = GraphDelta::Edges {
+            add: vec![(0, n - 1, 0.7), (n - 1, 0, 0.3), (2, 2, 1.1)],
+            remove: vec![(1, 1), (0, 0)],
+        };
+        let out = apply(&mut ops, &delta).unwrap();
+        assert!(!out.affected_bands.is_empty());
+        assert!(!out.resized);
+        let reference = rebuild(&ops).unwrap();
+        bit_identical(&ops, &reference).unwrap();
+    }
+
+    #[test]
+    fn edge_patch_matches_rebuild_dense() {
+        let mut ops = dense_ops();
+        let delta = GraphDelta::Edges {
+            add: vec![(3, 5, 0.9)],
+            remove: vec![(0, 1)],
+        };
+        apply(&mut ops, &delta).unwrap();
+        let reference = rebuild(&ops).unwrap();
+        bit_identical(&ops, &reference).unwrap();
+    }
+
+    #[test]
+    fn node_add_matches_rebuild() {
+        for bands in [1, 2, 3] {
+            let mut ops = sparse_ops(bands);
+            let n = ops.n_nodes();
+            let f = ops.feat_dim();
+            let mut features = vec![0f32; f];
+            features[0] = 1.5;
+            features[f - 1] = -0.25;
+            let delta = GraphDelta::AddNodes(vec![NodeAddition {
+                features,
+                out_edges: vec![(0, 0.4), (n, 1.0)], // includes a self-loop on the new node
+                in_edges: vec![(1, 0.6)],
+            }]);
+            let out = apply(&mut ops, &delta).unwrap();
+            assert!(out.resized);
+            assert_eq!(ops.n_nodes(), n + 1);
+            assert_eq!(ops.check.x_r1.len(), n + 1);
+            assert_eq!(ops.check.s_c.len(), n + 1);
+            let reference = rebuild(&ops).unwrap();
+            bit_identical(&ops, &reference).unwrap();
+        }
+    }
+
+    #[test]
+    fn node_add_matches_rebuild_dense() {
+        let mut ops = dense_ops();
+        let n = ops.n_nodes();
+        let f = ops.feat_dim();
+        let delta = GraphDelta::AddNodes(vec![NodeAddition {
+            features: (0..f).map(|i| i as f32 * 0.1).collect(),
+            out_edges: vec![(2, 0.5)],
+            in_edges: vec![(0, 0.8)],
+        }]);
+        apply(&mut ops, &delta).unwrap();
+        assert_eq!(ops.n_nodes(), n + 1);
+        let reference = rebuild(&ops).unwrap();
+        bit_identical(&ops, &reference).unwrap();
+    }
+
+    #[test]
+    fn swap_weights_via_delta() {
+        let mut ops = sparse_ops(2);
+        let w1 = crate::tensor::ops::scale(&ops.w1, 2.0);
+        let w2 = crate::tensor::ops::scale(&ops.w2, 0.5);
+        let out = apply(&mut ops, &GraphDelta::SwapWeights { w1, w2 }).unwrap();
+        assert!(out.weights_swapped);
+        assert!(out.affected_bands.is_empty());
+        let reference = rebuild(&ops).unwrap();
+        bit_identical(&ops, &reference).unwrap();
+    }
+
+    #[test]
+    fn invalid_deltas_rejected() {
+        let mut ops = sparse_ops(2);
+        let n = ops.n_nodes();
+        assert!(apply(
+            &mut ops,
+            &GraphDelta::Edges {
+                add: vec![(n, 0, 1.0)],
+                remove: vec![],
+            }
+        )
+        .is_err());
+        assert!(apply(
+            &mut ops,
+            &GraphDelta::AddNodes(vec![NodeAddition {
+                features: vec![0.0; ops.feat_dim() + 1],
+                out_edges: vec![],
+                in_edges: vec![],
+            }])
+        )
+        .is_err());
+        // in_edges must name existing nodes.
+        assert!(apply(
+            &mut ops,
+            &GraphDelta::AddNodes(vec![NodeAddition {
+                features: vec![0.0; ops.feat_dim()],
+                out_edges: vec![],
+                in_edges: vec![(n, 1.0)],
+            }])
+        )
+        .is_err());
+        // Rejected deltas leave the operands consistent.
+        let reference = rebuild(&ops).unwrap();
+        bit_identical(&ops, &reference).unwrap();
+    }
+
+    #[test]
+    fn fence_bumps_and_isolates() {
+        let fence = EpochFence::new(sparse_ops(2));
+        let (e0, snap0) = fence.snapshot();
+        assert_eq!(e0, 0);
+        let (e1, out, snap1) = fence
+            .apply(&GraphDelta::Edges {
+                add: vec![(0, 1, 0.9)],
+                remove: vec![],
+            })
+            .unwrap();
+        assert_eq!(e1, 1);
+        assert_eq!(out.edges_added, 1);
+        // The old snapshot is untouched (epoch isolation).
+        assert!(bit_identical(&snap0, &snap1).is_err());
+        bit_identical(&snap0, &rebuild(&snap0).unwrap()).unwrap();
+        assert_eq!(fence.epoch(), 1);
+        // A failing delta does not move the epoch.
+        let n = fence.snapshot().1.n_nodes();
+        assert!(fence
+            .apply(&GraphDelta::Edges {
+                add: vec![(n, n, 1.0)],
+                remove: vec![],
+            })
+            .is_err());
+        assert_eq!(fence.epoch(), 1);
+    }
+
+    #[test]
+    fn parse_and_load_deltas() {
+        let j = Json::parse(
+            r#"{"after_request": 3, "add_edges": [[0, 1, 0.5]], "remove_edges": [[2, 2]]}"#,
+        )
+        .unwrap();
+        let d = parse_scheduled(&j).unwrap();
+        assert_eq!(d.after_request, 3);
+        match d.delta {
+            GraphDelta::Edges { add, remove } => {
+                assert_eq!(add, vec![(0, 1, 0.5)]);
+                assert_eq!(remove, vec![(2, 2)]);
+            }
+            _ => panic!("expected edges"),
+        }
+        let j = Json::parse(
+            r#"{"add_nodes": [{"features": [1.0, 0.0], "out_edges": [[0, 0.5]], "in_edges": [[1, 0.25]]}]}"#,
+        )
+        .unwrap();
+        let d = parse_scheduled(&j).unwrap();
+        assert_eq!(d.after_request, 0);
+        match d.delta {
+            GraphDelta::AddNodes(adds) => {
+                assert_eq!(adds.len(), 1);
+                assert_eq!(adds[0].features, vec![1.0, 0.0]);
+                assert_eq!(adds[0].out_edges, vec![(0, 0.5)]);
+                assert_eq!(adds[0].in_edges, vec![(1, 0.25)]);
+            }
+            _ => panic!("expected add_nodes"),
+        }
+        // Mixed kinds are rejected.
+        let j = Json::parse(r#"{"add_edges": [], "add_nodes": []}"#).unwrap();
+        assert!(parse_scheduled(&j).is_err());
+
+        let dir = std::env::temp_dir().join(format!("gcn-abft-deltas-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.jsonl");
+        std::fs::write(
+            &path,
+            "# comment\n{\"after_request\": 9, \"add_edges\": [[1,1,1.0]]}\n\n{\"after_request\": 2, \"add_edges\": [[0,0,1.0]]}\n",
+        )
+        .unwrap();
+        let ds = load_delta_file(&path).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].after_request, 2, "sorted by trigger");
+        assert_eq!(ds[1].after_request, 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn random_delta_sequences_stay_rebuild_identical() {
+        let mut rng = Pcg64::from_seed(0xDE17A);
+        let mut ops = sparse_ops(3);
+        for _ in 0..12 {
+            let d = random_delta(
+                &mut rng,
+                ops.n_nodes(),
+                ops.feat_dim(),
+                ops.hidden_dim(),
+                ops.num_classes(),
+            );
+            apply(&mut ops, &d).unwrap();
+        }
+        let reference = rebuild(&ops).unwrap();
+        bit_identical(&ops, &reference).unwrap();
+    }
+}

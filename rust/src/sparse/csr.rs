@@ -359,6 +359,28 @@ impl Csr {
         }
     }
 
+    /// A copy of the matrix with the column count widened to `cols`.
+    /// The stored arrays are unchanged — every existing column index
+    /// stays valid because widening only admits new, still-empty
+    /// columns — so the copy is bit-identical on the shared range.
+    /// Shrinking would need a validity scan over `col_idx` and has no
+    /// caller (node removal is out of scope), so it is refused.
+    pub fn with_cols(&self, cols: usize) -> Result<Csr, String> {
+        if cols < self.cols {
+            return Err(format!(
+                "cannot shrink column count {} -> {cols}",
+                self.cols
+            ));
+        }
+        Ok(Csr {
+            rows: self.rows,
+            cols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            values: self.values.clone(),
+        })
+    }
+
     /// Columns that contain no nonzero at all — the degenerate case in
     /// which GCN-ABFT can miss a phase-1 fault (§III: an all-zero column of
     /// `S` nullifies any fault in the corresponding row of `HW`).
@@ -530,6 +552,23 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn row_band_out_of_range_panics() {
         sample().row_band(1, 4);
+    }
+
+    #[test]
+    fn with_cols_widens_and_refuses_shrink() {
+        let m = sample();
+        let wide = m.with_cols(5).unwrap();
+        assert_eq!(wide.shape(), (3, 5));
+        assert_eq!(wide.nnz(), m.nnz());
+        assert_eq!(wide.row_ptr(), m.row_ptr());
+        assert_eq!(wide.col_idx(), m.col_idx());
+        assert_eq!(wide.values(), m.values());
+        // Same width is the identity.
+        assert_eq!(m.with_cols(3).unwrap(), m);
+        // Shrinking is refused (would need a col_idx validity scan).
+        assert!(m.with_cols(2).is_err());
+        // Widened columns are empty.
+        assert_eq!(wide.zero_columns(), vec![3, 4]);
     }
 
     #[test]

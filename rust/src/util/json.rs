@@ -218,6 +218,14 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Array element access.
+    pub fn items(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
 }
 
 struct Parser<'a> {

@@ -25,7 +25,8 @@ use gcn_abft::coordinator::{
 use gcn_abft::gcn::GcnModel;
 use gcn_abft::graph::DatasetId;
 use gcn_abft::runtime::{
-    ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs, NativeBanded, NativeDense, SOperand,
+    mutate, ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs, NativeBanded, NativeDense,
+    SOperand,
 };
 use gcn_abft::util::rng::Pcg64;
 
@@ -230,6 +231,102 @@ fn corrupted_band_s_c_alarms_on_the_banded_backend() {
             "{scheme:?}: corrupted band s_c must alarm"
         );
     }
+}
+
+#[test]
+fn campaign_bit_flips_in_incrementally_patched_state_are_fail_stop() {
+    // The dynamic-graph path (runtime::mutate) patches `s_c`, the
+    // per-band `s_c`, and `x_r1` in place instead of rebuilding them;
+    // the fail-stop story must survive that. Evolve a banded operand
+    // set through a random delta sequence, then run the same flip
+    // campaign over the *patched* check state: corruption still never
+    // reaches the logits, alarms are still persistent, and both
+    // detected and benign outcomes still occur.
+    let mut base = banded_ops(2);
+    let mut rng = Pcg64::from_seed(0xD17F_11F5);
+    for step in 0..6 {
+        let delta = mutate::random_delta(
+            &mut rng,
+            base.n_nodes(),
+            base.feat_dim(),
+            base.hidden_dim(),
+            base.num_classes(),
+        );
+        if let Err(e) = mutate::apply(&mut base, &delta) {
+            panic!("delta {step} ({}) rejected: {e:#}", delta.kind());
+        }
+    }
+    // The campaign baseline really is incrementally patched state, not
+    // something a rebuild would fix up silently.
+    mutate::bit_identical(&base, &mutate::rebuild(&base).unwrap())
+        .expect("patched operands must match a rebuild before the campaign");
+    let n = base.n_nodes();
+
+    let mut clean = Vec::new();
+    for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+        let out = NativeBanded::new(2, scheme).run(&base, &[]).unwrap();
+        assert!(
+            ServePolicy::default().verify(&out).ok,
+            "fault-free patched baseline alarmed ({scheme:?})"
+        );
+        clean.push(logits_bits(&out));
+    }
+
+    let mut detected = 0usize;
+    let mut benign = 0usize;
+    for _trial in 0..64 {
+        let mut ops = base.clone();
+        match rng.gen_index(3) {
+            0 => flip64(
+                &mut ops.check.s_c[rng.gen_index(n)],
+                rng.gen_index(64) as u32,
+            ),
+            1 => flip32(
+                &mut ops.check.x_r1[rng.gen_index(n)],
+                rng.gen_index(32) as u32,
+            ),
+            _ => {
+                let SOperand::Banded(bands) = &mut ops.s else {
+                    panic!("banded operands expected");
+                };
+                let band = rng.gen_index(bands.len());
+                let j = rng.gen_index(bands[band].s_c.len());
+                flip64(&mut bands[band].s_c[j], rng.gen_index(64) as u32);
+            }
+        }
+        for (sidx, scheme) in [ChecksumScheme::Fused, ChecksumScheme::Split]
+            .into_iter()
+            .enumerate()
+        {
+            let exe = NativeBanded::new(2, scheme);
+            let out = exe.run(&ops, &[]).unwrap();
+            assert_eq!(
+                logits_bits(&out),
+                clean[sidx],
+                "patched-state corruption must never reach the data path ({scheme:?})"
+            );
+            if ServePolicy::default().verify(&out).ok {
+                benign += 1;
+            } else {
+                let retry = exe.run(&ops, &[]).unwrap();
+                assert!(
+                    !ServePolicy::default().verify(&retry).ok,
+                    "a patched-state alarm must persist across retries ({scheme:?})"
+                );
+                detected += 1;
+            }
+        }
+    }
+    assert!(detected > 0, "no patched-state corruption was ever detected");
+    assert!(
+        benign > 0,
+        "every patched-state flip alarmed — tolerance model is off"
+    );
+    println!(
+        "patched-state campaign: {detected} detected (persistent false alarms), \
+         {benign} benign of {} scheme-trials",
+        detected + benign
+    );
 }
 
 #[test]

@@ -1,0 +1,412 @@
+//! Property: **incremental graph mutation is exact.** Applying a random
+//! delta sequence through `runtime::mutate::apply` leaves the operand
+//! set — raw matrices, band partition, and every cached checksum vector
+//! (`s_c`, per-band `s_c`, `w_r`, `x_r1`, `h_c1`) — **bit-identical**
+//! to a from-scratch rebuild of the mutated graph, on dense and CSR
+//! representations alike. Fused and split forwards over the patched
+//! operands match the rebuilt operands bit for bit, raise no serving
+//! alarm, and the f64 engine stays quiet at all four paper thresholds.
+//!
+//! Plus the shard tier: routing the same deltas to resident row bands
+//! over both transports (`inproc` and one-worker-process-per-band
+//! `proc`) keeps sharded serving bit-identical to unsharded — including
+//! across node additions, where every band boundary moves and the proc
+//! transport re-ships all bands.
+//!
+//! Plus epoch isolation end to end: a delta applied mid-stream never
+//! changes the answer of a request admitted against the previous graph
+//! version — every response stamped epoch 0 is identical to the same
+//! request served by a static-graph run.
+
+// The proc transport runs on Unix domain sockets.
+#![cfg(unix)]
+
+use gcn_abft::abft::{
+    engine::widen, fused_forward_checked, weight_row_sums, CheckPolicy, EngineModel,
+};
+use gcn_abft::coordinator::shard::{
+    InProcTransport, ProcTransport, ShardTransport, ShardedBackend,
+};
+use gcn_abft::coordinator::{
+    run_server, run_server_with_updates, InferenceRequest, InferenceResponse, ModelState,
+    ServePolicy, ServerConfig, VerifyStatus,
+};
+use gcn_abft::gcn::{Activation, GcnModel};
+use gcn_abft::graph::synth::{generate, SynthSpec};
+use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{
+    mutate, ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs, GraphDelta, NativeBanded,
+    NativeDense, Operand,
+};
+use gcn_abft::tensor::NopHook;
+use gcn_abft::util::proptest::{check, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_gcn-abft"))
+}
+
+fn bits(out: &GcnOutputs) -> Vec<u32> {
+    out.logits.data().iter().map(|v| v.to_bits()).collect()
+}
+
+#[derive(Debug, Clone)]
+struct Case {
+    spec: SynthSpec,
+    graph_seed: u64,
+    model_seed: u64,
+    delta_seed: u64,
+    n_deltas: usize,
+    bands: usize,
+}
+
+fn gen_case(rng: &mut Pcg64) -> Case {
+    let n = 16 + rng.gen_index(32);
+    Case {
+        spec: SynthSpec {
+            name: "prop-incr".into(),
+            num_nodes: n,
+            num_edges: 2 * n + rng.gen_index(n),
+            feat_dim: 6 + rng.gen_index(10),
+            feat_nnz: 4 * n,
+            num_classes: 2 + rng.gen_index(4),
+            homophily: 0.8,
+            binary_features: rng.gen_bool(0.5),
+            feature_scale: 1.0,
+        },
+        graph_seed: rng.next_u64(),
+        model_seed: rng.next_u64(),
+        delta_seed: rng.next_u64(),
+        n_deltas: 1 + rng.gen_index(5),
+        bands: 1 + rng.gen_index(3),
+    }
+}
+
+fn build_sparse(case: &Case, bands: usize) -> Result<GcnOperands, String> {
+    let graph = generate(&case.spec, case.graph_seed);
+    let model = GcnModel::two_layer(&graph, 8, case.model_seed);
+    GcnOperands::sparse(
+        graph.features.clone(),
+        &model.adjacency,
+        model.layers[0].weights.clone(),
+        model.layers[1].weights.clone(),
+        bands,
+    )
+    .map_err(|e| format!("sparse operand build: {e}"))
+}
+
+fn build_dense(case: &Case) -> Result<GcnOperands, String> {
+    let graph = generate(&case.spec, case.graph_seed);
+    let model = GcnModel::two_layer(&graph, 8, case.model_seed);
+    GcnOperands::dense(
+        graph.features.to_dense(),
+        model.adjacency.to_dense(),
+        model.layers[0].weights.clone(),
+        model.layers[1].weights.clone(),
+    )
+    .map_err(|e| format!("dense operand build: {e}"))
+}
+
+/// The case's delta sequence. Regenerated from the same seed for every
+/// representation — the node count evolves identically, so the deltas
+/// are identical too.
+fn next_delta(rng: &mut Pcg64, ops: &GcnOperands) -> GraphDelta {
+    mutate::random_delta(
+        rng,
+        ops.n_nodes(),
+        ops.feat_dim(),
+        ops.hidden_dim(),
+        ops.num_classes(),
+    )
+}
+
+/// Forward the operands with both native executables appropriate to
+/// their representation, under both schemes.
+fn forward(ops: &GcnOperands, scheme: ChecksumScheme) -> Result<GcnOutputs, String> {
+    let out = match &ops.features {
+        Operand::Dense(_) => NativeDense::new(2, scheme).run(ops, &[]),
+        Operand::Sparse(_) => NativeBanded::new(2, scheme).run(ops, &[]),
+    };
+    out.map_err(|e| format!("forward ({scheme:?}): {e}"))
+}
+
+#[test]
+fn prop_incremental_patch_is_bit_identical_to_rebuild() {
+    check(
+        &Config {
+            cases: 10,
+            seed: 0x1C4E,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let dense = build_dense(case)?;
+            let sparse = build_sparse(case, case.bands)?;
+            for mut ops in [dense, sparse] {
+                let sparse_rep = matches!(ops.features, Operand::Sparse(_));
+                let mut rng = Pcg64::from_seed(case.delta_seed);
+                for step in 0..case.n_deltas {
+                    let delta = next_delta(&mut rng, &ops);
+                    mutate::apply(&mut ops, &delta)
+                        .map_err(|e| format!("apply step {step}: {e:#}"))?;
+                    // The tentpole invariant, after EVERY step: patched
+                    // state is bit-identical to a from-scratch rebuild.
+                    let rebuilt =
+                        mutate::rebuild(&ops).map_err(|e| format!("rebuild step {step}: {e}"))?;
+                    mutate::bit_identical(&ops, &rebuilt).map_err(|e| {
+                        format!(
+                            "step {step} ({}, sparse={sparse_rep}): patched state diverged \
+                             from rebuild: {e}",
+                            delta.kind()
+                        )
+                    })?;
+                }
+
+                // Forwards over patched vs rebuilt operands: bit-equal
+                // logits and checksum words, zero fault-free alarms.
+                let rebuilt = mutate::rebuild(&ops).map_err(|e| format!("final rebuild: {e}"))?;
+                for scheme in [ChecksumScheme::Fused, ChecksumScheme::Split] {
+                    let a = forward(&ops, scheme)?;
+                    let b = forward(&rebuilt, scheme)?;
+                    if bits(&a) != bits(&b) {
+                        return Err(format!(
+                            "{scheme:?} (sparse={sparse_rep}): patched-operand logits \
+                             diverge from rebuilt-operand logits"
+                        ));
+                    }
+                    if a.predicted
+                        .iter()
+                        .zip(&b.predicted)
+                        .any(|(x, y)| x.to_bits() != y.to_bits())
+                        || a.actual
+                            .iter()
+                            .zip(&b.actual)
+                            .any(|(x, y)| x.to_bits() != y.to_bits())
+                    {
+                        return Err(format!(
+                            "{scheme:?} (sparse={sparse_rep}): checksum words diverge \
+                             between patched and rebuilt operands"
+                        ));
+                    }
+                    let report = ServePolicy::default().verify(&a);
+                    if !report.ok {
+                        return Err(format!(
+                            "{scheme:?} (sparse={sparse_rep}): fault-free forward over \
+                             the mutated graph alarmed: {report:?}"
+                        ));
+                    }
+                }
+
+                // The f64 engine over the mutated graph: zero fault-free
+                // alarms at every paper threshold.
+                if sparse_rep {
+                    let Operand::Sparse(features) = &ops.features else {
+                        unreachable!("sparse_rep checked above");
+                    };
+                    let weights = vec![widen(&ops.w1), widen(&ops.w2)];
+                    let adjacency = ops.s.to_csr();
+                    let em = EngineModel {
+                        s_c: adjacency.col_sums_f64(),
+                        w_r: weight_row_sums(&weights),
+                        adjacency,
+                        weights,
+                        activations: vec![Activation::Relu, Activation::None],
+                    };
+                    let mut nop = NopHook;
+                    let (_, checks) = fused_forward_checked(&em, features, &mut nop);
+                    for &tau in &CheckPolicy::PAPER_THRESHOLDS {
+                        let policy = CheckPolicy::new(tau);
+                        for c in &checks {
+                            if policy.fires(c.predicted, c.actual) {
+                                return Err(format!(
+                                    "fault-free alarm over the mutated graph at \
+                                     tau={tau:.0e}: {c:?}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_shard_tier_serves_deltas_bit_identically_over_both_transports() {
+    check(
+        &Config {
+            cases: 4,
+            seed: 0x5D17,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            for shards in [2usize, 4] {
+                let mut ops = build_sparse(case, shards)?;
+                let inproc =
+                    Arc::new(InProcTransport::new(&ops).map_err(|e| format!("inproc: {e}"))?);
+                let proc = Arc::new(
+                    ProcTransport::spawn(&ops, Some(worker_bin().as_path()))
+                        .map_err(|e| format!("proc spawn: {e}"))?,
+                );
+
+                // Route the delta sequence to the resident bands over
+                // both transports — edge churn patches just the touched
+                // bands; node adds move every band boundary and force a
+                // full re-ship.
+                let mut rng = Pcg64::from_seed(case.delta_seed);
+                for step in 0..case.n_deltas {
+                    let delta = next_delta(&mut rng, &ops);
+                    let outcome = mutate::apply(&mut ops, &delta)
+                        .map_err(|e| format!("apply step {step}: {e:#}"))?;
+                    inproc
+                        .apply_delta(&ops, &outcome)
+                        .map_err(|e| format!("inproc delta step {step}: {e:#}"))?;
+                    proc.apply_delta(&ops, &outcome)
+                        .map_err(|e| format!("proc delta step {step}: {e:#}"))?;
+                }
+
+                let want = forward(&ops, ChecksumScheme::Fused)?;
+                let want_bits = bits(&want);
+                if !ServePolicy::default().verify(&want).ok {
+                    return Err("fault-free unsharded forward alarmed".into());
+                }
+                let mut per_transport = Vec::new();
+                for transport in [
+                    inproc as Arc<dyn ShardTransport>,
+                    proc as Arc<dyn ShardTransport>,
+                ] {
+                    let tname = transport.name();
+                    let exe = ShardedBackend::new(transport, ChecksumScheme::Fused, 2);
+                    let got = exe
+                        .run(&ops, &[])
+                        .map_err(|e| format!("{tname} run after deltas: {e:#}"))?;
+                    if bits(&got) != want_bits {
+                        return Err(format!(
+                            "shards={shards} {tname}: post-delta logits are not \
+                             bit-identical to unsharded"
+                        ));
+                    }
+                    if !ServePolicy::default().verify(&got).ok {
+                        return Err(format!(
+                            "shards={shards} {tname}: fault-free post-delta pass alarmed"
+                        ));
+                    }
+                    per_transport.push(got);
+                }
+                let (a, b) = (&per_transport[0], &per_transport[1]);
+                if a.predicted
+                    .iter()
+                    .zip(&b.predicted)
+                    .any(|(x, y)| x.to_bits() != y.to_bits())
+                    || a.actual
+                        .iter()
+                        .zip(&b.actual)
+                        .any(|(x, y)| x.to_bits() != y.to_bits())
+                {
+                    return Err(format!(
+                        "shards={shards}: proc checksum words diverged from inproc \
+                         after deltas"
+                    ));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+fn collect(rx: std::sync::mpsc::Receiver<InferenceResponse>) -> BTreeMap<u64, InferenceResponse> {
+    let mut out = BTreeMap::new();
+    while let Ok(r) = rx.recv() {
+        out.insert(r.id, r);
+    }
+    out
+}
+
+#[test]
+fn mid_stream_delta_never_changes_an_epoch0_answer() {
+    let cfg = ServerConfig {
+        dataset: DatasetId::Tiny,
+        workers: 1,
+        train_epochs: 2,
+        ..Default::default()
+    };
+    let state = ModelState::build(&cfg).unwrap();
+    let requests: Vec<InferenceRequest> = (0..16u64)
+        .map(|id| InferenceRequest::new(id, vec![(id as usize * 3) % 64], vec![]))
+        .collect();
+
+    // Static reference: the same requests against the unmutated graph.
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    for r in &requests {
+        req_tx.send(r.clone()).unwrap();
+    }
+    drop(req_tx);
+    run_server(&cfg, &state, req_rx, resp_tx).unwrap();
+    let want = collect(resp_rx);
+    assert_eq!(want.len(), 16);
+    assert!(want.values().all(|r| r.epoch == 0 && r.status == VerifyStatus::Clean));
+
+    // Dynamic run: first half, then a delta mid-stream, then the rest.
+    let (req_tx, req_rx) = std::sync::mpsc::channel();
+    let (resp_tx, resp_rx) = std::sync::mpsc::channel();
+    let (delta_tx, delta_rx) = std::sync::mpsc::channel();
+    let metrics = std::thread::scope(|scope| {
+        let server = scope.spawn(|| {
+            run_server_with_updates(&cfg, &state, req_rx, resp_tx, None, Some(delta_rx))
+        });
+        let mut got = BTreeMap::new();
+        for r in &requests[..8] {
+            req_tx.send(r.clone()).unwrap();
+        }
+        while got.len() < 8 {
+            let r = resp_rx.recv().expect("first-half response");
+            got.insert(r.id, r);
+        }
+        delta_tx
+            .send(GraphDelta::Edges {
+                add: vec![(0, 7, 0.35), (7, 0, 0.35)],
+                remove: vec![],
+            })
+            .unwrap();
+        drop(delta_tx);
+        for r in &requests[8..] {
+            req_tx.send(r.clone()).unwrap();
+        }
+        drop(req_tx);
+        while let Ok(r) = resp_rx.recv() {
+            got.insert(r.id, r);
+        }
+        let metrics = server.join().expect("server thread").unwrap();
+        (metrics, got)
+    });
+    let (m, got) = metrics;
+    assert_eq!(got.len(), 16, "every request answered across the delta");
+    assert_eq!(m.deltas_applied, 1, "the mid-stream delta was applied: {m:?}");
+    assert_eq!(m.delta_failures, 0, "{m:?}");
+    assert_eq!(m.epoch, 1, "{m:?}");
+
+    for (id, r) in &got {
+        assert_eq!(r.status, VerifyStatus::Clean, "request {id} not clean: {r:?}");
+        if r.epoch == 0 {
+            // Epoch isolation: an answer computed on graph version 0 is
+            // identical to the static run's answer — the delta that
+            // landed mid-stream never leaked into it.
+            assert_eq!(
+                r.classes, want[id].classes,
+                "epoch-0 answer for request {id} changed under a mid-stream delta"
+            );
+        }
+    }
+    // The first half was answered before the delta was even submitted.
+    for id in 0..8u64 {
+        assert_eq!(got[&id].epoch, 0, "request {id} pre-delta must be epoch 0");
+    }
+}
