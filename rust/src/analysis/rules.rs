@@ -12,6 +12,7 @@
 //! | `F1` | coordinator request paths fail stop (`Failed` responses), never panic |
 //! | `C1` | only scoped threads outside the sanctioned spawn sites — no detached workers |
 //! | `M1` | resident operand/check-state mutation only through `runtime/mutate.rs` — serving paths go through `GraphDelta` + the epoch fence |
+//! | `N1` | raw socket construction only in `coordinator/net.rs` + `coordinator/shard.rs` — one wire path, one frame codec |
 //!
 //! Suppression is inline and *reasoned*:
 //! `// gcn-lint: allow(RULE, reason="…")` on the finding's line or the
@@ -94,6 +95,14 @@ pub const RULES: &[RuleInfo] = &[
                    and runtime/operands.rs; serving paths mutate through \
                    GraphDelta + EpochFence so every patch is epoch-fenced and \
                    bit-identical to a rebuild",
+    },
+    RuleInfo {
+        id: "N1",
+        name: "sockets-only-in-net",
+        contract: "TcpListener/TcpStream/UnixListener/UnixStream construction \
+                   only in coordinator/net.rs and coordinator/shard.rs; every \
+                   byte between coordinator and shard workers goes through the \
+                   shard_proto frame codec",
     },
     RuleInfo {
         id: "LINT",
@@ -182,7 +191,16 @@ fn d1_exempt(path: &str) -> bool {
     ends_with_any(path, &["coordinator/clock.rs"])
 }
 fn d2_scope(path: &str) -> bool {
-    path.contains("/abft/") || path.starts_with("abft/") || path.ends_with("coordinator/shard.rs")
+    path.contains("/abft/")
+        || path.starts_with("abft/")
+        || ends_with_any(
+            path,
+            &[
+                "coordinator/shard.rs",
+                "coordinator/shard_proto.rs",
+                "coordinator/net.rs",
+            ],
+        )
 }
 fn d3_scope(path: &str) -> bool {
     ends_with_any(path, &["abft/checksum.rs", "abft/fused.rs", "abft/split.rs"])
@@ -199,10 +217,21 @@ fn f1_scope(path: &str) -> bool {
         &[
             "coordinator/server.rs",
             "coordinator/shard.rs",
+            "coordinator/shard_proto.rs",
+            "coordinator/net.rs",
+            "coordinator/supervisor.rs",
             "coordinator/batcher.rs",
             "coordinator/mod.rs",
         ],
     )
+}
+fn n1_exempt(path: &str) -> bool {
+    // The two transport homes may construct sockets; integration tests
+    // exercise transports through their public APIs, and in-crate test
+    // regions are excluded per-line like F1/C1.
+    ends_with_any(path, &["coordinator/net.rs", "coordinator/shard.rs"])
+        || path.contains("/tests/")
+        || path.starts_with("tests/")
 }
 fn c1_exempt(path: &str) -> bool {
     ends_with_any(path, &["util/parallel.rs", "coordinator/shard.rs"])
@@ -385,6 +414,29 @@ pub fn scan_source(path: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
                      checksum state out of band — the cached state in \
                      GcnOperands is the single source of truth"
                         .to_string(),
+                );
+            }
+        }
+
+        // N1 sockets-only-in-net — raw socket construction outside the
+        // transport homes forks the wire path: bytes that bypass the
+        // shard_proto codec can drift from the frames the bit-identity
+        // and fail-stop tests pin.
+        if !n1_exempt(&path) && !lexed.in_test_region(t.line) {
+            let socket_ctor = seq(j, &["TcpListener", "::", "bind"])
+                || seq(j, &["TcpStream", "::", "connect"])
+                || seq(j, &["UnixListener", "::", "bind"])
+                || seq(j, &["UnixStream", "::", "connect"]);
+            if socket_ctor {
+                push(
+                    "N1",
+                    t.line,
+                    format!(
+                        "raw `{}` construction outside coordinator/net.rs and \
+                         coordinator/shard.rs — route shard traffic through the \
+                         transports so every frame goes through shard_proto",
+                        t.text
+                    ),
                 );
             }
         }
@@ -623,6 +675,39 @@ mod tests {
         assert_eq!(f2.len(), 1);
         assert_eq!(f2[0].rule, "M1");
         assert!(findings_for("src/runtime/operands.rs", &build).is_empty());
+    }
+
+    #[test]
+    fn n1_positive_exempt_and_suppressed() {
+        let dial = ["let s = TcpStream::connect(addr)?;"];
+        let f = findings_for("src/coordinator/server.rs", &dial);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "N1");
+        let bind = ["let l = std::net::TcpListener::bind(addr)?;"];
+        assert_eq!(findings_for("src/report/bench.rs", &bind).len(), 1);
+        let unix = ["let s = UnixStream::connect(path)?;"];
+        assert_eq!(findings_for("src/runtime/mutate.rs", &unix).len(), 1);
+        // The transport homes may construct sockets.
+        assert!(findings_for("src/coordinator/net.rs", &dial).is_empty());
+        assert!(findings_for("src/coordinator/shard.rs", &unix).is_empty());
+        // Integration tests and in-crate test regions are exempt.
+        assert!(findings_for("tests/supervised_recovery.rs", &dial).is_empty());
+        let test_region = [
+            "#[cfg(test)]",
+            "mod tests {",
+            "fn t() { let l = TcpListener::bind(\"127.0.0.1:0\").unwrap(); }",
+            "}",
+        ];
+        assert!(findings_for("src/graph/synth.rs", &test_region).is_empty());
+        // Reasoned suppression works like any other rule.
+        let allowed = [
+            "// gcn-lint: allow(N1, reason=\"delta feed client, not shard traffic\")",
+            "let s = UnixStream::connect(path)?;",
+        ];
+        let (f2, s2) = scan_source("src/coordinator/mod.rs", &src(&allowed));
+        assert!(f2.is_empty());
+        assert_eq!(s2.len(), 1);
+        assert_eq!(s2[0].rule, "N1");
     }
 
     #[test]

@@ -111,6 +111,23 @@ pub struct ServeMetrics {
     /// the divisor that turns the cumulative wait/stitch seconds into
     /// per-phase costs.
     pub shard_aggregates: u64,
+    /// Supervised recoveries that re-spawned a worker (or un-poisoned
+    /// an in-proc band — the in-process analogue). 0 without
+    /// `--supervise`.
+    pub shard_respawns: u64,
+    /// Supervised recoveries that re-connected to a remote tcp worker
+    /// at its known address.
+    pub shard_reconnects: u64,
+    /// Supervised recoveries served by adopting a pre-shipped
+    /// `--warm-standby` worker (zero re-ship bytes).
+    pub standby_adoptions: u64,
+    /// Requests replayed after their batch died on a shard and the
+    /// supervisor healed the tier — each was answered exactly once,
+    /// from the post-recovery forward.
+    pub replayed_requests: u64,
+    /// Wall-clock seconds spent inside recovery (spawn/reconnect +
+    /// handshake + band re-ship), summed over all recoveries.
+    pub respawn_secs: f64,
     /// The scheduler's effective hold budget at drain, in ms — equals
     /// `--max-wait-ms` unless `--adaptive-wait` tuned it from the
     /// observed arrival rate.

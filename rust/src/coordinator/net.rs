@@ -1,0 +1,789 @@
+//! The multi-node shard transport: row-band workers over TCP.
+//!
+//! [`TcpTransport`] is the third [`ShardTransport`]: the same wire
+//! protocol as the proc transport ([`super::shard_proto`] — the frames
+//! have no unix-specific content), the same lockstep request/reply
+//! discipline, the same stitch — over `TcpStream` instead of a Unix
+//! domain socket. Two deployment modes:
+//!
+//! * **spawn-local** ([`TcpTransport::spawn`]) — the coordinator
+//!   launches `gcn-abft shard-worker --listen 127.0.0.1:0` per band
+//!   (plus `--warm-standby` extras); each worker binds an ephemeral
+//!   port and reports it on stdout, the coordinator connects and ships
+//!   the band. This is the localhost multi-node smoke: real sockets,
+//!   real processes, no address bookkeeping.
+//! * **connect-remote** ([`TcpTransport::connect`]) — workers were
+//!   started out-of-band on other machines (`gcn-abft shard-worker
+//!   --listen 0.0.0.0:port`) and the coordinator reaches them at
+//!   `--shard-addrs host:port,...`, one per band in band order. This is
+//!   how row bands of a graph no single box fits get held by boxes that
+//!   fit one band each.
+//!
+//! **Bit-identity.** Both ends run the exact code the proc transport
+//! runs — [`aggregate_remote`] on the coordinator,
+//! [`serve_shard_connection`] in the worker — so tcp/proc/inproc logits
+//! and checksum bits cannot drift apart
+//! (`tests/prop_shard_equivalence.rs` pins all three).
+//!
+//! **Death and recovery.** A connection error poisons the shard's
+//! stream with a typed [`ShardDead`](super::shard_proto::ShardDead) and
+//! the whole aggregate fail-stops. [`ShardTransport::probe`] reports a
+//! poisoned stream or (spawn-local) a worker process that exited;
+//! [`ShardTransport::recover`] re-spawns local workers, re-connects to
+//! remote ones (a TCP worker survives coordinator hangup and keeps
+//! accepting — crash recovery needs no worker-side state), or adopts a
+//! pre-shipped warm standby — always re-shipping through the same
+//! `init` path that brought the tier up, under the caller's epoch
+//! fence. No TCP authentication exists: bind workers to loopback or a
+//! trusted network, because a forged band would verify Clean, which an
+//! integrity checker must never allow.
+
+use crate::runtime::mutate::DeltaOutcome;
+use crate::runtime::operands::RowBand;
+use crate::runtime::{GcnOperands, SOperand};
+use crate::tensor::Dense;
+use crate::util::json::Json;
+use super::clock::{Clock, MonotonicClock};
+use super::lock_recover;
+use super::shard::{RecoveryKind, ShardTimings, ShardTransport};
+use super::shard_proto::{
+    aggregate_remote, apply_delta_remote, encode_frame, init_handshake, serve_shard_connection,
+    ship_band_delta, RemoteShard, SessionEnd,
+};
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Per-request socket deadline before a shard is declared dead (same
+/// budget as the proc transport).
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
+/// How long [`ShardTransport::recover`] retries connecting to a remote
+/// worker's known address before giving up (the worker may be
+/// mid-restart under its own process supervisor).
+const RECONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The line a spawned worker prints once its listener is bound; the
+/// coordinator parses the ephemeral port from it.
+pub const WORKER_READY_PREFIX: &str = "gcn-abft-shard-worker listening ";
+
+struct TcpShard {
+    /// The worker process when this transport spawned it locally; None
+    /// for remote workers reached via `--shard-addrs`.
+    child: Option<Child>,
+    /// The worker's address, kept current across respawns — this is
+    /// what reconnect recovery dials.
+    addr: String,
+    link: RemoteShard<TcpStream>,
+}
+
+/// A pre-shipped `--warm-standby` worker: already holding band `band`,
+/// kept current by `apply_delta`, adoptable with zero re-ship bytes.
+struct TcpStandby {
+    child: Option<Child>,
+    addr: String,
+    link: RemoteShard<TcpStream>,
+    band: usize,
+}
+
+/// Row-band shard workers over TCP. See the module doc for the two
+/// deployment modes; everything after setup — aggregate, delta
+/// re-ship, fail-stop poisoning, recovery — is mode-agnostic except
+/// that only spawn-local can re-*spawn* (remote recovery re-connects).
+pub struct TcpTransport {
+    shards_total: usize,
+    /// Rows of the resident `S` (= N nodes); a node-adding delta grows
+    /// the graph under a running transport.
+    n: AtomicUsize,
+    shards: Mutex<Vec<TcpShard>>,
+    standbys: Mutex<Vec<TcpStandby>>,
+    timings: Mutex<ShardTimings>,
+    /// Worker binary for respawn; None in connect-remote mode.
+    worker_bin: Option<PathBuf>,
+    clock: MonotonicClock,
+}
+
+impl TcpTransport {
+    /// Spawn one local worker per band (plus `warm_standby` extras
+    /// pre-shipped bands round-robin) on ephemeral loopback ports and
+    /// ship each its band. `worker_bin` defaults to the running
+    /// executable.
+    pub fn spawn(
+        ops: &GcnOperands,
+        worker_bin: Option<&Path>,
+        warm_standby: usize,
+    ) -> Result<TcpTransport> {
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("tcp shard transport needs CSR operands with a banded S");
+        };
+        let bin = match worker_bin {
+            Some(p) => p.to_path_buf(),
+            None => std::env::current_exe()?,
+        };
+        let mut shards: Vec<TcpShard> = Vec::new();
+        let mut standbys: Vec<TcpStandby> = Vec::new();
+        let total = bands.len() + warm_standby;
+        for k in 0..total {
+            let band_idx = if k < bands.len() {
+                k
+            } else {
+                (k - bands.len()) % bands.len()
+            };
+            let Some(band) = bands.get(band_idx) else {
+                Self::teardown(&mut shards, &mut standbys);
+                bail!("band {band_idx} out of range ({})", bands.len());
+            };
+            match Self::spawn_and_init_one(&bin, band_idx, band) {
+                Ok((child, addr, link)) => {
+                    if k < bands.len() {
+                        shards.push(TcpShard {
+                            child: Some(child),
+                            addr,
+                            link,
+                        });
+                    } else {
+                        standbys.push(TcpStandby {
+                            child: Some(child),
+                            addr,
+                            link,
+                            band: band_idx,
+                        });
+                    }
+                }
+                Err(e) => {
+                    // Nothing of a failed spawn may outlive the error.
+                    Self::teardown(&mut shards, &mut standbys);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(TcpTransport {
+            shards_total: shards.len(),
+            n: AtomicUsize::new(ops.n_nodes()),
+            timings: Mutex::new(ShardTimings {
+                wait_secs: vec![0.0; shards.len()],
+                ..Default::default()
+            }),
+            shards: Mutex::new(shards),
+            standbys: Mutex::new(standbys),
+            worker_bin: Some(bin),
+            clock: MonotonicClock::new(),
+        })
+    }
+
+    /// Connect to already-running workers, one address per band in band
+    /// order, and ship each its band. The workers keep accepting after
+    /// a coordinator hangs up, so a crashed coordinator can simply be
+    /// restarted against the same `--shard-addrs`.
+    pub fn connect(ops: &GcnOperands, addrs: &[String]) -> Result<TcpTransport> {
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("tcp shard transport needs CSR operands with a banded S");
+        };
+        if addrs.len() != bands.len() {
+            bail!(
+                "--shard-addrs lists {} workers but the operands have {} bands \
+                 (match --shards to the address count)",
+                addrs.len(),
+                bands.len()
+            );
+        }
+        let mut shards: Vec<TcpShard> = Vec::new();
+        for (k, (band, addr)) in bands.iter().zip(addrs).enumerate() {
+            // On error the already-connected workers just see a hangup
+            // and re-accept; they are not ours to kill.
+            let (stream, _pid) = Self::connect_and_init(addr, k, band)?;
+            shards.push(TcpShard {
+                child: None,
+                addr: addr.clone(),
+                link: RemoteShard {
+                    stream: Some(stream),
+                    row0: band.row0,
+                    rows: band.s.rows(),
+                },
+            });
+        }
+        Ok(TcpTransport {
+            shards_total: shards.len(),
+            n: AtomicUsize::new(ops.n_nodes()),
+            timings: Mutex::new(ShardTimings {
+                wait_secs: vec![0.0; shards.len()],
+                ..Default::default()
+            }),
+            shards: Mutex::new(shards),
+            standbys: Mutex::new(Vec::new()),
+            worker_bin: None,
+            clock: MonotonicClock::new(),
+        })
+    }
+
+    fn teardown(shards: &mut [TcpShard], standbys: &mut [TcpStandby]) {
+        for c in shards
+            .iter_mut()
+            .filter_map(|s| s.child.as_mut())
+            .chain(standbys.iter_mut().filter_map(|s| s.child.as_mut()))
+        {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+
+    /// Launch one worker on an ephemeral loopback port and read the
+    /// address it reports. A worker that dies before binding closes its
+    /// stdout pipe, so the line read cannot hang on a crashed child.
+    fn spawn_local_worker(bin: &Path) -> Result<(Child, String)> {
+        let mut child = Command::new(bin)
+            .arg("shard-worker")
+            .arg("--listen")
+            .arg("127.0.0.1:0")
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| anyhow!("spawning shard worker {bin:?}: {e}"))?;
+        let Some(stdout) = child.stdout.take() else {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("shard worker stdout was not piped");
+        };
+        let mut line = String::new();
+        let addr = match BufReader::new(stdout).read_line(&mut line) {
+            Ok(n) if n > 0 => line
+                .trim()
+                .strip_prefix(WORKER_READY_PREFIX)
+                .map(str::to_string),
+            _ => None,
+        };
+        match addr {
+            Some(a) => Ok((child, a)),
+            None => {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!(
+                    "shard worker did not report a listening address (got {:?})",
+                    line.trim()
+                );
+            }
+        }
+    }
+
+    fn connect_and_init(addr: &str, shard: usize, band: &RowBand) -> Result<(TcpStream, usize)> {
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow!("connecting to shard worker at {addr}: {e}"))?;
+        // One lockstep request/reply in flight at a time: Nagle only
+        // adds latency here.
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let pid = init_handshake(&mut stream, shard, band)?;
+        Ok((stream, pid))
+    }
+
+    fn spawn_and_init_one(
+        bin: &Path,
+        shard: usize,
+        band: &RowBand,
+    ) -> Result<(Child, String, RemoteShard<TcpStream>)> {
+        let (mut child, addr) = Self::spawn_local_worker(bin)?;
+        match Self::connect_and_init(&addr, shard, band) {
+            Ok((stream, pid)) => {
+                // The worker echoes its pid in the ready frame; a
+                // mismatch means something else answered on the port.
+                if pid != child.id() as usize {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    bail!("shard {shard} echoed unknown pid {pid}");
+                }
+                Ok((
+                    child,
+                    addr,
+                    RemoteShard {
+                        stream: Some(stream),
+                        row0: band.row0,
+                        rows: band.s.rows(),
+                    },
+                ))
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                Err(e)
+            }
+        }
+    }
+
+    /// Spawned worker process ids, in shard order (fault-injection
+    /// tests kill these externally); empty in connect-remote mode.
+    pub fn worker_pids(&self) -> Vec<u32> {
+        lock_recover(&self.shards)
+            .iter()
+            .filter_map(|s| s.child.as_ref().map(Child::id))
+            .collect()
+    }
+
+    /// Worker addresses, in shard order.
+    pub fn worker_addrs(&self) -> Vec<String> {
+        lock_recover(&self.shards).iter().map(|s| s.addr.clone()).collect()
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn shards(&self) -> usize {
+        self.shards_total
+    }
+
+    fn aggregate(&self, ops: &GcnOperands, x: &Dense, x_r: &[f32]) -> Result<(Dense, f64, f64)> {
+        let n = self.n.load(Ordering::SeqCst);
+        if ops.n_nodes() != n {
+            bail!(
+                "operands changed shape under a running tcp transport \
+                 (apply the delta through the transport first)"
+            );
+        }
+        let mut shards = match self.shards.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                // A panic mid-stream leaves the lockstep in an unknown
+                // state; poison every shard so no later aggregate can
+                // stitch a stale queued reply.
+                let mut g = poisoned.into_inner();
+                for sh in g.iter_mut() {
+                    sh.link.stream = None;
+                }
+                g
+            }
+        };
+        let mut links: Vec<&mut RemoteShard<TcpStream>> =
+            shards.iter_mut().map(|s| &mut s.link).collect();
+        let agg = aggregate_remote(&mut links, n, x, x_r, &self.clock)?;
+        drop(shards);
+        {
+            let mut tm = lock_recover(&self.timings);
+            tm.aggregates += 1;
+            tm.stitch_secs += agg.stitch_secs;
+            for (acc, w) in tm.wait_secs.iter_mut().zip(&agg.waits) {
+                *acc += w;
+            }
+        }
+        Ok((agg.out, agg.pred, agg.actual))
+    }
+
+    fn apply_delta(&self, ops: &GcnOperands, outcome: &DeltaOutcome) -> Result<()> {
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("tcp shard transport needs CSR operands with a banded S");
+        };
+        if bands.len() != self.shards_total {
+            bail!(
+                "delta changed the band partition ({} bands != {} shards); \
+                 restart the shard tier",
+                bands.len(),
+                self.shards_total
+            );
+        }
+        let mut shards = match self.shards.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let mut g = poisoned.into_inner();
+                for sh in g.iter_mut() {
+                    sh.link.stream = None;
+                }
+                g
+            }
+        };
+        let targets: Vec<usize> = if outcome.resized {
+            (0..bands.len()).collect()
+        } else {
+            outcome.affected_bands.clone()
+        };
+        {
+            let mut links: Vec<&mut RemoteShard<TcpStream>> =
+                shards.iter_mut().map(|s| &mut s.link).collect();
+            apply_delta_remote(&mut links, bands, &targets)?;
+        }
+        drop(shards);
+        // Keep warm standbys on the current graph version — adoption
+        // must be zero-reship *and* version-exact. Losing a standby
+        // degrades failover, never the delta itself.
+        let mut standbys = lock_recover(&self.standbys);
+        let mut lost: Vec<usize> = Vec::new();
+        for (i, standby) in standbys.iter_mut().enumerate() {
+            if !targets.contains(&standby.band) {
+                continue;
+            }
+            let (Some(band), Some(stream)) =
+                (bands.get(standby.band), standby.link.stream.as_mut())
+            else {
+                lost.push(i);
+                continue;
+            };
+            match ship_band_delta(stream, standby.band, band) {
+                Ok(()) => {
+                    standby.link.row0 = band.row0;
+                    standby.link.rows = band.s.rows();
+                }
+                Err(e) => {
+                    eprintln!(
+                        "shard tier: warm standby for band {} lost on delta \
+                         re-ship ({e:#}); discarded",
+                        standby.band
+                    );
+                    lost.push(i);
+                }
+            }
+        }
+        for i in lost.into_iter().rev() {
+            let mut s = standbys.remove(i);
+            if let Some(c) = s.child.as_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+        self.n.store(ops.n_nodes(), Ordering::SeqCst);
+        Ok(())
+    }
+
+    fn kill_shard(&self, shard: usize) -> bool {
+        let mut shards = lock_recover(&self.shards);
+        match shards.get_mut(shard) {
+            Some(sh) => {
+                match sh.child.as_mut() {
+                    Some(child) => {
+                        // Kill the process but keep the broken stream:
+                        // the next aggregate experiences the wire-level
+                        // failure exactly as an external crash.
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                    None => {
+                        // A remote worker is not ours to kill; sever
+                        // the link instead (the worker survives and
+                        // re-accepts, which is the reconnect drill).
+                        sh.link.stream = None;
+                    }
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn probe(&self) -> Vec<bool> {
+        let mut shards = lock_recover(&self.shards);
+        shards
+            .iter_mut()
+            .map(|sh| {
+                // A poisoned stream is a known death; a gone pid
+                // (spawn-local) is one no request has tripped over yet.
+                sh.link.stream.is_some()
+                    && sh
+                        .child
+                        .as_mut()
+                        .map_or(true, |c| matches!(c.try_wait(), Ok(None)))
+            })
+            .collect()
+    }
+
+    fn recover(&self, shard: usize, ops: &GcnOperands) -> Result<RecoveryKind> {
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("tcp shard transport needs CSR operands with a banded S");
+        };
+        if bands.len() != self.shards_total {
+            bail!(
+                "band partition changed ({} bands != {} shards); \
+                 restart the shard tier",
+                bands.len(),
+                self.shards_total
+            );
+        }
+        if ops.n_nodes() != self.n.load(Ordering::SeqCst) {
+            bail!(
+                "recover called with operands of a different shape \
+                 (apply the delta through the transport first)"
+            );
+        }
+        let Some(band) = bands.get(shard) else {
+            bail!("shard {shard} out of range ({})", self.shards_total);
+        };
+        let mut shards = lock_recover(&self.shards);
+        let Some(sh) = shards.get_mut(shard) else {
+            bail!("shard {shard} out of range ({})", self.shards_total);
+        };
+        if let Some(child) = sh.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        sh.link.stream = None;
+        // Zero-reship failover: adopt a standby already holding this
+        // band (kept current by apply_delta).
+        {
+            let mut standbys = lock_recover(&self.standbys);
+            if let Some(pos) = standbys
+                .iter()
+                .position(|s| s.band == shard && s.link.stream.is_some())
+            {
+                let standby = standbys.remove(pos);
+                sh.child = standby.child;
+                sh.addr = standby.addr;
+                sh.link = standby.link;
+                sh.link.row0 = band.row0;
+                sh.link.rows = band.s.rows();
+                return Ok(RecoveryKind::StandbyAdopted);
+            }
+        }
+        match &self.worker_bin {
+            Some(bin) => {
+                // Spawn-local: a fresh worker on a fresh ephemeral
+                // port, re-shipped through the same init path.
+                let (child, addr, link) = Self::spawn_and_init_one(bin, shard, band)?;
+                sh.child = Some(child);
+                sh.addr = addr;
+                sh.link = link;
+                Ok(RecoveryKind::Respawned)
+            }
+            None => {
+                // Connect-remote: the worker (or its restart) should
+                // reappear at the same address; retry within a deadline.
+                let deadline = self.clock.now().after(RECONNECT_TIMEOUT);
+                loop {
+                    match Self::connect_and_init(&sh.addr, shard, band) {
+                        Ok((stream, _pid)) => {
+                            sh.link = RemoteShard {
+                                stream: Some(stream),
+                                row0: band.row0,
+                                rows: band.s.rows(),
+                            };
+                            return Ok(RecoveryKind::Reconnected);
+                        }
+                        Err(e) => {
+                            if self.clock.now() > deadline {
+                                return Err(e);
+                            }
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn standby_count(&self) -> usize {
+        lock_recover(&self.standbys)
+            .iter()
+            .filter(|s| s.link.stream.is_some())
+            .count()
+    }
+
+    fn timings(&self) -> ShardTimings {
+        lock_recover(&self.timings).clone()
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        let mut shards = lock_recover(&self.shards);
+        let mut standbys = lock_recover(&self.standbys);
+        let header = Json::obj(vec![
+            ("type", Json::from("shutdown")),
+            ("payload", Json::from(0usize)),
+        ]);
+        let frame = encode_frame(&header, &[]);
+        for (child, stream) in shards
+            .iter_mut()
+            .map(|s| (&s.child, &mut s.link.stream))
+            .chain(standbys.iter_mut().map(|s| (&s.child, &mut s.link.stream)))
+        {
+            if child.is_some() {
+                if let Some(mut s) = stream.take() {
+                    let _ = s.write_all(&frame);
+                }
+            } else {
+                // Remote workers outlive this coordinator: dropping the
+                // stream reads as a hangup and the worker re-accepts,
+                // so a restarted coordinator can reconnect. Stop remote
+                // workers out-of-band.
+                *stream = None;
+            }
+        }
+        for child in shards
+            .iter_mut()
+            .filter_map(|s| s.child.as_mut())
+            .chain(standbys.iter_mut().filter_map(|s| s.child.as_mut()))
+        {
+            // Give the worker a moment to exit on its own, then force
+            // the issue so drop never hangs.
+            let deadline = self.clock.now().after(Duration::from_secs(2));
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if self.clock.now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The `gcn-abft shard-worker --listen` main loop: bind, report the
+/// bound address on stdout (the spawn path parses the ephemeral port
+/// from it), then serve coordinator sessions forever with the shared
+/// worker loop ([`serve_shard_connection`] — the same code the proc
+/// worker runs). A hangup or a failed session keeps the worker alive
+/// for the next coordinator (supervised reconnect lands here); only an
+/// explicit shutdown frame ends the process.
+pub fn run_tcp_shard_worker(listen: &str) -> Result<()> {
+    let listener = TcpListener::bind(listen)
+        .map_err(|e| anyhow!("binding shard worker listener on {listen}: {e}"))?;
+    let addr = listener.local_addr()?;
+    println!("{WORKER_READY_PREFIX}{addr}");
+    // The coordinator blocks on this line; an unflushed buffer would
+    // deadlock the handshake.
+    std::io::stdout().flush()?;
+    loop {
+        let (mut stream, peer) = match listener.accept() {
+            Ok(v) => v,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        stream.set_nodelay(true)?;
+        match serve_shard_connection(&mut stream) {
+            Ok(SessionEnd::Shutdown) => return Ok(()),
+            Ok(SessionEnd::Hangup) => {
+                // Coordinator crashed or a port probe came and went:
+                // wait for the next session.
+            }
+            Err(e) => {
+                eprintln!("shard worker: session with {peer} failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::graph::DatasetId;
+    use crate::runtime::backend::ChecksumScheme;
+    use crate::coordinator::shard::{InProcTransport, ShardedBackend};
+    use crate::runtime::backend::GcnBackend as _;
+    use std::sync::Arc;
+
+    fn workload(bands: usize) -> GcnOperands {
+        let g = DatasetId::Tiny.build(11);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 3);
+        GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            bands,
+        )
+        .unwrap()
+    }
+
+    /// An in-thread stand-in for `gcn-abft shard-worker --listen`: same
+    /// serve loop, no subprocess (unit tests have no worker binary;
+    /// `tests/supervised_recovery.rs` exercises the real one).
+    fn worker_thread() -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || loop {
+            let Ok((mut stream, _)) = listener.accept() else {
+                return;
+            };
+            match serve_shard_connection(&mut stream) {
+                Ok(SessionEnd::Shutdown) => return,
+                Ok(SessionEnd::Hangup) | Err(_) => {}
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn connect_transport_matches_inproc_fails_stop_and_reconnects() {
+        let ops = workload(2);
+        let addrs: Vec<String> = (0..2).map(|_| worker_thread()).collect();
+        let tcp = Arc::new(TcpTransport::connect(&ops, &addrs).unwrap());
+        assert_eq!(tcp.shards(), 2);
+        assert_eq!(tcp.worker_pids(), Vec::<u32>::new(), "no spawned children");
+        let backend = ShardedBackend::new(
+            tcp.clone() as Arc<dyn ShardTransport>,
+            ChecksumScheme::Fused,
+            1,
+        );
+        let reference = ShardedBackend::new(
+            Arc::new(InProcTransport::new(&ops).unwrap()),
+            ChecksumScheme::Fused,
+            1,
+        );
+        let want = reference.run(&ops, &[]).unwrap();
+        let got = backend.run(&ops, &[]).unwrap();
+        assert_eq!(want.logits, got.logits, "tcp must be bit-identical to inproc");
+        assert_eq!(want.predicted, got.predicted);
+        assert_eq!(want.actual, got.actual);
+
+        // Sever one link: fail-stop, probe sees it, recover re-dials.
+        assert!(tcp.kill_shard(0));
+        assert_eq!(tcp.probe(), vec![false, true]);
+        let err = backend.run(&ops, &[]).unwrap_err();
+        assert!(err.to_string().contains("shard 0"), "{err}");
+        assert_eq!(tcp.recover(0, &ops).unwrap(), RecoveryKind::Reconnected);
+        assert_eq!(tcp.probe(), vec![true, true]);
+        let healed = backend.run(&ops, &[]).unwrap();
+        assert_eq!(want.logits, healed.logits, "post-recovery bits must match");
+        assert_eq!(want.predicted, healed.predicted);
+        assert_eq!(want.actual, healed.actual);
+        let tm = tcp.timings();
+        assert!(tm.aggregates >= 4, "two clean runs = four phases");
+    }
+
+    #[test]
+    fn connect_refuses_mismatched_address_count() {
+        let ops = workload(2);
+        let addrs = vec![worker_thread()];
+        let err = TcpTransport::connect(&ops, &addrs).unwrap_err();
+        assert!(err.to_string().contains("--shard-addrs"), "{err}");
+    }
+
+    #[test]
+    fn delta_reships_over_tcp_bit_identically() {
+        use crate::runtime::mutate::{self, GraphDelta};
+        let mut ops = workload(2);
+        let addrs: Vec<String> = (0..2).map(|_| worker_thread()).collect();
+        let tcp: Arc<dyn ShardTransport> = Arc::new(TcpTransport::connect(&ops, &addrs).unwrap());
+        let backend = ShardedBackend::new(tcp.clone(), ChecksumScheme::Fused, 1);
+        let before = backend.run(&ops, &[]).unwrap();
+        let delta = GraphDelta::Edges {
+            add: vec![(0, 7, 0.4)],
+            remove: vec![],
+        };
+        let outcome = mutate::apply(&mut ops, &delta).unwrap();
+        tcp.apply_delta(&ops, &outcome).unwrap();
+        let after = backend.run(&ops, &[]).unwrap();
+        assert_ne!(before.logits, after.logits);
+        // Bit-identical to a fresh inproc tier on the mutated operands.
+        let fresh = ShardedBackend::new(
+            Arc::new(InProcTransport::new(&ops).unwrap()),
+            ChecksumScheme::Fused,
+            1,
+        );
+        let want = fresh.run(&ops, &[]).unwrap();
+        assert_eq!(after.logits, want.logits);
+        assert_eq!(after.predicted, want.predicted);
+        assert_eq!(after.actual, want.actual);
+    }
+}

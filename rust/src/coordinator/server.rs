@@ -44,6 +44,7 @@ use super::lock_recover;
 use super::metrics::{LatencyHistogram, ServeMetrics};
 use super::request::{InferenceRequest, InferenceResponse, VerifyStatus};
 use super::shard::{self, ShardTransport, ShardTransportKind};
+use super::supervisor::{Supervisor, SupervisorConfig};
 use super::verify::ServePolicy;
 use crate::graph::DatasetId;
 use crate::runtime::backend;
@@ -56,6 +57,15 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Replays of one batch after a shard death before the executor gives
+/// up and answers fail-stop anyway (guards against a flapping shard
+/// pinning the executor on one batch forever).
+const MAX_BATCH_REPLAYS: u32 = 2;
+/// How long the executor waits for supervised recovery before
+/// answering a stranded batch fail-stop after all.
+const RECOVERY_WAIT: Duration = Duration::from_secs(10);
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -103,8 +113,25 @@ pub struct ServerConfig {
     /// Fault injection for fail-stop tests: tear down shard 0 just
     /// before the batch with this 0-based index executes. Requests
     /// already answered stay answered; everything after gets
-    /// `VerifyStatus::Failed` while the coordinator keeps serving.
+    /// `VerifyStatus::Failed` while the coordinator keeps serving —
+    /// unless `supervise` is on, in which case the supervisor heals the
+    /// shard and the stranded requests replay.
     pub kill_shard_after: Option<u64>,
+    /// Run the shard supervisor (`--supervise`): probe shard liveness
+    /// every `heartbeat_ms`, re-spawn/re-connect dead workers, re-ship
+    /// their bands, and replay the requests that were in flight on a
+    /// dead shard. Off by default — unsupervised tiers keep PR 5's
+    /// fail-stop-forever semantics.
+    pub supervise: bool,
+    /// Supervisor tick period in milliseconds (`--heartbeat-ms`).
+    pub heartbeat_ms: u64,
+    /// Extra pre-shipped standby workers (`--warm-standby`) for
+    /// zero-reship failover; proc/tcp spawn modes only.
+    pub warm_standby: usize,
+    /// Remote worker addresses for `--shard-transport tcp`
+    /// (`--shard-addrs host:port,...`, one per band in band order);
+    /// empty = spawn workers locally.
+    pub shard_addrs: Vec<String>,
 }
 
 impl Default for ServerConfig {
@@ -129,6 +156,10 @@ impl Default for ServerConfig {
             shard_transport: ShardTransportKind::InProc,
             shard_worker_bin: None,
             kill_shard_after: None,
+            supervise: false,
+            heartbeat_ms: 200,
+            warm_standby: 0,
+            shard_addrs: Vec::new(),
         }
     }
 }
@@ -413,6 +444,19 @@ pub fn run_server_with_updates(
     } else {
         None
     };
+    // The shard supervisor (`--supervise`): a daemon thread probes the
+    // tier every heartbeat and heals dead shards; the executor kicks it
+    // the moment a request dies on one.
+    let supervisor: Option<Arc<Supervisor>> = match (&shard_tier, cfg.supervise) {
+        (Some(t), true) => Some(Arc::new(Supervisor::new(
+            t.clone(),
+            SupervisorConfig {
+                heartbeat: Duration::from_millis(cfg.heartbeat_ms.max(1)),
+                ..Default::default()
+            },
+        ))),
+        _ => None,
+    };
     let sched = Scheduler::new(clock.clone(), cfg.batch);
     // The graph-version fence (dynamic graphs): executors snapshot
     // `(epoch, ops)` per batch; the delta applier publishes new
@@ -521,6 +565,31 @@ pub fn run_server_with_updates(
             });
         }
 
+        // Supervisor daemon: tick every heartbeat (or immediately on an
+        // executor kick). Each tick runs under the scheduler's epoch
+        // gate *and* the epoch fence's write lock, so a recovery
+        // re-ship can never interleave with an in-flight batch or with
+        // a delta's patch/re-ship/publish sequence — the same isolation
+        // discipline the delta applier uses.
+        if let Some(sup) = &supervisor {
+            let sup = sup.clone();
+            let sched = &sched;
+            let fence = &fence;
+            let hb = Duration::from_millis(cfg.heartbeat_ms.max(1));
+            scope.spawn(move || loop {
+                sup.wait_tick(hb);
+                if sup.is_shutdown() {
+                    break;
+                }
+                let gate = sched.epoch_guard();
+                let _ = fence.with_current(|ops| {
+                    sup.tick_with_ops(ops);
+                    Ok(())
+                });
+                drop(gate);
+            });
+        }
+
         // Executors.
         let compiled = &compiled;
         let ready = &ready;
@@ -537,6 +606,7 @@ pub fn run_server_with_updates(
             let cfg = cfg.clone();
             let state = state;
             let shard_tier = shard_tier.clone();
+            let supervisor = supervisor.clone();
             handles.push(scope.spawn(move || -> Result<()> {
                 // Each executor owns its own backend (one accelerator per
                 // worker; a hard requirement on the PJRT backend whose
@@ -579,8 +649,23 @@ pub fn run_server_with_updates(
                 ];
                 // Pull straight from the scheduler: the next batch closes
                 // (size / deadline / starvation / drain) the moment this
-                // worker is free for it.
-                while let Some(batch) = sched.next_batch() {
+                // worker is free for it. `pending` holds a batch whose
+                // forward died on a shard and whose requests replay once
+                // the supervisor heals the tier — each request is still
+                // answered exactly once.
+                let mut pending: Option<Batch> = None;
+                let mut replays_left = MAX_BATCH_REPLAYS;
+                loop {
+                    let (batch, is_replay) = match pending.take() {
+                        Some(b) => (b, true),
+                        None => {
+                            replays_left = MAX_BATCH_REPLAYS;
+                            match sched.next_batch() {
+                                Some(b) => (b, false),
+                                None => break,
+                            }
+                        }
+                    };
                     // Hold the read side of the epoch gate for the whole
                     // batch and pin one graph version: everything below —
                     // overlay validation, forwards, verification, retries —
@@ -603,7 +688,10 @@ pub fn run_server_with_updates(
                     // perturbation set, so coalescing never changes what
                     // any member would have answered alone.
                     let groups = overlay_groups(&batch);
-                    {
+                    // A replayed batch was already counted on its first
+                    // pass — the request totals count *requests*, not
+                    // attempts (replays surface in replayed_requests).
+                    if !is_replay {
                         let mut m = lock_recover(metrics);
                         m.batches += 1;
                         m.requests += bsize as u64;
@@ -657,10 +745,6 @@ pub fn run_server_with_updates(
                     let mut outs = match exe.run_groups(ops, &group_refs) {
                         Ok(outs) => outs,
                         Err(err) => {
-                            eprintln!(
-                                "serve: forward failed ({err:#}); \
-                                 answering fail-stop Failed"
-                            );
                             {
                                 let mut m = lock_recover(metrics);
                                 m.exec_secs += clock.now().since(t0).as_secs_f64();
@@ -670,6 +754,52 @@ pub fn run_server_with_updates(
                                 if shard_tier.is_some() {
                                     m.shard_failures += 1;
                                 }
+                            }
+                            // Supervised recovery: kick the supervisor,
+                            // release the batch guard (its tick needs
+                            // the epoch gate's write side), and wait for
+                            // the tier to come back whole. The stranded
+                            // requests replay against a fresh snapshot —
+                            // answered exactly once, from the
+                            // post-recovery forward, never from a
+                            // partial stitch.
+                            let mut replay = false;
+                            if let Some(sup) = supervisor.as_deref() {
+                                if replays_left > 0 {
+                                    replays_left -= 1;
+                                    eprintln!(
+                                        "serve: forward failed ({err:#}); holding \
+                                         {bsize} in-flight request(s) for supervised \
+                                         recovery"
+                                    );
+                                    sup.kick();
+                                    drop(_inflight);
+                                    replay = sup.wait_all_alive(RECOVERY_WAIT);
+                                    if !replay {
+                                        eprintln!(
+                                            "serve: shard tier did not recover; \
+                                             answering fail-stop Failed"
+                                        );
+                                    }
+                                } else {
+                                    eprintln!(
+                                        "serve: forward failed ({err:#}); replay \
+                                         budget exhausted, answering fail-stop Failed"
+                                    );
+                                }
+                            } else {
+                                eprintln!(
+                                    "serve: forward failed ({err:#}); \
+                                     answering fail-stop Failed"
+                                );
+                            }
+                            if replay {
+                                lock_recover(metrics).replayed_requests += bsize as u64;
+                                pending = Some(batch);
+                                continue;
+                            }
+                            {
+                                let mut m = lock_recover(metrics);
                                 m.failures += groups.len() as u64;
                             }
                             for members in &groups {
@@ -875,9 +1005,13 @@ pub fn run_server_with_updates(
             }
         }
         // Executors are done (cleanly or not) — release the delta
-        // applier even if the caller still holds its updates sender, so
-        // the scope can close and any error above can surface.
+        // applier and the supervisor daemon even if the caller still
+        // holds its updates sender, so the scope can close and any
+        // error above can surface.
         serving_done.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(sup) = &supervisor {
+            sup.shutdown();
+        }
         result
     })?;
 
@@ -899,6 +1033,13 @@ pub fn run_server_with_updates(
         m.shard_wait_secs = tm.wait_secs;
         m.shard_stitch_secs = tm.stitch_secs;
         m.shard_aggregates = tm.aggregates;
+    }
+    if let Some(sup) = &supervisor {
+        let c = sup.counters();
+        m.shard_respawns = c.respawns;
+        m.shard_reconnects = c.reconnects;
+        m.standby_adoptions = c.standby_adoptions;
+        m.respawn_secs = c.respawn_secs;
     }
     Ok(m)
 }

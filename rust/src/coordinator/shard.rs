@@ -14,10 +14,12 @@
 //!   planner already builds), with per-shard resident and per-request
 //!   payload footprints;
 //! * [`ShardTransport`] — *where* the bands run: [`InProcTransport`]
-//!   (today's scoped-thread fan-out, now a trait impl) or
-//!   [`ProcTransport`] (spawned `gcn-abft shard-worker` subprocesses
-//!   speaking a length-prefixed JSON + raw-little-endian-float protocol
-//!   over Unix domain sockets — std-only, no serialization crates);
+//!   (scoped-thread fan-out inside the coordinator), [`ProcTransport`]
+//!   (spawned `gcn-abft shard-worker` subprocesses over Unix domain
+//!   sockets) or [`TcpTransport`](super::net::TcpTransport) (workers on
+//!   TCP — spawned locally or reached at `--shard-addrs`), all speaking
+//!   the one wire protocol in [`super::shard_proto`] — std-only, no
+//!   serialization crates;
 //! * [`ShardedBackend`] — a [`GcnBackend`] that runs the ordinary
 //!   native forward ([`native::forward_with`]) with the two `S·X`
 //!   aggregation phases routed through a transport.
@@ -25,29 +27,38 @@
 //! **Bit-identity.** Every transport computes each band with
 //! [`RowBand::aggregate_into`] — the same serial per-row kernel the
 //! in-process path uses — and the coordinator stitches in fixed band
-//! order, so `serve --shards N --shard-transport inproc|proc` produces
-//! logits bit-identical to unsharded serving and identical fused/split
-//! alarm decisions (`tests/prop_shard_equivalence.rs`). The two
-//! transports are bit-identical to *each other* including the stitched
-//! checksum bits.
+//! order, so `serve --shards N --shard-transport inproc|proc|tcp`
+//! produces logits bit-identical to unsharded serving and identical
+//! fused/split alarm decisions (`tests/prop_shard_equivalence.rs`). The
+//! stream transports run the *same* engine
+//! ([`shard_proto::aggregate_remote`](super::shard_proto)) over their
+//! own socket type, so all transports are bit-identical to *each other*
+//! including the stitched checksum bits.
 //!
-//! **Fail-stop.** A shard that dies mid-request (socket error, killed
-//! worker, poisoned in-proc band) fails the whole aggregation: the
-//! coordinator answers the affected requests with
-//! [`VerifyStatus::Failed`](super::request::VerifyStatus) and keeps
-//! serving — never a silently stitched partial answer. A checksum
-//! corrupted *inside* a shard surfaces through the ordinary GCN-ABFT
-//! verification of the stitched sums, since the band partials add into
-//! the global predicted/actual pair.
+//! **Fail-stop, then heal.** A shard that dies mid-request (socket
+//! error, killed worker, poisoned in-proc band) fails the whole
+//! aggregation with a typed [`ShardDead`](super::shard_proto::ShardDead)
+//! naming the culprit: the coordinator answers the affected requests
+//! with [`VerifyStatus::Failed`](super::request::VerifyStatus) and keeps
+//! serving — never a silently stitched partial answer. Under
+//! `--supervise` the [`Supervisor`](super::supervisor::Supervisor)
+//! consumes the death through [`ShardTransport::probe`] and heals it
+//! through [`ShardTransport::recover`] — re-spawn (proc/tcp local),
+//! re-connect (tcp remote), adopt a pre-shipped `--warm-standby` worker,
+//! or un-poison (inproc) — re-shipping the band through the same `init`
+//! path that spawned it. A checksum corrupted *inside* a shard surfaces
+//! through the ordinary GCN-ABFT verification of the stitched sums,
+//! since the band partials add into the global predicted/actual pair.
 //!
 //! The wire protocol (one frame = `u32` little-endian header length,
-//! UTF-8 JSON header, raw payload of `header.payload` bytes):
+//! UTF-8 JSON header, raw payload of `header.payload` bytes; codec in
+//! [`super::shard_proto`]):
 //!
 //! ```text
 //! coordinator → worker   {"type":"init", shard, row0, rows, cols, nnz, payload}
 //!                        payload = row_ptr u64[rows+1] · col_idx u64[nnz]
 //!                                  · values f32[nnz] · s_c f64[cols]
-//! worker → coordinator   {"type":"ready", shard}
+//! worker → coordinator   {"type":"ready", shard, pid}
 //! coordinator → worker   {"type":"agg", rows, cols, payload}
 //!                        payload = x f32[rows·cols] · x_r f32[rows]
 //! worker → coordinator   {"type":"band", rows, cols, payload}
@@ -67,17 +78,17 @@
 //! the shard so no later aggregate can stitch mixed-version bands.
 //!
 //! Floats cross the wire as raw little-endian bit patterns (never as
-//! decimal text), which is what keeps the proc transport bit-identical.
+//! decimal text), which is what keeps the stream transports
+//! bit-identical.
 
 use crate::runtime::backend::native;
 use crate::runtime::backend::{self, ChecksumScheme, ExecPlan, GcnBackend, Overlay};
 use crate::runtime::mutate::DeltaOutcome;
 use crate::runtime::{GcnOperands, GcnOutputs, SOperand};
 use crate::tensor::Dense;
-use crate::util::json::Json;
 use super::clock::{Clock, MonotonicClock};
 use super::lock_recover;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -89,6 +100,9 @@ pub enum ShardTransportKind {
     /// One `gcn-abft shard-worker` subprocess per shard, over Unix
     /// domain sockets.
     Proc,
+    /// Workers over TCP: spawned locally (`shard-worker --listen`) or
+    /// reached remotely at `--shard-addrs` — the multi-node tier.
+    Tcp,
 }
 
 impl ShardTransportKind {
@@ -96,6 +110,7 @@ impl ShardTransportKind {
         match self {
             ShardTransportKind::InProc => "inproc",
             ShardTransportKind::Proc => "proc",
+            ShardTransportKind::Tcp => "tcp",
         }
     }
 
@@ -103,6 +118,7 @@ impl ShardTransportKind {
         match s.to_ascii_lowercase().as_str() {
             "inproc" | "thread" | "threads" => Some(ShardTransportKind::InProc),
             "proc" | "process" | "uds" => Some(ShardTransportKind::Proc),
+            "tcp" | "net" => Some(ShardTransportKind::Tcp),
             _ => None,
         }
     }
@@ -115,8 +131,9 @@ impl ShardTransportKind {
 pub struct ShardTimings {
     /// Aggregation phases executed.
     pub aggregates: u64,
-    /// Seconds the stitcher spent blocked on each shard (proc: socket
-    /// round-trip; inproc: the band's compute on its scoped worker).
+    /// Seconds the stitcher spent blocked on each shard (proc/tcp:
+    /// socket round-trip; inproc: the band's compute on its scoped
+    /// worker).
     pub wait_secs: Vec<f64>,
     /// Seconds spent stitching band results (row copies + partial sums).
     pub stitch_secs: f64,
@@ -178,11 +195,38 @@ impl ShardPlan {
         self.bands.iter().map(|b| b.resident_bytes).max().unwrap_or(0)
     }
 
-    /// Bytes shipped to **each** shard per request on the proc
-    /// transport: both aggregation phases' `x` + `x_r` payloads.
+    /// Bytes shipped to **each** shard per request on the stream
+    /// transports: both aggregation phases' `x` + `x_r` payloads.
     pub fn request_payload_bytes(&self, ops: &GcnOperands) -> usize {
         let per_phase = |width: usize| (self.n * width + self.n) * std::mem::size_of::<f32>();
         per_phase(ops.hidden_dim()) + per_phase(ops.num_classes())
+    }
+}
+
+/// How [`ShardTransport::recover`] brought a dead shard back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryKind {
+    /// A fresh worker process was spawned and the band re-shipped
+    /// through the `init` path.
+    Respawned,
+    /// An existing remote worker was re-connected and re-shipped.
+    Reconnected,
+    /// A pre-shipped `--warm-standby` worker took over (zero re-ship
+    /// bytes).
+    StandbyAdopted,
+    /// The in-proc shard was un-poisoned (the in-process analogue of a
+    /// respawn: the band is resident either way).
+    Healed,
+}
+
+impl RecoveryKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryKind::Respawned => "respawned",
+            RecoveryKind::Reconnected => "reconnected",
+            RecoveryKind::StandbyAdopted => "standby-adopted",
+            RecoveryKind::Healed => "healed",
+        }
     }
 }
 
@@ -216,6 +260,33 @@ pub trait ShardTransport: Send + Sync {
     /// poisoned, so a later aggregate can never stitch mixed-version
     /// bands.
     fn apply_delta(&self, ops: &GcnOperands, outcome: &DeltaOutcome) -> Result<()>;
+
+    /// Liveness of every shard, in band order — the supervisor's
+    /// heartbeat. `false` means the shard cannot serve the next
+    /// aggregate: its stream is poisoned, or (local workers) its
+    /// process is gone even though no request has touched the broken
+    /// socket yet. The default says all alive, which is correct for
+    /// transports with no death to detect.
+    fn probe(&self) -> Vec<bool> {
+        (0..self.shards()).map(|_| true).collect()
+    }
+
+    /// Bring one dead shard back: re-spawn or re-connect its worker and
+    /// re-ship its resident band + `s_c` through the same `init` path
+    /// that spawned it (or adopt a pre-shipped warm standby). Called by
+    /// the supervisor *inside* the epoch fence with the current resident
+    /// operands, so a recovery can never race a delta and a failed
+    /// re-ship never publishes. The default refuses: unsupervisable
+    /// transports stay fail-stop-forever, exactly as before.
+    fn recover(&self, shard: usize, _ops: &GcnOperands) -> Result<RecoveryKind> {
+        bail!("transport {} does not support shard recovery", self.name())
+    }
+
+    /// Pre-shipped `--warm-standby` workers still available for
+    /// zero-reship failover.
+    fn standby_count(&self) -> usize {
+        0
+    }
 
     /// Cumulative timings snapshot.
     fn timings(&self) -> ShardTimings;
@@ -331,6 +402,34 @@ impl ShardTransport for InProcTransport {
         Ok(())
     }
 
+    fn probe(&self) -> Vec<bool> {
+        self.down.iter().map(|d| !d.load(Ordering::SeqCst)).collect()
+    }
+
+    fn recover(&self, shard: usize, ops: &GcnOperands) -> Result<RecoveryKind> {
+        // The band is resident in the shared operands, so recovery is
+        // un-poisoning — but only if the partition still matches, for
+        // the same reason apply_delta enforces it.
+        let SOperand::Banded(bands) = &ops.s else {
+            bail!("inproc shard transport got dense operands");
+        };
+        if bands.len() != self.shards {
+            bail!(
+                "band partition changed ({} bands != {} shards); \
+                 restart the shard tier",
+                bands.len(),
+                self.shards
+            );
+        }
+        match self.down.get(shard) {
+            Some(d) => {
+                d.store(false, Ordering::SeqCst);
+                Ok(RecoveryKind::Healed)
+            }
+            None => bail!("shard {shard} out of range ({})", self.shards),
+        }
+    }
+
     fn timings(&self) -> ShardTimings {
         lock_recover(&self.timings).clone()
     }
@@ -411,146 +510,42 @@ pub fn build_transport(
     // The operand build derives its bands from cfg.shards, and the
     // partition arithmetic can only clamp downward.
     debug_assert!(plan.shards <= cfg.shards.max(1));
+    if !cfg.shard_addrs.is_empty() && cfg.shard_transport != ShardTransportKind::Tcp {
+        bail!("--shard-addrs only applies with --shard-transport tcp");
+    }
     match cfg.shard_transport {
-        ShardTransportKind::InProc => Ok(Arc::new(InProcTransport::new(ops)?)),
+        ShardTransportKind::InProc => {
+            if cfg.warm_standby > 0 {
+                bail!("--warm-standby needs a worker-process transport (proc or tcp)");
+            }
+            Ok(Arc::new(InProcTransport::new(ops)?))
+        }
         #[cfg(unix)]
-        ShardTransportKind::Proc => Ok(Arc::new(ProcTransport::spawn(
+        ShardTransportKind::Proc => Ok(Arc::new(ProcTransport::spawn_with_standby(
             ops,
             cfg.shard_worker_bin.as_deref(),
+            cfg.warm_standby,
         )?)),
         #[cfg(not(unix))]
         ShardTransportKind::Proc => bail!("the proc shard transport is only available on unix"),
-    }
-}
-
-// ---------------------------------------------------------------------
-// Wire protocol (shared by the proc transport and the worker binary).
-// ---------------------------------------------------------------------
-
-/// Sanity ceiling on frame payloads (covers Nell-scale phases with slack;
-/// a corrupt length must not trigger a huge allocation).
-const MAX_PAYLOAD_BYTES: usize = 1 << 31;
-const MAX_HEADER_BYTES: usize = 1 << 16;
-
-fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
-    for &x in xs {
-        buf.extend_from_slice(&x.to_le_bytes());
-    }
-}
-
-fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
-    for &x in xs {
-        buf.extend_from_slice(&x.to_le_bytes());
-    }
-}
-
-fn push_u64s(buf: &mut Vec<u8>, xs: &[usize]) {
-    for &x in xs {
-        buf.extend_from_slice(&(x as u64).to_le_bytes());
-    }
-}
-
-/// Sequential reader over a frame payload.
-struct Wire<'a>(&'a [u8]);
-
-impl<'a> Wire<'a> {
-    fn chunk(&mut self, bytes: usize) -> Result<&'a [u8]> {
-        if self.0.len() < bytes {
-            bail!("frame payload truncated ({} < {bytes} bytes)", self.0.len());
-        }
-        let (head, tail) = self.0.split_at(bytes);
-        self.0 = tail;
-        Ok(head)
-    }
-
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.chunk(n * 4)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-
-    fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
-        let raw = self.chunk(n * 8)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
-            .collect())
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(self.f64s(1)?[0])
-    }
-
-    fn usizes(&mut self, n: usize) -> Result<Vec<usize>> {
-        let raw = self.chunk(n * 8)?;
-        raw.chunks_exact(8)
-            .map(|c| {
-                let raw = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
-                usize::try_from(raw).map_err(|_| anyhow!("index overflows usize"))
-            })
-            .collect()
-    }
-
-    fn done(&self) -> Result<()> {
-        if !self.0.is_empty() {
-            bail!("{} trailing bytes in frame payload", self.0.len());
-        }
-        Ok(())
-    }
-}
-
-/// Encode one frame: header length, JSON header, raw payload. The
-/// header's `payload` field must equal `payload.len()`.
-fn encode_frame(header: &Json, payload: &[u8]) -> Vec<u8> {
-    let h = header.to_string();
-    let mut buf = Vec::with_capacity(4 + h.len() + payload.len());
-    buf.extend_from_slice(&(h.len() as u32).to_le_bytes());
-    buf.extend_from_slice(h.as_bytes());
-    buf.extend_from_slice(payload);
-    buf
-}
-
-/// Read one frame. `Ok(None)` on clean EOF at a frame boundary (the
-/// peer hung up between requests).
-fn read_frame(r: &mut impl std::io::Read) -> Result<Option<(Json, Vec<u8>)>> {
-    let mut len4 = [0u8; 4];
-    // Distinguish "no next frame" from "died mid-frame".
-    let mut filled = 0;
-    while filled < 4 {
-        match r.read(&mut len4[filled..]) {
-            Ok(0) if filled == 0 => return Ok(None),
-            Ok(0) => bail!("peer closed mid-frame"),
-            Ok(n) => filled += n,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e.into()),
+        ShardTransportKind::Tcp => {
+            if cfg.shard_addrs.is_empty() {
+                Ok(Arc::new(super::net::TcpTransport::spawn(
+                    ops,
+                    cfg.shard_worker_bin.as_deref(),
+                    cfg.warm_standby,
+                )?))
+            } else {
+                if cfg.warm_standby > 0 {
+                    bail!("--warm-standby applies to spawned workers, not --shard-addrs");
+                }
+                Ok(Arc::new(super::net::TcpTransport::connect(
+                    ops,
+                    &cfg.shard_addrs,
+                )?))
+            }
         }
     }
-    let hlen = u32::from_le_bytes(len4) as usize;
-    if hlen == 0 || hlen > MAX_HEADER_BYTES {
-        bail!("implausible frame header length {hlen}");
-    }
-    let mut hbuf = vec![0u8; hlen];
-    r.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf)?)
-        .map_err(|e| anyhow!("bad frame header: {e}"))?;
-    let plen = header
-        .get("payload")
-        .and_then(Json::as_usize)
-        .unwrap_or(0);
-    if plen > MAX_PAYLOAD_BYTES {
-        bail!("implausible frame payload length {plen}");
-    }
-    let mut payload = vec![0u8; plen];
-    r.read_exact(&mut payload)?;
-    Ok(Some((header, payload)))
-}
-
-fn header_field(h: &Json, key: &str) -> Result<usize> {
-    h.get(key)
-        .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("frame header missing {key:?}"))
 }
 
 // ---------------------------------------------------------------------
@@ -563,9 +558,14 @@ pub use proc_transport::{run_shard_worker, ProcTransport};
 #[cfg(unix)]
 mod proc_transport {
     use super::*;
+    use crate::coordinator::clock::Tick;
+    use crate::coordinator::shard_proto::{
+        aggregate_remote, apply_delta_remote, encode_frame, init_handshake,
+        serve_shard_connection, ship_band_delta, RemoteShard, SessionEnd,
+    };
     use crate::runtime::operands::RowBand;
-    use crate::sparse::Csr;
-    use anyhow::{anyhow, bail};
+    use crate::util::json::Json;
+    use anyhow::anyhow;
     use std::io::Write as _;
     use std::os::unix::net::{UnixListener, UnixStream};
     use std::path::{Path, PathBuf};
@@ -582,104 +582,40 @@ mod proc_transport {
 
     struct ProcShard {
         child: Child,
-        /// `None` once the shard is known dead.
-        stream: Option<UnixStream>,
-        row0: usize,
-        rows: usize,
+        link: RemoteShard<UnixStream>,
     }
 
-    /// Encode an `init` or `delta` frame carrying one band of `S` plus
-    /// its cached `s_c` — the two frame types share the payload layout,
-    /// so a worker's resident band is replaced by exactly the bytes the
-    /// coordinator would have shipped at spawn.
-    fn encode_band_frame(kind: &str, shard: usize, band: &RowBand) -> Vec<u8> {
-        let mut payload = Vec::with_capacity(
-            (band.s.rows() + 1) * 8 + band.s.nnz() * 12 + band.s_c.len() * 8,
-        );
-        push_u64s(&mut payload, band.s.row_ptr());
-        push_u64s(&mut payload, band.s.col_idx());
-        push_f32s(&mut payload, band.s.values());
-        push_f64s(&mut payload, &band.s_c);
-        let header = Json::obj(vec![
-            ("type", Json::from(kind)),
-            ("shard", Json::from(shard)),
-            ("row0", Json::from(band.row0)),
-            ("rows", Json::from(band.s.rows())),
-            ("cols", Json::from(band.s.cols())),
-            ("nnz", Json::from(band.s.nnz())),
-            ("payload", Json::from(payload.len())),
-        ]);
-        encode_frame(&header, &payload)
+    /// A pre-shipped `--warm-standby` worker: already holding band
+    /// `band`'s CSR + `s_c`, kept current by `apply_delta`, ready to
+    /// take over with zero re-ship bytes.
+    struct ProcStandby {
+        child: Child,
+        link: RemoteShard<UnixStream>,
+        band: usize,
     }
 
-    /// Parse the band carried by an `init` or `delta` frame into the
-    /// worker's resident form: `(rows, cols, band-with-local-row0)`.
-    fn parse_band_frame(hdr: &Json, body: &[u8]) -> Result<(usize, usize, RowBand)> {
-        let rows = header_field(hdr, "rows")?;
-        let cols = header_field(hdr, "cols")?;
-        let nnz = header_field(hdr, "nnz")?;
-        let mut wire = Wire(body);
-        let row_ptr = wire.usizes(rows + 1)?;
-        let col_idx = wire.usizes(nnz)?;
-        let values = wire.f32s(nnz)?;
-        let s_c = wire.f64s(cols)?;
-        wire.done()?;
-        let band = RowBand {
-            // Local band coordinates; the coordinator owns the global
-            // row offset for stitching.
-            row0: 0,
-            s: Csr::from_raw_parts(rows, cols, row_ptr, col_idx, values)
-                .map_err(|e| anyhow!("bad band CSR: {e}"))?,
-            s_c,
-        };
-        Ok((rows, cols, band))
+    /// Spawned-but-not-yet-initialized workers plus the shards and
+    /// standbys already brought up, accumulated so a mid-spawn error can
+    /// tear everything down.
+    #[derive(Default)]
+    struct TierBuild {
+        children: Vec<Child>,
+        shards: Vec<ProcShard>,
+        standbys: Vec<ProcStandby>,
     }
 
-    /// Ship one mutated band to its worker and wait for the ack —
-    /// the same lockstep discipline as `agg`/`band`, so any failure
-    /// names the culprit shard.
-    fn ship_band_delta(stream: &mut UnixStream, shard: usize, band: &RowBand) -> Result<()> {
-        stream.write_all(&encode_band_frame("delta", shard, band))?;
-        let (ack, _) = read_frame(stream)?.ok_or_else(|| anyhow!("hung up"))?;
-        match ack.get("type").and_then(Json::as_str) {
-            Some("ack") => Ok(()),
-            Some("error") => bail!(
-                "worker reported: {}",
-                ack.get("msg").and_then(Json::as_str).unwrap_or("?")
-            ),
-            other => bail!("unexpected frame type {other:?}"),
-        }
-    }
-
-    /// Read and fully validate one `band` reply: `(z rows, pred,
-    /// actual)`. Every failure mode — EOF, wire error, worker-reported
-    /// error, wrong frame type, mismatched shape, short payload — is an
-    /// `Err`, so the caller poisons the shard on any of them.
-    fn read_band_reply(
-        stream: &mut UnixStream,
-        rows: usize,
-        width: usize,
-    ) -> Result<(Vec<f32>, f64, f64)> {
-        let (hdr, body) = read_frame(stream)?.ok_or_else(|| anyhow!("hung up"))?;
-        match hdr.get("type").and_then(Json::as_str) {
-            Some("band") => {}
-            Some("error") => {
-                bail!(
-                    "worker reported: {}",
-                    hdr.get("msg").and_then(Json::as_str).unwrap_or("?")
-                );
+    impl TierBuild {
+        fn teardown(&mut self) {
+            for c in self
+                .children
+                .iter_mut()
+                .chain(self.shards.iter_mut().map(|s| &mut s.child))
+                .chain(self.standbys.iter_mut().map(|s| &mut s.child))
+            {
+                let _ = c.kill();
+                let _ = c.wait();
             }
-            other => bail!("unexpected frame type {other:?}"),
         }
-        if header_field(&hdr, "rows")? != rows || header_field(&hdr, "cols")? != width {
-            bail!("mismatched band shape");
-        }
-        let mut wire = Wire(&body);
-        let z = wire.f32s(rows * width)?;
-        let p = wire.f64()?;
-        let a = wire.f64()?;
-        wire.done()?;
-        Ok((z, p, a))
     }
 
     /// One `gcn-abft shard-worker` subprocess per shard, each holding
@@ -688,15 +624,21 @@ mod proc_transport {
     /// streams each phase's `x`/`x_r` and stitches the returned band
     /// rows + checksum partials — concat/sum, exactly like the in-proc
     /// path, and bit-identical to it because the worker computes its
-    /// band with the same serial kernel.
+    /// band with the same serial kernel. The listener is retained for
+    /// the transport's whole life so supervised recovery can accept a
+    /// re-spawned worker on the same socket path.
     pub struct ProcTransport {
         shards_total: usize,
         /// Rows of the resident `S` (= N nodes); mutable because a
         /// node-adding delta grows the graph under a running transport.
         n: AtomicUsize,
         shards: Mutex<Vec<ProcShard>>,
+        standbys: Mutex<Vec<ProcStandby>>,
         timings: Mutex<ShardTimings>,
+        listener: UnixListener,
+        worker_bin: PathBuf,
         socket_dir: PathBuf,
+        socket_path: PathBuf,
         clock: MonotonicClock,
     }
 
@@ -706,6 +648,18 @@ mod proc_transport {
         /// executable (correct for the `gcn-abft` binary itself; tests
         /// and benches pass `env!("CARGO_BIN_EXE_gcn-abft")`).
         pub fn spawn(ops: &GcnOperands, worker_bin: Option<&Path>) -> Result<ProcTransport> {
+            Self::spawn_with_standby(ops, worker_bin, 0)
+        }
+
+        /// As [`ProcTransport::spawn`], plus `warm_standby` extra
+        /// workers pre-shipped bands round-robin (`i % shards`) for
+        /// zero-reship failover. Standbys are not auto-replenished: an
+        /// adopted or lost standby stays gone until the tier restarts.
+        pub fn spawn_with_standby(
+            ops: &GcnOperands,
+            worker_bin: Option<&Path>,
+            warm_standby: usize,
+        ) -> Result<ProcTransport> {
             let SOperand::Banded(bands) = &ops.s else {
                 bail!("proc shard transport needs CSR operands with a banded S");
             };
@@ -744,122 +698,152 @@ mod proc_transport {
             }
             let socket_path = dir.join("coordinator.sock");
             let clock = MonotonicClock::new();
-            let mut children: Vec<Child> = Vec::new();
-            let mut shards: Vec<ProcShard> = Vec::new();
-            if let Err(e) = Self::spawn_and_init(
-                bands,
-                &bin,
-                &socket_path,
-                &clock,
-                &mut children,
-                &mut shards,
-            ) {
+            let listener = match UnixListener::bind(&socket_path) {
+                Ok(l) => l,
+                Err(e) => {
+                    let _ = std::fs::remove_dir(&dir);
+                    return Err(e.into());
+                }
+            };
+            let mut build = TierBuild::default();
+            let init = listener
+                .set_nonblocking(true)
+                .map_err(anyhow::Error::from)
+                .and_then(|()| {
+                    Self::spawn_and_init(bands, &bin, &socket_path, &listener, &clock, warm_standby, &mut build)
+                });
+            if let Err(e) = init {
                 // Nothing of a failed spawn may outlive the error: no
                 // orphan worker processes, no stale socket directory.
-                for c in children
-                    .iter_mut()
-                    .chain(shards.iter_mut().map(|s| &mut s.child))
-                {
-                    let _ = c.kill();
-                    let _ = c.wait();
-                }
+                build.teardown();
                 let _ = std::fs::remove_file(&socket_path);
                 let _ = std::fs::remove_dir(&dir);
                 return Err(e);
             }
 
             Ok(ProcTransport {
-                shards_total: shards.len(),
+                shards_total: build.shards.len(),
                 n: AtomicUsize::new(ops.n_nodes()),
                 timings: Mutex::new(ShardTimings {
-                    wait_secs: vec![0.0; shards.len()],
+                    wait_secs: vec![0.0; build.shards.len()],
                     ..Default::default()
                 }),
-                shards: Mutex::new(shards),
+                shards: Mutex::new(build.shards),
+                standbys: Mutex::new(build.standbys),
+                listener,
+                worker_bin: bin,
                 socket_dir: dir,
+                socket_path,
                 clock,
             })
         }
 
-        /// The fallible part of [`ProcTransport::spawn`]: bind, launch
-        /// one worker per band, accept each connection, ship its band
-        /// and collect the ready/pid handshake. Children and completed
-        /// shards accumulate in the caller's vectors so an error can
-        /// tear everything down.
+        fn spawn_worker(bin: &Path, socket_path: &Path) -> Result<Child> {
+            Command::new(bin)
+                .arg("shard-worker")
+                .arg("--socket")
+                .arg(socket_path)
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| anyhow!("spawning shard worker {bin:?}: {e}"))
+        }
+
+        /// Accept one worker connection with IO timeouts applied,
+        /// watching `children` for a worker that died before connecting.
+        fn accept_one(
+            listener: &UnixListener,
+            clock: &MonotonicClock,
+            deadline: Tick,
+            children: &mut [Child],
+        ) -> Result<UnixStream> {
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false)?;
+                        s.set_read_timeout(Some(IO_TIMEOUT))?;
+                        s.set_write_timeout(Some(IO_TIMEOUT))?;
+                        return Ok(s);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        for (ci, c) in children.iter_mut().enumerate() {
+                            if let Ok(Some(status)) = c.try_wait() {
+                                bail!(
+                                    "shard worker {ci} exited before connecting \
+                                     ({status})"
+                                );
+                            }
+                        }
+                        if clock.now() > deadline {
+                            bail!("timed out waiting for shard workers to connect");
+                        }
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+
+        /// The fallible part of [`ProcTransport::spawn_with_standby`]:
+        /// launch one worker per band (plus standbys), accept each
+        /// connection, ship its band and collect the ready/pid
+        /// handshake. Everything accumulates in `build` so an error can
+        /// tear the half-built tier down.
         fn spawn_and_init(
             bands: &[RowBand],
             bin: &Path,
             socket_path: &Path,
+            listener: &UnixListener,
             clock: &MonotonicClock,
-            children: &mut Vec<Child>,
-            shards: &mut Vec<ProcShard>,
+            warm_standby: usize,
+            build: &mut TierBuild,
         ) -> Result<()> {
-            let listener = UnixListener::bind(socket_path)?;
-            listener.set_nonblocking(true)?;
-
-            for _ in 0..bands.len() {
-                let child = Command::new(bin)
-                    .arg("shard-worker")
-                    .arg("--socket")
-                    .arg(socket_path)
-                    .stdin(Stdio::null())
-                    .stdout(Stdio::null())
-                    .stderr(Stdio::inherit())
-                    .spawn()
-                    .map_err(|e| anyhow!("spawning shard worker {bin:?}: {e}"))?;
-                children.push(child);
+            let total = bands.len() + warm_standby;
+            for _ in 0..total {
+                build.children.push(Self::spawn_worker(bin, socket_path)?);
             }
 
             // Accept one connection per worker (workers are identical
             // until they receive their band, so accept order assigns
-            // shard indices) and ship band k to the k-th connection.
+            // shard indices) and ship band k to the k-th connection;
+            // connections past the band count become standbys holding
+            // band i % shards.
             let deadline = clock.now().after(ACCEPT_TIMEOUT);
-            for (k, band) in bands.iter().enumerate() {
-                let mut stream = loop {
-                    match listener.accept() {
-                        Ok((s, _)) => break s,
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            for (ci, c) in children.iter_mut().enumerate() {
-                                if let Ok(Some(status)) = c.try_wait() {
-                                    bail!(
-                                        "shard worker {ci} exited before connecting \
-                                         ({status})"
-                                    );
-                                }
-                            }
-                            if clock.now() > deadline {
-                                bail!("timed out waiting for shard workers to connect");
-                            }
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(e) => return Err(e.into()),
-                    }
+            for k in 0..total {
+                let band_idx = if k < bands.len() { k } else { (k - bands.len()) % bands.len() };
+                let Some(band) = bands.get(band_idx) else {
+                    bail!("band {band_idx} out of range ({})", bands.len());
                 };
-                stream.set_nonblocking(false)?;
-                stream.set_read_timeout(Some(IO_TIMEOUT))?;
-                stream.set_write_timeout(Some(IO_TIMEOUT))?;
-
-                stream.write_all(&encode_band_frame("init", k, band))?;
-                let (ready, _) = read_frame(&mut stream)?
-                    .ok_or_else(|| anyhow!("shard {k} hung up during init"))?;
-                if ready.get("type").and_then(Json::as_str) != Some("ready") {
-                    bail!("shard {k} sent {:?} instead of ready", ready.to_string());
-                }
-                // Accept order is arbitrary, so pair this shard with the
-                // child whose pid the worker echoed in its ready frame
-                // (kill_shard must hit the process actually serving the
-                // band).
-                let pid = header_field(&ready, "pid")?;
-                let ci = children
+                let mut stream =
+                    Self::accept_one(listener, clock, deadline, &mut build.children)?;
+                // A standby introduces itself as the shard whose band it
+                // holds, so adoption needs no re-introduction.
+                let pid = init_handshake(&mut stream, band_idx, band)?;
+                // Accept order is arbitrary, so pair this connection
+                // with the child whose pid the worker echoed in its
+                // ready frame (kill_shard must hit the process actually
+                // serving the band).
+                let ci = build
+                    .children
                     .iter()
                     .position(|c| c.id() as usize == pid)
-                    .ok_or_else(|| anyhow!("shard {k} echoed unknown pid {pid}"))?;
-                shards.push(ProcShard {
-                    child: children.remove(ci),
+                    .ok_or_else(|| anyhow!("shard {band_idx} echoed unknown pid {pid}"))?;
+                let child = build.children.remove(ci);
+                let link = RemoteShard {
                     stream: Some(stream),
                     row0: band.row0,
                     rows: band.s.rows(),
-                });
+                };
+                if k < bands.len() {
+                    build.shards.push(ProcShard { child, link });
+                } else {
+                    build.standbys.push(ProcStandby {
+                        child,
+                        link,
+                        band: band_idx,
+                    });
+                }
             }
             Ok(())
         }
@@ -893,18 +877,6 @@ mod proc_transport {
                      (apply the delta through the transport first)"
                 );
             }
-            let width = x.cols();
-            let mut payload = Vec::with_capacity(x.data().len() * 4 + x_r.len() * 4);
-            push_f32s(&mut payload, x.data());
-            push_f32s(&mut payload, x_r);
-            let header = Json::obj(vec![
-                ("type", Json::from("agg")),
-                ("rows", Json::from(x.rows())),
-                ("cols", Json::from(width)),
-                ("payload", Json::from(payload.len())),
-            ]);
-            let frame = encode_frame(&header, &payload);
-
             let mut shards = match self.shards.lock() {
                 Ok(g) => g,
                 Err(poisoned) => {
@@ -914,104 +886,24 @@ mod proc_transport {
                     // reply (fail-stop, never a process abort).
                     let mut g = poisoned.into_inner();
                     for sh in g.iter_mut() {
-                        sh.stream = None;
+                        sh.link.stream = None;
                     }
                     g
                 }
             };
-            // Nothing is sent unless every shard is believed alive: a
-            // request half-streamed before discovering a dead shard
-            // would leave orphan replies queued in the healthy workers'
-            // sockets, and the transport must stay request/reply
-            // lockstep to stay bit-exact.
-            for (k, sh) in shards.iter().enumerate() {
-                if sh.stream.is_none() {
-                    bail!("shard {k} is down");
-                }
-            }
-            // Phase 1: stream the request to every shard, concurrently —
-            // sequential sends would add (shards−1) × transfer-time of
-            // pure latency on wide phases (Nell's X₂ is ~60 MB). One
-            // shared frame buffer; a worker only writes after reading a
-            // full request, so sends cannot deadlock against replies.
-            let send_errs: Vec<Option<String>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = shards
-                    .iter_mut()
-                    .map(|sh| {
-                        let frame = &frame;
-                        // Alive per the pre-check above; a None here is
-                        // recorded as a dead send rather than a panic.
-                        sh.stream.as_mut().map(|stream| {
-                            scope.spawn(move || {
-                                stream.write_all(frame).err().map(|e| e.to_string())
-                            })
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| match h {
-                        None => Some("shard stream missing".to_string()),
-                        Some(h) => h
-                            .join()
-                            .unwrap_or_else(|_| Some("send thread panicked".to_string())),
-                    })
-                    .collect()
-            });
-            let mut first_err: Option<(usize, String)> = None;
-            for (k, err) in send_errs.into_iter().enumerate() {
-                if let Some(e) = err {
-                    shards[k].stream = None;
-                    if first_err.is_none() {
-                        first_err = Some((k, e));
-                    }
-                }
-            }
-            if let Some((k, e)) = first_err {
-                bail!("shard {k} died mid-request ({e})");
-            }
-            // Phase 2: collect band results in band order and stitch.
-            // ANY reply-side failure — wire error, malformed frame,
-            // short payload — permanently poisons the shard: with it
-            // marked down, the all-alive pre-check blocks every later
-            // aggregate, so a stale queued reply can never be stitched
-            // into a subsequent forward (the lockstep/desync guarantee).
-            let mut out = Dense::zeros(n, width);
-            let mut pred = 0f64;
-            let mut actual = 0f64;
-            let mut waits = vec![0f64; shards.len()];
-            let mut stitch = 0f64;
-            for (k, sh) in shards.iter_mut().enumerate() {
-                let t0 = self.clock.now();
-                let Some(stream) = sh.stream.as_mut() else {
-                    bail!("shard {k} is down");
-                };
-                let reply = read_band_reply(stream, sh.rows, width);
-                waits[k] = self.clock.now().since(t0).as_secs_f64();
-                let (z, p, a) = match reply {
-                    Ok(v) => v,
-                    Err(e) => {
-                        sh.stream = None;
-                        bail!("shard {k} failed mid-request ({e})");
-                    }
-                };
-                let t1 = self.clock.now();
-                out.data_mut()[sh.row0 * width..(sh.row0 + sh.rows) * width]
-                    .copy_from_slice(&z);
-                pred += p;
-                actual += a;
-                stitch += self.clock.now().since(t1).as_secs_f64();
-            }
+            let mut links: Vec<&mut RemoteShard<UnixStream>> =
+                shards.iter_mut().map(|s| &mut s.link).collect();
+            let agg = aggregate_remote(&mut links, n, x, x_r, &self.clock)?;
             drop(shards);
             {
                 let mut tm = lock_recover(&self.timings);
                 tm.aggregates += 1;
-                tm.stitch_secs += stitch;
-                for (acc, w) in tm.wait_secs.iter_mut().zip(&waits) {
+                tm.stitch_secs += agg.stitch_secs;
+                for (acc, w) in tm.wait_secs.iter_mut().zip(&agg.waits) {
                     *acc += w;
                 }
             }
-            Ok((out, pred, actual))
+            Ok((agg.out, agg.pred, agg.actual))
         }
 
         fn apply_delta(&self, ops: &GcnOperands, outcome: &DeltaOutcome) -> Result<()> {
@@ -1034,19 +926,11 @@ mod proc_transport {
                     // everything rather than risk a stale reply.
                     let mut g = poisoned.into_inner();
                     for sh in g.iter_mut() {
-                        sh.stream = None;
+                        sh.link.stream = None;
                     }
                     g
                 }
             };
-            // All-alive precheck, like aggregate: re-shipping to a
-            // subset while a shard is down would leave the survivors on
-            // a newer graph version than the epoch fence ever publishes.
-            for (k, sh) in shards.iter().enumerate() {
-                if sh.stream.is_none() {
-                    bail!("shard {k} is down");
-                }
-            }
             // A resize moves band boundaries everywhere; a pure edge
             // patch touches only the bands the outcome names.
             let targets: Vec<usize> = if outcome.resized {
@@ -1054,19 +938,47 @@ mod proc_transport {
             } else {
                 outcome.affected_bands.clone()
             };
-            for &k in &targets {
-                let (Some(band), Some(sh)) = (bands.get(k), shards.get_mut(k)) else {
-                    bail!("delta outcome names band {k} of {}", bands.len());
-                };
-                let Some(stream) = sh.stream.as_mut() else {
-                    bail!("shard {k} is down");
-                };
-                if let Err(e) = ship_band_delta(stream, k, band) {
-                    sh.stream = None;
-                    bail!("shard {k} failed during delta re-ship ({e})");
+            {
+                let mut links: Vec<&mut RemoteShard<UnixStream>> =
+                    shards.iter_mut().map(|s| &mut s.link).collect();
+                apply_delta_remote(&mut links, bands, &targets)?;
+            }
+            drop(shards);
+            // Keep warm standbys on the current graph version too —
+            // adoption must be zero-reship *and* version-exact. Losing a
+            // standby here degrades failover, not the delta: log and
+            // discard, never reject the mutation.
+            let mut standbys = lock_recover(&self.standbys);
+            let mut lost: Vec<usize> = Vec::new();
+            for (i, standby) in standbys.iter_mut().enumerate() {
+                if !targets.contains(&standby.band) {
+                    continue;
                 }
-                sh.row0 = band.row0;
-                sh.rows = band.s.rows();
+                let (Some(band), Some(stream)) =
+                    (bands.get(standby.band), standby.link.stream.as_mut())
+                else {
+                    lost.push(i);
+                    continue;
+                };
+                match ship_band_delta(stream, standby.band, band) {
+                    Ok(()) => {
+                        standby.link.row0 = band.row0;
+                        standby.link.rows = band.s.rows();
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "shard tier: warm standby for band {} lost on delta \
+                             re-ship ({e:#}); discarded",
+                            standby.band
+                        );
+                        lost.push(i);
+                    }
+                }
+            }
+            for i in lost.into_iter().rev() {
+                let mut s = standbys.remove(i);
+                let _ = s.child.kill();
+                let _ = s.child.wait();
             }
             self.n.store(ops.n_nodes(), Ordering::SeqCst);
             Ok(())
@@ -1087,6 +999,104 @@ mod proc_transport {
             }
         }
 
+        fn probe(&self) -> Vec<bool> {
+            let mut shards = lock_recover(&self.shards);
+            shards
+                .iter_mut()
+                .map(|sh| {
+                    // A poisoned stream is a known death; a gone pid is
+                    // a death no request has tripped over yet (the
+                    // "pid-gone" heartbeat for local workers).
+                    sh.link.stream.is_some() && matches!(sh.child.try_wait(), Ok(None))
+                })
+                .collect()
+        }
+
+        fn recover(&self, shard: usize, ops: &GcnOperands) -> Result<RecoveryKind> {
+            let SOperand::Banded(bands) = &ops.s else {
+                bail!("proc shard transport needs CSR operands with a banded S");
+            };
+            if bands.len() != self.shards_total {
+                bail!(
+                    "band partition changed ({} bands != {} shards); \
+                     restart the shard tier",
+                    bands.len(),
+                    self.shards_total
+                );
+            }
+            if ops.n_nodes() != self.n.load(Ordering::SeqCst) {
+                bail!(
+                    "recover called with operands of a different shape \
+                     (apply the delta through the transport first)"
+                );
+            }
+            let Some(band) = bands.get(shard) else {
+                bail!("shard {shard} out of range ({})", self.shards_total);
+            };
+            let mut shards = lock_recover(&self.shards);
+            let Some(sh) = shards.get_mut(shard) else {
+                bail!("shard {shard} out of range ({})", self.shards_total);
+            };
+            // Reap whatever is left of the dead worker first; a
+            // half-dead process must not keep the socket path busy.
+            let _ = sh.child.kill();
+            let _ = sh.child.wait();
+            sh.link.stream = None;
+            // Zero-reship failover: adopt a standby already holding this
+            // band (kept current by apply_delta).
+            {
+                let mut standbys = lock_recover(&self.standbys);
+                if let Some(pos) = standbys
+                    .iter()
+                    .position(|s| s.band == shard && s.link.stream.is_some())
+                {
+                    let standby = standbys.remove(pos);
+                    sh.child = standby.child;
+                    sh.link = standby.link;
+                    sh.link.row0 = band.row0;
+                    sh.link.rows = band.s.rows();
+                    return Ok(RecoveryKind::StandbyAdopted);
+                }
+            }
+            // Re-spawn and re-ship through the same init path that
+            // brought the tier up.
+            let child = Self::spawn_worker(&self.worker_bin, &self.socket_path)?;
+            let mut single = [child];
+            let deadline = self.clock.now().after(ACCEPT_TIMEOUT);
+            let handshake = Self::accept_one(&self.listener, &self.clock, deadline, &mut single)
+                .and_then(|mut stream| {
+                    init_handshake(&mut stream, shard, band).map(|pid| (stream, pid))
+                });
+            let [mut child] = single;
+            let (stream, pid) = match handshake {
+                Ok(v) => v,
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(e);
+                }
+            };
+            if pid != child.id() as usize {
+                let _ = child.kill();
+                let _ = child.wait();
+                bail!("shard {shard} echoed unknown pid {pid}");
+            }
+            sh.child = child;
+            sh.link = RemoteShard {
+                stream: Some(stream),
+                row0: band.row0,
+                rows: band.s.rows(),
+            };
+            Ok(RecoveryKind::Respawned)
+        }
+
+        fn standby_count(&self) -> usize {
+            lock_recover(&self.standbys)
+                .iter()
+                .filter(|s| s.link.stream.is_some())
+                .count()
+        }
+
         fn timings(&self) -> ShardTimings {
             lock_recover(&self.timings).clone()
         }
@@ -1096,154 +1106,61 @@ mod proc_transport {
         fn drop(&mut self) {
             // Even a poisoned registry still gets its children reaped.
             let mut shards = lock_recover(&self.shards);
-            for sh in shards.iter_mut() {
-                if let Some(mut stream) = sh.stream.take() {
-                    let header = Json::obj(vec![
-                        ("type", Json::from("shutdown")),
-                        ("payload", Json::from(0usize)),
-                    ]);
-                    let _ = stream.write_all(&encode_frame(&header, &[]));
+            let mut standbys = lock_recover(&self.standbys);
+            let header = Json::obj(vec![
+                ("type", Json::from("shutdown")),
+                ("payload", Json::from(0usize)),
+            ]);
+            let frame = encode_frame(&header, &[]);
+            for stream in shards
+                .iter_mut()
+                .map(|s| &mut s.link.stream)
+                .chain(standbys.iter_mut().map(|s| &mut s.link.stream))
+            {
+                if let Some(mut s) = stream.take() {
+                    let _ = s.write_all(&frame);
                     // Stream drops here: the worker sees EOF and exits.
                 }
             }
-            for sh in shards.iter_mut() {
+            for child in shards
+                .iter_mut()
+                .map(|s| &mut s.child)
+                .chain(standbys.iter_mut().map(|s| &mut s.child))
+            {
                 // Give the worker a moment to exit on its own, then
                 // force the issue so drop never hangs.
                 let deadline = self.clock.now().after(Duration::from_secs(2));
                 loop {
-                    match sh.child.try_wait() {
+                    match child.try_wait() {
                         Ok(Some(_)) => break,
                         Ok(None) if self.clock.now() < deadline => {
                             std::thread::sleep(Duration::from_millis(5));
                         }
                         _ => {
-                            let _ = sh.child.kill();
-                            let _ = sh.child.wait();
+                            let _ = child.kill();
+                            let _ = child.wait();
                             break;
                         }
                     }
                 }
             }
-            let _ = std::fs::remove_file(self.socket_dir.join("coordinator.sock"));
+            let _ = std::fs::remove_file(&self.socket_path);
             let _ = std::fs::remove_dir(&self.socket_dir);
         }
     }
 
-    /// The `gcn-abft shard-worker` main loop: connect to the
-    /// coordinator's socket, receive this worker's band of `S` (plus its
-    /// `s_c`), then serve aggregation requests until shutdown/EOF. The
-    /// band compute is [`RowBand::aggregate_into`] — the identical
-    /// serial kernel one in-proc band runs — which is what makes the
-    /// proc transport bit-identical to in-proc sharding.
+    /// The `gcn-abft shard-worker --socket` main loop: connect to the
+    /// coordinator's Unix socket and serve the session with the shared
+    /// worker loop ([`serve_shard_connection`] — the same code the TCP
+    /// worker runs, which is what keeps the transports bit-identical).
     pub fn run_shard_worker(socket: &Path) -> Result<()> {
         let mut stream = UnixStream::connect(socket)
             .map_err(|e| anyhow!("connecting to coordinator at {socket:?}: {e}"))?;
-
-        let (init, body) = read_frame(&mut stream)?
-            .ok_or_else(|| anyhow!("coordinator hung up before init"))?;
-        if init.get("type").and_then(Json::as_str) != Some("init") {
-            bail!("expected init frame, got {}", init.to_string());
+        match serve_shard_connection(&mut stream)? {
+            // A proc worker serves exactly one coordinator connection;
+            // EOF and explicit shutdown both end the process.
+            SessionEnd::Shutdown | SessionEnd::Hangup => Ok(()),
         }
-        let shard = header_field(&init, "shard")?;
-        let (mut rows, mut cols, mut band) = parse_band_frame(&init, &body)
-            .map_err(|e| anyhow!("bad init frame: {e}"))?;
-        let ready = Json::obj(vec![
-            ("type", Json::from("ready")),
-            ("shard", Json::from(shard)),
-            ("pid", Json::from(std::process::id() as usize)),
-            ("payload", Json::from(0usize)),
-        ]);
-        stream.write_all(&encode_frame(&ready, &[]))?;
-
-        loop {
-            let Some((hdr, body)) = read_frame(&mut stream)? else {
-                return Ok(()); // coordinator hung up — normal shutdown
-            };
-            match hdr.get("type").and_then(Json::as_str) {
-                Some("shutdown") => return Ok(()),
-                Some("agg") => {
-                    if let Err(e) = handle_agg(&mut stream, &band, cols, rows, &hdr, &body)
-                    {
-                        // Best-effort error frame so the coordinator
-                        // logs the cause instead of a bare hang-up.
-                        let msg = format!("{e:#}");
-                        let err = Json::obj(vec![
-                            ("type", Json::from("error")),
-                            ("msg", Json::from(msg.as_str())),
-                            ("payload", Json::from(0usize)),
-                        ]);
-                        let _ = stream.write_all(&encode_frame(&err, &[]));
-                        return Err(e);
-                    }
-                }
-                Some("delta") => match parse_band_frame(&hdr, &body) {
-                    Ok((new_rows, new_cols, new_band)) => {
-                        // The new band fully replaces the resident one —
-                        // identical bytes to what an `init` at the new
-                        // graph version would have shipped, which is what
-                        // keeps post-delta serving bit-identical to a
-                        // freshly spawned shard tier.
-                        rows = new_rows;
-                        cols = new_cols;
-                        band = new_band;
-                        let ack = Json::obj(vec![
-                            ("type", Json::from("ack")),
-                            ("shard", Json::from(shard)),
-                            ("payload", Json::from(0usize)),
-                        ]);
-                        stream.write_all(&encode_frame(&ack, &[]))?;
-                    }
-                    Err(e) => {
-                        // A malformed delta must not leave this worker
-                        // serving a half-replaced band: report and exit
-                        // (the coordinator poisons the shard on the
-                        // failed ack — fail-stop).
-                        let msg = format!("{e:#}");
-                        let err = Json::obj(vec![
-                            ("type", Json::from("error")),
-                            ("msg", Json::from(msg.as_str())),
-                            ("payload", Json::from(0usize)),
-                        ]);
-                        let _ = stream.write_all(&encode_frame(&err, &[]));
-                        return Err(e);
-                    }
-                },
-                other => bail!("unexpected frame type {other:?}"),
-            }
-        }
-    }
-
-    /// One `agg` request: validate, aggregate the band, reply.
-    fn handle_agg(
-        stream: &mut UnixStream,
-        band: &RowBand,
-        cols: usize,
-        rows: usize,
-        hdr: &Json,
-        body: &[u8],
-    ) -> Result<()> {
-        let n = header_field(hdr, "rows")?;
-        let width = header_field(hdr, "cols")?;
-        if n != cols {
-            bail!("agg frame rows {n} != band cols {cols}");
-        }
-        let mut wire = Wire(body);
-        let x = Dense::from_vec(n, width, wire.f32s(n * width)?);
-        let x_r = wire.f32s(n)?;
-        wire.done()?;
-        let mut z = vec![0f32; rows * width];
-        let (pred, actual) = band.aggregate_into(&x, &x_r, &mut z);
-        let mut payload = Vec::with_capacity(z.len() * 4 + 16);
-        push_f32s(&mut payload, &z);
-        push_f64s(&mut payload, &[pred, actual]);
-        let reply = Json::obj(vec![
-            ("type", Json::from("band")),
-            ("rows", Json::from(rows)),
-            ("cols", Json::from(width)),
-            ("payload", Json::from(payload.len())),
-        ]);
-        stream.write_all(&encode_frame(&reply, &payload))?;
-        Ok(())
     }
 }
 
@@ -1350,39 +1267,34 @@ mod tests {
     }
 
     #[test]
-    fn frames_round_trip_bit_exactly() {
-        let header = Json::obj(vec![
-            ("type", Json::from("agg")),
-            ("rows", Json::from(3usize)),
-            ("cols", Json::from(2usize)),
-            ("payload", Json::from(32usize)),
-        ]);
-        let xs = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-20];
-        let ys = [std::f64::consts::PI, -1e-300];
-        let mut payload = Vec::new();
-        push_f32s(&mut payload, &xs);
-        push_f64s(&mut payload, &ys);
-        let frame = encode_frame(&header, &payload);
-        let mut cursor = std::io::Cursor::new(frame);
-        let (h, body) = read_frame(&mut cursor).unwrap().unwrap();
-        assert_eq!(h.get("type").and_then(Json::as_str), Some("agg"));
-        assert_eq!(header_field(&h, "rows").unwrap(), 3);
-        let mut wire = Wire(&body);
-        let got32 = wire.f32s(4).unwrap();
-        let got64 = wire.f64s(2).unwrap();
-        wire.done().unwrap();
-        for (a, b) in xs.iter().zip(&got32) {
-            assert_eq!(a.to_bits(), b.to_bits());
-        }
-        for (a, b) in ys.iter().zip(&got64) {
-            assert_eq!(a.to_bits(), b.to_bits());
-        }
-        // Clean EOF at a frame boundary is None, not an error.
-        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
-        assert!(read_frame(&mut empty).unwrap().is_none());
-        // A truncated frame is an error.
-        let mut trunc = std::io::Cursor::new(vec![9u8, 0, 0]);
-        assert!(read_frame(&mut trunc).is_err());
+    fn inproc_recover_heals_and_matches_the_unkilled_run() {
+        let ops = workload(2);
+        let transport = Arc::new(InProcTransport::new(&ops).unwrap());
+        let backend = ShardedBackend::new(
+            transport.clone() as Arc<dyn ShardTransport>,
+            ChecksumScheme::Fused,
+            1,
+        );
+        let want = backend.run(&ops, &[]).unwrap();
+        assert!(transport.kill_shard(0));
+        assert_eq!(transport.probe(), vec![false, true]);
+        assert!(backend.run(&ops, &[]).is_err(), "dead shard fail-stops");
+        assert_eq!(
+            transport.recover(0, &ops).unwrap(),
+            RecoveryKind::Healed,
+            "inproc recovery un-poisons the band"
+        );
+        assert_eq!(transport.probe(), vec![true, true]);
+        let got = backend.run(&ops, &[]).unwrap();
+        assert_eq!(want.logits, got.logits);
+        assert_eq!(want.predicted, got.predicted);
+        assert_eq!(want.actual, got.actual);
+        assert_eq!(transport.standby_count(), 0, "inproc keeps no standbys");
+        // Recovery against a drifted partition is refused fail-stop.
+        let drifted = workload(3);
+        assert!(transport.kill_shard(0));
+        let err = transport.recover(0, &drifted).unwrap_err();
+        assert!(err.to_string().contains("band partition"), "{err}");
     }
 
     #[test]
@@ -1423,7 +1335,10 @@ mod tests {
     fn transport_kind_parses() {
         assert_eq!(ShardTransportKind::parse("inproc"), Some(ShardTransportKind::InProc));
         assert_eq!(ShardTransportKind::parse("PROC"), Some(ShardTransportKind::Proc));
-        assert_eq!(ShardTransportKind::parse("tcp"), None);
+        assert_eq!(ShardTransportKind::parse("tcp"), Some(ShardTransportKind::Tcp));
+        assert_eq!(ShardTransportKind::parse("net"), Some(ShardTransportKind::Tcp));
+        assert_eq!(ShardTransportKind::parse("carrier-pigeon"), None);
         assert_eq!(ShardTransportKind::Proc.name(), "proc");
+        assert_eq!(ShardTransportKind::Tcp.name(), "tcp");
     }
 }

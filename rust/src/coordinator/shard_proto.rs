@@ -1,0 +1,798 @@
+//! The shard wire protocol, shared by every stream transport.
+//!
+//! One frame = `u32` little-endian header length, UTF-8 JSON header,
+//! raw payload of `header.payload` bytes; floats cross the wire as raw
+//! little-endian bit patterns (never decimal text), which is what keeps
+//! remote shards bit-identical to in-process sharding. The frame set
+//! (`init`/`ready`/`agg`/`band`/`delta`/`ack`/`shutdown`/`error`) has
+//! no unix-specific content, so [`ProcTransport`] (Unix domain sockets)
+//! and [`TcpTransport`] (TCP) speak byte-identical protocols by
+//! construction: both drive the generic engine in this module over
+//! their own `Read + Write` stream type, and the worker side of both
+//! is [`serve_shard_connection`]. A change to the codec or the lockstep
+//! discipline changes every transport at once — proc and tcp cannot
+//! drift.
+//!
+//! Decoding is **fail-stop, never panic**: every malformed input —
+//! truncated frame, oversized length, bit-flipped header, short
+//! payload, trailing bytes — surfaces as a typed [`FrameError`], and a
+//! shard dying under a frame write surfaces as a typed [`ShardDead`]
+//! naming the culprit shard (closing the race where the all-alive
+//! pre-check passed but the shard died before the write landed). The
+//! supervisor ([`super::supervisor`]) consumes that death through the
+//! transport's poisoned per-shard state.
+//!
+//! [`ProcTransport`]: super::shard::ProcTransport
+//! [`TcpTransport`]: super::net::TcpTransport
+
+use crate::runtime::operands::RowBand;
+use crate::sparse::Csr;
+use crate::tensor::Dense;
+use crate::util::json::Json;
+use super::clock::{Clock, MonotonicClock};
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Sanity ceiling on frame payloads (covers Nell-scale phases with
+/// slack; a corrupt length must not trigger a huge allocation).
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 31;
+/// Sanity ceiling on frame headers.
+pub const MAX_HEADER_BYTES: usize = 1 << 16;
+
+// ---------------------------------------------------------------------
+// Typed errors.
+// ---------------------------------------------------------------------
+
+/// A malformed or undeliverable frame. Every decode failure is one of
+/// these variants — never a panic (lint rule F1 covers this module) and
+/// never a silent partial decode, so a corrupt frame can only produce a
+/// fail-stop `Failed` response upstream.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The peer closed the stream inside a frame (clean EOF at a frame
+    /// boundary is `Ok(None)` from [`read_frame`], not an error).
+    ClosedMidFrame,
+    /// Payload shorter than the fields it must carry.
+    Truncated { have: usize, want: usize },
+    /// Payload longer than the fields it must carry.
+    TrailingBytes(usize),
+    /// Header length field of zero or beyond [`MAX_HEADER_BYTES`].
+    BadHeaderLen(usize),
+    /// Header bytes that are not UTF-8 JSON.
+    BadHeader(String),
+    /// Payload length field beyond [`MAX_PAYLOAD_BYTES`].
+    BadPayloadLen(usize),
+    /// A required header field is absent or not an integer.
+    MissingField(&'static str),
+    /// A wire index does not fit in `usize`.
+    IndexOverflow,
+    /// A shipped band whose CSR structure is inconsistent.
+    BadBand(String),
+    /// The underlying stream failed mid-read.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::ClosedMidFrame => write!(f, "peer closed mid-frame"),
+            FrameError::Truncated { have, want } => {
+                write!(f, "frame payload truncated ({have} < {want} bytes)")
+            }
+            FrameError::TrailingBytes(n) => write!(f, "{n} trailing bytes in frame payload"),
+            FrameError::BadHeaderLen(n) => write!(f, "implausible frame header length {n}"),
+            FrameError::BadHeader(e) => write!(f, "bad frame header: {e}"),
+            FrameError::BadPayloadLen(n) => write!(f, "implausible frame payload length {n}"),
+            FrameError::MissingField(key) => write!(f, "frame header missing {key:?}"),
+            FrameError::IndexOverflow => write!(f, "index overflows usize"),
+            FrameError::BadBand(e) => write!(f, "bad band CSR: {e}"),
+            FrameError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+/// A shard died under the transport: the frame write (or the lockstep
+/// reply read) itself failed, naming the culprit shard. This is the
+/// typed signal the shard supervisor consumes — the transport poisons
+/// the shard's stream when it constructs one of these, so
+/// `ShardTransport::probe` reports the death on the next tick even if
+/// the error string never leaves the executor.
+#[derive(Debug, Clone)]
+pub struct ShardDead {
+    pub shard: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for ShardDead {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} died mid-request ({})", self.shard, self.detail)
+    }
+}
+
+impl std::error::Error for ShardDead {}
+
+// ---------------------------------------------------------------------
+// Payload codec.
+// ---------------------------------------------------------------------
+
+/// Append `f32`s to a payload as raw little-endian bit patterns.
+pub fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append `f64`s to a payload as raw little-endian bit patterns.
+pub fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append indices to a payload as little-endian `u64`s.
+pub fn push_u64s(buf: &mut Vec<u8>, xs: &[usize]) {
+    for &x in xs {
+        buf.extend_from_slice(&(x as u64).to_le_bytes());
+    }
+}
+
+/// Sequential reader over a frame payload. Every accessor is length-
+/// checked: short payloads yield [`FrameError::Truncated`], and
+/// [`Wire::done`] rejects trailing bytes, so a decoded frame is exactly
+/// its declared fields or a typed error.
+pub struct Wire<'a>(pub &'a [u8]);
+
+impl<'a> Wire<'a> {
+    fn chunk(&mut self, bytes: usize) -> Result<&'a [u8], FrameError> {
+        if self.0.len() < bytes {
+            return Err(FrameError::Truncated {
+                have: self.0.len(),
+                want: bytes,
+            });
+        }
+        let (head, tail) = self.0.split_at(bytes);
+        self.0 = tail;
+        Ok(head)
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
+        let raw = self.chunk(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn f64s(&mut self, n: usize) -> Result<Vec<f64>, FrameError> {
+        let raw = self.chunk(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    pub fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(self.f64s(1)?[0])
+    }
+
+    pub fn usizes(&mut self, n: usize) -> Result<Vec<usize>, FrameError> {
+        let raw = self.chunk(n * 8)?;
+        raw.chunks_exact(8)
+            .map(|c| {
+                let raw = u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+                usize::try_from(raw).map_err(|_| FrameError::IndexOverflow)
+            })
+            .collect()
+    }
+
+    pub fn done(&self) -> Result<(), FrameError> {
+        if !self.0.is_empty() {
+            return Err(FrameError::TrailingBytes(self.0.len()));
+        }
+        Ok(())
+    }
+}
+
+/// Encode one frame: header length, JSON header, raw payload. The
+/// header's `payload` field must equal `payload.len()`.
+pub fn encode_frame(header: &Json, payload: &[u8]) -> Vec<u8> {
+    let h = header.to_string();
+    let mut buf = Vec::with_capacity(4 + h.len() + payload.len());
+    buf.extend_from_slice(&(h.len() as u32).to_le_bytes());
+    buf.extend_from_slice(h.as_bytes());
+    buf.extend_from_slice(payload);
+    buf
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary (the
+/// peer hung up between requests); every other failure mode is a typed
+/// [`FrameError`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Json, Vec<u8>)>, FrameError> {
+    let mut len4 = [0u8; 4];
+    // Distinguish "no next frame" from "died mid-frame".
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len4[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => return Err(FrameError::ClosedMidFrame),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen == 0 || hlen > MAX_HEADER_BYTES {
+        return Err(FrameError::BadHeaderLen(hlen));
+    }
+    let mut hbuf = vec![0u8; hlen];
+    r.read_exact(&mut hbuf)?;
+    let text = std::str::from_utf8(&hbuf)
+        .map_err(|e| FrameError::BadHeader(e.to_string()))?;
+    let header = Json::parse(text).map_err(|e| FrameError::BadHeader(e.to_string()))?;
+    let plen = header.get("payload").and_then(Json::as_usize).unwrap_or(0);
+    if plen > MAX_PAYLOAD_BYTES {
+        return Err(FrameError::BadPayloadLen(plen));
+    }
+    let mut payload = vec![0u8; plen];
+    r.read_exact(&mut payload)?;
+    Ok(Some((header, payload)))
+}
+
+/// A required integer header field.
+pub fn header_field(h: &Json, key: &'static str) -> Result<usize, FrameError> {
+    h.get(key)
+        .and_then(Json::as_usize)
+        .ok_or(FrameError::MissingField(key))
+}
+
+// ---------------------------------------------------------------------
+// Band frames (init / delta / band replies).
+// ---------------------------------------------------------------------
+
+/// Encode an `init` or `delta` frame carrying one band of `S` plus its
+/// cached `s_c` — the two frame types share the payload layout, so a
+/// worker's resident band is replaced by exactly the bytes the
+/// coordinator would have shipped at spawn.
+pub fn encode_band_frame(kind: &str, shard: usize, band: &RowBand) -> Vec<u8> {
+    let mut payload =
+        Vec::with_capacity((band.s.rows() + 1) * 8 + band.s.nnz() * 12 + band.s_c.len() * 8);
+    push_u64s(&mut payload, band.s.row_ptr());
+    push_u64s(&mut payload, band.s.col_idx());
+    push_f32s(&mut payload, band.s.values());
+    push_f64s(&mut payload, &band.s_c);
+    let header = Json::obj(vec![
+        ("type", Json::from(kind)),
+        ("shard", Json::from(shard)),
+        ("row0", Json::from(band.row0)),
+        ("rows", Json::from(band.s.rows())),
+        ("cols", Json::from(band.s.cols())),
+        ("nnz", Json::from(band.s.nnz())),
+        ("payload", Json::from(payload.len())),
+    ]);
+    encode_frame(&header, &payload)
+}
+
+/// Parse the band carried by an `init` or `delta` frame into the
+/// worker's resident form: `(rows, cols, band-with-local-row0)`.
+pub fn parse_band_frame(hdr: &Json, body: &[u8]) -> Result<(usize, usize, RowBand), FrameError> {
+    let rows = header_field(hdr, "rows")?;
+    let cols = header_field(hdr, "cols")?;
+    let nnz = header_field(hdr, "nnz")?;
+    let mut wire = Wire(body);
+    let row_ptr = wire.usizes(rows + 1)?;
+    let col_idx = wire.usizes(nnz)?;
+    let values = wire.f32s(nnz)?;
+    let s_c = wire.f64s(cols)?;
+    wire.done()?;
+    let band = RowBand {
+        // Local band coordinates; the coordinator owns the global row
+        // offset for stitching.
+        row0: 0,
+        s: Csr::from_raw_parts(rows, cols, row_ptr, col_idx, values)
+            .map_err(|e| FrameError::BadBand(e.to_string()))?,
+        s_c,
+    };
+    Ok((rows, cols, band))
+}
+
+/// Ship one mutated band to its worker and wait for the ack — the same
+/// lockstep discipline as `agg`/`band`, so any failure names the
+/// culprit shard.
+pub(crate) fn ship_band_delta<S: Read + Write>(
+    stream: &mut S,
+    shard: usize,
+    band: &RowBand,
+) -> Result<()> {
+    stream.write_all(&encode_band_frame("delta", shard, band))?;
+    let (ack, _) = read_frame(stream)?.ok_or_else(|| anyhow!("hung up"))?;
+    match ack.get("type").and_then(Json::as_str) {
+        Some("ack") => Ok(()),
+        Some("error") => bail!(
+            "worker reported: {}",
+            ack.get("msg").and_then(Json::as_str).unwrap_or("?")
+        ),
+        other => bail!("unexpected frame type {other:?}"),
+    }
+}
+
+/// Read and fully validate one `band` reply: `(z rows, pred, actual)`.
+/// Every failure mode — EOF, wire error, worker-reported error, wrong
+/// frame type, mismatched shape, short payload — is an `Err`, so the
+/// caller poisons the shard on any of them.
+pub(crate) fn read_band_reply<S: Read>(
+    stream: &mut S,
+    rows: usize,
+    width: usize,
+) -> Result<(Vec<f32>, f64, f64)> {
+    let (hdr, body) = read_frame(stream)?.ok_or_else(|| anyhow!("hung up"))?;
+    match hdr.get("type").and_then(Json::as_str) {
+        Some("band") => {}
+        Some("error") => {
+            bail!(
+                "worker reported: {}",
+                hdr.get("msg").and_then(Json::as_str).unwrap_or("?")
+            );
+        }
+        other => bail!("unexpected frame type {other:?}"),
+    }
+    if header_field(&hdr, "rows")? != rows || header_field(&hdr, "cols")? != width {
+        bail!("mismatched band shape");
+    }
+    let mut wire = Wire(&body);
+    let z = wire.f32s(rows * width)?;
+    let p = wire.f64()?;
+    let a = wire.f64()?;
+    wire.done()?;
+    Ok((z, p, a))
+}
+
+/// Write `init` for `band` and collect the `ready` handshake, returning
+/// the pid the worker echoed (accept/connect order is arbitrary on some
+/// transports, so the pid pairs connections with spawned children).
+pub(crate) fn init_handshake<S: Read + Write>(
+    stream: &mut S,
+    shard: usize,
+    band: &RowBand,
+) -> Result<usize> {
+    stream.write_all(&encode_band_frame("init", shard, band))?;
+    let (ready, _) =
+        read_frame(stream)?.ok_or_else(|| anyhow!("shard {shard} hung up during init"))?;
+    if ready.get("type").and_then(Json::as_str) != Some("ready") {
+        bail!("shard {shard} sent {:?} instead of ready", ready.to_string());
+    }
+    Ok(header_field(&ready, "pid")?)
+}
+
+// ---------------------------------------------------------------------
+// The generic lockstep engine (coordinator side).
+// ---------------------------------------------------------------------
+
+/// Coordinator-side view of one remote shard over any stream type: the
+/// connection (poisoned to `None` the instant any frame I/O on it
+/// fails) plus the global row window its resident band covers.
+#[derive(Debug)]
+pub(crate) struct RemoteShard<S> {
+    /// `None` once the shard is known dead.
+    pub stream: Option<S>,
+    pub row0: usize,
+    pub rows: usize,
+}
+
+/// One stitched aggregation phase.
+pub(crate) struct AggregateStitch {
+    pub out: Dense,
+    pub pred: f64,
+    pub actual: f64,
+    /// Per-shard seconds the stitcher spent blocked on the reply.
+    pub waits: Vec<f64>,
+    pub stitch_secs: f64,
+}
+
+/// One `z = S·x` phase over remote shards, request/reply lockstep:
+/// stream the shared `agg` frame to every shard concurrently, then
+/// collect band replies in band order and stitch (row concat + partial
+/// checksum sums). ANY failure — a send landing on a just-died shard,
+/// a wire error, a malformed reply — poisons that shard's stream and
+/// returns a typed [`ShardDead`], so the all-alive pre-check can never
+/// race a death into a half-streamed request whose stale replies desync
+/// a later stitch. Both the proc and tcp transports are this function
+/// over their own stream type.
+pub(crate) fn aggregate_remote<S: Read + Write + Send>(
+    links: &mut [&mut RemoteShard<S>],
+    n: usize,
+    x: &Dense,
+    x_r: &[f32],
+    clock: &MonotonicClock,
+) -> Result<AggregateStitch> {
+    let width = x.cols();
+    let mut payload = Vec::with_capacity(x.data().len() * 4 + x_r.len() * 4);
+    push_f32s(&mut payload, x.data());
+    push_f32s(&mut payload, x_r);
+    let header = Json::obj(vec![
+        ("type", Json::from("agg")),
+        ("rows", Json::from(x.rows())),
+        ("cols", Json::from(width)),
+        ("payload", Json::from(payload.len())),
+    ]);
+    let frame = encode_frame(&header, &payload);
+
+    // Nothing is sent unless every shard is believed alive: a request
+    // half-streamed before discovering a known-dead shard would leave
+    // orphan replies queued in the healthy workers' sockets. The check
+    // is advisory (a shard can still die under the writes below — that
+    // race is closed by the typed per-write errors), but it keeps the
+    // common known-dead case from touching the wire at all.
+    for (k, sh) in links.iter().enumerate() {
+        if sh.stream.is_none() {
+            bail!("shard {k} is down");
+        }
+    }
+    // Phase 1: stream the request to every shard, concurrently —
+    // sequential sends would add (shards−1) × transfer-time of pure
+    // latency on wide phases (Nell's X₂ is ~60 MB). One shared frame
+    // buffer; a worker only writes after reading a full request, so
+    // sends cannot deadlock against replies.
+    let send_errs: Vec<Option<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = links
+            .iter_mut()
+            .map(|sh| {
+                let frame = &frame;
+                // Alive per the pre-check above; a None here is
+                // recorded as a dead send rather than a panic.
+                sh.stream.as_mut().map(|stream| {
+                    scope.spawn(move || stream.write_all(frame).err().map(|e| e.to_string()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h {
+                None => Some("shard stream missing".to_string()),
+                Some(h) => h
+                    .join()
+                    .unwrap_or_else(|_| Some("send thread panicked".to_string())),
+            })
+            .collect()
+    });
+    let mut first_dead: Option<ShardDead> = None;
+    for (k, err) in send_errs.into_iter().enumerate() {
+        if let Some(detail) = err {
+            links[k].stream = None;
+            if first_dead.is_none() {
+                first_dead = Some(ShardDead { shard: k, detail });
+            }
+        }
+    }
+    if let Some(dead) = first_dead {
+        return Err(dead.into());
+    }
+    // Phase 2: collect band results in band order and stitch. ANY
+    // reply-side failure — wire error, malformed frame, short payload —
+    // permanently poisons the shard: with it marked down, the pre-check
+    // blocks every later aggregate, so a stale queued reply can never
+    // be stitched into a subsequent forward (the lockstep/desync
+    // guarantee).
+    let mut out = Dense::zeros(n, width);
+    let mut pred = 0f64;
+    let mut actual = 0f64;
+    let mut waits = vec![0f64; links.len()];
+    let mut stitch = 0f64;
+    for (k, sh) in links.iter_mut().enumerate() {
+        let t0 = clock.now();
+        let Some(stream) = sh.stream.as_mut() else {
+            bail!("shard {k} is down");
+        };
+        let reply = read_band_reply(stream, sh.rows, width);
+        waits[k] = clock.now().since(t0).as_secs_f64();
+        let (z, p, a) = match reply {
+            Ok(v) => v,
+            Err(e) => {
+                sh.stream = None;
+                return Err(ShardDead {
+                    shard: k,
+                    detail: format!("{e:#}"),
+                }
+                .into());
+            }
+        };
+        let t1 = clock.now();
+        out.data_mut()[sh.row0 * width..(sh.row0 + sh.rows) * width].copy_from_slice(&z);
+        pred += p;
+        actual += a;
+        stitch += clock.now().since(t1).as_secs_f64();
+    }
+    Ok(AggregateStitch {
+        out,
+        pred,
+        actual,
+        waits,
+        stitch_secs: stitch,
+    })
+}
+
+/// Re-ship the mutated bands named by `targets` to their shards, in
+/// lockstep (ship, ack, next). A failed re-ship poisons that shard and
+/// surfaces a typed [`ShardDead`]; the caller leaves the epoch fence
+/// unpublished, so survivors never serve a graph version the fence
+/// never published.
+pub(crate) fn apply_delta_remote<S: Read + Write>(
+    links: &mut [&mut RemoteShard<S>],
+    bands: &[RowBand],
+    targets: &[usize],
+) -> Result<()> {
+    // All-alive precheck, like aggregate: re-shipping to a subset while
+    // a shard is down would leave the survivors on a newer graph
+    // version than the epoch fence ever publishes.
+    for (k, sh) in links.iter().enumerate() {
+        if sh.stream.is_none() {
+            bail!("shard {k} is down");
+        }
+    }
+    for &k in targets {
+        let Some(band) = bands.get(k) else {
+            bail!("delta outcome names band {k} of {}", bands.len());
+        };
+        let Some(sh) = links.get_mut(k) else {
+            bail!("delta outcome names band {k} of {}", links.len());
+        };
+        let Some(stream) = sh.stream.as_mut() else {
+            bail!("shard {k} is down");
+        };
+        if let Err(e) = ship_band_delta(stream, k, band) {
+            sh.stream = None;
+            return Err(ShardDead {
+                shard: k,
+                detail: format!("delta re-ship failed: {e:#}"),
+            }
+            .into());
+        }
+        sh.row0 = band.row0;
+        sh.rows = band.s.rows();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// The shared worker loop (worker side).
+// ---------------------------------------------------------------------
+
+/// How a worker session over one connection ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionEnd {
+    /// The coordinator sent an explicit `shutdown` frame: the worker
+    /// process should exit.
+    Shutdown,
+    /// The coordinator hung up (EOF at a frame boundary). A
+    /// listen-mode worker re-accepts and awaits a fresh `init` — this
+    /// is the reconnect half of supervised recovery.
+    Hangup,
+}
+
+/// Serve one coordinator connection end to end: receive this worker's
+/// band of `S` (plus its `s_c`) in the `init` frame, echo `ready` with
+/// this process's pid, then answer `agg` and `delta` frames until
+/// shutdown or EOF. The band compute is [`RowBand::aggregate_into`] —
+/// the identical serial kernel one in-proc band runs — which is what
+/// makes every stream transport bit-identical to in-proc sharding.
+///
+/// Both worker modes are thin wrappers over this: `shard-worker
+/// --socket` connects a Unix socket and serves it once; `shard-worker
+/// --listen` accepts TCP connections and serves each in turn.
+pub fn serve_shard_connection<S: Read + Write>(stream: &mut S) -> Result<SessionEnd> {
+    let Some((init, body)) = read_frame(stream)? else {
+        // Connected, then hung up before init (e.g. a port probe).
+        return Ok(SessionEnd::Hangup);
+    };
+    if init.get("type").and_then(Json::as_str) != Some("init") {
+        bail!("expected init frame, got {}", init.to_string());
+    }
+    let shard = header_field(&init, "shard")?;
+    let (mut rows, mut cols, mut band) =
+        parse_band_frame(&init, &body).map_err(|e| anyhow!("bad init frame: {e}"))?;
+    let ready = Json::obj(vec![
+        ("type", Json::from("ready")),
+        ("shard", Json::from(shard)),
+        ("pid", Json::from(std::process::id() as usize)),
+        ("payload", Json::from(0usize)),
+    ]);
+    stream.write_all(&encode_frame(&ready, &[]))?;
+
+    loop {
+        let Some((hdr, body)) = read_frame(stream)? else {
+            return Ok(SessionEnd::Hangup);
+        };
+        match hdr.get("type").and_then(Json::as_str) {
+            Some("shutdown") => return Ok(SessionEnd::Shutdown),
+            Some("agg") => {
+                if let Err(e) = handle_agg(stream, &band, cols, rows, &hdr, &body) {
+                    // Best-effort error frame so the coordinator logs
+                    // the cause instead of a bare hang-up.
+                    send_error_frame(stream, &e);
+                    return Err(e);
+                }
+            }
+            Some("delta") => match parse_band_frame(&hdr, &body) {
+                Ok((new_rows, new_cols, new_band)) => {
+                    // The new band fully replaces the resident one —
+                    // identical bytes to what an `init` at the new
+                    // graph version would have shipped, which is what
+                    // keeps post-delta serving bit-identical to a
+                    // freshly spawned shard tier.
+                    rows = new_rows;
+                    cols = new_cols;
+                    band = new_band;
+                    let ack = Json::obj(vec![
+                        ("type", Json::from("ack")),
+                        ("shard", Json::from(shard)),
+                        ("payload", Json::from(0usize)),
+                    ]);
+                    stream.write_all(&encode_frame(&ack, &[]))?;
+                }
+                Err(e) => {
+                    // A malformed delta must not leave this worker
+                    // serving a half-replaced band: report and end the
+                    // session (the coordinator poisons the shard on the
+                    // failed ack — fail-stop).
+                    let e = anyhow::Error::from(e);
+                    send_error_frame(stream, &e);
+                    return Err(e);
+                }
+            },
+            other => bail!("unexpected frame type {other:?}"),
+        }
+    }
+}
+
+fn send_error_frame<S: Write>(stream: &mut S, e: &anyhow::Error) {
+    let msg = format!("{e:#}");
+    let err = Json::obj(vec![
+        ("type", Json::from("error")),
+        ("msg", Json::from(msg.as_str())),
+        ("payload", Json::from(0usize)),
+    ]);
+    let _ = stream.write_all(&encode_frame(&err, &[]));
+}
+
+/// One `agg` request: validate, aggregate the band, reply.
+fn handle_agg<S: Write>(
+    stream: &mut S,
+    band: &RowBand,
+    cols: usize,
+    rows: usize,
+    hdr: &Json,
+    body: &[u8],
+) -> Result<()> {
+    let n = header_field(hdr, "rows")?;
+    let width = header_field(hdr, "cols")?;
+    if n != cols {
+        bail!("agg frame rows {n} != band cols {cols}");
+    }
+    let mut wire = Wire(body);
+    let x = Dense::from_vec(n, width, wire.f32s(n * width)?);
+    let x_r = wire.f32s(n)?;
+    wire.done()?;
+    let mut z = vec![0f32; rows * width];
+    let (pred, actual) = band.aggregate_into(&x, &x_r, &mut z);
+    let mut payload = Vec::with_capacity(z.len() * 4 + 16);
+    push_f32s(&mut payload, &z);
+    push_f64s(&mut payload, &[pred, actual]);
+    let reply = Json::obj(vec![
+        ("type", Json::from("band")),
+        ("rows", Json::from(rows)),
+        ("cols", Json::from(width)),
+        ("payload", Json::from(payload.len())),
+    ]);
+    stream.write_all(&encode_frame(&reply, &payload))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn frames_round_trip_bit_exactly() {
+        let header = Json::obj(vec![
+            ("type", Json::from("agg")),
+            ("rows", Json::from(3usize)),
+            ("cols", Json::from(2usize)),
+            ("payload", Json::from(32usize)),
+        ]);
+        let xs = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-20];
+        let ys = [std::f64::consts::PI, -1e-300];
+        let mut payload = Vec::new();
+        push_f32s(&mut payload, &xs);
+        push_f64s(&mut payload, &ys);
+        let frame = encode_frame(&header, &payload);
+        let mut cursor = std::io::Cursor::new(frame);
+        let (h, body) = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(h.get("type").and_then(Json::as_str), Some("agg"));
+        assert_eq!(header_field(&h, "rows").unwrap(), 3);
+        let mut wire = Wire(&body);
+        let got32 = wire.f32s(4).unwrap();
+        let got64 = wire.f64s(2).unwrap();
+        wire.done().unwrap();
+        for (a, b) in xs.iter().zip(&got32) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ys.iter().zip(&got64) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Clean EOF at a frame boundary is None, not an error.
+        let mut empty = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+        // A truncated frame is a typed error.
+        let mut trunc = std::io::Cursor::new(vec![9u8, 0, 0]);
+        assert!(matches!(
+            read_frame(&mut trunc),
+            Err(FrameError::ClosedMidFrame)
+        ));
+    }
+
+    #[test]
+    fn decode_failures_are_typed() {
+        // Oversized header length.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(FrameError::BadHeaderLen(_))
+        ));
+        // Header bytes that are not JSON.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&4u32.to_le_bytes());
+        buf.extend_from_slice(b"{{{{");
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::BadHeader(_))));
+        // Declared payload longer than the stream.
+        let hdr = Json::obj(vec![("type", Json::from("agg")), ("payload", Json::from(64usize))]);
+        let frame = encode_frame(&hdr, &[0u8; 8]);
+        let mut cur = std::io::Cursor::new(frame);
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Io(_))));
+        // Short payloads and trailing bytes in the wire reader.
+        let mut wire = Wire(&[0u8; 5]);
+        assert!(matches!(
+            wire.f32s(2),
+            Err(FrameError::Truncated { have: 5, want: 8 })
+        ));
+        let wire = Wire(&[0u8; 3]);
+        assert!(matches!(wire.done(), Err(FrameError::TrailingBytes(3))));
+        // Missing header fields.
+        let hdr = Json::obj(vec![("type", Json::from("band"))]);
+        assert!(matches!(
+            header_field(&hdr, "rows"),
+            Err(FrameError::MissingField("rows"))
+        ));
+    }
+
+    #[test]
+    fn shard_dead_names_the_shard() {
+        let dead = ShardDead {
+            shard: 3,
+            detail: "broken pipe".into(),
+        };
+        let msg = dead.to_string();
+        assert!(msg.contains("shard 3"), "{msg}");
+        assert!(msg.contains("broken pipe"), "{msg}");
+        let as_anyhow: anyhow::Error = dead.into();
+        assert!(as_anyhow.to_string().contains("shard 3"));
+    }
+}

@@ -1,0 +1,486 @@
+//! The shard supervisor: tick-driven death detection and recovery.
+//!
+//! Fail-stop alone (PR 5) means a dead shard is dead forever: every
+//! request touching its band answers `Failed` until an operator
+//! restarts the tier. The supervisor closes the loop — "fail-stop,
+//! then heal, never silent": a daemon thread ticks every
+//! `--heartbeat-ms`, probes shard liveness through
+//! [`ShardTransport::probe`] (poisoned stream, missed reply, pid-gone
+//! for local workers) and walks each shard through a small state
+//! machine:
+//!
+//! ```text
+//!          probe ok                probe failed          tick
+//! Serving ─────────▶ Serving      Serving ─────▶ Suspect ────▶ Dead
+//!                                                  │ (kick skips the
+//!                                                  ▼  dwell tick)
+//!                             Respawning ──▶ Reshipping ──▶ Serving
+//!                                  │ recover() failed
+//!                                  ▼
+//!                                Dead ──(strikes ≥ budget)──▶ Failed
+//! ```
+//!
+//! One failed probe makes a shard *Suspect* (a dwell tick absorbs
+//! transient hiccups); a second consecutive failure — or an executor
+//! [`Supervisor::kick`] after a request actually died on the shard —
+//! makes it *Dead* and triggers [`ShardTransport::recover`]:
+//! respawn/reconnect the worker and re-ship its resident band + `s_c`
+//! through the same `init` path that spawned it, or adopt a pre-shipped
+//! `--warm-standby` worker with zero re-ship bytes. *Respawning* and
+//! *Reshipping* are the transient phases of that one call (both logged,
+//! so the recovery timeline is visible in stderr). A shard whose
+//! recovery keeps failing goes *Failed* — terminal, so a hard fault
+//! cannot spin the supervisor forever; everything else keeps serving.
+//!
+//! **Never a wrong answer.** The supervisor only ever runs `recover`
+//! under the coordinator's epoch fence
+//! ([`EpochFence::with_current`](crate::runtime::mutate::EpochFence::with_current)
+//! via [`Supervisor::tick_with_ops`]'s caller), so a re-ship can never
+//! race a graph delta and a half-recovered shard is never visible to an
+//! aggregate. During the recovery window requests touching the dead
+//! band fail-stop exactly as without supervision; the executor replays
+//! them once [`Supervisor::wait_all_alive`] reports the tier whole.
+//!
+//! Shaped after the workgraph-style coordinator daemon pattern:
+//! stale-peer detection on a tick, respawn/reconnect, a state snapshot
+//! for observability ([`Supervisor::snapshot`]) and a transition log.
+
+use super::clock::{Clock, MonotonicClock};
+use super::lock_recover;
+use super::shard::{RecoveryKind, ShardTransport};
+use crate::runtime::GcnOperands;
+use crate::util::json::Json;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Per-shard supervision phase. `Respawning`/`Reshipping` are transient
+/// within one tick (they bracket the `recover` call) but appear in the
+/// transition log and in a snapshot taken mid-recovery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPhase {
+    /// Probe says alive; requests route normally.
+    Serving,
+    /// One failed probe; a transient hiccup gets one dwell tick.
+    Suspect,
+    /// Confirmed dead; recovery will be attempted this tick.
+    Dead,
+    /// A replacement worker is being spawned or re-connected.
+    Respawning,
+    /// The resident band + `s_c` are being re-shipped (`init` path).
+    Reshipping,
+    /// Recovery budget exhausted; terminal. The shard fail-stops
+    /// forever, exactly as an unsupervised tier would.
+    Failed,
+}
+
+impl ShardPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPhase::Serving => "serving",
+            ShardPhase::Suspect => "suspect",
+            ShardPhase::Dead => "dead",
+            ShardPhase::Respawning => "respawning",
+            ShardPhase::Reshipping => "reshipping",
+            ShardPhase::Failed => "failed",
+        }
+    }
+}
+
+/// Supervision knobs (`--heartbeat-ms`, plus a recovery budget so a
+/// hard fault cannot respawn-loop forever).
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Tick period: how often the tier is probed when nothing kicks.
+    pub heartbeat: Duration,
+    /// Consecutive failed recoveries before a shard goes `Failed`.
+    pub max_recoveries_per_shard: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            heartbeat: Duration::from_millis(200),
+            max_recoveries_per_shard: 8,
+        }
+    }
+}
+
+/// Cumulative recovery counters, surfaced into
+/// [`ServeMetrics`](super::metrics::ServeMetrics) and the bench report.
+#[derive(Debug, Clone, Default)]
+pub struct SupCounters {
+    /// Workers re-spawned (includes inproc heals — the in-process
+    /// analogue of a respawn).
+    pub respawns: u64,
+    /// Remote workers re-connected at their known address.
+    pub reconnects: u64,
+    /// Warm standbys adopted (zero re-ship bytes).
+    pub standby_adoptions: u64,
+    /// Wall-clock seconds spent inside `recover` calls (spawn +
+    /// handshake + band re-ship), summed over all recoveries.
+    pub respawn_secs: f64,
+}
+
+struct SupState {
+    phases: Vec<ShardPhase>,
+    /// Consecutive failed recoveries per shard.
+    strikes: Vec<u64>,
+    counters: SupCounters,
+    ticks: u64,
+    /// Executor hint that a shard just died mid-request: the next tick
+    /// skips the Suspect dwell and recovers immediately.
+    kicked: bool,
+    shutdown: bool,
+}
+
+/// See the module doc. Shared between the supervisor daemon thread
+/// (ticking) and the executor (kick + wait_all_alive), so all state
+/// sits behind one mutex + condvar.
+pub struct Supervisor {
+    transport: Arc<dyn ShardTransport>,
+    cfg: SupervisorConfig,
+    clock: MonotonicClock,
+    state: Mutex<SupState>,
+    cv: Condvar,
+}
+
+impl Supervisor {
+    pub fn new(transport: Arc<dyn ShardTransport>, cfg: SupervisorConfig) -> Supervisor {
+        let shards = transport.shards();
+        Supervisor {
+            transport,
+            cfg,
+            clock: MonotonicClock::new(),
+            state: Mutex::new(SupState {
+                phases: vec![ShardPhase::Serving; shards],
+                strikes: vec![0; shards],
+                counters: SupCounters::default(),
+                ticks: 0,
+                kicked: false,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn log_transition(&self, shard: usize, from: ShardPhase, to: ShardPhase, detail: &str) {
+        if detail.is_empty() {
+            eprintln!("supervisor: shard {shard} {} -> {}", from.name(), to.name());
+        } else {
+            eprintln!(
+                "supervisor: shard {shard} {} -> {} ({detail})",
+                from.name(),
+                to.name()
+            );
+        }
+    }
+
+    /// One supervision tick over the current resident operands. The
+    /// caller MUST hold the epoch fence (see
+    /// [`EpochFence::with_current`](crate::runtime::mutate::EpochFence::with_current))
+    /// so recovery re-ships exactly the published graph version and can
+    /// never race a delta.
+    pub fn tick_with_ops(&self, ops: &GcnOperands) {
+        let alive = self.transport.probe();
+        let mut st = lock_recover(&self.state);
+        st.ticks += 1;
+        let kicked = std::mem::take(&mut st.kicked);
+        for (k, &ok) in alive.iter().enumerate() {
+            let Some(&phase) = st.phases.get(k) else {
+                continue;
+            };
+            let next = match (ok, phase) {
+                // Failed is terminal: the budget was spent, and a shard
+                // that "looks alive" after that is not trusted back.
+                (_, ShardPhase::Failed) => ShardPhase::Failed,
+                (true, ShardPhase::Serving) => ShardPhase::Serving,
+                (true, old) => {
+                    // Healed behind our back (e.g. a remote worker's own
+                    // supervisor restarted it and a probe reconnected).
+                    self.log_transition(k, old, ShardPhase::Serving, "probe recovered");
+                    if let Some(s) = st.strikes.get_mut(k) {
+                        *s = 0;
+                    }
+                    ShardPhase::Serving
+                }
+                (false, ShardPhase::Serving) if !kicked => {
+                    self.log_transition(k, phase, ShardPhase::Suspect, "probe failed");
+                    ShardPhase::Suspect
+                }
+                (false, _) => self.recover_shard(k, phase, ops, &mut st),
+            };
+            if let Some(p) = st.phases.get_mut(k) {
+                *p = next;
+            }
+        }
+        drop(st);
+        // Wake wait_all_alive / wait_tick watchers on every tick.
+        self.cv.notify_all();
+    }
+
+    /// Run one recovery attempt for shard `k`, returning its next
+    /// phase. Holds the state lock through the recover call — watchers
+    /// block on the condvar, not the mutex, so kick/shutdown stores
+    /// queue behind a recovery but never deadlock it.
+    fn recover_shard(
+        &self,
+        k: usize,
+        from: ShardPhase,
+        ops: &GcnOperands,
+        st: &mut MutexGuard<'_, SupState>,
+    ) -> ShardPhase {
+        if from != ShardPhase::Dead {
+            self.log_transition(k, from, ShardPhase::Dead, "");
+        }
+        self.log_transition(k, ShardPhase::Dead, ShardPhase::Respawning, "");
+        self.log_transition(k, ShardPhase::Respawning, ShardPhase::Reshipping, "");
+        let t0 = self.clock.now();
+        match self.transport.recover(k, ops) {
+            Ok(kind) => {
+                let took = self.clock.now().since(t0).as_secs_f64();
+                st.counters.respawn_secs += took;
+                match kind {
+                    RecoveryKind::Respawned | RecoveryKind::Healed => {
+                        st.counters.respawns += 1;
+                    }
+                    RecoveryKind::Reconnected => st.counters.reconnects += 1,
+                    RecoveryKind::StandbyAdopted => st.counters.standby_adoptions += 1,
+                }
+                if let Some(s) = st.strikes.get_mut(k) {
+                    *s = 0;
+                }
+                self.log_transition(
+                    k,
+                    ShardPhase::Reshipping,
+                    ShardPhase::Serving,
+                    &format!("{} in {:.1} ms", kind.name(), took * 1e3),
+                );
+                ShardPhase::Serving
+            }
+            Err(e) => {
+                let strikes = match st.strikes.get_mut(k) {
+                    Some(s) => {
+                        *s += 1;
+                        *s
+                    }
+                    None => 1,
+                };
+                if strikes >= self.cfg.max_recoveries_per_shard {
+                    self.log_transition(
+                        k,
+                        ShardPhase::Reshipping,
+                        ShardPhase::Failed,
+                        &format!("recovery budget exhausted after {strikes} attempts: {e:#}"),
+                    );
+                    ShardPhase::Failed
+                } else {
+                    self.log_transition(
+                        k,
+                        ShardPhase::Reshipping,
+                        ShardPhase::Dead,
+                        &format!("recovery attempt {strikes} failed: {e:#}"),
+                    );
+                    ShardPhase::Dead
+                }
+            }
+        }
+    }
+
+    /// Executor hint: a request just died on a shard. The next tick
+    /// (woken immediately) skips the Suspect dwell and recovers at
+    /// once, minimizing the replay window.
+    pub fn kick(&self) {
+        let mut st = lock_recover(&self.state);
+        st.kicked = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Ask the daemon thread to exit; wakes every waiter.
+    pub fn shutdown(&self) {
+        let mut st = lock_recover(&self.state);
+        st.shutdown = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        lock_recover(&self.state).shutdown
+    }
+
+    /// Sleep until the next heartbeat, a kick, or shutdown — the daemon
+    /// thread's pacing.
+    pub fn wait_tick(&self, heartbeat: Duration) {
+        let deadline = self.clock.now().after(heartbeat);
+        let mut st = lock_recover(&self.state);
+        loop {
+            if st.shutdown || st.kicked {
+                return;
+            }
+            let left = deadline.since(self.clock.now());
+            if left.is_zero() {
+                return;
+            }
+            st = match self.cv.wait_timeout(st, left) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+
+    /// Block until every shard is Serving (true) or any shard is
+    /// terminally Failed / the supervisor shut down / `timeout` elapsed
+    /// (false). The executor parks here before replaying a batch that
+    /// died on a shard.
+    pub fn wait_all_alive(&self, timeout: Duration) -> bool {
+        let deadline = self.clock.now().after(timeout);
+        let mut st = lock_recover(&self.state);
+        loop {
+            if st.phases.iter().all(|p| *p == ShardPhase::Serving) {
+                return true;
+            }
+            if st.shutdown || st.phases.iter().any(|p| *p == ShardPhase::Failed) {
+                return false;
+            }
+            let left = deadline.since(self.clock.now());
+            if left.is_zero() {
+                return false;
+            }
+            st = match self.cv.wait_timeout(st, left) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+
+    /// Cumulative recovery counters (copied into the serve metrics at
+    /// campaign end).
+    pub fn counters(&self) -> SupCounters {
+        lock_recover(&self.state).counters.clone()
+    }
+
+    /// Observability snapshot: per-shard phases, tick count, counters,
+    /// remaining standbys.
+    pub fn snapshot(&self) -> Json {
+        let st = lock_recover(&self.state);
+        Json::obj(vec![
+            ("ticks", Json::from(st.ticks)),
+            (
+                "phases",
+                Json::arr(st.phases.iter().map(|p| Json::from(p.name()))),
+            ),
+            ("respawns", Json::from(st.counters.respawns)),
+            ("reconnects", Json::from(st.counters.reconnects)),
+            ("standby_adoptions", Json::from(st.counters.standby_adoptions)),
+            ("respawn_secs", Json::from(st.counters.respawn_secs)),
+            ("standbys", Json::from(self.transport.standby_count())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::coordinator::shard::InProcTransport;
+    use crate::graph::DatasetId;
+    use crate::runtime::GcnOperands;
+
+    fn workload(bands: usize) -> GcnOperands {
+        let g = DatasetId::Tiny.build(11);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 3);
+        GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            bands,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dwell_then_heal_counts_a_respawn() {
+        let ops = workload(2);
+        let transport = Arc::new(InProcTransport::new(&ops).unwrap());
+        let sup = Supervisor::new(
+            transport.clone() as Arc<dyn ShardTransport>,
+            SupervisorConfig::default(),
+        );
+        sup.tick_with_ops(&ops);
+        assert!(sup.wait_all_alive(Duration::from_millis(10)));
+        transport.kill_shard(1);
+        // First tick: Serving -> Suspect (dwell, no recovery yet).
+        sup.tick_with_ops(&ops);
+        assert!(!sup.wait_all_alive(Duration::from_millis(1)));
+        assert_eq!(sup.counters().respawns, 0);
+        // Second tick: Suspect -> recovered.
+        sup.tick_with_ops(&ops);
+        assert!(sup.wait_all_alive(Duration::from_millis(10)));
+        let c = sup.counters();
+        assert_eq!(c.respawns, 1, "inproc heal counts as a respawn");
+        assert_eq!(c.reconnects + c.standby_adoptions, 0);
+        let snap = sup.snapshot().to_string();
+        assert!(snap.contains("\"serving\""), "{snap}");
+    }
+
+    #[test]
+    fn kick_skips_the_dwell_tick() {
+        let ops = workload(2);
+        let transport = Arc::new(InProcTransport::new(&ops).unwrap());
+        let sup = Supervisor::new(
+            transport.clone() as Arc<dyn ShardTransport>,
+            SupervisorConfig::default(),
+        );
+        transport.kill_shard(0);
+        sup.kick();
+        sup.tick_with_ops(&ops);
+        assert!(sup.wait_all_alive(Duration::from_millis(10)));
+        assert_eq!(sup.counters().respawns, 1);
+    }
+
+    #[test]
+    fn exhausted_recovery_budget_is_terminal() {
+        let ops = workload(2);
+        let transport = Arc::new(InProcTransport::new(&ops).unwrap());
+        let sup = Supervisor::new(
+            transport.clone() as Arc<dyn ShardTransport>,
+            SupervisorConfig {
+                heartbeat: Duration::from_millis(1),
+                max_recoveries_per_shard: 2,
+            },
+        );
+        transport.kill_shard(0);
+        // Recovery against drifted operands (3 bands != 2 shards) can
+        // never succeed; two strikes exhaust the budget.
+        let drifted = workload(3);
+        sup.kick();
+        sup.tick_with_ops(&drifted);
+        assert_eq!(sup.counters().respawns, 0);
+        sup.tick_with_ops(&drifted);
+        assert!(
+            !sup.wait_all_alive(Duration::from_millis(50)),
+            "a Failed shard must release waiters immediately"
+        );
+        // Even ticks with correct operands no longer touch it.
+        sup.tick_with_ops(&ops);
+        assert!(!sup.wait_all_alive(Duration::from_millis(1)));
+        let snap = sup.snapshot().to_string();
+        assert!(snap.contains("\"failed\""), "{snap}");
+    }
+
+    #[test]
+    fn wait_tick_returns_on_shutdown_and_heartbeat() {
+        let ops = workload(1);
+        let transport = Arc::new(InProcTransport::new(&ops).unwrap());
+        let sup = Supervisor::new(transport as Arc<dyn ShardTransport>, SupervisorConfig::default());
+        // Heartbeat elapses.
+        sup.wait_tick(Duration::from_millis(5));
+        assert!(!sup.is_shutdown());
+        sup.shutdown();
+        // Returns immediately once shut down.
+        sup.wait_tick(Duration::from_secs(60));
+        assert!(sup.is_shutdown());
+    }
+}

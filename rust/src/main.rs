@@ -105,13 +105,23 @@ SUBCOMMANDS
            --mem-budget-mb M (512)  --train-epochs E (10)
            --backend native|instrumented|pjrt (native)
            --scheme fused|split (fused)
-           --shards N (0 = unsharded)  --shard-transport inproc|proc
-           (inproc). Sharding splits the CSR S into N row bands, one
-           per shard; proc spawns one shard-worker subprocess per band
-           over Unix sockets. Bit-identical to unsharded serving; a
-           dead shard fail-stops (Failed responses, coordinator keeps
-           serving). --kill-shard-after B tears down shard 0 before
-           batch B (fail-stop fault injection).
+           --shards N (0 = unsharded)  --shard-transport
+           inproc|proc|tcp (inproc). Sharding splits the CSR S into N
+           row bands, one per shard; proc spawns one shard-worker
+           subprocess per band over Unix sockets; tcp spawns localhost
+           workers (or dials --shard-addrs HOST:PORT,... — one running
+           `shard-worker --listen` per band) with the identical frame
+           protocol. Bit-identical to unsharded serving; a dead shard
+           fail-stops (Failed responses, coordinator keeps serving).
+           --kill-shard-after B tears down shard 0 before batch B
+           (fail-stop fault injection).
+           --supervise runs the shard supervisor: dead shards are
+           re-spawned/re-connected on a --heartbeat-ms (200) tick, the
+           resident band + checksum re-ship behind the epoch fence, and
+           the in-flight batch replays after recovery — answers stay
+           fail-stop (Failed), never wrong or silent.
+           --warm-standby K pre-ships K spare workers (proc/tcp) so a
+           failover adopts a standby with zero re-ship bytes.
            --deltas PATH streams graph mutations into the running
            server: a JSONL file of scheduled deltas (applied after the
            request id they name has been submitted) or a Unix socket
@@ -120,10 +130,12 @@ SUBCOMMANDS
            publish atomically, and every response records the epoch it
            executed against. A rejected delta leaves the epoch and the
            graph unchanged (fail-stop).
-  shard-worker  (internal) one shard of a sharded serve: connects to
-           the coordinator, receives its row band of S, serves
-           aggregation requests until shutdown
-           --socket PATH (Unix domain socket of the coordinator)
+  shard-worker  (internal) one shard of a sharded serve: receives its
+           row band of S, serves aggregation requests until shutdown
+           --socket PATH (dial the coordinator's Unix domain socket) |
+           --listen ADDR (bind a TCP address, print the bound address
+           on stdout, and accept coordinators — survives coordinator
+           restarts, so one worker can serve successive runs)
   mutate   offline dynamic-graph verification: apply a delta sequence
            incrementally (patching only the touched CSR rows and their
            additive checksum contributions), then rebuild the operands
@@ -146,7 +158,8 @@ SUBCOMMANDS
            and f64-checksum contracts over the source tree (lexer-level,
            std-only; rules D1 no-raw-clock, D2 deterministic-iteration,
            D3 f64-accumulation, D4 no-float-eq, F1 fail-stop-not-panic,
-           C1 scoped-threads-only, M1 mutation-only-in-mutate).
+           C1 scoped-threads-only, M1 mutation-only-in-mutate,
+           N1 sockets-only-in-net).
            Suppress a finding inline with
            `gcn-lint: allow(RULE, reason=\"...\")` (reason mandatory).
            Exits 0 clean, 1 on unsuppressed findings, 2 on usage error.
@@ -433,10 +446,13 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "scheme",
             "shards",
             "shard-transport",
+            "shard-addrs",
             "kill-shard-after",
+            "heartbeat-ms",
+            "warm-standby",
             "deltas",
         ],
-        flags: vec!["json", "adaptive-wait"],
+        flags: vec!["json", "adaptive-wait", "supervise"],
     };
     let a = parse_or_die(rest, &spec);
     match gcn_abft::coordinator::serve_cli(&a) {
@@ -453,19 +469,34 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
 
 fn cmd_shard_worker(rest: Vec<String>) -> i32 {
     let spec = Spec {
-        options: vec!["socket"],
+        options: vec!["socket", "listen"],
         flags: vec![],
     };
     let a = parse_or_die(rest, &spec);
-    let Some(socket) = a.get("socket") else {
-        eprintln!("shard-worker requires --socket PATH");
-        return 2;
-    };
-    match gcn_abft::coordinator::run_shard_worker(std::path::Path::new(socket)) {
-        Ok(()) => 0,
-        Err(e) => {
-            eprintln!("shard-worker failed: {e:#}");
-            1
+    match (a.get("socket"), a.get("listen")) {
+        (Some(_), Some(_)) => {
+            eprintln!("shard-worker takes --socket PATH or --listen ADDR, not both");
+            2
+        }
+        (Some(socket), None) => {
+            match gcn_abft::coordinator::run_shard_worker(std::path::Path::new(socket)) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("shard-worker failed: {e:#}");
+                    1
+                }
+            }
+        }
+        (None, Some(addr)) => match gcn_abft::coordinator::run_tcp_shard_worker(addr) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("shard-worker failed: {e:#}");
+                1
+            }
+        },
+        (None, None) => {
+            eprintln!("shard-worker requires --socket PATH or --listen ADDR");
+            2
         }
     }
 }

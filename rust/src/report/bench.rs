@@ -48,6 +48,11 @@ pub fn serve_row_json(label: &str, shards: usize, transport: &str, s: &ServeSumm
         ("deltas_applied", Json::from(m.deltas_applied)),
         ("delta_failures", Json::from(m.delta_failures)),
         ("delta_apply_ms", Json::Num(m.delta_apply_secs * 1e3)),
+        ("shard_respawns", Json::from(m.shard_respawns)),
+        ("shard_reconnects", Json::from(m.shard_reconnects)),
+        ("standby_adoptions", Json::from(m.standby_adoptions)),
+        ("replayed_requests", Json::from(m.replayed_requests)),
+        ("respawn_ms", Json::Num(m.respawn_secs * 1e3)),
     ])
 }
 
@@ -193,6 +198,19 @@ pub fn bench_document(
     let s = serve_synthetic_with_deltas(&base_cfg(2), requests, DeltaSource::Scheduled(sched))?;
     serve_rows.push(serve_row_json("dynamic-sharded", 2, "inproc", &s));
 
+    // Supervised kill-and-recover drill: shard 0 dies before batch 2,
+    // the supervisor heals the tier, the in-flight batch replays. The
+    // row records the recovery cost (respawn latency, replayed
+    // requests) next to the throughput it was paid under.
+    let kill_cfg = ServerConfig {
+        supervise: true,
+        heartbeat_ms: 20,
+        kill_shard_after: Some(2),
+        ..base_cfg(2)
+    };
+    let s = serve_synthetic_with_deltas(&kill_cfg, requests, DeltaSource::None)?;
+    serve_rows.push(serve_row_json("supervised-recovery", 2, "inproc", &s));
+
     let sweep = delta_sweep(dataset, opts, &[1, 2, 4], delta_count.max(4))?;
 
     Ok(Json::obj(vec![
@@ -305,7 +323,7 @@ mod tests {
         assert_eq!(doc.get("type").and_then(Json::as_str), Some("bench_serve"));
         let data = doc.get("data").unwrap();
         let serve = data.get("serve").and_then(Json::items).unwrap();
-        assert_eq!(serve.len(), 3);
+        assert_eq!(serve.len(), 4);
         // The dynamic rows actually applied deltas; the static row did not.
         let applied = |i: usize| {
             serve[i]
@@ -316,6 +334,17 @@ mod tests {
         assert_eq!(applied(0), 0);
         assert!(applied(1) > 0, "dynamic row applied no deltas");
         assert!(applied(2) > 0, "sharded dynamic row applied no deltas");
+        // The supervised drill killed a shard and healed it.
+        let recovery = &serve[3];
+        assert_eq!(
+            recovery.get("label").and_then(Json::as_str),
+            Some("supervised-recovery")
+        );
+        let respawns = recovery
+            .get("shard_respawns")
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert!(respawns >= 1, "supervised drill recorded no respawn");
     }
 
     #[test]

@@ -476,6 +476,16 @@ impl EpochFence {
         g.1 = Arc::new(next);
         Ok((g.0, outcome, g.1.clone()))
     }
+
+    /// Run `f` on the *current* operands while holding the fence's
+    /// write lock — nothing is published and the epoch does not move.
+    /// This is the shard supervisor's hook: a recovery re-ship runs on
+    /// exactly the published graph version and can never interleave
+    /// with a delta's patch/re-ship/publish sequence.
+    pub fn with_current(&self, f: impl FnOnce(&GcnOperands) -> Result<()>) -> Result<()> {
+        let g = self.inner.write().unwrap_or_else(|p| p.into_inner());
+        f(&g.1)
+    }
 }
 
 /// A delta scheduled against the request stream: applied once `k`

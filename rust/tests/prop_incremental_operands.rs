@@ -24,6 +24,7 @@
 use gcn_abft::abft::{
     engine::widen, fused_forward_checked, weight_row_sums, CheckPolicy, EngineModel,
 };
+use gcn_abft::coordinator::net::TcpTransport;
 use gcn_abft::coordinator::shard::{
     InProcTransport, ProcTransport, ShardTransport, ShardedBackend,
 };
@@ -237,7 +238,7 @@ fn prop_incremental_patch_is_bit_identical_to_rebuild() {
 }
 
 #[test]
-fn prop_shard_tier_serves_deltas_bit_identically_over_both_transports() {
+fn prop_shard_tier_serves_deltas_bit_identically_over_all_transports() {
     check(
         &Config {
             cases: 4,
@@ -254,11 +255,16 @@ fn prop_shard_tier_serves_deltas_bit_identically_over_both_transports() {
                     ProcTransport::spawn(&ops, Some(worker_bin().as_path()))
                         .map_err(|e| format!("proc spawn: {e}"))?,
                 );
+                let tcp = Arc::new(
+                    TcpTransport::spawn(&ops, Some(worker_bin().as_path()), 0)
+                        .map_err(|e| format!("tcp spawn: {e}"))?,
+                );
 
                 // Route the delta sequence to the resident bands over
-                // both transports — edge churn patches just the touched
-                // bands; node adds move every band boundary and force a
-                // full re-ship.
+                // every transport — edge churn patches just the touched
+                // bands (delta/ack frames over both wire transports);
+                // node adds move every band boundary and force a full
+                // re-ship.
                 let mut rng = Pcg64::from_seed(case.delta_seed);
                 for step in 0..case.n_deltas {
                     let delta = next_delta(&mut rng, &ops);
@@ -269,6 +275,8 @@ fn prop_shard_tier_serves_deltas_bit_identically_over_both_transports() {
                         .map_err(|e| format!("inproc delta step {step}: {e:#}"))?;
                     proc.apply_delta(&ops, &outcome)
                         .map_err(|e| format!("proc delta step {step}: {e:#}"))?;
+                    tcp.apply_delta(&ops, &outcome)
+                        .map_err(|e| format!("tcp delta step {step}: {e:#}"))?;
                 }
 
                 let want = forward(&ops, ChecksumScheme::Fused)?;
@@ -280,6 +288,7 @@ fn prop_shard_tier_serves_deltas_bit_identically_over_both_transports() {
                 for transport in [
                     inproc as Arc<dyn ShardTransport>,
                     proc as Arc<dyn ShardTransport>,
+                    tcp as Arc<dyn ShardTransport>,
                 ] {
                     let tname = transport.name();
                     let exe = ShardedBackend::new(transport, ChecksumScheme::Fused, 2);
@@ -299,20 +308,22 @@ fn prop_shard_tier_serves_deltas_bit_identically_over_both_transports() {
                     }
                     per_transport.push(got);
                 }
-                let (a, b) = (&per_transport[0], &per_transport[1]);
-                if a.predicted
-                    .iter()
-                    .zip(&b.predicted)
-                    .any(|(x, y)| x.to_bits() != y.to_bits())
-                    || a.actual
+                let a = &per_transport[0];
+                for (name, b) in ["proc", "tcp"].iter().zip(&per_transport[1..]) {
+                    if a.predicted
                         .iter()
-                        .zip(&b.actual)
+                        .zip(&b.predicted)
                         .any(|(x, y)| x.to_bits() != y.to_bits())
-                {
-                    return Err(format!(
-                        "shards={shards}: proc checksum words diverged from inproc \
-                         after deltas"
-                    ));
+                        || a.actual
+                            .iter()
+                            .zip(&b.actual)
+                            .any(|(x, y)| x.to_bits() != y.to_bits())
+                    {
+                        return Err(format!(
+                            "shards={shards}: {name} checksum words diverged from \
+                             inproc after deltas"
+                        ));
+                    }
                 }
             }
             Ok(())

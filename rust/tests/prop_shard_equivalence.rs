@@ -1,11 +1,11 @@
 //! Property: **sharding is location-transparent.** Serving through the
-//! shard tier — any shard count, either transport — is bit-identical to
+//! shard tier — any shard count, any transport — is bit-identical to
 //! unsharded serving: logits match bit for bit and the fused/split
-//! alarm decisions are identical. The two transports are additionally
-//! bit-identical to *each other* including the stitched checksum bits
-//! (the proc workers compute each band with the same serial kernel the
-//! in-proc scoped threads run, and floats cross the wire as raw bit
-//! patterns).
+//! alarm decisions are identical. The three transports (inproc, proc,
+//! tcp) are additionally bit-identical to *each other* including the
+//! stitched checksum bits (every worker computes each band with the
+//! same serial kernel the in-proc scoped threads run, and floats cross
+//! both wires as raw bit patterns).
 //!
 //! Plus the fail-stop contract: killing a shard worker mid-campaign
 //! turns the affected requests into `Failed` responses while the
@@ -14,6 +14,7 @@
 // The proc transport runs on Unix domain sockets.
 #![cfg(unix)]
 
+use gcn_abft::coordinator::net::TcpTransport;
 use gcn_abft::coordinator::shard::{
     InProcTransport, ProcTransport, ShardPlan, ShardTransport, ShardTransportKind,
     ShardedBackend,
@@ -154,8 +155,12 @@ fn prop_sharded_serving_is_bit_identical_to_unsharded() {
                         ProcTransport::spawn(&ops, Some(worker_bin().as_path()))
                             .map_err(|e| format!("proc spawn: {e}"))?,
                     );
+                    let tcp: Arc<dyn ShardTransport> = Arc::new(
+                        TcpTransport::spawn(&ops, Some(worker_bin().as_path()), 0)
+                            .map_err(|e| format!("tcp spawn: {e}"))?,
+                    );
                     let mut per_transport = Vec::new();
-                    for transport in [inproc, proc] {
+                    for transport in [inproc, proc, tcp] {
                         let tname = transport.name();
                         let exe = ShardedBackend::new(transport, scheme, 2);
                         let got = exe
@@ -180,22 +185,25 @@ fn prop_sharded_serving_is_bit_identical_to_unsharded() {
                     }
                     // The transports are bit-identical to each other,
                     // checksum bits included (same band partition, same
-                    // per-band kernel, raw-bit wire format).
-                    let (a, b) = (&per_transport[0], &per_transport[1]);
-                    if a.logits != b.logits
-                        || a.predicted
-                            .iter()
-                            .zip(&b.predicted)
-                            .any(|(x, y)| x.to_bits() != y.to_bits())
-                        || a.actual
-                            .iter()
-                            .zip(&b.actual)
-                            .any(|(x, y)| x.to_bits() != y.to_bits())
-                    {
-                        return Err(format!(
-                            "{scheme:?} shards={shards}: proc transport diverged \
-                             from inproc"
-                        ));
+                    // per-band kernel, raw-bit wire format on both the
+                    // Unix-socket and TCP paths).
+                    let a = &per_transport[0];
+                    for (name, b) in ["proc", "tcp"].iter().zip(&per_transport[1..]) {
+                        if a.logits != b.logits
+                            || a.predicted
+                                .iter()
+                                .zip(&b.predicted)
+                                .any(|(x, y)| x.to_bits() != y.to_bits())
+                            || a.actual
+                                .iter()
+                                .zip(&b.actual)
+                                .any(|(x, y)| x.to_bits() != y.to_bits())
+                        {
+                            return Err(format!(
+                                "{scheme:?} shards={shards}: {name} transport \
+                                 diverged from inproc"
+                            ));
+                        }
                     }
                 }
             }
@@ -258,7 +266,11 @@ fn killed_proc_worker_fails_the_aggregation_not_the_process() {
 /// metrics, every request gets a response).
 #[test]
 fn killed_shard_mid_campaign_fail_stops_and_coordinator_survives() {
-    for transport in [ShardTransportKind::InProc, ShardTransportKind::Proc] {
+    for transport in [
+        ShardTransportKind::InProc,
+        ShardTransportKind::Proc,
+        ShardTransportKind::Tcp,
+    ] {
         let requests = 10usize;
         let kill_after = 3u64;
         let cfg = ServerConfig {

@@ -1,0 +1,261 @@
+//! Property: **the shard wire codec never panics and never lies.**
+//!
+//! `shard_proto` is the single frame codec both worker transports
+//! (Unix-socket proc and TCP) speak, so its decode path sees every
+//! byte an external peer can send. The properties pinned here:
+//!
+//! * round trip — any frame encodes then decodes bit-exactly (floats
+//!   cross the wire as raw bit patterns, so checksum words survive);
+//! * every truncation of a valid frame decodes to a typed
+//!   [`FrameError`] (or `Ok(None)` at the empty boundary) — never a
+//!   panic, never a silent partial decode;
+//! * random bit flips decode to `Ok` or a typed error — never a panic;
+//! * implausible header/payload length fields are rejected before any
+//!   allocation is attempted.
+
+use gcn_abft::coordinator::shard_proto::{
+    encode_band_frame, encode_frame, parse_band_frame, push_f32s, push_f64s, read_frame,
+    FrameError, Wire, MAX_HEADER_BYTES, MAX_PAYLOAD_BYTES,
+};
+use gcn_abft::runtime::RowBand;
+use gcn_abft::sparse::Csr;
+use gcn_abft::util::json::Json;
+use gcn_abft::util::proptest::{check, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+use std::io::Cursor;
+
+#[derive(Debug, Clone)]
+struct FrameCase {
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Pcg64) -> FrameCase {
+    FrameCase {
+        seed: rng.next_u64(),
+    }
+}
+
+/// A random but well-formed frame: agg-shaped header + float payload.
+fn random_frame(rng: &mut Pcg64) -> (Json, Vec<u8>) {
+    let n32 = rng.gen_index(40);
+    let n64 = rng.gen_index(8);
+    let mut payload = Vec::new();
+    let f32s: Vec<f32> = (0..n32).map(|_| rng.gen_f32_range(-1e6, 1e6)).collect();
+    let f64s: Vec<f64> = (0..n64).map(|_| rng.gen_f64_range(-1e12, 1e12)).collect();
+    push_f32s(&mut payload, &f32s);
+    push_f64s(&mut payload, &f64s);
+    let header = Json::obj(vec![
+        ("type", Json::from("agg")),
+        ("shard", Json::from(rng.gen_index(8))),
+        ("rows", Json::from(n32)),
+        ("payload", Json::from(payload.len())),
+    ]);
+    (header, payload)
+}
+
+#[test]
+fn prop_frames_round_trip_bit_exactly() {
+    check(
+        &Config {
+            cases: 32,
+            seed: 0xF4A3,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let mut rng = Pcg64::from_seed(case.seed);
+            let (header, payload) = random_frame(&mut rng);
+            let bytes = encode_frame(&header, &payload);
+            let mut cur = Cursor::new(bytes);
+            let (h, p) = read_frame(&mut cur)
+                .map_err(|e| format!("decode of a valid frame failed: {e}"))?
+                .ok_or("valid frame decoded as EOF")?;
+            if h.to_string() != header.to_string() {
+                return Err(format!("header drifted: {h} != {header}"));
+            }
+            if p != payload {
+                return Err("payload bytes drifted through the codec".into());
+            }
+            // A second read on the drained cursor is a clean EOF.
+            match read_frame(&mut cur) {
+                Ok(None) => Ok(()),
+                other => Err(format!("expected clean EOF, got {other:?}")),
+            }
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_every_truncation_is_a_typed_error() {
+    check(
+        &Config {
+            cases: 16,
+            seed: 0x7121C,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let mut rng = Pcg64::from_seed(case.seed);
+            let (header, payload) = random_frame(&mut rng);
+            let bytes = encode_frame(&header, &payload);
+            for cut in 0..bytes.len() {
+                let mut cur = Cursor::new(&bytes[..cut]);
+                match read_frame(&mut cur) {
+                    // The empty prefix is a clean no-next-frame EOF.
+                    Ok(None) if cut == 0 => {}
+                    Ok(None) => {
+                        return Err(format!(
+                            "{cut}-byte truncation of a {}-byte frame read as a \
+                             clean boundary",
+                            bytes.len()
+                        ));
+                    }
+                    Ok(Some(_)) => {
+                        return Err(format!(
+                            "{cut}-byte truncation of a {}-byte frame decoded as \
+                             a whole frame",
+                            bytes.len()
+                        ));
+                    }
+                    // Typed failure — exactly the contract. read_exact
+                    // on a short reader surfaces as Io(UnexpectedEof);
+                    // a cut inside the length prefix as ClosedMidFrame.
+                    Err(
+                        FrameError::ClosedMidFrame
+                        | FrameError::Io(_)
+                        | FrameError::BadHeader(_),
+                    ) => {}
+                    Err(e) => {
+                        return Err(format!("unexpected error class at cut {cut}: {e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_bit_flips_never_panic() {
+    check(
+        &Config {
+            cases: 24,
+            seed: 0xB17F,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let mut rng = Pcg64::from_seed(case.seed);
+            let (header, payload) = random_frame(&mut rng);
+            let bytes = encode_frame(&header, &payload);
+            for _ in 0..32 {
+                let mut fuzzed = bytes.clone();
+                let byte = rng.gen_index(fuzzed.len());
+                let bit = rng.gen_index(8) as u32;
+                fuzzed[byte] ^= 1u8 << bit;
+                // Any outcome but a panic is acceptable; the assertion
+                // is that this call returns.
+                let _ = read_frame(&mut Cursor::new(fuzzed));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn implausible_length_fields_are_rejected() {
+    // Header length beyond the ceiling (or zero) — typed, no allocation
+    // of the claimed size is attempted.
+    for hlen in [0u32, (MAX_HEADER_BYTES as u32) + 1, u32::MAX] {
+        let mut bytes = hlen.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[b'{'; 8]);
+        match read_frame(&mut Cursor::new(bytes)) {
+            Err(FrameError::BadHeaderLen(n)) => assert_eq!(n, hlen as usize),
+            other => panic!("hlen {hlen}: expected BadHeaderLen, got {other:?}"),
+        }
+    }
+    // Payload length field beyond the ceiling.
+    let header = Json::obj(vec![
+        ("type", Json::from("agg")),
+        ("payload", Json::from(MAX_PAYLOAD_BYTES + 1)),
+    ]);
+    let bytes = encode_frame(&header, &[]);
+    match read_frame(&mut Cursor::new(bytes)) {
+        Err(FrameError::BadPayloadLen(n)) => assert_eq!(n, MAX_PAYLOAD_BYTES + 1),
+        other => panic!("expected BadPayloadLen, got {other:?}"),
+    }
+}
+
+#[test]
+fn band_frames_round_trip_and_reject_bad_payloads() {
+    let band = RowBand {
+        row0: 3,
+        s: Csr::from_raw_parts(
+            2,
+            5,
+            vec![0, 2, 3],
+            vec![0, 4, 2],
+            vec![0.5f32, -1.25, 3.75],
+        )
+        .unwrap(),
+        s_c: vec![0.5, 0.0, 3.75, 0.0, -1.25],
+    };
+    let bytes = encode_band_frame("init", 1, &band);
+    let (hdr, body) = read_frame(&mut Cursor::new(bytes)).unwrap().unwrap();
+    assert_eq!(hdr.get("type").and_then(Json::as_str), Some("init"));
+    assert_eq!(hdr.get("row0").and_then(Json::as_usize), Some(3));
+    let (rows, cols, got) = parse_band_frame(&hdr, &body).unwrap();
+    assert_eq!((rows, cols), (2, 5));
+    // The worker stores the band in local coordinates…
+    assert_eq!(got.row0, 0);
+    // …with every float bit-preserved.
+    assert_eq!(
+        got.s.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        band.s.values().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+    );
+    assert_eq!(
+        got.s_c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        band.s_c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+    );
+
+    // Truncated body → Truncated; padded body → TrailingBytes.
+    match parse_band_frame(&hdr, &body[..body.len() - 1]) {
+        Err(FrameError::Truncated { .. }) => {}
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+    let mut padded = body.clone();
+    padded.push(0);
+    match parse_band_frame(&hdr, &padded) {
+        Err(FrameError::TrailingBytes(1)) => {}
+        other => panic!("expected TrailingBytes(1), got {other:?}"),
+    }
+    // A header that lies about its CSR shape → typed, never a panic.
+    let lying = Json::obj(vec![
+        ("type", Json::from("init")),
+        ("rows", Json::from(7usize)),
+        ("cols", Json::from(5usize)),
+        ("nnz", Json::from(3usize)),
+    ]);
+    assert!(parse_band_frame(&lying, &body).is_err());
+}
+
+#[test]
+fn wire_reader_is_exactly_sized() {
+    let mut payload = Vec::new();
+    push_f32s(&mut payload, &[1.0, 2.0]);
+    let mut w = Wire(&payload);
+    assert_eq!(w.f32s(2).unwrap(), vec![1.0, 2.0]);
+    w.done().unwrap();
+    // Asking for more than the buffer holds is Truncated.
+    let mut short = Wire(&payload);
+    match short.f32s(3) {
+        Err(FrameError::Truncated { have, want }) => {
+            assert_eq!(have, 8);
+            assert_eq!(want, 12);
+        }
+        other => panic!("expected Truncated, got {other:?}"),
+    }
+}

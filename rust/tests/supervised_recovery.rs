@@ -1,0 +1,251 @@
+//! The kill-and-recover drill, pinned end to end.
+//!
+//! Contract (the supervised extension of PR 5's fail-stop rule): with
+//! `--supervise`, killing a shard mid-campaign yields only `Failed`
+//! responses during the recovery window — never a wrong or silent
+//! answer — the supervisor re-spawns (proc/tcp-local) or re-connects
+//! (tcp-remote) the shard, re-ships its resident band + `s_c` through
+//! the epoch fence, replays the in-flight requests, and post-recovery
+//! results are bit-identical to a run that was never killed.
+
+// The proc transport (and the worker binary plumbing both wire
+// transports share) runs on Unix.
+#![cfg(unix)]
+
+use gcn_abft::coordinator::net::{TcpTransport, WORKER_READY_PREFIX};
+use gcn_abft::coordinator::shard::{
+    ProcTransport, RecoveryKind, ShardTransport, ShardTransportKind, ShardedBackend,
+};
+use gcn_abft::coordinator::{serve_synthetic, BatchPolicy, ServePolicy, ServerConfig};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{ChecksumScheme, GcnBackend, GcnOperands, GcnOutputs};
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_gcn-abft"))
+}
+
+fn bits(out: &GcnOutputs) -> Vec<u32> {
+    out.logits.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Tiny banded operand set shared by the transport-level drills.
+fn build_ops(bands: usize) -> GcnOperands {
+    let graph = DatasetId::Tiny.build(11);
+    let model = GcnModel::two_layer(&graph, 8, 3);
+    GcnOperands::sparse(
+        graph.features.clone(),
+        &model.adjacency,
+        model.layers[0].weights.clone(),
+        model.layers[1].weights.clone(),
+        bands,
+    )
+    .unwrap()
+}
+
+/// Kill shard 0 of `transport`, drive the trait-level recovery hooks
+/// directly, and require the post-recovery forward to be bit-identical
+/// to the pre-kill one. Returns the recovery kind for the caller to
+/// pin.
+fn kill_recover_drill(
+    ops: &GcnOperands,
+    transport: Arc<dyn ShardTransport>,
+) -> (RecoveryKind, Vec<u32>, Vec<u32>) {
+    let exe = ShardedBackend::new(transport.clone(), ChecksumScheme::Fused, 1);
+    let want = exe.run(ops, &[]).expect("healthy run");
+    assert!(ServePolicy::default().verify(&want).ok);
+
+    assert!(transport.kill_shard(0));
+    // Fail-stop during the outage: the forward errors, never a partial
+    // stitch.
+    assert!(exe.run(ops, &[]).is_err(), "dead shard must fail stop");
+    let probe = transport.probe();
+    assert!(!probe[0], "probe must see the dead shard");
+    assert!(probe[1..].iter().all(|&alive| alive));
+
+    let kind = transport.recover(0, ops).expect("recovery");
+    assert!(transport.probe().iter().all(|&alive| alive));
+    let got = exe.run(ops, &[]).expect("post-recovery run");
+    assert!(ServePolicy::default().verify(&got).ok);
+    (kind, bits(&want), bits(&got))
+}
+
+#[test]
+fn proc_kill_recover_respawns_and_matches_the_unkilled_run() {
+    let ops = build_ops(2);
+    let transport = Arc::new(
+        ProcTransport::spawn(&ops, Some(worker_bin().as_path())).unwrap(),
+    );
+    let pid_before = transport.worker_pids()[0];
+    let (kind, want, got) = kill_recover_drill(&ops, transport.clone());
+    assert_eq!(kind, RecoveryKind::Respawned);
+    assert_ne!(
+        transport.worker_pids()[0],
+        pid_before,
+        "respawn must be a new process"
+    );
+    assert_eq!(want, got, "post-recovery logits must match the unkilled run");
+}
+
+#[test]
+fn proc_warm_standby_adoption_needs_no_reship() {
+    let ops = build_ops(2);
+    let transport = Arc::new(
+        ProcTransport::spawn_with_standby(&ops, Some(worker_bin().as_path()), 1).unwrap(),
+    );
+    assert_eq!(transport.standby_count(), 1);
+    // The single standby holds band 0 (round-robin pre-ship).
+    let (kind, want, got) = kill_recover_drill(&ops, transport.clone());
+    assert_eq!(kind, RecoveryKind::StandbyAdopted);
+    assert_eq!(transport.standby_count(), 0, "the standby was consumed");
+    assert_eq!(want, got);
+}
+
+#[test]
+fn tcp_kill_recover_respawns_and_matches_the_unkilled_run() {
+    let ops = build_ops(2);
+    let transport = Arc::new(
+        TcpTransport::spawn(&ops, Some(worker_bin().as_path()), 0).unwrap(),
+    );
+    let (kind, want, got) = kill_recover_drill(&ops, transport);
+    assert_eq!(kind, RecoveryKind::Respawned);
+    assert_eq!(want, got);
+}
+
+/// Spawn a real external `shard-worker --listen` process and return
+/// `(child, addr)` once it prints its bound address.
+fn external_worker() -> (std::process::Child, String) {
+    let mut child = std::process::Command::new(worker_bin())
+        .args(["shard-worker", "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn external worker");
+    let stdout = child.stdout.take().expect("worker stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("worker ready line");
+    let addr = line
+        .trim()
+        .strip_prefix(WORKER_READY_PREFIX)
+        .expect("ready prefix")
+        .to_string();
+    (child, addr)
+}
+
+#[test]
+fn tcp_remote_worker_survives_the_coordinator_and_reconnects() {
+    let ops = build_ops(2);
+    let (mut w0, a0) = external_worker();
+    let (mut w1, a1) = external_worker();
+    {
+        let transport =
+            Arc::new(TcpTransport::connect(&ops, &[a0.clone(), a1.clone()]).unwrap());
+        assert_eq!(transport.worker_addrs(), vec![a0, a1]);
+        // kill_shard on a remote worker severs the coordinator-side
+        // link (the worker is not ours to kill); the worker re-accepts
+        // and recovery is a reconnect, not a respawn.
+        let (kind, want, got) = kill_recover_drill(&ops, transport);
+        assert_eq!(kind, RecoveryKind::Reconnected);
+        assert_eq!(want, got);
+    }
+    let _ = w0.kill();
+    let _ = w1.kill();
+    let _ = w0.wait();
+    let _ = w1.wait();
+}
+
+/// Drive the REAL coordinator with `--supervise` over all three
+/// transports: shard 0 dies before batch 3, the supervisor heals the
+/// tier, the in-flight request replays, and the campaign ends with
+/// every request answered — statuses only Clean or fail-stop Failed,
+/// never wrong/silent, and with recovery observable in the metrics.
+#[test]
+fn supervised_server_heals_the_tier_and_replays_inflight_requests() {
+    for transport in [
+        ShardTransportKind::InProc,
+        ShardTransportKind::Proc,
+        ShardTransportKind::Tcp,
+    ] {
+        let requests = 10usize;
+        let cfg = ServerConfig {
+            dataset: DatasetId::Tiny,
+            shards: 2,
+            shard_transport: transport,
+            shard_worker_bin: Some(worker_bin()),
+            kill_shard_after: Some(3),
+            supervise: true,
+            heartbeat_ms: 20,
+            batch: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            workers: 1,
+            train_epochs: 2,
+            ..Default::default()
+        };
+        let s = serve_synthetic(&cfg, requests).unwrap_or_else(|e| {
+            panic!("{transport:?}: supervised coordinator must survive: {e:#}")
+        });
+        assert_eq!(s.responses, requests, "{transport:?}: every request answered");
+        assert_eq!(
+            s.recovered, 0,
+            "{transport:?}: no injected faults, so no verify-retry recoveries"
+        );
+        assert_eq!(
+            s.clean + s.failed,
+            requests,
+            "{transport:?}: statuses are only Clean or fail-stop Failed"
+        );
+        assert!(
+            s.metrics.shard_respawns >= 1,
+            "{transport:?}: the supervisor must have healed shard 0: {s:?}"
+        );
+        assert_eq!(
+            s.clean, requests,
+            "{transport:?}: recovery + replay answers the killed batch Clean: {s:?}"
+        );
+        assert!(
+            s.metrics.replayed_requests >= 1,
+            "{transport:?}: the in-flight request must be replayed: {s:?}"
+        );
+        assert!(s.supervised, "{transport:?}: summary records supervision");
+        assert!(
+            s.metrics.respawn_secs >= 0.0,
+            "{transport:?}: recovery time is recorded"
+        );
+    }
+}
+
+/// Without `--supervise` the PR 5 contract is untouched: the same kill
+/// leaves the tier down and everything after the kill fails stop. (The
+/// full unsupervised drill lives in prop_shard_equivalence.rs; this
+/// pins that merely *linking* the supervisor changes nothing.)
+#[test]
+fn unsupervised_kill_still_fails_stop() {
+    let cfg = ServerConfig {
+        dataset: DatasetId::Tiny,
+        shards: 2,
+        shard_transport: ShardTransportKind::InProc,
+        kill_shard_after: Some(2),
+        batch: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+        workers: 1,
+        train_epochs: 2,
+        ..Default::default()
+    };
+    let s = serve_synthetic(&cfg, 6).unwrap();
+    assert_eq!(s.clean, 2);
+    assert_eq!(s.failed, 4);
+    assert_eq!(s.metrics.shard_respawns, 0);
+    assert_eq!(s.metrics.replayed_requests, 0);
+    assert!(!s.supervised);
+}
