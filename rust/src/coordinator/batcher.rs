@@ -36,6 +36,21 @@
 //! starvation bound while batches are closing, and a caller-declared
 //! deadline is honored in member selection, not just in close timing.
 //!
+//! **Overload survival** ([`AdmissionControl`], `--queue-cap`): with a
+//! bounded queue configured, [`Scheduler::submit`] becomes fallible.
+//! Shedding is strictly from the bottom — Background sheds first,
+//! Interactive last: a full *class* cap tail-drops the arrival, a full
+//! *total* cap evicts the youngest member of the worst strictly-lower
+//! class (or sheds the arrival when nothing below it is queued). With
+//! `early_reject`, a request whose declared deadline provably cannot be
+//! met — estimated from an EWMA of observed batch service times fed in
+//! via [`Scheduler::record_service`] — is refused at admission, and
+//! queued members whose deadline has expired (or become unmeetable) are
+//! moved to [`Batch::shed`] at close time instead of executing late.
+//! Every shed outcome carries a [`ShedReason`] and is answered by the
+//! caller as a `Shed` response — a distinct class from `Failed`, so
+//! degraded availability is never conflated with fault detection.
+//!
 //! Every decision is a pure function of the queue and a [`Tick`] from
 //! the [`Clock`], so the whole policy is tested deterministically on a
 //! [`super::clock::VirtualClock`] with zero real sleeps
@@ -60,6 +75,9 @@ pub struct BatchPolicy {
     /// Auto-tune the hold budget from the observed arrival rate
     /// (`--adaptive-wait`); `None` = the fixed `max_wait` governs.
     pub adaptive: Option<AdaptiveWait>,
+    /// Bounded admission with per-priority shedding (`--queue-cap`);
+    /// `None` = the legacy unbounded queue, `submit` never sheds.
+    pub admission: Option<AdmissionControl>,
 }
 
 impl Default for BatchPolicy {
@@ -69,6 +87,7 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(5),
             starvation_factor: 4,
             adaptive: None,
+            admission: None,
         }
     }
 }
@@ -108,6 +127,117 @@ impl Default for AdaptiveWait {
     }
 }
 
+/// Bounded admission policy (`--queue-cap`). All shedding decisions are
+/// pure functions of the queue and the arrival's [`Tick`], so they are
+/// pinned on a `VirtualClock` with zero sleeps.
+///
+/// Shed-from-the-bottom ordering: Background sheds first, Interactive
+/// last. A full class cap tail-drops the arrival itself; a full total
+/// cap evicts the *youngest* queued member of the *worst* class that is
+/// strictly lower-priority than the arrival — never a peer or better —
+/// and sheds the arrival when no such victim exists.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionControl {
+    /// Hard bound on the total queue depth across all classes.
+    pub total_cap: usize,
+    /// Per-class bounds, indexed by [`Priority::rank`]
+    /// (`[interactive, batch, background]`); `usize::MAX` leaves a
+    /// class governed by `total_cap` alone.
+    ///
+    /// [`Priority::rank`]: super::request::Priority::rank
+    pub class_caps: [usize; 3],
+    /// Deadline-aware early rejection: refuse a request whose declared
+    /// deadline provably cannot be met (queue-ahead estimate × the
+    /// [`Scheduler::record_service`] EWMA), and shed already-expired /
+    /// unmeetable members into [`Batch::shed`] at close time instead of
+    /// executing them late. Off by default: without it, expired
+    /// deadlines keep their legacy promote-and-serve semantics.
+    pub early_reject: bool,
+}
+
+impl Default for AdmissionControl {
+    fn default() -> Self {
+        Self {
+            total_cap: 1024,
+            class_caps: [usize::MAX; 3],
+            early_reject: false,
+        }
+    }
+}
+
+/// Why a request was shed (attached to the handed-back request so the
+/// caller can answer it with a machine-readable `Shed` response).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The bounded queue (class or total cap) was full and no
+    /// strictly-lower-priority victim existed.
+    QueueFull,
+    /// Evicted from the queue to admit a higher-priority arrival.
+    Evicted,
+    /// The declared deadline provably cannot (or can no longer) be met.
+    DeadlineUnmeetable,
+}
+
+impl ShedReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::Evicted => "evicted",
+            ShedReason::DeadlineUnmeetable => "deadline-unmeetable",
+        }
+    }
+}
+
+/// A request shed by admission control, handed back to the caller —
+/// the scheduler never answers clients itself, so whoever submitted it
+/// owns turning this into a `Shed` response.
+#[derive(Debug)]
+pub struct ShedRequest {
+    pub req: InferenceRequest,
+    pub reason: ShedReason,
+}
+
+/// Verdict for the arriving request in a [`SubmitOutcome`].
+#[derive(Debug)]
+pub enum Admission {
+    /// The request was queued.
+    Admitted,
+    /// The request was refused and is handed back with the reason.
+    Shed(ShedRequest),
+}
+
+/// Everything [`Scheduler::submit`] decided: the arrival's own verdict
+/// plus any queued requests evicted to make room for it. With
+/// `admission: None` the verdict is always `Admitted` and `evicted` is
+/// always empty — legacy call sites may ignore the return value.
+#[derive(Debug)]
+pub struct SubmitOutcome {
+    pub admission: Admission,
+    /// Lower-priority members evicted to admit this arrival
+    /// (youngest-first within the worst queued class).
+    pub evicted: Vec<ShedRequest>,
+}
+
+impl SubmitOutcome {
+    pub fn is_admitted(&self) -> bool {
+        matches!(self.admission, Admission::Admitted)
+    }
+
+    /// Drain every shed request (the refused arrival and/or evicted
+    /// members) for answering.
+    pub fn into_shed(self) -> Vec<ShedRequest> {
+        let mut out = self.evicted;
+        if let Admission::Shed(s) = self.admission {
+            out.push(s);
+        }
+        out
+    }
+}
+
+/// Smoothing factor for the batch service-time EWMA feeding
+/// deadline-aware early rejection (`ewma ← α·dt + (1−α)·ewma`).
+const SERVICE_EWMA_ALPHA: f64 = 0.3;
+
 /// Why a batch was closed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CloseReason {
@@ -123,11 +253,16 @@ pub enum CloseReason {
 
 /// A closed batch. `requests` are in scheduling order: force-included
 /// members (past the starvation bound or an explicit deadline) first,
-/// then the rest — both groups sorted by (priority, arrival).
+/// then the rest — both groups sorted by (priority, arrival). `shed`
+/// holds members rejected at close time by deadline-aware early
+/// rejection (`AdmissionControl::early_reject`) — the executor must
+/// answer them with `Shed` responses *before* the forward, and they
+/// never appear in `requests`, so a shed request never executes.
 #[derive(Debug)]
 pub struct Batch {
     pub requests: Vec<InferenceRequest>,
     pub closed_by: CloseReason,
+    pub shed: Vec<ShedRequest>,
 }
 
 impl Batch {
@@ -148,6 +283,17 @@ pub struct SchedStats {
     /// because they crossed the starvation bound or an explicit
     /// per-request deadline.
     pub starvation_promotions: u64,
+    /// Requests shed by admission control, per priority rank
+    /// (`[interactive, batch, background]`): refused arrivals, evicted
+    /// members, and close-time deadline rejections all count here.
+    pub shed: [u64; 3],
+}
+
+impl SchedStats {
+    /// Total shed across all classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
 }
 
 /// One queued request with its admission bookkeeping.
@@ -195,6 +341,10 @@ struct State {
     ewma_arrival_ns: Option<f64>,
     /// Tick of the most recent arrival.
     last_arrival: Option<Tick>,
+    /// EWMA of batch service time in ns, fed by executors through
+    /// [`Scheduler::record_service`]; `None` until the first batch
+    /// completes. Drives deadline-aware early rejection.
+    ewma_service_ns: Option<f64>,
 }
 
 /// The continuous-batching scheduler. Shared by reference between the
@@ -266,7 +416,13 @@ impl<C: Clock> Scheduler<C> {
     /// Admit one request. Never blocks on an executing forward; stamps
     /// the arrival tick used by every close decision and (adaptive
     /// policy) folds the inter-arrival gap into the EWMA.
-    pub fn submit(&self, req: InferenceRequest) {
+    ///
+    /// With [`BatchPolicy::admission`] set this is fallible: the
+    /// outcome says whether the arrival was `Admitted` or `Shed` (the
+    /// request is handed back), and carries any lower-priority members
+    /// evicted to make room. With `admission: None` the legacy
+    /// unbounded behavior is unchanged and the outcome may be ignored.
+    pub fn submit(&self, req: InferenceRequest) -> SubmitOutcome {
         let arrived = self.clock.now();
         let mut st = lock_recover(&self.state);
         if let Some(aw) = self.policy.adaptive {
@@ -279,11 +435,119 @@ impl<C: Clock> Scheduler<C> {
             }
             st.last_arrival = Some(arrived);
         }
+        st.stats.submitted += 1;
+        let mut evicted = Vec::new();
+        if let Some(ac) = self.policy.admission {
+            let rank = req.priority.rank();
+
+            // Deadline-aware early rejection: with `ahead` peers-or-
+            // better queued, this arrival rides no earlier than batch
+            // `ahead / max_batch + 1`; if that many service times
+            // already exceed the declared budget, answering late helps
+            // nobody — refuse now so the client can back off.
+            if ac.early_reject {
+                if let (Some(d), Some(ewma)) = (req.deadline, st.ewma_service_ns) {
+                    let ahead = st
+                        .queue
+                        .iter()
+                        .filter(|q| q.req.priority.rank() <= rank)
+                        .count();
+                    let batches_before = (ahead / self.policy.max_batch.max(1) + 1) as f64;
+                    if batches_before * ewma > d.as_nanos() as f64 {
+                        st.stats.shed[rank] += 1;
+                        return SubmitOutcome {
+                            admission: Admission::Shed(ShedRequest {
+                                req,
+                                reason: ShedReason::DeadlineUnmeetable,
+                            }),
+                            evicted,
+                        };
+                    }
+                }
+            }
+
+            // Class cap: tail-drop the arrival — its own class is full,
+            // so no lower class pays for it.
+            let in_class = st
+                .queue
+                .iter()
+                .filter(|q| q.req.priority.rank() == rank)
+                .count();
+            if in_class >= ac.class_caps[rank].max(1) {
+                st.stats.shed[rank] += 1;
+                return SubmitOutcome {
+                    admission: Admission::Shed(ShedRequest {
+                        req,
+                        reason: ShedReason::QueueFull,
+                    }),
+                    evicted,
+                };
+            }
+
+            // Total cap: shed from the bottom. Evict the youngest
+            // member of the worst class strictly below the arrival
+            // (Background sheds first, Interactive last); if nothing
+            // below it is queued, the arrival itself is shed — a full
+            // queue of equal-or-better work is never preempted.
+            if st.queue.len() >= ac.total_cap.max(1) {
+                let victim = st
+                    .queue
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| q.req.priority.rank() > rank)
+                    .max_by_key(|(_, q)| (q.req.priority.rank(), q.seq))
+                    .map(|(i, _)| i);
+                match victim {
+                    Some(i) => {
+                        let v = st.queue.remove(i);
+                        st.stats.shed[v.req.priority.rank()] += 1;
+                        evicted.push(ShedRequest {
+                            req: v.req,
+                            reason: ShedReason::Evicted,
+                        });
+                    }
+                    None => {
+                        st.stats.shed[rank] += 1;
+                        return SubmitOutcome {
+                            admission: Admission::Shed(ShedRequest {
+                                req,
+                                reason: ShedReason::QueueFull,
+                            }),
+                            evicted,
+                        };
+                    }
+                }
+            }
+        }
         let seq = st.next_seq;
         st.next_seq += 1;
-        st.stats.submitted += 1;
         st.queue.push(Queued { req, arrived, seq });
         self.cv.notify_all();
+        SubmitOutcome {
+            admission: Admission::Admitted,
+            evicted,
+        }
+    }
+
+    /// Fold one completed batch's service time into the EWMA that
+    /// drives deadline-aware early rejection. Executors call this after
+    /// every forward; tests feed known durations directly, so the
+    /// estimate stays a pure function of its inputs.
+    pub fn record_service(&self, took: Duration) {
+        let mut st = lock_recover(&self.state);
+        let ns = took.as_nanos() as f64;
+        st.ewma_service_ns = Some(match st.ewma_service_ns {
+            Some(e) => SERVICE_EWMA_ALPHA * ns + (1.0 - SERVICE_EWMA_ALPHA) * e,
+            None => ns,
+        });
+    }
+
+    /// The current batch service-time estimate (`None` until the first
+    /// [`record_service`](Self::record_service)).
+    pub fn ewma_service(&self) -> Option<Duration> {
+        lock_recover(&self.state)
+            .ewma_service_ns
+            .map(|ns| Duration::from_nanos(ns as u64))
     }
 
     /// Close admission: queued requests drain (immediately, without
@@ -402,6 +666,47 @@ impl<C: Clock> Scheduler<C> {
     /// aging deliberately does *not* jump priority: under overload that
     /// would collapse priority scheduling into FIFO.)
     fn take_batch(st: &mut State, p: &BatchPolicy, now: Tick, reason: CloseReason) -> Batch {
+        // Deadline-aware early rejection at close time (opt-in via
+        // `AdmissionControl::early_reject`): a member whose declared
+        // deadline has already expired — or provably cannot be met even
+        // if it rode the very next batch (`now + ewma_service` past the
+        // deadline) — is shed instead of executed late. Without the
+        // opt-in, expired deadlines keep their promote-and-serve
+        // semantics below.
+        let mut shed: Vec<ShedRequest> = Vec::new();
+        if matches!(p.admission, Some(ac) if ac.early_reject) {
+            let ewma = st.ewma_service_ns;
+            let queue = std::mem::take(&mut st.queue);
+            for q in queue {
+                let unmeetable = match q.req.deadline {
+                    Some(d) => {
+                        let dl = q.arrived.after(d);
+                        now >= dl
+                            || ewma.is_some_and(|e| now.after(Duration::from_nanos(e as u64)) > dl)
+                    }
+                    None => false,
+                };
+                if unmeetable {
+                    st.stats.shed[q.req.priority.rank()] += 1;
+                    shed.push(ShedRequest {
+                        req: q.req,
+                        reason: ShedReason::DeadlineUnmeetable,
+                    });
+                } else {
+                    st.queue.push(q);
+                }
+            }
+            if st.queue.is_empty() {
+                // Everything queued was unmeetable; the "batch" is pure
+                // rejection work — no forward, no batch counted.
+                return Batch {
+                    requests: Vec::new(),
+                    closed_by: reason,
+                    shed,
+                };
+            }
+        }
+
         let n = st.queue.len();
         let take = p.max_batch.max(1).min(n);
         let bound = p.starvation_bound();
@@ -425,7 +730,10 @@ impl<C: Clock> Scheduler<C> {
         order.truncate(take);
 
         // Promotions: selected urgent members that a pure (priority,
-        // arrival) cut of the same size would have left out.
+        // arrival) cut of the same size would have left out. Membership
+        // in that cut is tested through a bitvec — a linear scan per
+        // member (`by_prio.contains`) is quadratic per close exactly
+        // when the queue is deep under overload.
         let mut promotions = 0u64;
         let mut starved_promoted = false;
         if n > take {
@@ -435,8 +743,12 @@ impl<C: Clock> Scheduler<C> {
                 (q.req.priority.rank(), q.arrived, q.seq)
             });
             by_prio.truncate(take);
+            let mut in_prio_cut = vec![false; n];
+            for &i in &by_prio {
+                in_prio_cut[i] = true;
+            }
             for &i in &order {
-                if urgent[i] && !by_prio.contains(&i) {
+                if urgent[i] && !in_prio_cut[i] {
                     promotions += 1;
                     if starved[i] {
                         starved_promoted = true;
@@ -470,6 +782,7 @@ impl<C: Clock> Scheduler<C> {
         Batch {
             requests: picked.into_iter().map(|(_, r)| r).collect(),
             closed_by,
+            shed,
         }
     }
 }
@@ -498,6 +811,7 @@ mod tests {
                 max_wait: ms(max_wait_ms),
                 starvation_factor: k,
                 adaptive: None,
+                admission: None,
             },
         )
     }
@@ -514,6 +828,20 @@ mod tests {
                 max_wait: ms(max_wait_ms),
                 starvation_factor: 4,
                 adaptive: Some(aw),
+                admission: None,
+            },
+        )
+    }
+
+    fn capped_sched(max_batch: usize, ac: AdmissionControl) -> Scheduler<VirtualClock> {
+        Scheduler::new(
+            VirtualClock::new(),
+            BatchPolicy {
+                max_batch,
+                max_wait: ms(5),
+                starvation_factor: 4,
+                adaptive: None,
+                admission: Some(ac),
             },
         )
     }
@@ -704,6 +1032,97 @@ mod tests {
             assert_eq!(s.pending(), 1);
         }
         let _g = s.batch_guard();
+    }
+
+    /// Promotion accounting must stay correct (and linear) on a deep
+    /// queue — the overload regime where the old `by_prio.contains`
+    /// scan went quadratic per close. 100 starved background members
+    /// against a fresh interactive flood: the priority cut holds only
+    /// interactive, so every selected starved member is a promotion.
+    #[test]
+    fn deep_queue_promotion_accounting_is_exact() {
+        let s = sched(4, 5, 2); // starvation bound = 10 ms
+        for i in 0..100 {
+            s.submit(req(i).with_priority(Priority::Background));
+        }
+        s.clock().advance(ms(10));
+        for i in 100..200 {
+            s.submit(req(i));
+        }
+        let b = s.poll().unwrap();
+        assert_eq!(b.closed_by, CloseReason::Starvation);
+        assert_eq!(b.len(), 4);
+        assert!(b.requests.iter().all(|r| r.priority == Priority::Background && r.id < 4));
+        assert_eq!(s.stats().starvation_promotions, 4);
+    }
+
+    #[test]
+    fn class_cap_tail_drops_the_arrival() {
+        let s = capped_sched(
+            8,
+            AdmissionControl {
+                total_cap: 100,
+                class_caps: [usize::MAX, usize::MAX, 2],
+                early_reject: false,
+            },
+        );
+        for i in 0..2 {
+            let out = s.submit(req(i).with_priority(Priority::Background));
+            assert!(out.is_admitted());
+        }
+        let out = s.submit(req(2).with_priority(Priority::Background));
+        assert!(!out.is_admitted());
+        match out.admission {
+            Admission::Shed(sh) => {
+                assert_eq!(sh.req.id, 2, "the arrival itself is handed back");
+                assert_eq!(sh.reason, ShedReason::QueueFull);
+            }
+            Admission::Admitted => panic!("class cap must shed"),
+        }
+        // Other classes are untouched by a full background cap.
+        assert!(s.submit(req(3)).is_admitted());
+        assert_eq!(s.stats().shed, [0, 0, 1]);
+        assert_eq!(s.pending(), 3);
+    }
+
+    #[test]
+    fn total_cap_evicts_youngest_of_the_worst_class_first() {
+        let s = capped_sched(
+            8,
+            AdmissionControl {
+                total_cap: 3,
+                class_caps: [usize::MAX; 3],
+                early_reject: false,
+            },
+        );
+        s.submit(req(0).with_priority(Priority::Background));
+        s.submit(req(1).with_priority(Priority::Background));
+        s.submit(req(2).with_priority(Priority::Batch));
+        // Interactive arrival: the *youngest background* (id 1) is
+        // evicted — not the batch member, not the older background.
+        let out = s.submit(req(3));
+        assert!(out.is_admitted());
+        assert_eq!(out.evicted.len(), 1);
+        assert_eq!(out.evicted[0].req.id, 1);
+        assert_eq!(out.evicted[0].reason, ShedReason::Evicted);
+        // A background arrival at the bound finds no strictly-worse
+        // victim: the arrival itself sheds, the queue is untouched.
+        let out = s.submit(req(4).with_priority(Priority::Background));
+        assert!(!out.is_admitted());
+        assert!(out.evicted.is_empty());
+        assert_eq!(s.pending(), 3);
+        assert_eq!(s.stats().shed_total(), 2);
+    }
+
+    #[test]
+    fn service_time_ewma_is_pinned() {
+        let s = sched(4, 5, 4);
+        assert_eq!(s.ewma_service(), None);
+        s.record_service(ms(10));
+        assert_eq!(s.ewma_service(), Some(ms(10)));
+        // ewma ← 0.3·20 + 0.7·10 = 13 ms.
+        s.record_service(ms(20));
+        assert_eq!(s.ewma_service(), Some(ms(13)));
     }
 
     /// Regression: a thread panicking while it holds the scheduler's

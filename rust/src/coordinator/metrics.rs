@@ -1,11 +1,31 @@
 //! Serving metrics: latency histogram + counters.
 
 /// Log-bucketed latency histogram (microsecond resolution, powers of √2).
+///
+/// Retained memory is **fixed** — 64 bucket counters plus four scalars
+/// (~0.5 KiB) regardless of how many samples are recorded. (It
+/// previously also kept every raw sample in a growing `Vec` and
+/// re-sorted it per `percentile()` call: an unbounded-memory bug on the
+/// same hot path admission control bounds, and O(n log n) per read.)
+///
+/// **Quantile error bound:** `percentile()` locates the √2-wide bucket
+/// the requested rank falls in and interpolates linearly inside it, so
+/// the true quantile and the estimate always share a bucket: the
+/// relative error is at most `√2 − 1 ≈ 41%` in the worst case, far less
+/// in practice, and the estimate is additionally clamped to the exact
+/// observed `[min, max]`. `mean()` is exact (running sum), and
+/// `merge()` is exact over buckets — merging then reading equals
+/// reading a histogram that saw all samples directly.
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
     /// bucket i covers [√2^i, √2^(i+1)) microseconds.
-    buckets: Vec<u64>,
-    samples: Vec<f64>,
+    buckets: [u64; 64],
+    count: u64,
+    /// Running sum of recorded latencies in seconds (exact mean).
+    sum_secs: f64,
+    /// Exact observed extremes, clamping interpolated percentiles.
+    min_secs: f64,
+    max_secs: f64,
 }
 
 impl Default for LatencyHistogram {
@@ -17,8 +37,11 @@ impl Default for LatencyHistogram {
 impl LatencyHistogram {
     pub fn new() -> Self {
         Self {
-            buckets: vec![0; 64],
-            samples: Vec::new(),
+            buckets: [0; 64],
+            count: 0,
+            sum_secs: 0.0,
+            min_secs: f64::INFINITY,
+            max_secs: f64::NEG_INFINITY,
         }
     }
 
@@ -26,39 +49,63 @@ impl LatencyHistogram {
         let us = (secs * 1e6).max(1.0);
         let idx = (us.log2() * 2.0).floor().clamp(0.0, 63.0) as usize;
         self.buckets[idx] += 1;
-        self.samples.push(secs);
+        self.count += 1;
+        self.sum_secs += secs;
+        self.min_secs = self.min_secs.min(secs);
+        self.max_secs = self.max_secs.max(secs);
     }
 
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.count as usize
     }
 
-    /// Exact percentile from retained samples.
+    /// Percentile estimated from the √2 log buckets: find the bucket
+    /// holding the requested rank, interpolate linearly within it,
+    /// clamp to the exact observed `[min, max]`. See the type-level
+    /// docs for the error bound.
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return f64::NAN;
         }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.total_cmp(b));
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n > 0 && cum + n > rank {
+                // Bucket i covers [2^(i/2), 2^((i+1)/2)) µs; place the
+                // rank at the midpoint of its in-bucket slot.
+                let lower = 2f64.powf(i as f64 / 2.0);
+                let upper = 2f64.powf((i as f64 + 1.0) / 2.0);
+                let frac = (rank - cum) as f64 + 0.5;
+                let us = lower + (frac / n as f64) * (upper - lower);
+                return (us * 1e-6).clamp(self.min_secs, self.max_secs);
+            }
+            cum += n;
+        }
+        // Unreachable with count > 0 (every sample sits in a bucket),
+        // but fail soft with the observed maximum rather than panic.
+        self.max_secs
     }
 
+    /// Exact mean (running sum / count).
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.count == 0 {
             return f64::NAN;
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        self.sum_secs / self.count as f64
     }
 
     /// Fold another histogram into this one — used to aggregate the
     /// per-worker (or per-row-band) histograms into the serve-wide one
-    /// without a shared lock on the request path.
+    /// without a shared lock on the request path. Exact over buckets:
+    /// counters add, extremes combine, the sum stays exact.
     pub fn merge(&mut self, other: &LatencyHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
         }
-        self.samples.extend_from_slice(&other.samples);
+        self.count += other.count;
+        self.sum_secs += other.sum_secs;
+        self.min_secs = self.min_secs.min(other.min_secs);
+        self.max_secs = self.max_secs.max(other.max_secs);
     }
 }
 
@@ -95,6 +142,14 @@ pub struct ServeMetrics {
     /// Requests the scheduler force-included over priority order
     /// (starvation bound or expired per-request deadline).
     pub starvation_promotions: u64,
+    /// Requests shed by admission control, per priority rank
+    /// (`[interactive, batch, background]`): refused at the bounded
+    /// queue, evicted for a higher-priority arrival, or rejected early
+    /// because their deadline was unmeetable. A `Shed` response is an
+    /// availability outcome, counted apart from `failures` (fault
+    /// detection) and excluded from the served-latency histograms —
+    /// `requests`/`throughput_rps` keep measuring *goodput*.
+    pub shed: [u64; 3],
     /// Shard-tier fail-stop events: forward passes the sharded backend
     /// could not execute — in practice a shard dying mid-request — each
     /// answered with `Failed` responses for the whole batch (never a
@@ -176,6 +231,11 @@ impl ServeMetrics {
     }
     pub fn throughput_rps(&self) -> f64 {
         self.requests as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Total requests shed across all priority classes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -265,6 +325,76 @@ mod tests {
         // serve-wide convention.
         m.set_priority_percentiles(0, &LatencyHistogram::new());
         assert!(m.by_priority[0].p50_secs.is_nan());
+    }
+
+    /// The histogram's footprint is fixed — recording a million samples
+    /// allocates nothing (it is a plain array type: no heap at all).
+    #[test]
+    fn histogram_memory_is_capped() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..1_000_000u64 {
+            h.record((i % 1000) as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        assert!(h.percentile(50.0).is_finite());
+        // No Vec/Box fields: the whole state is inline, ~0.5 KiB.
+        assert!(std::mem::size_of::<LatencyHistogram>() <= 64 * 8 + 64);
+    }
+
+    /// Documented quantile error bound: the estimate and the true
+    /// quantile share a √2-wide bucket, so the relative error is below
+    /// √2 − 1, and the estimate never leaves the observed [min, max].
+    #[test]
+    fn percentile_error_stays_within_the_bucket_bound() {
+        let mut h = LatencyHistogram::new();
+        let mut samples: Vec<f64> = (0..500).map(|i| 1e-4 * 1.017f64.powi(i)).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        for p in [1.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let exact = samples[((p / 100.0) * 499.0).round() as usize];
+            let est = h.percentile(p);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < std::f64::consts::SQRT_2 - 1.0, "p{p}: rel err {rel}");
+            assert!(est >= samples[0] && est <= samples[499]);
+        }
+    }
+
+    /// merge() is exact over buckets: a merged histogram reads
+    /// identically to one that recorded every sample directly.
+    #[test]
+    fn merge_is_exact_over_buckets() {
+        let mut direct = LatencyHistogram::new();
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 1..=100 {
+            let s = i as f64 * 1.3e-3;
+            direct.record(s);
+            if i % 2 == 0 {
+                a.record(s);
+            } else {
+                b.record(s);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), direct.count());
+        for p in [10.0, 50.0, 99.0] {
+            assert_eq!(a.percentile(p).to_bits(), direct.percentile(p).to_bits());
+        }
+        // The sums are accumulated in different orders, so the means
+        // agree to rounding, not bit-for-bit.
+        assert!((a.mean() - direct.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_counters_are_per_priority() {
+        let m = ServeMetrics {
+            shed: [1, 2, 40],
+            ..Default::default()
+        };
+        assert_eq!(m.shed_total(), 43);
+        assert_eq!(ServeMetrics::default().shed_total(), 0);
     }
 
     #[test]

@@ -28,7 +28,10 @@ pub mod shard_proto;
 pub mod supervisor;
 pub mod verify;
 
-pub use batcher::{AdaptiveWait, Batch, BatchPolicy, CloseReason, SchedStats, Scheduler};
+pub use batcher::{
+    AdaptiveWait, Admission, AdmissionControl, Batch, BatchPolicy, CloseReason, SchedStats,
+    Scheduler, ShedReason, ShedRequest, SubmitOutcome,
+};
 pub use clock::{Clock, MonotonicClock, Tick, VirtualClock};
 pub use metrics::{LatencyHistogram, PriorityLatency, ServeMetrics};
 pub use request::{
@@ -120,6 +123,48 @@ pub fn serve_cli(args: &Args) -> Result<String> {
     } else {
         None
     };
+    // Bounded admission (`--queue-cap*`): any cap switches the
+    // scheduler from the legacy unbounded queue to fallible submission
+    // with shed-from-the-bottom ordering; `--early-reject` additionally
+    // refuses requests whose declared deadline provably cannot be met.
+    let queue_cap = match args.get("queue-cap") {
+        Some(v) => Some(v.parse::<usize>().map_err(|e| anyhow!("queue-cap: {e}"))?),
+        None => None,
+    };
+    let mut class_caps = [usize::MAX; 3];
+    let mut any_class_cap = false;
+    let class_flags = [
+        "queue-cap-interactive",
+        "queue-cap-batch",
+        "queue-cap-background",
+    ];
+    for (slot, name) in class_caps.iter_mut().zip(class_flags) {
+        if let Some(v) = args.get(name) {
+            *slot = v.parse::<usize>().map_err(|e| anyhow!("{name}: {e}"))?;
+            any_class_cap = true;
+        }
+    }
+    let early_reject = args.has_flag("early-reject");
+    if early_reject && queue_cap.is_none() && !any_class_cap {
+        // Early rejection is part of the admission policy; without a
+        // bounded queue it would silently never engage.
+        return Err(anyhow!(
+            "--early-reject requires a bounded queue (--queue-cap or --queue-cap-<class>)"
+        ));
+    }
+    let admission = if queue_cap.is_some() || any_class_cap {
+        let total_cap = queue_cap.unwrap_or(usize::MAX);
+        if total_cap == 0 || class_caps.iter().any(|&c| c == 0) {
+            return Err(anyhow!("queue caps must be ≥ 1"));
+        }
+        Some(AdmissionControl {
+            total_cap,
+            class_caps,
+            early_reject,
+        })
+    } else {
+        None
+    };
     let shards = args.get_usize("shards", 0).map_err(|e| anyhow!("{e}"))?;
     if shards > 256 {
         return Err(anyhow!("--shards must be ≤ 256 (got {shards})"));
@@ -196,6 +241,32 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         Some(path) => delta_source_from_path(std::path::Path::new(&path))?,
         None => DeltaSource::None,
     };
+    // Open-loop pacing (`--arrival-interval-us`): one request per fixed
+    // tick, regardless of service progress — the overload-bench driver.
+    let pace = match args.get("arrival-interval-us") {
+        Some(v) => {
+            let us = v
+                .parse::<u64>()
+                .map_err(|e| anyhow!("arrival-interval-us: {e}"))?;
+            if us == 0 {
+                return Err(anyhow!("--arrival-interval-us must be ≥ 1"));
+            }
+            Some(Duration::from_micros(us))
+        }
+        None => None,
+    };
+    // `--deadline-ms` declares a latency budget on every driver
+    // request; it is what deadline-aware early rejection inspects.
+    let driver_deadline = match args.get("deadline-ms") {
+        Some(v) => {
+            let ms = v.parse::<f64>().map_err(|e| anyhow!("deadline-ms: {e}"))?;
+            if !(ms > 0.0 && ms <= 3_600_000.0) {
+                return Err(anyhow!("--deadline-ms must be in (0, 3600000] (got {ms})"));
+            }
+            Some(Duration::from_secs_f64(ms / 1e3))
+        }
+        None => None,
+    };
     let cfg = ServerConfig {
         dataset,
         artifacts_dir: args.get_str("artifacts", "artifacts").into(),
@@ -204,6 +275,7 @@ pub fn serve_cli(args: &Args) -> Result<String> {
             max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
             starvation_factor: starvation_factor as u32,
             adaptive,
+            admission,
         },
         workers,
         inject_every,
@@ -222,9 +294,10 @@ pub fn serve_cli(args: &Args) -> Result<String> {
         heartbeat_ms,
         warm_standby,
         shard_addrs,
+        driver_deadline,
         ..Default::default()
     };
-    let summary = serve_synthetic_with_deltas(&cfg, requests, delta_source)?;
+    let summary = serve_synthetic_inner(&cfg, requests, delta_source, pace)?;
     if args.has_flag("json") {
         Ok(summary.json().to_pretty())
     } else {
@@ -288,6 +361,10 @@ pub struct ServeSummary {
     pub clean: usize,
     pub recovered: usize,
     pub failed: usize,
+    /// Responses answered `Shed` by admission control — an availability
+    /// outcome (bounded queue / eviction / unmeetable deadline), never
+    /// counted with `failed` fault detections.
+    pub shed: usize,
     /// Whether the run used CSR operands (row-band sharded aggregation).
     pub sparse: bool,
     /// Row bands of `S` (1 for dense).
@@ -317,7 +394,7 @@ impl ServeSummary {
              p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms\n\
              verification: {:.3}% of execute time | checks fired {} | injected {} | \
              retries {} | failures {} | starvation promotions {}\n\
-             responses: {} clean, {} recovered-after-retry, {} failed",
+             responses: {} clean, {} recovered-after-retry, {} failed, {} shed",
             self.dataset,
             m.requests,
             m.wall_secs,
@@ -348,7 +425,18 @@ impl ServeSummary {
             self.clean,
             self.recovered,
             self.failed,
+            self.shed,
         );
+        if m.shed_total() > 0 {
+            out.push_str(&format!(
+                "\nadmission control: shed {} (interactive {}, batch {}, background {}) — \
+                 served-latency percentiles cover goodput only",
+                m.shed_total(),
+                m.shed[0],
+                m.shed[1],
+                m.shed[2],
+            ));
+        }
         if self.shards > 0 {
             let m = &self.metrics;
             let waits: Vec<String> = m
@@ -470,9 +558,18 @@ impl ServeSummary {
             ("retries", Json::from(m.retries)),
             ("failures", Json::from(m.failures)),
             ("starvation_promotions", Json::from(m.starvation_promotions)),
+            (
+                "shed_by_priority",
+                Json::Arr(m.shed.iter().map(|&s| Json::from(s)).collect()),
+            ),
+            // Total responses sent (served + failed + shed). The CI
+            // smokes assert on this key; `requests` above counts batch
+            // members only (goodput).
+            ("responses", Json::from(self.responses)),
             ("clean", Json::from(self.clean)),
             ("recovered", Json::from(self.recovered)),
             ("failed", Json::from(self.failed)),
+            ("shed", Json::from(self.shed)),
         ])
     }
 }
@@ -498,11 +595,34 @@ pub fn serve_synthetic(cfg: &ServerConfig, n_requests: usize) -> Result<ServeSum
     serve_synthetic_with_deltas(cfg, n_requests, DeltaSource::None)
 }
 
+/// As [`serve_synthetic`], but with **open-loop arrival pacing**: the
+/// driver submits one request per `interval` tick regardless of how far
+/// serving has fallen behind — the overload-bench shape, where the
+/// offered rate is a controlled multiple of the service rate instead of
+/// whatever the closed feedback loop settles to. `None` keeps the
+/// default bursty near-flood driver.
+pub fn serve_synthetic_paced(
+    cfg: &ServerConfig,
+    n_requests: usize,
+    interval: Option<Duration>,
+) -> Result<ServeSummary> {
+    serve_synthetic_inner(cfg, n_requests, DeltaSource::None, interval)
+}
+
 /// As [`serve_synthetic`], with a graph-delta feed (dynamic graphs).
 pub fn serve_synthetic_with_deltas(
     cfg: &ServerConfig,
     n_requests: usize,
     delta_source: DeltaSource,
+) -> Result<ServeSummary> {
+    serve_synthetic_inner(cfg, n_requests, delta_source, None)
+}
+
+fn serve_synthetic_inner(
+    cfg: &ServerConfig,
+    n_requests: usize,
+    delta_source: DeltaSource,
+    pace: Option<Duration>,
 ) -> Result<ServeSummary> {
     let state = ModelState::build(cfg)?;
     let feat_dim = state.ops.feat_dim();
@@ -541,6 +661,7 @@ pub fn serve_synthetic_with_deltas(
     // deadlocks.
     let seed = cfg.seed;
     let priority_mix = cfg.priority_mix;
+    let driver_deadline = cfg.driver_deadline;
     // Lets the socket feeder exit once serving has drained, even if the
     // external feed never closes its end.
     let feed_done = std::sync::atomic::AtomicBool::new(false);
@@ -580,8 +701,11 @@ pub fn serve_synthetic_with_deltas(
                 } else {
                     Priority::Interactive
                 };
-                let req = InferenceRequest::new(id as u64, query_nodes, perturbations)
+                let mut req = InferenceRequest::new(id as u64, query_nodes, perturbations)
                     .with_priority(priority);
+                if let Some(d) = driver_deadline {
+                    req = req.with_deadline(d);
+                }
                 if req_tx.send(req).is_err() {
                     return;
                 }
@@ -592,9 +716,19 @@ pub fn serve_synthetic_with_deltas(
                     let _ = delta_tx.send(schedule[next_delta].delta.clone());
                     next_delta += 1;
                 }
-                // Bursty arrivals: small jitter between sends.
-                if rng.gen_bool(0.3) {
-                    std::thread::sleep(std::time::Duration::from_micros(rng.gen_range(400)));
+                match pace {
+                    // Open loop: a fixed inter-arrival gap that never
+                    // waits on service progress — overload is sustained,
+                    // not self-throttled.
+                    Some(gap) => std::thread::sleep(gap),
+                    // Bursty arrivals: small jitter between sends.
+                    None => {
+                        if rng.gen_bool(0.3) {
+                            std::thread::sleep(std::time::Duration::from_micros(
+                                rng.gen_range(400),
+                            ));
+                        }
+                    }
                 }
             }
             // Anything scheduled past the last request still applies
@@ -627,6 +761,7 @@ pub fn serve_synthetic_with_deltas(
     let mut clean = 0;
     let mut recovered = 0;
     let mut failed = 0;
+    let mut shed = 0;
     let mut responses = 0;
     while let Ok(r) = resp_rx.recv() {
         responses += 1;
@@ -634,6 +769,7 @@ pub fn serve_synthetic_with_deltas(
             VerifyStatus::Clean => clean += 1,
             VerifyStatus::RecoveredAfterRetry => recovered += 1,
             VerifyStatus::Failed => failed += 1,
+            VerifyStatus::Shed => shed += 1,
         }
     }
     let dataset = if cfg.scale < 1.0 {
@@ -647,6 +783,7 @@ pub fn serve_synthetic_with_deltas(
         clean,
         recovered,
         failed,
+        shed,
         sparse: state.ops.is_sparse(),
         bands: state.ops.band_count(),
         // The achieved shard count: the row partition clamps a --shards
@@ -769,5 +906,64 @@ mod tests {
         // keeps working — fail-stop handles the *fault*, not the lock.
         *lock_recover(&m) += 1;
         assert_eq!(*lock_recover(&m), 42);
+    }
+
+    fn field<'a>(j: &'a Json, key: &str) -> &'a Json {
+        match j {
+            Json::Obj(pairs) => {
+                &pairs
+                    .iter()
+                    .find(|(k, _)| k == key)
+                    .unwrap_or_else(|| panic!("missing key {key}"))
+                    .1
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    /// Regression: an empty-class serve has NaN percentiles
+    /// (`PriorityLatency` docs), and NaN is not valid JSON. The summary
+    /// writer must emit `null` — the whole document stays parseable by
+    /// a strict reader, round-tripping through our own parser.
+    #[test]
+    fn empty_class_summary_json_parses_back_with_null_percentiles() {
+        let mut metrics = ServeMetrics::default();
+        // No responses at all: serve-wide and per-class percentiles NaN.
+        metrics.set_latency_percentiles(&LatencyHistogram::new());
+        assert!(metrics.p50_secs.is_nan());
+        let summary = ServeSummary {
+            dataset: "tiny".into(),
+            metrics,
+            responses: 0,
+            clean: 0,
+            recovered: 0,
+            failed: 0,
+            shed: 0,
+            sparse: false,
+            bands: 1,
+            shards: 0,
+            shard_transport: "-",
+            supervised: false,
+            operand_bytes: 0,
+            backend: "native",
+            scheme: "fused",
+        };
+        let text = summary.json().to_pretty();
+        assert!(!text.contains("NaN"), "NaN leaked into JSON: {text}");
+        let parsed = Json::parse(&text).expect("summary JSON must parse back");
+        assert_eq!(field(&parsed, "p50_ms"), &Json::Null);
+        assert_eq!(field(&parsed, "p99_ms"), &Json::Null);
+        // Shed accounting is present and distinct from failures, and the
+        // total response count round-trips (the CI smokes assert on it).
+        assert_eq!(field(&parsed, "responses"), &Json::Int(0));
+        assert_eq!(field(&parsed, "shed"), &Json::Int(0));
+        assert_eq!(field(&parsed, "failed"), &Json::Int(0));
+        match field(&parsed, "shed_by_priority") {
+            Json::Arr(a) => assert_eq!(a.len(), 3),
+            other => panic!("shed_by_priority should be an array, got {other:?}"),
+        }
+        // Classes with no traffic are omitted rather than emitted as
+        // NaN-filled rows.
+        assert_eq!(field(&parsed, "by_priority"), &Json::Arr(vec![]));
     }
 }

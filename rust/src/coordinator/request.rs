@@ -108,6 +108,15 @@ impl InferenceRequest {
 }
 
 /// Verification status attached to every response.
+///
+/// `Shed` is deliberately a *separate* outcome class from `Failed`
+/// (PyGFI-style fault-taxonomy discipline): `Failed` means the ABFT
+/// checks detected a fault and the answer was withheld — a correctness
+/// event — while `Shed` means admission control refused or evicted the
+/// request under overload before any forward ran — an availability
+/// event clients should answer with backoff, not fault triage. The two
+/// are never conflated in metrics, JSON summaries, or the shard /
+/// supervised recovery paths.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum VerifyStatus {
     /// All checks passed on the first execution.
@@ -116,6 +125,9 @@ pub enum VerifyStatus {
     RecoveredAfterRetry,
     /// A check fired on every attempt; response withheld as faulty.
     Failed,
+    /// Refused by admission control (bounded queue, priority eviction,
+    /// or a provably unmeetable deadline) — no forward was executed.
+    Shed,
 }
 
 /// One inference response.
@@ -181,5 +193,10 @@ mod tests {
     fn verify_status_equality() {
         assert_eq!(VerifyStatus::Clean, VerifyStatus::Clean);
         assert_ne!(VerifyStatus::Clean, VerifyStatus::Failed);
+        assert_ne!(
+            VerifyStatus::Shed,
+            VerifyStatus::Failed,
+            "availability (shed) must never be conflated with fault detection (failed)"
+        );
     }
 }

@@ -132,6 +132,10 @@ pub struct ServerConfig {
     /// (`--shard-addrs host:port,...`, one per band in band order);
     /// empty = spawn workers locally.
     pub shard_addrs: Vec<String>,
+    /// Deadline the synthetic driver declares on every request
+    /// (`--deadline-ms`). `None` = no declared deadlines, so
+    /// deadline-aware early rejection never engages for driver traffic.
+    pub driver_deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -160,6 +164,7 @@ impl Default for ServerConfig {
             heartbeat_ms: 200,
             warm_standby: 0,
             shard_addrs: Vec::new(),
+            driver_deadline: None,
         }
     }
 }
@@ -347,6 +352,24 @@ fn failed_response(
     }
 }
 
+/// A `Shed` admission-control response for `req`: refused or evicted
+/// under overload *before any forward ran*. Classes are withheld as in
+/// `Failed`, but the status is a distinct availability outcome — the
+/// client's cue to back off, never a fault-detection event.
+/// `batch_size` and `epoch` are 0: the request never rode a batch or
+/// touched a graph version.
+fn shed_response(req: &InferenceRequest, lat: f64) -> InferenceResponse {
+    InferenceResponse {
+        id: req.id,
+        priority: req.priority,
+        classes: req.query_nodes.iter().map(|&n| (n, usize::MAX)).collect(),
+        status: VerifyStatus::Shed,
+        latency_secs: lat,
+        batch_size: 0,
+        epoch: 0,
+    }
+}
+
 /// Build one executor's backend: validate against the AOT manifest when
 /// one exists and the graph is at manifest scale (a manifest that is
 /// corrupt or version-skewed must fail loudly — that is the
@@ -497,12 +520,20 @@ pub fn run_server_with_updates(
     std::thread::scope(|scope| -> Result<()> {
         // Admission: feed the scheduler from the public request channel.
         // submit() never blocks on an executing forward, so arrivals
-        // keep coalescing into the next batch while workers run.
+        // keep coalescing into the next batch while workers run. With a
+        // bounded queue (`--queue-cap`) submit is fallible: a refused
+        // arrival — and any lower-priority member evicted to admit it —
+        // is answered `Shed` right here, so overload costs the client a
+        // prompt machine-readable rejection, not an unbounded wait.
         {
             let sched = &sched;
+            let responses = responses.clone();
             scope.spawn(move || {
                 while let Ok(r) = requests.recv() {
-                    sched.submit(r);
+                    for s in sched.submit(r).into_shed() {
+                        let lat = s.req.submitted.elapsed().as_secs_f64();
+                        let _ = responses.send(shed_response(&s.req, lat));
+                    }
                 }
                 sched.shutdown();
             });
@@ -656,7 +687,7 @@ pub fn run_server_with_updates(
                 let mut pending: Option<Batch> = None;
                 let mut replays_left = MAX_BATCH_REPLAYS;
                 loop {
-                    let (batch, is_replay) = match pending.take() {
+                    let (mut batch, is_replay) = match pending.take() {
                         Some(b) => (b, true),
                         None => {
                             replays_left = MAX_BATCH_REPLAYS;
@@ -666,6 +697,20 @@ pub fn run_server_with_updates(
                             }
                         }
                     };
+                    // Close-time rejections (deadline-aware early
+                    // rejection): answered `Shed` before anything else —
+                    // a shed request never executes a forward. Drained
+                    // here so a supervised replay of this batch cannot
+                    // answer them twice; they are excluded from the
+                    // served-latency histograms (goodput percentiles).
+                    for s in std::mem::take(&mut batch.shed) {
+                        let lat = s.req.submitted.elapsed().as_secs_f64();
+                        let _ = responses.send(shed_response(&s.req, lat));
+                    }
+                    if batch.is_empty() {
+                        // Pure rejection work — nothing left to execute.
+                        continue;
+                    }
                     // Hold the read side of the epoch gate for the whole
                     // batch and pin one graph version: everything below —
                     // overlay validation, forwards, verification, retries —
@@ -816,6 +861,10 @@ pub fn run_server_with_updates(
                         }
                     };
                     let exec_dt = clock.now().since(t0).as_secs_f64();
+                    // Feed the batch service time back into the
+                    // scheduler's EWMA — the signal deadline-aware early
+                    // rejection estimates against.
+                    sched.record_service(Duration::from_secs_f64(exec_dt.max(0.0)));
                     // A backend override returning the wrong arity would
                     // otherwise silently drop requests in the zip below:
                     // answer every member Failed and keep serving.
@@ -1026,7 +1075,9 @@ pub fn run_server_with_updates(
     {
         m.set_priority_percentiles(rank, h);
     }
-    m.starvation_promotions = sched.stats().starvation_promotions;
+    let sstats = sched.stats();
+    m.starvation_promotions = sstats.starvation_promotions;
+    m.shed = sstats.shed;
     m.effective_wait_ms = sched.effective_wait().as_secs_f64() * 1e3;
     if let Some(t) = &shard_tier {
         let tm = t.timings();
@@ -1080,6 +1131,7 @@ mod tests {
         Batch {
             requests,
             closed_by: CloseReason::Size,
+            shed: Vec::new(),
         }
     }
 

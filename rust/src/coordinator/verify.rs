@@ -14,6 +14,13 @@
 //! f32 accumulation noise (default 1e-3 relative) — unlike the f64
 //! fault-injection engine where the paper's absolute thresholds apply
 //! (DESIGN.md §6).
+//!
+//! Verification is strictly a *fault* verdict: a fired check yields
+//! `VerifyStatus::Failed` (or `RecoveredAfterRetry`). Requests refused
+//! by admission control never reach this module — they are answered
+//! `VerifyStatus::Shed` before any forward runs, keeping the
+//! availability taxonomy (shed) disjoint from the correctness taxonomy
+//! (failed) end to end.
 
 use crate::runtime::GcnOutputs;
 

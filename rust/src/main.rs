@@ -100,6 +100,23 @@ SUBCOMMANDS
            --max-wait-ms])
            --priority-mix I,B,BG (1,0,0 — client-driver weights for
            interactive/batch/background requests)
+           --queue-cap N bounds the admission queue: when full, the
+           youngest request of the *worst* class strictly below the
+           arrival is evicted (shed-from-the-bottom: Background first,
+           Interactive last); with no lower class to evict the arrival
+           itself is refused. --queue-cap-interactive/-batch/-background
+           add per-class caps (tail-drop within the class). Shed
+           requests get a Shed response — an availability outcome kept
+           strictly apart from Failed fault detections — and never
+           execute a forward.
+           --early-reject (requires a queue cap) also refuses requests
+           whose declared deadline provably cannot be met, estimated
+           from the scheduler's EWMA service time, at admission and
+           again at batch close. --deadline-ms D declares that budget
+           on every synthetic-driver request.
+           --arrival-interval-us T switches the synthetic driver to
+           open-loop pacing: one request every T µs regardless of
+           service progress (the overload-bench arrival shape).
            --workers W (2)  --artifacts DIR (artifacts)
            --inject-every K  --scale F (1.0)  --mode auto|dense|sparse
            --mem-budget-mb M (512)  --train-epochs E (10)
@@ -451,8 +468,14 @@ fn cmd_serve(rest: Vec<String>) -> i32 {
             "heartbeat-ms",
             "warm-standby",
             "deltas",
+            "queue-cap",
+            "queue-cap-interactive",
+            "queue-cap-batch",
+            "queue-cap-background",
+            "arrival-interval-us",
+            "deadline-ms",
         ],
-        flags: vec!["json", "adaptive-wait", "supervise"],
+        flags: vec!["json", "adaptive-wait", "supervise", "early-reject"],
     };
     let a = parse_or_die(rest, &spec);
     match gcn_abft::coordinator::serve_cli(&a) {

@@ -5,8 +5,10 @@
 //!
 //! * **serve** — end-to-end coordinator throughput/latency on a static
 //!   graph, on a dynamic graph (scheduled deltas streaming in behind
-//!   the epoch fence), and on the sharded tier with deltas routed to
-//!   the row bands;
+//!   the epoch fence), on the sharded tier with deltas routed to the
+//!   row bands, and under open-loop overload (bounded admission, the
+//!   arrival rate a large multiple of the service rate) where goodput
+//!   holds while lower classes shed;
 //! * **delta_sweep** — the dynamic-graph cost model: incremental
 //!   patch (`runtime::mutate::apply`) vs from-scratch rebuild
 //!   (`runtime::mutate::rebuild`) over growing delta batches and band
@@ -16,8 +18,8 @@
 //! target and the CLI aggregator cannot drift apart.
 
 use crate::coordinator::{
-    serve_synthetic_with_deltas, BatchPolicy, Clock, DeltaSource, MonotonicClock, ServeSummary,
-    ServerConfig, ShardTransportKind,
+    serve_synthetic_paced, serve_synthetic_with_deltas, AdmissionControl, BatchPolicy, Clock,
+    DeltaSource, MonotonicClock, ServeSummary, ServerConfig, ShardTransportKind,
 };
 use crate::graph::DatasetId;
 use crate::report::{build_workload, ExperimentOpts};
@@ -28,7 +30,11 @@ use crate::util::rng::Pcg64;
 use anyhow::{anyhow, Context, Result};
 
 /// Schema version of the `BENCH_serve.json` document.
-pub const BENCH_SCHEMA_VERSION: u32 = 1;
+///
+/// v2: serve rows gained `shed`, `shed_by_priority` and
+/// `interactive_p99_ms`, and the sweep gained the open-loop `overload`
+/// row (bounded admission under arrival rate ≫ service rate).
+pub const BENCH_SCHEMA_VERSION: u32 = 2;
 
 /// One serve-sweep row as stable JSON — shared by `report bench` and
 /// `bench_coordinator --json`.
@@ -40,9 +46,20 @@ pub fn serve_row_json(label: &str, shards: usize, transport: &str, s: &ServeSumm
         ("shards", Json::from(shards)),
         ("transport", Json::from(transport)),
         ("responses", Json::from(s.responses)),
+        // Goodput: shed requests are excluded from requests/latency, so
+        // throughput and the percentiles cover answered traffic only.
         ("throughput_rps", Json::Num(m.throughput_rps())),
+        ("shed", Json::from(s.shed)),
+        (
+            "shed_by_priority",
+            Json::Arr(m.shed.iter().map(|&x| Json::from(x)).collect()),
+        ),
         ("p50_ms", Json::Num(m.p50_secs * 1e3)),
         ("p95_ms", Json::Num(m.p95_secs * 1e3)),
+        (
+            "interactive_p99_ms",
+            Json::Num(m.by_priority[0].p99_secs * 1e3),
+        ),
         ("verify_overhead", Json::Num(m.verify_overhead())),
         ("epoch", Json::from(m.epoch)),
         ("deltas_applied", Json::from(m.deltas_applied)),
@@ -211,6 +228,31 @@ pub fn bench_document(
     let s = serve_synthetic_with_deltas(&kill_cfg, requests, DeltaSource::None)?;
     serve_rows.push(serve_row_json("supervised-recovery", 2, "inproc", &s));
 
+    // Open-loop overload: the driver paces arrivals on a fixed 1 µs
+    // grid regardless of service progress (offered rate ≫ capacity),
+    // against a single serial executor and a 4-deep bounded queue — the
+    // classic SLO shape: goodput pins at capacity and Interactive p99
+    // stays bounded by the short queue while lower classes shed first.
+    let overload_cfg = ServerConfig {
+        priority_mix: [0.6, 0.25, 0.15],
+        workers: 1,
+        batch: BatchPolicy {
+            max_batch: 4,
+            admission: Some(AdmissionControl {
+                total_cap: 4,
+                ..Default::default()
+            }),
+            ..Default::default()
+        },
+        ..base_cfg(0)
+    };
+    let s = serve_synthetic_paced(
+        &overload_cfg,
+        requests.max(64),
+        Some(std::time::Duration::from_micros(1)),
+    )?;
+    serve_rows.push(serve_row_json("overload", 0, "none", &s));
+
     let sweep = delta_sweep(dataset, opts, &[1, 2, 4], delta_count.max(4))?;
 
     Ok(Json::obj(vec![
@@ -323,7 +365,7 @@ mod tests {
         assert_eq!(doc.get("type").and_then(Json::as_str), Some("bench_serve"));
         let data = doc.get("data").unwrap();
         let serve = data.get("serve").and_then(Json::items).unwrap();
-        assert_eq!(serve.len(), 4);
+        assert_eq!(serve.len(), 5);
         // The dynamic rows actually applied deltas; the static row did not.
         let applied = |i: usize| {
             serve[i]
@@ -345,6 +387,32 @@ mod tests {
             .and_then(Json::as_usize)
             .unwrap();
         assert!(respawns >= 1, "supervised drill recorded no respawn");
+        // The overload row: every paced request got exactly one
+        // response (served or shed — conservation is timing-free even
+        // though the shed count itself depends on machine speed), and
+        // shedding is an availability outcome, never a failure.
+        let overload = &serve[4];
+        assert_eq!(
+            overload.get("label").and_then(Json::as_str),
+            Some("overload")
+        );
+        assert_eq!(
+            overload.get("responses").and_then(Json::as_usize),
+            Some(64),
+            "overload row lost or duplicated responses"
+        );
+        let shed = overload.get("shed").and_then(Json::as_usize).unwrap();
+        let by_prio = match overload.get("shed_by_priority") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("shed_by_priority missing: {other:?}"),
+        };
+        assert_eq!(by_prio.len(), 3);
+        let by_prio_total: usize = by_prio.iter().filter_map(Json::as_usize).sum();
+        assert_eq!(shed, by_prio_total, "per-class shed counters must add up");
+        assert!(
+            overload.get("interactive_p99_ms").is_some(),
+            "overload row must report the Interactive p99"
+        );
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //! product was batched.
 
 use gcn_abft::coordinator::{
-    overlay_groups, BatchPolicy, InferenceRequest, Perturbation, Priority, Scheduler,
-    ServePolicy, VirtualClock,
+    overlay_groups, AdmissionControl, BatchPolicy, InferenceRequest, Perturbation, Priority,
+    Scheduler, ServePolicy, VirtualClock,
 };
 use gcn_abft::gcn::GcnModel;
 use gcn_abft::graph::synth::{generate, SynthSpec};
@@ -174,6 +174,7 @@ fn prop_coalesced_serving_is_bit_identical_to_solo() {
                     max_wait: Duration::from_micros(case.max_wait_us),
                     starvation_factor: case.starvation_factor,
                     adaptive: None,
+                    admission: None,
                 },
             );
             let mut order: Vec<usize> = (0..n_requests).collect();
@@ -247,6 +248,176 @@ fn prop_coalesced_serving_is_bit_identical_to_solo() {
                                      under batching: solo {want_ok} vs batched {got_ok}"
                                 ));
                             }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_shedding_never_changes_admitted_outputs() {
+    // Overload extension of the property above: with bounded admission
+    // (tiny caps, random early rejection) the scheduler may shed
+    // requests, but a shed request never appears in any batch and every
+    // *admitted* request's logits and alarm decision stay bit-identical
+    // to serving it alone — load shedding is invisible to the answers
+    // that do go out.
+    check(
+        &Config {
+            cases: 8,
+            seed: 0x5EDD,
+            ..Default::default()
+        },
+        gen_case,
+        |case| {
+            let graph = generate(&case.spec, case.graph_seed);
+            let model = GcnModel::two_layer(&graph, 8, case.model_seed);
+            let w1 = model.layers[0].weights.clone();
+            let w2 = model.layers[1].weights.clone();
+            let ops = if case.sparse {
+                GcnOperands::sparse(
+                    graph.features.clone(),
+                    &model.adjacency,
+                    w1,
+                    w2,
+                    case.bands,
+                )
+            } else {
+                GcnOperands::dense(
+                    graph.features.to_dense(),
+                    model.adjacency.to_dense(),
+                    w1,
+                    w2,
+                )
+            }
+            .map_err(|e| format!("operand build failed: {e}"))?;
+
+            let mut rng = Pcg64::from_seed(case.traffic_seed ^ 0x5EED);
+            let n_nodes = graph.num_nodes;
+            let feat_dim = graph.feat_dim();
+            let n_requests = 8 + rng.gen_index(8);
+            let mut requests: Vec<InferenceRequest> = Vec::new();
+            for id in 0..n_requests {
+                let perturbations = (0..rng.gen_index(2))
+                    .map(|_| Perturbation {
+                        node: rng.gen_index(n_nodes),
+                        features: (0..feat_dim)
+                            .map(|_| rng.gen_f32_range(-4.0, 4.0))
+                            .collect(),
+                    })
+                    .collect();
+                let mut req = InferenceRequest::new(
+                    id as u64,
+                    vec![rng.gen_index(n_nodes)],
+                    perturbations,
+                )
+                .with_priority(Priority::ALL[rng.gen_index(3)]);
+                if rng.gen_bool(0.3) {
+                    req = req.with_deadline(Duration::from_micros(rng.gen_range(2_000)));
+                }
+                requests.push(req);
+            }
+
+            // Solo references (fused scheme; the fused/split cross-check
+            // is the first property's job).
+            let exe =
+                backend::for_operands(BackendKind::Native, ChecksumScheme::Fused, &ops, 2, None)
+                    .map_err(|e| format!("backend build failed: {e}"))?;
+            let mut solo = Vec::new();
+            for req in &requests {
+                let out = exe
+                    .run(&ops, &request_overlays(req))
+                    .map_err(|e| format!("solo run failed: {e}"))?;
+                let ok = ServePolicy::default().verify(&out).ok;
+                solo.push((bits(&out), ok));
+            }
+
+            let sched = Scheduler::new(
+                VirtualClock::new(),
+                BatchPolicy {
+                    max_batch: case.max_batch,
+                    max_wait: Duration::from_micros(case.max_wait_us),
+                    starvation_factor: case.starvation_factor,
+                    adaptive: None,
+                    admission: Some(AdmissionControl {
+                        total_cap: 1 + rng.gen_index(4),
+                        class_caps: [usize::MAX; 3],
+                        early_reject: rng.gen_bool(0.5),
+                    }),
+                },
+            );
+            let mut shed_ids: Vec<u64> = Vec::new();
+            let mut batches = Vec::new();
+            for req in &requests {
+                for sh in sched.submit(req.clone()).into_shed() {
+                    shed_ids.push(sh.req.id);
+                }
+                if rng.gen_bool(0.3) {
+                    sched.record_service(Duration::from_micros(300 + rng.gen_range(1_500)));
+                }
+                if rng.gen_bool(0.5) {
+                    sched
+                        .clock()
+                        .advance(Duration::from_micros(rng.gen_range(3_000)));
+                }
+                if rng.gen_bool(0.4) {
+                    while let Some(b) = sched.poll() {
+                        batches.push(b);
+                    }
+                }
+            }
+            sched.shutdown();
+            while let Some(b) = sched.poll() {
+                batches.push(b);
+            }
+
+            // Every request has exactly one fate, and a shed request
+            // never executes.
+            let mut executed: Vec<u64> = batches
+                .iter()
+                .flat_map(|b| b.requests.iter().map(|r| r.id))
+                .collect();
+            shed_ids.extend(batches.iter().flat_map(|b| b.shed.iter().map(|s| s.req.id)));
+            let mut all: Vec<u64> = executed.iter().chain(&shed_ids).copied().collect();
+            all.sort_unstable();
+            let expect: Vec<u64> = (0..n_requests as u64).collect();
+            if all != expect {
+                return Err(format!("requests lost or double-fated: {all:?}"));
+            }
+            executed.sort_unstable();
+            for id in &shed_ids {
+                if executed.binary_search(id).is_ok() {
+                    return Err(format!("request {id} was both shed and executed"));
+                }
+            }
+
+            // Admitted members stay bit-identical to solo, shed or not.
+            for batch in &batches {
+                if batch.is_empty() {
+                    continue; // pure rejection work: nothing executed
+                }
+                let groups = overlay_groups(batch);
+                let group_overlays: Vec<Vec<Overlay<'_>>> = groups
+                    .iter()
+                    .map(|members| request_overlays(&batch.requests[members[0]]))
+                    .collect();
+                let group_refs: Vec<&[Overlay<'_>]> =
+                    group_overlays.iter().map(|g| g.as_slice()).collect();
+                let outs = exe
+                    .run_groups(&ops, &group_refs)
+                    .map_err(|e| format!("group run failed: {e}"))?;
+                for (members, out) in groups.iter().zip(&outs) {
+                    let got = (bits(out), ServePolicy::default().verify(out).ok);
+                    for &mi in members {
+                        let id = batch.requests[mi].id as usize;
+                        if got != solo[id] {
+                            return Err(format!(
+                                "request {id}: shedding changed an admitted answer"
+                            ));
                         }
                     }
                 }

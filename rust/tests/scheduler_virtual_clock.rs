@@ -1,13 +1,16 @@
 //! Deterministic scheduler-invariant tests on a [`VirtualClock`]: every
 //! close decision — priority ordering within a batch window, the
 //! deadline-triggered close, the starvation bound, the
-//! already-expired-request edge, and the shutdown drain — is checked by
-//! advancing a virtual clock and polling, with **zero real sleeps**.
-//! (The one blocking `next_batch` call below exercises the drain path,
-//! which returns without consulting time at all.)
+//! already-expired-request edge, the shutdown drain, and every overload
+//! shedding decision (bounded admission, priority eviction ordering,
+//! deadline-aware early rejection) — is checked by advancing a virtual
+//! clock and polling, with **zero real sleeps**. (The one blocking
+//! `next_batch` call below exercises the drain path, which returns
+//! without consulting time at all.)
 
 use gcn_abft::coordinator::{
-    AdaptiveWait, BatchPolicy, CloseReason, InferenceRequest, Priority, Scheduler, VirtualClock,
+    AdaptiveWait, Admission, AdmissionControl, BatchPolicy, CloseReason, InferenceRequest,
+    Priority, Scheduler, ShedReason, VirtualClock,
 };
 use gcn_abft::util::rng::Pcg64;
 use std::time::Duration;
@@ -28,6 +31,20 @@ fn sched(max_batch: usize, max_wait_ms: u64, k: u32) -> Scheduler<VirtualClock> 
             max_wait: ms(max_wait_ms),
             starvation_factor: k,
             adaptive: None,
+            admission: None,
+        },
+    )
+}
+
+fn capped(max_batch: usize, max_wait_ms: u64, ac: AdmissionControl) -> Scheduler<VirtualClock> {
+    Scheduler::new(
+        VirtualClock::new(),
+        BatchPolicy {
+            max_batch,
+            max_wait: ms(max_wait_ms),
+            starvation_factor: 4,
+            adaptive: None,
+            admission: Some(ac),
         },
     )
 }
@@ -336,6 +353,7 @@ fn adaptive_wait_ewma_is_pinned_on_the_virtual_clock() {
                 alpha: 0.25,
                 min_wait: ms(1),
             }),
+            admission: None,
         },
     );
     // No interval observed yet: the configured ceiling governs.
@@ -359,4 +377,189 @@ fn adaptive_wait_ewma_is_pinned_on_the_virtual_clock() {
     let b = s.poll().expect("four queued requests close by size");
     assert_eq!(b.closed_by, CloseReason::Size);
     assert_eq!(b.len(), 4);
+}
+
+#[test]
+fn total_cap_sheds_from_the_bottom_up() {
+    let s = capped(
+        3,
+        1_000,
+        AdmissionControl {
+            total_cap: 3,
+            ..Default::default()
+        },
+    );
+    assert!(s.submit(req(0, Priority::Background)).is_admitted());
+    assert!(s.submit(req(1, Priority::Batch)).is_admitted());
+    assert!(s.submit(req(2, Priority::Interactive)).is_admitted());
+
+    // Queue full: an Interactive arrival evicts Background first.
+    let out = s.submit(req(3, Priority::Interactive));
+    assert!(out.is_admitted());
+    let evicted: Vec<(u64, ShedReason)> =
+        out.evicted.iter().map(|e| (e.req.id, e.reason)).collect();
+    assert_eq!(evicted, vec![(0, ShedReason::Evicted)], "Background sheds first");
+
+    // Still full: the next eviction reaches into Batch — bottom-up.
+    let out = s.submit(req(4, Priority::Interactive));
+    assert!(out.is_admitted());
+    assert_eq!(out.evicted[0].req.id, 1, "Batch sheds once Background is gone");
+
+    // An all-Interactive queue is never preempted for a peer: the
+    // arrival itself is refused instead.
+    let out = s.submit(req(5, Priority::Interactive));
+    assert!(out.evicted.is_empty(), "a peer never evicts a peer");
+    match out.admission {
+        Admission::Shed(sh) => {
+            assert_eq!(sh.req.id, 5);
+            assert_eq!(sh.reason, ShedReason::QueueFull);
+        }
+        Admission::Admitted => panic!("full queue of peers must refuse the arrival"),
+    }
+
+    assert_eq!(s.stats().shed, [1, 1, 1]);
+    let b = s.poll().expect("max_batch reached");
+    assert_eq!(b.closed_by, CloseReason::Size);
+    assert_eq!(ids(&b), vec![2, 3, 4], "only admitted requests execute");
+    assert!(b.shed.is_empty());
+}
+
+#[test]
+fn unmeetable_deadline_is_refused_at_admission() {
+    let s = capped(
+        2,
+        1_000,
+        AdmissionControl {
+            total_cap: 64,
+            early_reject: true,
+            ..Default::default()
+        },
+    );
+    // Before any service-time signal, nothing is provably unmeetable.
+    let r = req(0, Priority::Interactive).with_deadline(ms(1));
+    assert!(s.submit(r).is_admitted());
+    assert!(s.submit(req(1, Priority::Interactive)).is_admitted());
+    assert_eq!(ids(&s.poll().expect("size close")), vec![0, 1]);
+
+    // Executors report a 10 ms service time; the EWMA seeds directly.
+    s.record_service(ms(10));
+    assert_eq!(s.ewma_service(), Some(ms(10)));
+
+    // Empty queue still means one full service time ahead: a 5 ms
+    // budget cannot be met, so the request is refused at admission.
+    let out = s.submit(req(2, Priority::Interactive).with_deadline(ms(5)));
+    match out.admission {
+        Admission::Shed(sh) => assert_eq!(sh.reason, ShedReason::DeadlineUnmeetable),
+        Admission::Admitted => panic!("5 ms budget cannot survive a 10 ms service time"),
+    }
+
+    // A 15 ms budget clears one batch. Queue depth feeds the estimate:
+    // the third peer would ride the *second* size-2 batch (20 ms of
+    // service ahead), so the same budget is now refused.
+    assert!(s.submit(req(3, Priority::Interactive).with_deadline(ms(15))).is_admitted());
+    assert!(s.submit(req(4, Priority::Interactive).with_deadline(ms(15))).is_admitted());
+    let out = s.submit(req(5, Priority::Interactive).with_deadline(ms(15)));
+    assert!(!out.is_admitted(), "queue depth feeds the estimate");
+
+    // Requests that declare no deadline are never early-rejected.
+    assert!(s.submit(req(6, Priority::Interactive)).is_admitted());
+    assert_eq!(s.stats().shed, [2, 0, 0]);
+}
+
+#[test]
+fn expired_members_are_shed_at_close_not_executed_late() {
+    let s = capped(
+        8,
+        5,
+        AdmissionControl {
+            total_cap: 64,
+            early_reject: true,
+            ..Default::default()
+        },
+    );
+    let r = req(0, Priority::Interactive).with_deadline(ms(2));
+    assert!(s.submit(r).is_admitted());
+    assert!(s.submit(req(1, Priority::Interactive)).is_admitted());
+    s.clock().advance(ms(2));
+    // Request 0's budget is spent the moment the window closes: it is
+    // handed back in `Batch::shed` and never executes, while the fresh
+    // member still rides. (Without `early_reject` the same expiry
+    // *promotes* — pinned by the tests above.)
+    let b = s.poll().expect("expired deadline closes the window");
+    assert_eq!(b.closed_by, CloseReason::Deadline);
+    assert_eq!(ids(&b), vec![1]);
+    assert_eq!(b.shed.len(), 1);
+    assert_eq!(b.shed[0].req.id, 0);
+    assert_eq!(b.shed[0].reason, ShedReason::DeadlineUnmeetable);
+    assert_eq!(s.stats().shed, [1, 0, 0]);
+    assert_eq!(s.stats().batches, 1);
+
+    // An all-expired queue closes into pure rejection work: no members,
+    // no forward, no batch counted — but the queue still drains.
+    let r = req(2, Priority::Interactive).with_deadline(Duration::ZERO);
+    assert!(s.submit(r).is_admitted());
+    let b = s.poll().expect("an unmeetable member still closes");
+    assert!(b.is_empty());
+    assert_eq!(b.shed[0].req.id, 2);
+    assert_eq!(s.stats().batches, 1, "pure rejection work is not a batch");
+    assert!(s.poll().is_none(), "queue fully drained");
+}
+
+#[test]
+fn overload_conserves_every_request_exactly_once() {
+    // Under bounded admission every submitted request has exactly one
+    // fate: refused at admission, evicted by policy, shed at close for
+    // an unmeetable deadline (each with a `Shed` hand-back), or
+    // executed as a batch member — never lost, never duplicated, and
+    // never shed after admission except through those policy paths.
+    let mut rng = Pcg64::from_seed(0x0BED);
+    for case in 0..50 {
+        let max_batch = 1 + rng.gen_index(4);
+        let s = capped(
+            max_batch,
+            1 + rng.gen_index(8) as u64,
+            AdmissionControl {
+                total_cap: 1 + rng.gen_index(6),
+                class_caps: [usize::MAX, usize::MAX, 1 + rng.gen_index(3)],
+                early_reject: rng.gen_bool(0.5),
+            },
+        );
+        let n = 10 + rng.gen_index(30) as u64;
+        let mut executed: Vec<u64> = Vec::new();
+        let mut shed_ids: Vec<u64> = Vec::new();
+        for id in 0..n {
+            let mut r = req(id, Priority::ALL[rng.gen_index(3)]);
+            if rng.gen_bool(0.3) {
+                r = r.with_deadline(Duration::from_millis(rng.gen_range(6)));
+            }
+            for sh in s.submit(r).into_shed() {
+                shed_ids.push(sh.req.id);
+            }
+            if rng.gen_bool(0.3) {
+                s.record_service(Duration::from_micros(200 + rng.gen_range(2_000)));
+            }
+            if rng.gen_bool(0.5) {
+                s.clock().advance(Duration::from_micros(rng.gen_range(3_000)));
+            }
+            if rng.gen_bool(0.4) {
+                while let Some(b) = s.poll() {
+                    assert!(b.len() <= max_batch, "case {case}: oversized batch");
+                    executed.extend(b.requests.iter().map(|r| r.id));
+                    shed_ids.extend(b.shed.iter().map(|sh| sh.req.id));
+                }
+            }
+        }
+        s.shutdown();
+        while let Some(b) = s.poll() {
+            assert!(b.len() <= max_batch, "case {case}: oversized batch");
+            executed.extend(b.requests.iter().map(|r| r.id));
+            shed_ids.extend(b.shed.iter().map(|sh| sh.req.id));
+        }
+        let mut all: Vec<u64> = executed.iter().chain(&shed_ids).copied().collect();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..n).collect();
+        assert_eq!(all, expect, "case {case}: a request was lost or double-fated");
+        assert_eq!(s.stats().shed_total(), shed_ids.len() as u64, "case {case}");
+        assert_eq!(s.stats().submitted, n, "case {case}");
+    }
 }
