@@ -9,7 +9,7 @@ use gcn_abft::abft::{fused_forward_checked, split_forward_checked, EngineModel};
 use gcn_abft::graph::DatasetId;
 use gcn_abft::report::{build_workload, ExperimentOpts};
 use gcn_abft::runtime::{ModelEntry, Runtime};
-use gcn_abft::tensor::{ops, NopHook};
+use gcn_abft::tensor::{kernels, ops, NopHook};
 use gcn_abft::util::bench::{bench_header, Bencher};
 use gcn_abft::util::parallel::default_threads;
 
@@ -94,6 +94,25 @@ fn main() {
         "kernel speedup at {threads} threads: spmm {:.2}x, dense matmul {:.2}x\n",
         spmm_1.min() / spmm_n.min(),
         mm_1.min() / mm_n.min()
+    );
+
+    // ---- lane dispatch A/B: scalar reference vs the x8 unrolled tiles
+    // on the same Cora workload. Outputs are bit-identical by the
+    // kernels contract, so this compares throughput and nothing else;
+    // `gcn-abft report layer` writes the same A/B as BENCH_layer.json.
+    println!("== kernel dispatch (scalar vs x8; bit-identical outputs) ==");
+    let mut lane_mins = [0.0f64; 2];
+    for (i, lanes) in kernels::Lanes::ALL.iter().enumerate() {
+        kernels::force(Some(*lanes));
+        let st = b.bench(&format!("cora/matmul(HxW1) kernel={}", lanes.name()), || {
+            ops::matmul_par(&dense_features, w1, 1)
+        });
+        lane_mins[i] = st.min();
+    }
+    kernels::force(None);
+    println!(
+        "dense matmul x8-over-scalar speedup: {:.2}x\n",
+        lane_mins[0] / lane_mins[1]
     );
 
     // ---- serving executable end-to-end (the `gcn-abft serve` hot path) --

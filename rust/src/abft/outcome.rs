@@ -35,6 +35,13 @@ pub enum Scheme {
     Split,
     /// GCN-ABFT: one fused checksum per layer (Eqs. 5–6, Fig. 2).
     Fused,
+    /// Arithmetic-intensity-guided placement: resolve to whichever
+    /// concrete scheme has the lowest measured check-op cost for the
+    /// (backend, operand shapes) actually served — see
+    /// [`crate::opcount::backend::resolve_scheme`]. Every execution
+    /// path resolves `Auto` at its entry; the forward kernels and the
+    /// detection contract only ever see `Split` or `Fused`.
+    Auto,
 }
 
 impl Scheme {
@@ -42,6 +49,7 @@ impl Scheme {
         match self {
             Scheme::Split => "split",
             Scheme::Fused => "gcn-abft",
+            Scheme::Auto => "auto",
         }
     }
 
@@ -49,6 +57,7 @@ impl Scheme {
         match s.to_ascii_lowercase().as_str() {
             "split" | "baseline" => Some(Scheme::Split),
             "fused" | "gcn-abft" | "gcnabft" => Some(Scheme::Fused),
+            "auto" => Some(Scheme::Auto),
             _ => None,
         }
     }
@@ -81,6 +90,9 @@ mod tests {
         assert_eq!(Scheme::parse("baseline"), Some(Scheme::Split));
         assert_eq!(Scheme::parse("GCN-ABFT"), Some(Scheme::Fused));
         assert_eq!(Scheme::parse("fused"), Some(Scheme::Fused));
+        assert_eq!(Scheme::parse("Auto"), Some(Scheme::Auto));
+        assert_eq!(Scheme::parse("auto"), Some(Scheme::Auto));
         assert_eq!(Scheme::parse("nope"), None);
+        assert_eq!(Scheme::Auto.name(), "auto");
     }
 }

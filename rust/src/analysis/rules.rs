@@ -13,6 +13,7 @@
 //! | `C1` | only scoped threads outside the sanctioned spawn sites — no detached workers |
 //! | `M1` | resident operand/check-state mutation only through `runtime/mutate.rs` — serving paths go through `GraphDelta` + the epoch fence |
 //! | `N1` | raw socket construction only in `coordinator/net.rs` + `coordinator/shard.rs` — one wire path, one frame codec |
+//! | `K1` | `unsafe`, arch intrinsics and per-lane kernel entry points only in the kernels modules — call sites use the dispatched entries |
 //!
 //! Suppression is inline and *reasoned*:
 //! `// gcn-lint: allow(RULE, reason="…")` on the finding's line or the
@@ -103,6 +104,15 @@ pub const RULES: &[RuleInfo] = &[
                    only in coordinator/net.rs and coordinator/shard.rs; every \
                    byte between coordinator and shard workers goes through the \
                    shard_proto frame codec",
+    },
+    RuleInfo {
+        id: "K1",
+        name: "kernels-confine-lane-code",
+        contract: "unsafe blocks, std::arch/core::arch intrinsics, runtime \
+                   feature detection and the per-lane `*_with` kernel entry \
+                   points only inside tensor/kernels.rs and sparse/kernels.rs; \
+                   call sites go through the dispatched entries so one module \
+                   owns every lane-width decision",
     },
     RuleInfo {
         id: "LINT",
@@ -240,6 +250,15 @@ fn m1_exempt(path: &str) -> bool {
     // The mutation subsystem itself and the operand type that owns the
     // primitives. Integration tests exercise the primitives directly.
     ends_with_any(path, &["runtime/mutate.rs", "runtime/operands.rs"])
+        || path.contains("/tests/")
+        || path.starts_with("tests/")
+}
+fn k1_exempt(path: &str) -> bool {
+    // The kernels modules own lane-width code; integration tests (the
+    // bit-identity property suite) call the `*_with` entries to pin the
+    // per-lane contract, and in-crate test regions are excluded
+    // per-line like F1/C1.
+    ends_with_any(path, &["tensor/kernels.rs", "sparse/kernels.rs"])
         || path.contains("/tests/")
         || path.starts_with("tests/")
 }
@@ -453,6 +472,62 @@ pub fn scan_source(path: &str, src: &str) -> (Vec<Finding>, Vec<Suppressed>) {
                  util::parallel helpers) so worker lifetimes are bounded"
                     .to_string(),
             );
+        }
+
+        // K1 kernels-confine-lane-code — lane-width machinery outside
+        // the kernels modules forks the bit-identity contract: a second
+        // home for unsafe/intrinsics/per-lane entries is a second place
+        // the per-lane-width property tests would have to pin.
+        if !k1_exempt(&path) && !lexed.in_test_region(t.line) {
+            if t.kind == TokKind::Ident && t.text == "unsafe" {
+                push(
+                    "K1",
+                    t.line,
+                    "`unsafe` outside the kernels modules — intrinsic or \
+                     aliasing tricks belong in tensor/kernels.rs / \
+                     sparse/kernels.rs where the bit-identity tests pin them"
+                        .to_string(),
+                );
+            }
+            if seq(j, &["std", "::", "arch"]) || seq(j, &["core", "::", "arch"]) {
+                push(
+                    "K1",
+                    t.line,
+                    format!(
+                        "`{}::arch` intrinsics outside the kernels modules — \
+                         keep arch-specific code behind the dispatched kernel \
+                         entries",
+                        t.text
+                    ),
+                );
+            }
+            if t.kind == TokKind::Ident && t.text == "is_x86_feature_detected" {
+                push(
+                    "K1",
+                    t.line,
+                    "runtime feature detection outside the kernels modules — \
+                     lane selection is kernels::active()'s decision alone"
+                        .to_string(),
+                );
+            }
+            if t.kind == TokKind::Ident
+                && matches!(
+                    t.text.as_str(),
+                    "axpy_f32_with" | "axpy_f32_to_f64_with" | "col_acc_f64_with"
+                )
+            {
+                push(
+                    "K1",
+                    t.line,
+                    format!(
+                        "per-lane entry `{}` called outside the kernels \
+                         modules — use the dispatched entry (axpy_f32 / \
+                         axpy_f32_to_f64 / col_acc_f64) so GCN_ABFT_KERNEL \
+                         and forced overrides keep governing lane width",
+                        t.text
+                    ),
+                );
+            }
         }
     }
 
@@ -708,6 +783,46 @@ mod tests {
         assert!(f2.is_empty());
         assert_eq!(s2.len(), 1);
         assert_eq!(s2[0].rule, "N1");
+    }
+
+    #[test]
+    fn k1_positive_exempt_and_suppressed() {
+        let unsafe_block = ["unsafe { core::arch::x86_64::_mm256_setzero_ps() };"];
+        let f = findings_for("src/tensor/ops.rs", &unsafe_block);
+        // Both the `unsafe` keyword and the core::arch path are flagged.
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "K1"));
+        let detect = ["if is_x86_feature_detected(\"avx2\") {}"];
+        assert_eq!(findings_for("src/runtime/backend/native.rs", &detect).len(), 1);
+        let lane_entry = ["kernels::axpy_f32_with(Lanes::X8, out, a, b);"];
+        let f2 = findings_for("src/sparse/csr.rs", &lane_entry);
+        assert_eq!(f2.len(), 1);
+        assert_eq!(f2[0].rule, "K1");
+        // The dispatched entry is the sanctioned call shape.
+        assert!(
+            findings_for("src/sparse/csr.rs", &["kernels::axpy_f32(out, a, b);"]).is_empty()
+        );
+        // The kernels modules own the lane code.
+        assert!(findings_for("src/tensor/kernels.rs", &unsafe_block).is_empty());
+        assert!(findings_for("src/sparse/kernels.rs", &lane_entry).is_empty());
+        // Integration tests and in-crate test regions are exempt.
+        assert!(findings_for("tests/prop_kernels.rs", &lane_entry).is_empty());
+        let test_region = [
+            "#[cfg(test)]",
+            "mod tests {",
+            "fn t() { kernels::axpy_f32_with(Lanes::Scalar, o, a, b); }",
+            "}",
+        ];
+        assert!(findings_for("src/tensor/ops.rs", &test_region).is_empty());
+        // Reasoned suppression works like any other rule.
+        let allowed = [
+            "// gcn-lint: allow(K1, reason=\"pinning one lane for a repro\")",
+            "kernels::axpy_f32_with(Lanes::X8, out, a, b);",
+        ];
+        let (f3, s3) = scan_source("src/main.rs", &src(&allowed));
+        assert!(f3.is_empty());
+        assert_eq!(s3.len(), 1);
+        assert_eq!(s3[0].rule, "K1");
     }
 
     #[test]

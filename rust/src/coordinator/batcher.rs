@@ -550,6 +550,20 @@ impl<C: Clock> Scheduler<C> {
             .map(|ns| Duration::from_nanos(ns as u64))
     }
 
+    /// Back-off hint for a shed response: the service-time EWMA times
+    /// the batches the backlog represents, i.e. roughly when the queue
+    /// ahead of a retry will have drained. `None` until the first
+    /// completed batch seeds the EWMA — clients then fall back to their
+    /// own retry policy.
+    pub fn retry_after_hint(&self) -> Option<Duration> {
+        let st = lock_recover(&self.state);
+        let ewma = st.ewma_service_ns?;
+        let mb = self.policy.max_batch.max(1);
+        // Queued batches ahead, plus the one the retry itself rides.
+        let batches = ((st.queue.len() + mb - 1) / mb + 1) as f64;
+        Some(Duration::from_nanos((ewma * batches) as u64))
+    }
+
     /// Close admission: queued requests drain (immediately, without
     /// waiting out deadlines) and then [`next_batch`](Self::next_batch)
     /// returns `None`.
@@ -1123,6 +1137,21 @@ mod tests {
         // ewma ← 0.3·20 + 0.7·10 = 13 ms.
         s.record_service(ms(20));
         assert_eq!(s.ewma_service(), Some(ms(13)));
+    }
+
+    #[test]
+    fn retry_after_hint_scales_with_backlog() {
+        let s = sched(4, 5, 4);
+        // No EWMA yet: no hint, clients use their own policy.
+        assert_eq!(s.retry_after_hint(), None);
+        s.record_service(ms(10));
+        // Empty queue: just the batch the retry itself rides.
+        assert_eq!(s.retry_after_hint(), Some(ms(10)));
+        // 5 queued at max_batch 4 → 2 batches ahead + 1 = 3 × EWMA.
+        for id in 0..5 {
+            s.submit(req(id));
+        }
+        assert_eq!(s.retry_after_hint(), Some(ms(30)));
     }
 
     /// Regression: a thread panicking while it holds the scheduler's

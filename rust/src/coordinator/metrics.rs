@@ -200,6 +200,15 @@ pub struct ServeMetrics {
     /// Seconds spent inside the epoch fence applying deltas (drain
     /// wait + patch + shard re-ship).
     pub delta_apply_secs: f64,
+    /// The concrete checksum scheme the run executed. A configured
+    /// `auto` is resolved against the (backend, operand shapes) before
+    /// serving starts — this records the decision the run actually
+    /// used. Empty on a default-constructed value.
+    pub scheme: &'static str,
+    /// The kernel dispatch the forwards ran under
+    /// ([`crate::tensor::kernels::active`] at drain): `"scalar"` or
+    /// `"x8"`. Empty on a default-constructed value.
+    pub kernel: &'static str,
     pub exec_secs: f64,
     pub verify_secs: f64,
     pub wall_secs: f64,

@@ -226,7 +226,7 @@ pub fn serve_cli(args: &Args) -> Result<String> {
     let backend = BackendKind::parse(&args.get_str("backend", "native"))
         .ok_or_else(|| anyhow!("unknown --backend (native, instrumented, pjrt)"))?;
     let scheme = ChecksumScheme::parse(&args.get_str("scheme", "fused"))
-        .ok_or_else(|| anyhow!("unknown --scheme (fused, split)"))?;
+        .ok_or_else(|| anyhow!("unknown --scheme (fused, split, auto)"))?;
     let mem_budget_mb = args
         .get_usize("mem-budget-mb", 512)
         .map_err(|e| anyhow!("{e}"))?;
@@ -380,8 +380,14 @@ pub struct ServeSummary {
     pub operand_bytes: usize,
     /// Which execution backend served the run.
     pub backend: &'static str,
-    /// Which checksum scheme was verified.
+    /// The checksum scheme the run executed. A requested `auto`
+    /// resolves before serving starts, so this is always a concrete
+    /// scheme name (`metrics.scheme` carries the same record).
     pub scheme: &'static str,
+    /// Mean of the `retry_after_ms` back-off hints carried on `Shed`
+    /// responses (`None` when nothing was shed, or when every shed
+    /// predated the first service-time observation).
+    pub retry_after_ms_mean: Option<f64>,
 }
 
 impl ServeSummary {
@@ -436,6 +442,9 @@ impl ServeSummary {
                 m.shed[1],
                 m.shed[2],
             ));
+            if let Some(hint) = self.retry_after_ms_mean {
+                out.push_str(&format!(" | retry-after hint mean {hint:.2} ms"));
+            }
         }
         if self.shards > 0 {
             let m = &self.metrics;
@@ -519,6 +528,7 @@ impl ServeSummary {
             ("dataset", Json::from(self.dataset.clone())),
             ("backend", Json::from(self.backend.to_string())),
             ("scheme", Json::from(self.scheme.to_string())),
+            ("kernel", Json::from(m.kernel.to_string())),
             ("sparse", Json::Bool(self.sparse)),
             ("bands", Json::from(self.bands)),
             ("shards", Json::from(self.shards)),
@@ -561,6 +571,13 @@ impl ServeSummary {
             (
                 "shed_by_priority",
                 Json::Arr(m.shed.iter().map(|&s| Json::from(s)).collect()),
+            ),
+            (
+                "retry_after_ms_mean",
+                match self.retry_after_ms_mean {
+                    Some(v) => Json::Num(v),
+                    None => Json::Null,
+                },
             ),
             // Total responses sent (served + failed + shed). The CI
             // smokes assert on this key; `requests` above counts batch
@@ -763,6 +780,8 @@ fn serve_synthetic_inner(
     let mut failed = 0;
     let mut shed = 0;
     let mut responses = 0;
+    let mut hint_sum = 0.0;
+    let mut hint_count = 0u64;
     while let Ok(r) = resp_rx.recv() {
         responses += 1;
         match r.status {
@@ -770,6 +789,10 @@ fn serve_synthetic_inner(
             VerifyStatus::RecoveredAfterRetry => recovered += 1,
             VerifyStatus::Failed => failed += 1,
             VerifyStatus::Shed => shed += 1,
+        }
+        if let Some(h) = r.retry_after_ms {
+            hint_sum += h;
+            hint_count += 1;
         }
     }
     let dataset = if cfg.scale < 1.0 {
@@ -802,7 +825,18 @@ fn serve_synthetic_inner(
         supervised: cfg.shards > 0 && cfg.supervise,
         operand_bytes: state.ops.operand_bytes(),
         backend: cfg.backend.name(),
-        scheme: cfg.scheme.name(),
+        // Report the scheme the run executed (metrics.scheme records
+        // the resolved decision; a requested `auto` never surfaces).
+        scheme: if metrics.scheme.is_empty() {
+            cfg.scheme.name()
+        } else {
+            metrics.scheme
+        },
+        retry_after_ms_mean: if hint_count > 0 {
+            Some(hint_sum / hint_count as f64)
+        } else {
+            None
+        },
         metrics,
     })
 }
@@ -947,12 +981,15 @@ mod tests {
             operand_bytes: 0,
             backend: "native",
             scheme: "fused",
+            retry_after_ms_mean: None,
         };
         let text = summary.json().to_pretty();
         assert!(!text.contains("NaN"), "NaN leaked into JSON: {text}");
         let parsed = Json::parse(&text).expect("summary JSON must parse back");
         assert_eq!(field(&parsed, "p50_ms"), &Json::Null);
         assert_eq!(field(&parsed, "p99_ms"), &Json::Null);
+        // No sheds → no back-off hint; the key is still present (null).
+        assert_eq!(field(&parsed, "retry_after_ms_mean"), &Json::Null);
         // Shed accounting is present and distinct from failures, and the
         // total response count round-trips (the CI smokes assert on it).
         assert_eq!(field(&parsed, "responses"), &Json::Int(0));

@@ -148,6 +148,12 @@ pub struct InferenceResponse {
     /// the epoch fence guarantees the whole batch — logits, checks,
     /// retries — ran on exactly this version. 0 until the first delta.
     pub epoch: u64,
+    /// Back-off hint on `Shed` responses: the scheduler's service-time
+    /// EWMA times the queued batches a retry would wait behind
+    /// ([`Scheduler::retry_after_hint`](super::Scheduler::retry_after_hint)).
+    /// `None` on served responses, and on sheds before the first
+    /// completed batch seeds the estimate.
+    pub retry_after_ms: Option<f64>,
 }
 
 #[cfg(test)]

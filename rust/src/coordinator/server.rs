@@ -349,6 +349,7 @@ fn failed_response(
         latency_secs: lat,
         batch_size: bsize,
         epoch,
+        retry_after_ms: None,
     }
 }
 
@@ -357,8 +358,14 @@ fn failed_response(
 /// `Failed`, but the status is a distinct availability outcome — the
 /// client's cue to back off, never a fault-detection event.
 /// `batch_size` and `epoch` are 0: the request never rode a batch or
-/// touched a graph version.
-fn shed_response(req: &InferenceRequest, lat: f64) -> InferenceResponse {
+/// touched a graph version. `retry_after_ms` carries the scheduler's
+/// backlog-scaled service-time estimate so clients back off for roughly
+/// one queue-drain instead of guessing.
+fn shed_response(
+    req: &InferenceRequest,
+    lat: f64,
+    retry_after_ms: Option<f64>,
+) -> InferenceResponse {
     InferenceResponse {
         id: req.id,
         priority: req.priority,
@@ -367,6 +374,7 @@ fn shed_response(req: &InferenceRequest, lat: f64) -> InferenceResponse {
         latency_secs: lat,
         batch_size: 0,
         epoch: 0,
+        retry_after_ms,
     }
 }
 
@@ -532,7 +540,8 @@ pub fn run_server_with_updates(
                 while let Ok(r) = requests.recv() {
                     for s in sched.submit(r).into_shed() {
                         let lat = s.req.submitted.elapsed().as_secs_f64();
-                        let _ = responses.send(shed_response(&s.req, lat));
+                        let hint = sched.retry_after_hint().map(|d| d.as_secs_f64() * 1e3);
+                        let _ = responses.send(shed_response(&s.req, lat, hint));
                     }
                 }
                 sched.shutdown();
@@ -705,7 +714,8 @@ pub fn run_server_with_updates(
                     // served-latency histograms (goodput percentiles).
                     for s in std::mem::take(&mut batch.shed) {
                         let lat = s.req.submitted.elapsed().as_secs_f64();
-                        let _ = responses.send(shed_response(&s.req, lat));
+                        let hint = sched.retry_after_hint().map(|d| d.as_secs_f64() * 1e3);
+                        let _ = responses.send(shed_response(&s.req, lat, hint));
                     }
                     if batch.is_empty() {
                         // Pure rejection work — nothing left to execute.
@@ -1024,6 +1034,7 @@ pub fn run_server_with_updates(
                                 latency_secs: lat,
                                 batch_size: bsize,
                                 epoch,
+                                retry_after_ms: None,
                             };
                             let _ = responses.send(resp);
                         }
@@ -1079,6 +1090,12 @@ pub fn run_server_with_updates(
     m.starvation_promotions = sstats.starvation_promotions;
     m.shed = sstats.shed;
     m.effective_wait_ms = sched.effective_wait().as_secs_f64() * 1e3;
+    // Record what the run actually executed: a configured `auto`
+    // resolves to its concrete scheme, and the kernel dispatch is
+    // whatever `GCN_ABFT_KERNEL` (or a forced override) selected.
+    m.scheme =
+        backend::resolve_auto(backend::profile_for(cfg.backend), cfg.scheme, &state.ops).name();
+    m.kernel = crate::tensor::kernels::active().name();
     if let Some(t) = &shard_tier {
         let tm = t.timings();
         m.shard_wait_secs = tm.wait_secs;

@@ -18,7 +18,9 @@
 //!   sequence incrementally and prove the patched operands + checksum
 //!   state bit-identical to a from-scratch rebuild;
 //! * `report`  — machine-readable report artifacts (`report bench`
-//!   writes `BENCH_serve.json`);
+//!   writes `BENCH_serve.json`, `report layer` writes `BENCH_layer.json`
+//!   with scalar-vs-vector kernel A/Bs and the measured check-op cost
+//!   behind `--scheme auto`);
 //! * `train`   — train the synthetic workloads and print the curves;
 //! * `info`    — dataset statistics;
 //! * `analyze` — architectural lint pass enforcing the determinism,
@@ -121,7 +123,11 @@ SUBCOMMANDS
            --inject-every K  --scale F (1.0)  --mode auto|dense|sparse
            --mem-budget-mb M (512)  --train-epochs E (10)
            --backend native|instrumented|pjrt (native)
-           --scheme fused|split (fused)
+           --scheme fused|split|auto (fused; auto resolves to the
+           cheapest measured check-op scheme for the backend/shapes and
+           the summary reports the concrete decision). Inner kernels
+           are lane-dispatched (GCN_ABFT_KERNEL=scalar|x8 overrides;
+           bit-identical either way).
            --shards N (0 = unsharded)  --shard-transport
            inproc|proc|tcp (inproc). Sharding splits the CSR S into N
            row bands, one per shard; proc spawns one shard-worker
@@ -168,6 +174,12 @@ SUBCOMMANDS
                   timing sweep into BENCH_serve.json (repo root)
                   --dataset D (tiny)  --requests N (48)  --seed S (7)
                   --scale F (1.0)  --deltas K (6)  --out PATH  --json
+           layer  scalar-vs-vector kernel A/Bs (dense matmul, CSR spmm,
+                  f64 column-sum reduction) with GFLOP/s + arithmetic
+                  intensity per shape/sparsity, plus the per-dataset
+                  check-op overhead of fused vs split and the scheme
+                  `--scheme auto` resolves to; writes BENCH_layer.json
+                  (repo root)  --reps R (5)  --out PATH  --json
   train    train the synthetic 2-layer GCNs, print loss/accuracy curves
            --datasets ...  --epochs E (30)  --seed S
   info     dataset statistics (nodes/edges/features/classes/nnz)
@@ -176,7 +188,7 @@ SUBCOMMANDS
            std-only; rules D1 no-raw-clock, D2 deterministic-iteration,
            D3 f64-accumulation, D4 no-float-eq, F1 fail-stop-not-panic,
            C1 scoped-threads-only, M1 mutation-only-in-mutate,
-           N1 sockets-only-in-net).
+           N1 sockets-only-in-net, K1 kernels-confine-lane-code).
            Suppress a finding inline with
            `gcn-lint: allow(RULE, reason=\"...\")` (reason mandatory).
            Exits 0 clean, 1 on unsuppressed findings, 2 on usage error.
@@ -705,8 +717,16 @@ fn cmd_report(rest: Vec<String>) -> i32 {
             let a = parse_or_die(rest, &spec);
             gcn_abft::report::bench::run_cli(&a)
         }
+        "layer" => {
+            let spec = Spec {
+                options: vec!["reps", "out"],
+                flags: vec!["json"],
+            };
+            let a = parse_or_die(rest, &spec);
+            gcn_abft::report::layer::run_cli(&a)
+        }
         other => {
-            eprintln!("unknown report subcommand: {other} (expected: bench)");
+            eprintln!("unknown report subcommand: {other} (expected: bench, layer)");
             2
         }
     }

@@ -1,0 +1,318 @@
+//! `gcn-abft report layer` — the machine-readable kernel benchmark.
+//!
+//! Aggregates the kernels area into one stable JSON document
+//! (`BENCH_layer.json` at the repo root by default):
+//!
+//! * **kernels** — scalar-vs-vector A/Bs of the three dispatched inner
+//!   kernels (dense matmul, CSR spmm, the f64 column-sum reduction)
+//!   over representative shapes/sparsities, with achieved GFLOP/s per
+//!   lane width, the x8-over-scalar speedup, and the modelled
+//!   arithmetic intensity of each shape. Both widths run through the
+//!   same [`crate::tensor::kernels::force`] override the property
+//!   tests use, so the numbers measure exactly the dispatch the tree
+//!   serves with — and the outputs are bit-identical by contract, so
+//!   the A/B compares throughput and nothing else.
+//! * **check_placement** — the measured check-op cost behind
+//!   `--scheme auto`: per (dataset, backend profile), the fused and
+//!   split checking ops at paper scale and the concrete scheme
+//!   [`resolve_scheme`] picks (always the argmin; ties break fused).
+//!
+//! The document is what CI asserts a measurable vectorized speedup
+//! against, next to the per-lane bit-identity property tests.
+
+use crate::abft::Scheme;
+use crate::graph::DatasetId;
+use crate::opcount::backend::{check_ops_for, resolve_scheme, spec_layer_shapes, BackendProfile};
+use crate::sparse::Csr;
+use crate::tensor::{kernels, ops, Dense};
+use crate::util::bench::{black_box, Bencher};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{Context, Result};
+
+/// Schema version of the `BENCH_layer.json` document.
+pub const LAYER_SCHEMA_VERSION: u32 = 1;
+
+fn rand_dense(rng: &mut Pcg64, rows: usize, cols: usize) -> Dense {
+    let data = (0..rows * cols).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    Dense::from_vec(rows, cols, data)
+}
+
+/// A random CSR with approximately `density` stored fraction (plus a
+/// guaranteed diagonal so no row is empty).
+fn rand_csr(rng: &mut Pcg64, n: usize, density: f64) -> Csr {
+    let mut d = Dense::zeros(n, n);
+    for r in 0..n {
+        d.set(r, r, rng.gen_f32_range(0.1, 1.0));
+        for c in 0..n {
+            if rng.gen_bool(density) {
+                d.set(r, c, rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    Csr::from_dense(&d)
+}
+
+/// Run one closure under every selectable lane width and report the
+/// per-width minimum seconds (scalar first, [`kernels::Lanes::ALL`]
+/// order). Restores the environment dispatch afterwards.
+fn ab_secs<T>(b: &Bencher, label: &str, mut work: impl FnMut() -> T) -> Vec<(kernels::Lanes, f64)> {
+    let mut out = Vec::with_capacity(kernels::Lanes::ALL.len());
+    for lanes in kernels::Lanes::ALL {
+        kernels::force(Some(lanes));
+        let stats = b.run(&format!("{label}/{}", lanes.name()), || black_box(work()));
+        // Min, not median: the least noise-contaminated estimate of the
+        // true per-iteration cost (same reasoning as bench_layer).
+        out.push((lanes, stats.min()));
+    }
+    kernels::force(None);
+    out
+}
+
+fn kernel_row(
+    kernel: &str,
+    shape: String,
+    sparsity: Json,
+    flops: f64,
+    intensity: f64,
+    timed: &[(kernels::Lanes, f64)],
+) -> Json {
+    let secs_of = |want: kernels::Lanes| {
+        timed
+            .iter()
+            .find(|(l, _)| *l == want)
+            .map(|&(_, s)| s)
+            .unwrap_or(f64::NAN)
+    };
+    let scalar = secs_of(kernels::Lanes::Scalar);
+    let x8 = secs_of(kernels::Lanes::X8);
+    Json::obj(vec![
+        ("kernel", Json::from(kernel)),
+        ("shape", Json::from(shape)),
+        ("sparsity", sparsity),
+        ("arithmetic_intensity", Json::Num(intensity)),
+        ("scalar_gflops", Json::Num(flops / scalar.max(1e-12) / 1e9)),
+        ("x8_gflops", Json::Num(flops / x8.max(1e-12) / 1e9)),
+        ("speedup_x8", Json::Num(scalar / x8.max(1e-12))),
+    ])
+}
+
+/// The scalar-vs-vector kernel A/B rows.
+pub fn kernel_rows(b: &Bencher, seed: u64) -> Vec<Json> {
+    let mut rng = Pcg64::from_seed(seed ^ 0x4C41_9E52);
+    let mut rows = Vec::new();
+
+    // Dense matmul: the layer-2 XW shape class (tall-skinny) and a
+    // squarer tile where the axpy rows are long enough to vectorize.
+    for (m, k, n) in [(512, 64, 48), (192, 192, 192)] {
+        let a = rand_dense(&mut rng, m, k);
+        let bm = rand_dense(&mut rng, k, n);
+        let timed = ab_secs(b, &format!("matmul/{m}x{k}x{n}"), || {
+            ops::matmul_par(&a, &bm, 1)
+        });
+        rows.push(kernel_row(
+            "matmul",
+            format!("{m}x{k}x{n}"),
+            Json::Null,
+            2.0 * (m * k * n) as f64,
+            kernels::matmul_intensity(m, k, n),
+            &timed,
+        ));
+    }
+
+    // CSR spmm: the S·H aggregation shape class, at two sparsities.
+    for (n, density, cols) in [(512, 0.01, 64), (384, 0.05, 96)] {
+        let s = rand_csr(&mut rng, n, density);
+        let h = rand_dense(&mut rng, n, cols);
+        let nnz = s.nnz();
+        let timed = ab_secs(b, &format!("spmm/{n}x{n}({nnz}nnz)x{cols}"), || {
+            s.spmm_par(&h, 1)
+        });
+        rows.push(kernel_row(
+            "spmm",
+            format!("{n}x{n}x{cols}"),
+            Json::Num(nnz as f64 / (n * n) as f64),
+            2.0 * (nnz * cols) as f64,
+            kernels::spmm_intensity(nnz, cols),
+            &timed,
+        ));
+    }
+
+    // f64 column-sum reduction: the checksum ingredient (one widening
+    // add per element — flops = elements).
+    for (m, n) in [(2048, 96)] {
+        let d = rand_dense(&mut rng, m, n);
+        let timed = ab_secs(b, &format!("col_sums_f64/{m}x{n}"), || d.col_sums_f64());
+        // Traffic model: every f32 read once, the f64 accumulator row
+        // re-read/re-written per input row.
+        let intensity = (m * n) as f64 / (4.0 * (m * n) as f64 + 16.0 * (m * n) as f64);
+        rows.push(kernel_row(
+            "col_sums_f64",
+            format!("{m}x{n}"),
+            Json::Null,
+            (m * n) as f64,
+            intensity,
+            &timed,
+        ));
+    }
+
+    rows
+}
+
+/// The `--scheme auto` decision table: measured fused/split check-op
+/// cost per (dataset, backend profile) at paper scale, and the concrete
+/// scheme Auto resolves to (the argmin by construction).
+pub fn check_placement_rows() -> Vec<Json> {
+    let mut rows = Vec::new();
+    for id in DatasetId::ALL {
+        let shapes = spec_layer_shapes(id);
+        let true_ops: u64 = shapes.iter().map(|l| l.true_ops()).sum();
+        for profile in [BackendProfile::Native, BackendProfile::Instrumented] {
+            let total = |s: Scheme| -> u64 {
+                shapes.iter().map(|l| check_ops_for(profile, s, l)).sum()
+            };
+            let (fused, split) = (total(Scheme::Fused), total(Scheme::Split));
+            let auto = resolve_scheme(profile, Scheme::Auto, &shapes);
+            rows.push(Json::obj(vec![
+                ("dataset", Json::from(id.name())),
+                ("backend", Json::from(profile.name())),
+                ("true_ops", Json::from(true_ops)),
+                ("fused_check_ops", Json::from(fused)),
+                ("split_check_ops", Json::from(split)),
+                ("fused_overhead", Json::Num(fused as f64 / true_ops.max(1) as f64)),
+                ("split_overhead", Json::Num(split as f64 / true_ops.max(1) as f64)),
+                ("auto_scheme", Json::from(auto.name())),
+                ("auto_check_ops", Json::from(total(auto))),
+            ]));
+        }
+    }
+    rows
+}
+
+/// Assemble the full `BENCH_layer.json` document.
+pub fn layer_document(b: &Bencher, seed: u64) -> Json {
+    Json::obj(vec![
+        ("type", Json::from("bench_layer")),
+        (
+            "data",
+            Json::obj(vec![
+                ("version", Json::from(LAYER_SCHEMA_VERSION as usize)),
+                ("seed", Json::from(seed)),
+                ("kernels", Json::Arr(kernel_rows(b, seed))),
+                ("check_placement", Json::Arr(check_placement_rows())),
+            ]),
+        ),
+    ])
+}
+
+/// Default output path: `BENCH_layer.json` at the repo root (the
+/// crate's parent directory), falling back to the working directory.
+fn default_out() -> std::path::PathBuf {
+    let crate_root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    match crate_root.parent() {
+        Some(p) if p.is_dir() => p.join("BENCH_layer.json"),
+        _ => std::path::PathBuf::from("BENCH_layer.json"),
+    }
+}
+
+/// `gcn-abft report layer` entry point.
+pub fn run_cli(a: &Args) -> i32 {
+    match run(a) {
+        Ok(msg) => {
+            println!("{msg}");
+            0
+        }
+        Err(e) => {
+            eprintln!("report layer failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn run(a: &Args) -> Result<String> {
+    let err = |e: crate::util::cli::CliError| anyhow::anyhow!("{e}");
+    let reps = a.get_usize("reps", 5).map_err(err)?.max(2);
+    let out_path = match a.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_out(),
+    };
+    let bencher = Bencher {
+        samples: reps,
+        ..Bencher::quick()
+    };
+
+    let doc = layer_document(&bencher, 7);
+    let text = doc.to_pretty();
+    std::fs::write(&out_path, format!("{text}\n"))
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    if a.has_flag("json") {
+        Ok(text)
+    } else {
+        let rows = |key: &str| {
+            doc.get("data")
+                .and_then(|d| d.get(key))
+                .and_then(Json::items)
+                .map(|v| v.len())
+                .unwrap_or(0)
+        };
+        Ok(format!(
+            "wrote {} ({} kernel rows, {} check-placement rows)",
+            out_path.display(),
+            rows("kernels"),
+            rows("check_placement"),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_bencher() -> Bencher {
+        Bencher {
+            warmup: std::time::Duration::from_millis(1),
+            samples: 2,
+            min_sample_time: std::time::Duration::from_micros(200),
+        }
+    }
+
+    #[test]
+    fn check_placement_auto_is_the_argmin() {
+        let rows = check_placement_rows();
+        assert_eq!(rows.len(), DatasetId::ALL.len() * 2);
+        for r in &rows {
+            let fused = r.get("fused_check_ops").and_then(Json::as_usize).unwrap();
+            let split = r.get("split_check_ops").and_then(Json::as_usize).unwrap();
+            let auto = r.get("auto_check_ops").and_then(Json::as_usize).unwrap();
+            assert_eq!(auto, fused.min(split), "{r:?}");
+            let name = r.get("auto_scheme").and_then(Json::as_str).unwrap();
+            assert!(name == "fused" || name == "split", "unresolved auto: {name}");
+        }
+    }
+
+    #[test]
+    fn layer_document_shape_and_dispatch_restored() {
+        let before = kernels::active();
+        let doc = layer_document(&fast_bencher(), 7);
+        // The A/Bs force both widths; the document build must restore
+        // the environment dispatch for the rest of the process.
+        assert_eq!(kernels::active(), before);
+        assert_eq!(doc.get("type").and_then(Json::as_str), Some("bench_layer"));
+        let data = doc.get("data").unwrap();
+        let kernels_rows = data.get("kernels").and_then(Json::items).unwrap();
+        assert_eq!(kernels_rows.len(), 5);
+        for r in kernels_rows {
+            for key in ["scalar_gflops", "x8_gflops", "speedup_x8"] {
+                let v = r.get(key).and_then(Json::as_f64).unwrap();
+                assert!(v.is_finite() && v > 0.0, "{key} in {r:?}");
+            }
+            assert!(
+                r.get("arithmetic_intensity")
+                    .and_then(Json::as_f64)
+                    .unwrap()
+                    .is_finite()
+            );
+        }
+    }
+}

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod experiments;
 pub mod fig3;
+pub mod layer;
 pub mod table;
 
 pub use experiments::{

@@ -90,11 +90,13 @@ pub struct EngineRun {
 fn seg_a_ops(scheme: ChecksumScheme, layer: usize, nnz_in: u64, f: u64, cols: u64, n: u64) -> u64 {
     let data = 2 * nnz_in * cols + 2 * nnz_in;
     match scheme {
-        ChecksumScheme::Fused => data,
         ChecksumScheme::Split => {
             let h_c = if layer == 0 { 0 } else { nnz_in };
             data + h_c + 2 * f * (cols + 1) + (n * cols - 1)
         }
+        // `Auto` never reaches the segment internals — it is resolved at
+        // `forward_with` entry — so only `Split` widens the combination.
+        _ => data,
     }
 }
 
@@ -197,6 +199,14 @@ impl InstrumentedEngine {
     /// As [`InstrumentedEngine::timeline_ops`], for a layer-1 input with
     /// `feat_nnz` stored entries (overlaid runs can change the nnz).
     pub fn timeline_ops_for(&self, scheme: ChecksumScheme, feat_nnz: u64) -> u64 {
+        // Auto's timeline is its resolved scheme's timeline: the shorter
+        // of the two (true-output ops are scheme-invariant, so this is
+        // exactly the lower check-op cost).
+        if scheme == ChecksumScheme::Auto {
+            return self
+                .timeline_ops_for(ChecksumScheme::Fused, feat_nnz)
+                .min(self.timeline_ops_for(ChecksumScheme::Split, feat_nnz));
+        }
         let n = self.n as u64;
         let nnz_s = self.nnz_s() as u64;
         let mut nnz_in = feat_nnz;
@@ -260,6 +270,22 @@ impl InstrumentedEngine {
         features: &EngineInput,
         h_c1: &[f64],
     ) -> EngineRun {
+        // Resolve `Auto` on this engine's own op accounting: the scheme
+        // with the shorter checked timeline (equivalently the lower
+        // check-op cost). The segment bookkeeping below only ever sees a
+        // concrete scheme, so every hooked op index stays analytic.
+        let scheme = if scheme == ChecksumScheme::Auto {
+            let nnz = features.nnz() as u64;
+            if self.timeline_ops_for(ChecksumScheme::Split, nnz)
+                < self.timeline_ops_for(ChecksumScheme::Fused, nnz)
+            {
+                ChecksumScheme::Split
+            } else {
+                ChecksumScheme::Fused
+            }
+        } else {
+            scheme
+        };
         let n64 = self.n as u64;
         let mut cursor = 0u64;
         let mut hits: Vec<FaultHit> = Vec::new();
@@ -292,7 +318,6 @@ impl InstrumentedEngine {
                 0
             };
             let h_c: Option<Vec<f64>> = match scheme {
-                ChecksumScheme::Fused => None,
                 // Static layer-1 input: h_c is the offline vector (no
                 // hooked ops), exactly as before.
                 ChecksumScheme::Split if li == 0 => Some(h_c1.to_vec()),
@@ -303,6 +328,7 @@ impl InstrumentedEngine {
                     hits.append(&mut hook.hits);
                     Some(h_c)
                 }
+                _ => None,
             };
 
             let bounds = super::super::operands::row_band_bounds(self.n, LOGICAL_BANDS);
@@ -609,6 +635,10 @@ impl<F: FaultModel> GcnBackend for Instrumented<F> {
 
     fn run(&self, ops: &GcnOperands, overlays: &[Overlay<'_>]) -> Result<GcnOutputs> {
         validate_overlays(ops, overlays)?;
+        // Resolve `Auto` against the instrumented profile's measured
+        // check-op accounting before anything samples the timeline, so
+        // fault events and the executed forward agree on one scheme.
+        let scheme = super::resolve_auto(BackendProfile::Instrumented, self.scheme, ops);
         // Honor the trait contract of executing the *passed* operands:
         // the cached engine is refreshed in place when the operand set
         // it was built from no longer matches (weight swap, or a
@@ -634,14 +664,14 @@ impl<F: FaultModel> GcnBackend for Instrumented<F> {
         let events = if self.faults_per_run > 0 {
             let idx = self.runs.fetch_add(1, Ordering::Relaxed);
             let mut rng = Pcg64::new(self.seed, idx);
-            let total = engine.timeline_ops_for(self.scheme, feat_nnz);
+            let total = engine.timeline_ops_for(scheme, feat_nnz);
             self.fault.sample(&mut rng, total, self.faults_per_run)
         } else {
             Vec::new()
         };
         let run = match (&features, &h_c1) {
-            (Some(f), Some(h)) => engine.forward_with(self.scheme, &events, self.workers, f, h),
-            _ => engine.forward(self.scheme, &events, self.workers),
+            (Some(f), Some(h)) => engine.forward_with(scheme, &events, self.workers, f, h),
+            _ => engine.forward(scheme, &events, self.workers),
         };
         let logits = run.preacts.last().expect("at least one layer").to_dense();
         Ok(GcnOutputs {
@@ -800,6 +830,58 @@ mod tests {
                 assert!(a.identical(b));
             }
         }
+    }
+
+    #[test]
+    fn auto_scheme_resolves_on_the_instrumented_timeline() {
+        let (m, g) = setup();
+        let engine = InstrumentedEngine::from_model(&m, &g.features);
+        // Auto's timeline is the min of the concrete pair.
+        assert_eq!(
+            engine.timeline_ops(ChecksumScheme::Auto),
+            engine
+                .timeline_ops(ChecksumScheme::Fused)
+                .min(engine.timeline_ops(ChecksumScheme::Split)),
+        );
+        // An Auto forward is bit-identical to the resolved concrete
+        // scheme's forward — checks, outputs and executed op count.
+        let resolved = if engine.timeline_ops(ChecksumScheme::Split)
+            < engine.timeline_ops(ChecksumScheme::Fused)
+        {
+            ChecksumScheme::Split
+        } else {
+            ChecksumScheme::Fused
+        };
+        let auto = engine.forward(ChecksumScheme::Auto, &[], 2);
+        let conc = engine.forward(resolved, &[], 2);
+        assert_eq!(auto.timeline_ops, conc.timeline_ops);
+        assert_eq!(auto.checks.len(), conc.checks.len());
+        for (a, b) in auto.checks.iter().zip(&conc.checks) {
+            assert_eq!(a.predicted.to_bits(), b.predicted.to_bits());
+            assert_eq!(a.actual.to_bits(), b.actual.to_bits());
+        }
+        for (a, b) in auto.preacts.iter().zip(&conc.preacts) {
+            assert!(a.identical(b), "Auto forward diverged from resolved scheme");
+        }
+
+        // The backend path resolves before fault sampling, so an Auto
+        // backend serves exactly what the resolved backend serves.
+        let ops = GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            2,
+        )
+        .unwrap();
+        let auto_b = Instrumented::for_operands(&ops, ChecksumScheme::Auto, 2).unwrap();
+        let conc_b = Instrumented::for_operands(&ops, resolved, 2).unwrap();
+        let a = auto_b.run(&ops, &[]).unwrap();
+        let c = conc_b.run(&ops, &[]).unwrap();
+        assert_eq!(a.logits, c.logits);
+        assert_eq!(a.predicted, c.predicted);
+        assert_eq!(a.actual, c.actual);
+        assert!(crate::coordinator::ServePolicy::default().verify(&a).ok);
     }
 
     #[test]

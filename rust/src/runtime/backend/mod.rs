@@ -32,14 +32,18 @@ pub use native::{NativeBanded, NativeDense};
 
 use super::client::GcnOutputs;
 use super::operands::GcnOperands;
-use crate::opcount::backend::{check_ops_for, BackendProfile};
+use crate::opcount::backend::{check_ops_for, resolve_scheme, BackendProfile};
 use crate::opcount::LayerShape;
 use anyhow::{bail, Result};
 use std::path::Path;
 
 /// Which checksum scheme a backend computes alongside the forward.
 /// `Fused` is the paper's GCN-ABFT (one end-of-layer check); `Split` is
-/// the per-matmul baseline (an extra after-combination check per layer).
+/// the per-matmul baseline (an extra after-combination check per layer);
+/// `Auto` resolves to whichever is cheaper on the measured op profile of
+/// the operands actually served ([`resolve_auto`]) — every backend
+/// resolves it at its `plan`/`run` entry, so the forward kernels only
+/// ever execute a concrete scheme.
 pub use crate::abft::Scheme as ChecksumScheme;
 
 /// One per-request feature-row overlay: `row` replaces the node's
@@ -57,6 +61,10 @@ pub struct Overlay<'a> {
 #[derive(Debug, Clone, Copy)]
 pub struct ExecPlan {
     pub backend: &'static str,
+    /// The concrete scheme the backend will execute. Always `Fused` or
+    /// `Split`: a configured `Auto` is resolved against the operand
+    /// shapes before the plan is assembled, so the decision is
+    /// observable here.
     pub scheme: ChecksumScheme,
     /// Operand representation the backend will execute on.
     pub representation: &'static str,
@@ -64,6 +72,13 @@ pub struct ExecPlan {
     pub bands: usize,
     /// Worker threads per forward.
     pub threads: usize,
+    /// Where the checksum comparisons sit: `"global"` (one stitched
+    /// check per check point) or `"per-band"` (the banded/sharded
+    /// aggregation checks additive per-band partials).
+    pub check_placement: &'static str,
+    /// The kernel dispatch the forward will run under
+    /// ([`crate::tensor::kernels::active`]).
+    pub kernel: &'static str,
     /// Arithmetic ops for the true output (both layers).
     pub true_ops: u64,
     /// Checksum-overhead ops under `scheme` (both layers).
@@ -153,6 +168,11 @@ pub fn for_operands(
     threads: usize,
     artifacts: Option<(&Path, &str)>,
 ) -> Result<Box<dyn GcnBackend>> {
+    // Resolve `Auto` here, where the operands are in hand: the
+    // constructed backend carries (and its plan reports) the concrete
+    // scheme the adaptive placement chose. Backends constructed
+    // directly still resolve at their own entry points.
+    let scheme = resolve_auto(profile_for(kind), scheme, ops);
     match kind {
         BackendKind::Native => {
             if ops.is_sparse() {
@@ -180,6 +200,27 @@ pub fn for_operands(
             )
         }
     }
+}
+
+/// The op-model profile a backend kind is costed under.
+pub fn profile_for(kind: BackendKind) -> BackendProfile {
+    match kind {
+        BackendKind::Instrumented => BackendProfile::Instrumented,
+        _ => BackendProfile::Native,
+    }
+}
+
+/// Resolve [`ChecksumScheme::Auto`] against the operand set actually
+/// being served: the concrete scheme with the lowest total check-op
+/// cost under `profile`'s measured op model
+/// ([`crate::opcount::backend::resolve_scheme`]). Concrete schemes pass
+/// through unchanged.
+pub fn resolve_auto(
+    profile: BackendProfile,
+    scheme: ChecksumScheme,
+    ops: &GcnOperands,
+) -> ChecksumScheme {
+    resolve_scheme(profile, scheme, &layer_shapes(ops))
 }
 
 /// The two layer shapes of an operand set, as the analytic op model sees
@@ -241,6 +282,9 @@ pub(crate) fn plan_from_shapes(
     bands: usize,
     threads: usize,
 ) -> ExecPlan {
+    // A plan never reports `Auto`: the adaptive choice is made right
+    // here, against the same shapes the ops are counted over.
+    let scheme = resolve_scheme(profile, scheme, shapes);
     let true_ops = shapes.iter().map(|l| l.true_ops()).sum();
     let check_ops = shapes.iter().map(|l| check_ops_for(profile, scheme, l)).sum();
     ExecPlan {
@@ -249,6 +293,8 @@ pub(crate) fn plan_from_shapes(
         representation,
         bands,
         threads,
+        check_placement: if bands > 1 { "per-band" } else { "global" },
+        kernel: crate::tensor::kernels::active().name(),
         true_ops,
         check_ops,
     }
@@ -375,6 +421,43 @@ mod tests {
                 split.check_ops
             );
             assert!(fused.overhead() > 0.0 && fused.overhead() < 1.0);
+        }
+    }
+
+    #[test]
+    fn auto_scheme_plans_as_the_cheapest_concrete_scheme() {
+        let g = crate::graph::DatasetId::Tiny.build(3);
+        let m = crate::gcn::GcnModel::two_layer(&g, 8, 4);
+        let ops = GcnOperands::sparse(
+            g.features.clone(),
+            &m.adjacency,
+            m.layers[0].weights.clone(),
+            m.layers[1].weights.clone(),
+            2,
+        )
+        .unwrap();
+        for kind in [BackendKind::Native, BackendKind::Instrumented] {
+            let plan = |scheme| {
+                for_operands(kind, scheme, &ops, 1, None)
+                    .unwrap()
+                    .plan(&ops)
+                    .unwrap()
+            };
+            let auto = plan(ChecksumScheme::Auto);
+            assert_ne!(auto.scheme, ChecksumScheme::Auto, "plans never report Auto");
+            // The resolved plan's check cost is the min over the
+            // explicit schemes — the observable adaptive decision.
+            let cheapest = plan(ChecksumScheme::Fused)
+                .check_ops
+                .min(plan(ChecksumScheme::Split).check_ops);
+            assert_eq!(auto.check_ops, cheapest, "{kind:?}");
+            assert_eq!(auto.scheme, resolve_auto(profile_for(kind), ChecksumScheme::Auto, &ops));
+            // The decision context is recorded alongside.
+            assert_eq!(
+                auto.check_placement,
+                if auto.bands > 1 { "per-band" } else { "global" }
+            );
+            assert!(!auto.kernel.is_empty());
         }
     }
 }

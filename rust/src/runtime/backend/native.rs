@@ -67,6 +67,11 @@ where
     A: Fn(&Dense, &[f32]) -> Result<(Dense, f64, f64)>,
 {
     validate_overlays(model, overlays)?;
+    // Resolve `Auto` here, at the single entry every native run funnels
+    // through (including the shard tier, which passes its configured
+    // scheme straight in) — the forward body below only ever sees a
+    // concrete scheme.
+    let scheme = super::resolve_auto(BackendProfile::Native, scheme, model);
     let split = scheme == ChecksumScheme::Split;
     let mut predicted: Vec<f32> = Vec::with_capacity(if split { 4 } else { 2 });
     let mut actual: Vec<f32> = Vec::with_capacity(predicted.capacity());
@@ -277,6 +282,32 @@ mod tests {
         assert_eq!(fused.predicted[1], split.predicted[3]);
         assert_eq!(fused.actual[0], split.actual[1]);
         assert_eq!(fused.actual[1], split.actual[3]);
+    }
+
+    #[test]
+    fn auto_scheme_runs_as_its_resolved_concrete_scheme() {
+        let (dense, sparse) = workload();
+        let resolved_d =
+            super::super::resolve_auto(BackendProfile::Native, ChecksumScheme::Auto, &dense);
+        let resolved_s =
+            super::super::resolve_auto(BackendProfile::Native, ChecksumScheme::Auto, &sparse);
+        assert_ne!(resolved_d, ChecksumScheme::Auto);
+        assert_ne!(resolved_s, ChecksumScheme::Auto);
+        for (auto, concrete) in [
+            (
+                NativeDense::new(2, ChecksumScheme::Auto).run(&dense, &[]).unwrap(),
+                NativeDense::new(2, resolved_d).run(&dense, &[]).unwrap(),
+            ),
+            (
+                NativeBanded::new(2, ChecksumScheme::Auto).run(&sparse, &[]).unwrap(),
+                NativeBanded::new(2, resolved_s).run(&sparse, &[]).unwrap(),
+            ),
+        ] {
+            assert_eq!(auto.logits, concrete.logits);
+            assert_eq!(auto.predicted, concrete.predicted);
+            assert_eq!(auto.actual, concrete.actual);
+            assert!(ServePolicy::default().verify(&auto).ok);
+        }
     }
 
     #[test]

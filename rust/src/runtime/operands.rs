@@ -248,11 +248,7 @@ impl RowBand {
         debug_assert_eq!(out.len(), self.s.rows() * width);
         for r in 0..self.s.rows() {
             let out_row = &mut out[r * width..(r + 1) * width];
-            for (c, v) in self.s.row_iter(r) {
-                for (o, &b) in out_row.iter_mut().zip(x.row(c)) {
-                    *o += v * b;
-                }
-            }
+            crate::sparse::kernels::row_axpy_gather(out_row, self.s.row_iter(r), x);
         }
         let pred = ops::dot_mixed(&self.s_c, x_r);
         let actual = out.iter().map(|&v| v as f64).sum();

@@ -170,7 +170,10 @@ impl Csr {
     /// Row-parallel SpMM over `threads` scoped workers: the output rows
     /// are partitioned into contiguous bands (CSR rows are independent),
     /// each band written by one worker. Per-row accumulation order is
-    /// unchanged, so the result is bit-identical at any thread count.
+    /// unchanged, so the result is bit-identical at any thread count —
+    /// and at any kernel lane width, since the inner gather
+    /// ([`crate::sparse::kernels::row_axpy_gather`]) vectorizes across
+    /// output columns only.
     pub fn spmm_par(&self, b: &Dense, threads: usize) -> Dense {
         assert_eq!(
             self.cols,
@@ -187,13 +190,7 @@ impl Csr {
         crate::util::parallel::par_row_chunks_mut(out.data_mut(), n, threads, |first_row, band| {
             for (dr, out_row) in band.chunks_mut(n).enumerate() {
                 let r = first_row + dr;
-                for i in self.row_ptr[r]..self.row_ptr[r + 1] {
-                    let v = self.values[i];
-                    let b_row = b.row(self.col_idx[i]);
-                    for (o, &bx) in out_row.iter_mut().zip(b_row) {
-                        *o += v * bx;
-                    }
-                }
+                super::kernels::row_axpy_gather(out_row, self.row_iter(r), b);
             }
         });
         out

@@ -1,0 +1,56 @@
+//! Sparse-side vectorized kernels — the CSR face of
+//! [`crate::tensor::kernels`], same per-lane-width bit-identity
+//! contract, same process-global dispatch.
+//!
+//! A CSR·dense SpMM row is a gather of axpy broadcasts: for each stored
+//! `(col, value)` of the CSR row, `out_row[j] += value * b[col][j]`.
+//! The vector lanes span the *output columns* `j`, never the stored
+//! nonzeros, so each output element accumulates its per-nonzero terms
+//! in exactly the stored CSR order at every lane width — bit-identical
+//! by the same argument as the dense kernels. The f64 column-sum
+//! *scatter* (`Csr::col_sums_f64`: `acc[col] += value`) is the
+//! opposite shape — lanes would span the reduction targets with
+//! data-dependent indices — and stays scalar in `sparse::csr`.
+
+use crate::tensor::kernels::axpy_f32;
+use crate::tensor::Dense;
+
+/// One SpMM output row: `out_row[j] += v · b[c][j]` for every stored
+/// `(c, v)` of the CSR row, in stored order. The inner loop of
+/// [`crate::sparse::Csr::spmm_par`] and of the shard tier's
+/// [`crate::runtime::operands::RowBand::aggregate_into`] — both go
+/// through here, so the sharded and unsharded aggregations share one
+/// kernel and stay bit-identical to each other by construction.
+#[inline]
+pub fn row_axpy_gather(
+    out_row: &mut [f32],
+    nz: impl Iterator<Item = (usize, f32)>,
+    b: &Dense,
+) {
+    for (c, v) in nz {
+        axpy_f32(out_row, v, b.row(c));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::kernels::{axpy_f32_with, Lanes};
+
+    #[test]
+    fn gather_matches_per_lane_reference_in_stored_order() {
+        let b = Dense::from_fn(5, 11, |r, c| (r * 11 + c) as f32 * 0.17 - 2.0);
+        let nz = [(3usize, 0.5f32), (0, -1.25), (3, 2.0), (4, 0.125)];
+        let mut out = vec![0.0f32; 11];
+        row_axpy_gather(&mut out, nz.iter().copied(), &b);
+        let mut reference = vec![0.0f32; 11];
+        for &(c, v) in &nz {
+            axpy_f32_with(Lanes::Scalar, &mut reference, v, b.row(c));
+        }
+        let same = out
+            .iter()
+            .zip(&reference)
+            .all(|(a, r)| a.to_bits() == r.to_bits());
+        assert!(same, "gather diverged from scalar reference");
+    }
+}

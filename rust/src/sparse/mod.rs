@@ -3,6 +3,7 @@
 
 pub mod csr;
 pub mod instrumented;
+pub mod kernels;
 pub mod norm;
 
 pub use csr::Csr;

@@ -168,13 +168,14 @@ impl Dense {
 
     /// Per-column sums at full f64 precision — the serving path keeps
     /// `s_c` in f64 so the cached offline state adds no rounding floor of
-    /// its own to the checksum residuals.
+    /// its own to the checksum residuals. The per-row accumulate is the
+    /// vectorized [`crate::tensor::kernels::col_acc_f64`]: lanes span
+    /// columns, each column still sums its rows in order, so the result
+    /// is bit-identical at every kernel width.
     pub fn col_sums_f64(&self) -> Vec<f64> {
         let mut acc = vec![0f64; self.cols];
         for r in 0..self.rows {
-            for (a, &x) in acc.iter_mut().zip(self.row(r)) {
-                *a += x as f64;
-            }
+            super::kernels::col_acc_f64(&mut acc, self.row(r));
         }
         acc
     }

@@ -1,0 +1,338 @@
+//! Vectorized inner kernels with a per-lane-width **bit-identity
+//! contract**, selected at runtime by a process-global dispatch.
+//!
+//! # The bit-identity contract
+//!
+//! Every kernel in this module is bit-identical to its scalar reference
+//! **at every lane width, by construction**: the vector lanes always
+//! span *independent output elements* (adjacent output columns of an
+//! axpy broadcast, adjacent columns of an f64 column accumulator) and
+//! never a reduction axis. Each output element therefore sees exactly
+//! the same sequence of fused-nothing `a + b * c`-shaped f32/f64
+//! operations, in exactly the same order, regardless of how many
+//! elements are processed per iteration — widening the tile reorders
+//! *nothing within any element*, so IEEE-754 evaluation is unchanged
+//! bit for bit. Reduction-shaped loops (dot products, `checksum_f64`,
+//! the CSR column-sum scatter) stay scalar-sequential in their home
+//! modules: vectorizing a reduction would re-associate the sum and
+//! break the contract.
+//!
+//! This is what lets every existing equivalence property in the tree
+//! (batching, shards, mutate, scheme parity, incremental operands)
+//! hold unchanged under any dispatch: swapping `Lanes::Scalar` for
+//! `Lanes::X8` can change *throughput only*, never a single output
+//! bit. `tests/prop_kernels.rs` pins this per lane width.
+//!
+//! # Dispatch
+//!
+//! [`active`] picks the lane width once per process: a test/bench
+//! override ([`force`]) wins, else the `GCN_ABFT_KERNEL` environment
+//! variable (`scalar` | `x8`, cached on first read), else [`Lanes::X8`]
+//! — the unrolled eight-lane tile, which the backend autovectorizer
+//! turns into 256-bit SIMD on every mainstream target. The override is
+//! a process-global atomic rather than thread-local state on purpose:
+//! the row-band workers (`util::parallel::par_row_chunks_mut`) and the
+//! banded aggregation fan-out spawn scoped worker threads, and a forced
+//! width must bind *all* of them, not just the forcing thread.
+//!
+//! Only this module (and `sparse::kernels`) may branch on a lane width
+//! or call the `*_with` per-lane entry points — lint rule K1 confines
+//! kernel internals here, so the rest of the tree stays
+//! width-oblivious and the contract has one enforcement point.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A runtime-selectable lane width. `Scalar` is the reference
+/// implementation every other width must match bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lanes {
+    /// Plain element-at-a-time loops — the reference kernels.
+    Scalar,
+    /// Eight-lane unrolled tiles over `chunks_exact(8)` with a scalar
+    /// tail: fixed in-chunk indices elide every bounds check and give
+    /// the autovectorizer a branch-free 8×f32 (or 8×f64-accumulate)
+    /// body.
+    X8,
+}
+
+impl Lanes {
+    /// Every runtime-selectable width, scalar reference first — the
+    /// iteration order of the bit-identity property tests.
+    pub const ALL: [Lanes; 2] = [Lanes::Scalar, Lanes::X8];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lanes::Scalar => "scalar",
+            Lanes::X8 => "x8",
+        }
+    }
+
+    /// Parse a dispatch name (`GCN_ABFT_KERNEL`, bench flags).
+    pub fn parse(s: &str) -> Option<Lanes> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Lanes::Scalar),
+            "x8" | "vector" => Some(Lanes::X8),
+            _ => None,
+        }
+    }
+}
+
+/// Test/bench override: 0 = none, 1 = scalar, 2 = x8. Process-global
+/// so scoped worker threads inherit the forced width (see module docs).
+static FORCED: AtomicU8 = AtomicU8::new(0);
+/// The environment selection, read once per process.
+static ENV_CHOICE: OnceLock<Lanes> = OnceLock::new();
+
+fn env_choice() -> Lanes {
+    *ENV_CHOICE.get_or_init(|| match std::env::var("GCN_ABFT_KERNEL") {
+        Ok(v) => Lanes::parse(&v).unwrap_or_else(|| {
+            eprintln!("GCN_ABFT_KERNEL={v:?} is not a kernel (scalar, x8); using x8");
+            Lanes::X8
+        }),
+        Err(_) => Lanes::X8,
+    })
+}
+
+/// The lane width every dispatched kernel call uses right now:
+/// [`force`] override first, else the cached `GCN_ABFT_KERNEL`
+/// environment selection, else [`Lanes::X8`].
+#[inline]
+pub fn active() -> Lanes {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => Lanes::Scalar,
+        2 => Lanes::X8,
+        _ => env_choice(),
+    }
+}
+
+/// Force the dispatch for property tests and scalar-vs-vector bench
+/// A/Bs (`None` restores the environment selection). Global: binds
+/// every thread, including scoped band workers. Callers that share a
+/// process (test binaries run tests concurrently) must serialize
+/// around it.
+pub fn force(sel: Option<Lanes>) {
+    FORCED.store(
+        match sel {
+            None => 0,
+            Some(Lanes::Scalar) => 1,
+            Some(Lanes::X8) => 2,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// `out[j] += coeff * src[j]` — the axpy broadcast at the heart of
+/// dense matmul, CSR spmm and banded aggregation. Lanes span output
+/// columns, so every width is bit-identical (module docs).
+#[inline]
+pub fn axpy_f32(out: &mut [f32], coeff: f32, src: &[f32]) {
+    axpy_f32_with(active(), out, coeff, src);
+}
+
+/// Per-lane-width body of [`axpy_f32`]. Kernel-module internal (lint
+/// rule K1): everything else dispatches through [`axpy_f32`].
+#[inline]
+pub fn axpy_f32_with(lanes: Lanes, out: &mut [f32], coeff: f32, src: &[f32]) {
+    debug_assert_eq!(out.len(), src.len());
+    match lanes {
+        Lanes::Scalar => {
+            for (o, &s) in out.iter_mut().zip(src) {
+                *o += coeff * s;
+            }
+        }
+        Lanes::X8 => {
+            let mut o8 = out.chunks_exact_mut(8);
+            let mut s8 = src.chunks_exact(8);
+            for (o, s) in (&mut o8).zip(&mut s8) {
+                o[0] += coeff * s[0];
+                o[1] += coeff * s[1];
+                o[2] += coeff * s[2];
+                o[3] += coeff * s[3];
+                o[4] += coeff * s[4];
+                o[5] += coeff * s[5];
+                o[6] += coeff * s[6];
+                o[7] += coeff * s[7];
+            }
+            for (o, &s) in o8.into_remainder().iter_mut().zip(s8.remainder()) {
+                *o += coeff * s;
+            }
+        }
+    }
+}
+
+/// `acc[j] += coeff * src[j] as f64` — the widening axpy the f64
+/// checksum row (`vecmat_f64`) is built from. Same column-lane layout,
+/// same bit-identity argument; the f32→f64 widening is exact, so the
+/// only rounding is the final f64 fused-nothing multiply-add per
+/// element, identical at every width.
+#[inline]
+pub fn axpy_f32_to_f64(acc: &mut [f64], coeff: f64, src: &[f32]) {
+    axpy_f32_to_f64_with(active(), acc, coeff, src);
+}
+
+/// Per-lane-width body of [`axpy_f32_to_f64`] (kernel-module internal,
+/// lint rule K1).
+#[inline]
+pub fn axpy_f32_to_f64_with(lanes: Lanes, acc: &mut [f64], coeff: f64, src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    match lanes {
+        Lanes::Scalar => {
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a += coeff * s as f64;
+            }
+        }
+        Lanes::X8 => {
+            let mut a8 = acc.chunks_exact_mut(8);
+            let mut s8 = src.chunks_exact(8);
+            for (a, s) in (&mut a8).zip(&mut s8) {
+                a[0] += coeff * s[0] as f64;
+                a[1] += coeff * s[1] as f64;
+                a[2] += coeff * s[2] as f64;
+                a[3] += coeff * s[3] as f64;
+                a[4] += coeff * s[4] as f64;
+                a[5] += coeff * s[5] as f64;
+                a[6] += coeff * s[6] as f64;
+                a[7] += coeff * s[7] as f64;
+            }
+            for (a, &s) in a8.into_remainder().iter_mut().zip(s8.remainder()) {
+                *a += coeff * s as f64;
+            }
+        }
+    }
+}
+
+/// `acc[j] += src[j] as f64` — one row's contribution to the f64
+/// column-sum reduction behind `Dense::col_sums_f64`. Lanes span
+/// columns; each column's row-major accumulation order is untouched,
+/// so every width is bit-identical (and the f32→f64 widening is
+/// exact — no multiply, no extra rounding at all).
+#[inline]
+pub fn col_acc_f64(acc: &mut [f64], src: &[f32]) {
+    col_acc_f64_with(active(), acc, src);
+}
+
+/// Per-lane-width body of [`col_acc_f64`] (kernel-module internal,
+/// lint rule K1).
+#[inline]
+pub fn col_acc_f64_with(lanes: Lanes, acc: &mut [f64], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    match lanes {
+        Lanes::Scalar => {
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a += s as f64;
+            }
+        }
+        Lanes::X8 => {
+            let mut a8 = acc.chunks_exact_mut(8);
+            let mut s8 = src.chunks_exact(8);
+            for (a, s) in (&mut a8).zip(&mut s8) {
+                a[0] += s[0] as f64;
+                a[1] += s[1] as f64;
+                a[2] += s[2] as f64;
+                a[3] += s[3] as f64;
+                a[4] += s[4] as f64;
+                a[5] += s[5] as f64;
+                a[6] += s[6] as f64;
+                a[7] += s[7] as f64;
+            }
+            for (a, &s) in a8.into_remainder().iter_mut().zip(s8.remainder()) {
+                *a += s as f64;
+            }
+        }
+    }
+}
+
+/// Achieved arithmetic intensity (flops per byte of data moved) of an
+/// `m×k · k×n` dense matmul under the kernel's traffic model: every
+/// operand matrix streamed once, the f32 output read and written once
+/// per k-block pass (the axpy accumulates in place). Feeds the
+/// `report bench` kernels area and the `Auto` scheme's decision log —
+/// a *model*, not a hardware counter.
+pub fn matmul_intensity(m: usize, k: usize, n: usize) -> f64 {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let bytes = 4.0 * (m * k + k * n + 2 * m * n) as f64;
+    flops / bytes.max(1.0)
+}
+
+/// Achieved arithmetic intensity of a CSR spmm (`nnz` stored edges
+/// against an `·×cols` dense right-hand side): 2 flops per stored
+/// element per column, against the per-nonzero axpy traffic (4-byte
+/// value + 8-byte column index, then a 4-byte load and 4+4-byte
+/// read-modify-write per output column). Same modelling caveat as
+/// [`matmul_intensity`].
+pub fn spmm_intensity(nnz: usize, cols: usize) -> f64 {
+    let flops = 2.0 * nnz as f64 * cols as f64;
+    let bytes = nnz as f64 * (12.0 + 12.0 * cols as f64);
+    flops / bytes.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+
+    use super::*;
+
+    #[test]
+    fn lanes_parse_and_names_round_trip() {
+        for l in Lanes::ALL {
+            assert_eq!(Lanes::parse(l.name()), Some(l));
+        }
+        assert_eq!(Lanes::parse("X8"), Some(Lanes::X8));
+        assert_eq!(Lanes::parse("vector"), Some(Lanes::X8));
+        assert_eq!(Lanes::parse("avx-512"), None);
+    }
+
+    // Bit-identity across widths on ragged lengths, including the
+    // all-tail (< 8) and exact-multiple cases. The full-op properties
+    // (matmul, spmm, checksums, random shapes) live in
+    // tests/prop_kernels.rs; this pins the primitives in isolation.
+    #[test]
+    fn primitives_bit_identical_across_widths_on_ragged_tails() {
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 37] {
+            let src: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37 - 3.1).sin()).collect();
+            let base_f32: Vec<f32> = (0..len).map(|i| (i as f32 * 1.13).cos()).collect();
+            let base_f64: Vec<f64> = base_f32.iter().map(|&v| v as f64 * 1.000001).collect();
+            let mut ref_f32 = base_f32.clone();
+            axpy_f32_with(Lanes::Scalar, &mut ref_f32, 0.123_456_7, &src);
+            let mut ref_axpy64 = base_f64.clone();
+            axpy_f32_to_f64_with(Lanes::Scalar, &mut ref_axpy64, 0.987_654_3, &src);
+            let mut ref_col64 = base_f64.clone();
+            col_acc_f64_with(Lanes::Scalar, &mut ref_col64, &src);
+            for lanes in Lanes::ALL {
+                let mut out = base_f32.clone();
+                axpy_f32_with(lanes, &mut out, 0.123_456_7, &src);
+                let same = out
+                    .iter()
+                    .zip(&ref_f32)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "axpy_f32 {lanes:?} diverged at len {len}");
+                let mut acc = base_f64.clone();
+                axpy_f32_to_f64_with(lanes, &mut acc, 0.987_654_3, &src);
+                let same = acc
+                    .iter()
+                    .zip(&ref_axpy64)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "axpy_f32_to_f64 {lanes:?} diverged at len {len}");
+                let mut acc = base_f64.clone();
+                col_acc_f64_with(lanes, &mut acc, &src);
+                let same = acc
+                    .iter()
+                    .zip(&ref_col64)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "col_acc_f64 {lanes:?} diverged at len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_models_are_finite_and_ordered() {
+        // Dense matmul reuses operands k-fold; spmm streams — the model
+        // must reflect that (matmul well above the spmm ~1/6 ceiling).
+        let mm = matmul_intensity(512, 512, 512);
+        let sp = spmm_intensity(10_000, 64);
+        assert!(mm.is_finite() && sp.is_finite());
+        assert!(mm > sp, "matmul intensity {mm} ≤ spmm {sp}");
+        assert!(sp < 0.2, "spmm streams: intensity should be < 0.2, got {sp}");
+    }
+}

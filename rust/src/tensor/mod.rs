@@ -5,6 +5,7 @@
 pub mod dense;
 pub mod dense64;
 pub mod instrumented;
+pub mod kernels;
 pub mod ops;
 
 pub use dense::Dense;

@@ -4,6 +4,7 @@
 //! [`crate::tensor::instrumented`].
 
 use super::dense::Dense;
+use super::kernels;
 use crate::util::parallel::par_row_chunks_mut;
 
 /// Rows of B (each `n` f32 wide) kept hot per k-block. 128 rows × up to
@@ -52,10 +53,7 @@ pub fn matmul_par(a: &Dense, b: &Dense, threads: usize) -> Dense {
                     if aik == 0.0 {
                         continue;
                     }
-                    let b_row = b.row(kb + kk);
-                    for (o, &bkj) in out_row.iter_mut().zip(b_row) {
-                        *o += aik * bkj;
-                    }
+                    kernels::axpy_f32(out_row, aik, b.row(kb + kk));
                 }
             }
         }
@@ -156,9 +154,7 @@ pub fn vecmat_f64(v: &[f32], m: &Dense) -> Vec<f32> {
         if vr == 0.0 {
             continue;
         }
-        for (a, &x) in acc.iter_mut().zip(m.row(r)) {
-            *a += vr as f64 * x as f64;
-        }
+        kernels::axpy_f32_to_f64(&mut acc, vr as f64, m.row(r));
     }
     acc.into_iter().map(|x| x as f32).collect()
 }

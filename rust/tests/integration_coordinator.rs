@@ -88,6 +88,26 @@ fn instrumented_backend_serves_and_verifies() {
 }
 
 #[test]
+fn auto_scheme_serves_as_a_concrete_scheme() {
+    // --scheme auto: the coordinator resolves to the measured check-op
+    // argmin before serving; the summary and metrics report the
+    // concrete decision, never "auto", and detection still works.
+    let mut cfg = base_cfg();
+    cfg.scheme = ChecksumScheme::Auto;
+    cfg.inject_every = Some(3);
+    let s = serve_synthetic(&cfg, 24).unwrap();
+    assert_ne!(s.scheme, "auto", "a requested auto must resolve: {s:?}");
+    assert_eq!(s.scheme, s.metrics.scheme);
+    assert!(!s.metrics.kernel.is_empty(), "kernel dispatch recorded");
+    assert!(s.metrics.injected_faults > 0);
+    assert_eq!(
+        s.metrics.checks_fired, s.metrics.injected_faults,
+        "auto must detect exactly like its resolved scheme: {s:?}"
+    );
+    assert_eq!(s.failed, 0, "retries must recover: {s:?}");
+}
+
+#[test]
 fn split_scheme_detects_and_recovers_on_native_backend() {
     // The split baseline is selectable at the API and its four check
     // points drive the same detect→retry→release loop.

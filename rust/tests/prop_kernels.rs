@@ -1,0 +1,237 @@
+//! Per-lane-width bit-identity of the dispatched kernels — the property
+//! that makes vectorization *free* for every other contract in the
+//! tree.
+//!
+//! Two layers of pinning:
+//! * the `*_with` per-lane primitives against the scalar reference on
+//!   random lengths/values (exercised directly, no dispatch involved);
+//! * the full hot-path operations (dense matmul, CSR spmm, the f64
+//!   column-sum reduction, the f64 checksum row) under the *global*
+//!   dispatch override [`kernels::force`] — the exact mechanism CI uses
+//!   via `GCN_ABFT_KERNEL` — on random shapes including ragged tails.
+//!
+//! Plus the detection-side acceptance check: a fault-injection campaign
+//! under `ChecksumScheme::Auto` reports detections identical to the
+//! concrete scheme Auto resolves to — adaptive placement changes where
+//! checks sit on the cost model, never what they catch.
+
+use std::sync::Mutex;
+
+use gcn_abft::fault::{run_campaigns, CampaignConfig, FaultModelKind};
+use gcn_abft::gcn::GcnModel;
+use gcn_abft::graph::DatasetId;
+use gcn_abft::runtime::{ChecksumScheme, InstrumentedEngine};
+use gcn_abft::sparse::Csr;
+use gcn_abft::tensor::{kernels, ops, Dense};
+use gcn_abft::util::proptest::{check, gen_dim, no_shrink, Config};
+use gcn_abft::util::rng::Pcg64;
+
+/// [`kernels::force`] is process-global (it must bind scoped band
+/// workers), so tests that flip it serialize here and always restore
+/// the environment dispatch before releasing the lock.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn rand_vec_f32(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gen_f32_range(-2.0, 2.0)).collect()
+}
+
+fn rand_dense(rng: &mut Pcg64, rows: usize, cols: usize) -> Dense {
+    Dense::from_vec(rows, cols, rand_vec_f32(rng, rows * cols))
+}
+
+fn rand_csr(rng: &mut Pcg64, rows: usize, cols: usize, density: f64) -> Csr {
+    let mut d = Dense::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.gen_bool(density) {
+                d.set(r, c, rng.gen_f32_range(-1.0, 1.0));
+            }
+        }
+    }
+    Csr::from_dense(&d)
+}
+
+fn bits_f32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits_f64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_primitives_match_scalar_reference_on_random_lengths() {
+    check(
+        &Config {
+            cases: 64,
+            seed: 0x5EED_14E5,
+            ..Default::default()
+        },
+        |rng: &mut Pcg64| {
+            // Bias toward ragged tails around the 8-lane boundary.
+            let len = match rng.gen_index(4) {
+                0 => rng.gen_index(8),
+                1 => 8 + rng.gen_index(8),
+                _ => rng.gen_index(200),
+            };
+            let src = rand_vec_f32(rng, len);
+            let base = rand_vec_f32(rng, len);
+            let coeff = rng.gen_f32_range(-3.0, 3.0);
+            (src, base, coeff)
+        },
+        |(src, base, coeff)| {
+            let base_f64: Vec<f64> = base.iter().map(|&v| v as f64 * 1.0000001).collect();
+            let mut ref_axpy = base.clone();
+            kernels::axpy_f32_with(kernels::Lanes::Scalar, &mut ref_axpy, *coeff, src);
+            let mut ref_wide = base_f64.clone();
+            kernels::axpy_f32_to_f64_with(kernels::Lanes::Scalar, &mut ref_wide, *coeff as f64, src);
+            let mut ref_col = base_f64.clone();
+            kernels::col_acc_f64_with(kernels::Lanes::Scalar, &mut ref_col, src);
+            for lanes in kernels::Lanes::ALL {
+                let mut out = base.clone();
+                kernels::axpy_f32_with(lanes, &mut out, *coeff, src);
+                if bits_f32(&out) != bits_f32(&ref_axpy) {
+                    return Err(format!("axpy_f32 {lanes:?} diverged at len {}", src.len()));
+                }
+                let mut acc = base_f64.clone();
+                kernels::axpy_f32_to_f64_with(lanes, &mut acc, *coeff as f64, src);
+                if bits_f64(&acc) != bits_f64(&ref_wide) {
+                    return Err(format!(
+                        "axpy_f32_to_f64 {lanes:?} diverged at len {}",
+                        src.len()
+                    ));
+                }
+                let mut acc = base_f64.clone();
+                kernels::col_acc_f64_with(lanes, &mut acc, src);
+                if bits_f64(&acc) != bits_f64(&ref_col) {
+                    return Err(format!("col_acc_f64 {lanes:?} diverged at len {}", src.len()));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_full_ops_bit_identical_under_every_forced_dispatch() {
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    check(
+        &Config {
+            cases: 24,
+            seed: 0x5EED_14E6,
+            ..Default::default()
+        },
+        |rng: &mut Pcg64| {
+            let m = gen_dim(rng, 40);
+            let k = gen_dim(rng, 40);
+            let n = gen_dim(rng, 40);
+            let a = rand_dense(rng, m, k);
+            let b = rand_dense(rng, k, n);
+            let s = rand_csr(rng, m, m, 0.15);
+            let v = rand_vec_f32(rng, k);
+            let threads = 1 + rng.gen_index(3);
+            (a, b, s, v, threads)
+        },
+        |(a, b, s, v, threads)| {
+            // Scalar dispatch is the reference for every full op.
+            kernels::force(Some(kernels::Lanes::Scalar));
+            let mm_ref = ops::matmul_par(a, b, *threads);
+            let sp_ref = s.spmm_par(a, *threads);
+            let col_ref = a.col_sums_f64();
+            let vm_ref = ops::vecmat_f64(v, b);
+            for lanes in kernels::Lanes::ALL {
+                kernels::force(Some(lanes));
+                let mm = ops::matmul_par(a, b, *threads);
+                if bits_f32(mm.data()) != bits_f32(mm_ref.data()) {
+                    kernels::force(None);
+                    return Err(format!("matmul_par diverged under {lanes:?}"));
+                }
+                let sp = s.spmm_par(a, *threads);
+                if bits_f32(sp.data()) != bits_f32(sp_ref.data()) {
+                    kernels::force(None);
+                    return Err(format!("spmm_par diverged under {lanes:?}"));
+                }
+                let col = a.col_sums_f64();
+                if bits_f64(&col) != bits_f64(&col_ref) {
+                    kernels::force(None);
+                    return Err(format!("col_sums_f64 diverged under {lanes:?}"));
+                }
+                let vm = ops::vecmat_f64(v, b);
+                if bits_f32(&vm) != bits_f32(&vm_ref) {
+                    kernels::force(None);
+                    return Err(format!("vecmat_f64 diverged under {lanes:?}"));
+                }
+            }
+            kernels::force(None);
+            Ok(())
+        },
+        no_shrink,
+    );
+    kernels::force(None);
+}
+
+fn campaign_cfg(scheme: ChecksumScheme) -> CampaignConfig {
+    CampaignConfig {
+        scheme,
+        fault_model: FaultModelKind::BitFlip,
+        campaigns: 120,
+        faults_per_campaign: 1,
+        seed: 0xA070_14E5,
+        threads: 1,
+        band_workers: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn auto_scheme_campaign_detections_match_the_resolved_scheme() {
+    let g = DatasetId::Tiny.build(3);
+    let m = GcnModel::two_layer(&g, 8, 3);
+    let engine = InstrumentedEngine::from_model(&m, &g.features);
+
+    let fused = run_campaigns(&engine, &campaign_cfg(ChecksumScheme::Fused));
+    let split = run_campaigns(&engine, &campaign_cfg(ChecksumScheme::Split));
+    let auto = run_campaigns(&engine, &campaign_cfg(ChecksumScheme::Auto));
+
+    // Auto resolves on the engine's own timeline accounting: the scheme
+    // with the shorter checked timeline (= lower check-op cost).
+    let resolved = if split.timeline_ops < fused.timeline_ops {
+        &split
+    } else {
+        &fused
+    };
+    assert_eq!(
+        auto.timeline_ops, resolved.timeline_ops,
+        "auto must sample faults from the resolved scheme's timeline"
+    );
+    // Same seed + same timeline → the identical fault plan hits the
+    // identical execution: detection is unchanged tally for tally.
+    assert_eq!(auto.per_threshold, resolved.per_threshold);
+    assert_eq!(auto.critical, resolved.critical);
+    assert_eq!(auto.class_critical, resolved.class_critical);
+    assert_eq!(auto.data_faults, resolved.data_faults);
+    assert_eq!(auto.checksum_faults, resolved.checksum_faults);
+    // And the decision is the cost argmin, not a coin flip.
+    assert!(resolved.timeline_ops <= fused.timeline_ops.min(split.timeline_ops));
+}
+
+#[test]
+fn forced_dispatch_does_not_change_campaign_detections() {
+    // The instrumented engine stays scalar by design (its MAC-hook op
+    // timeline is the product), but it *consumes* kernel outputs via
+    // its operands' checksum state; a forced width must leave every
+    // detection tally untouched.
+    let _guard = FORCE_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let g = DatasetId::Tiny.build(5);
+    let m = GcnModel::two_layer(&g, 8, 5);
+    let engine = InstrumentedEngine::from_model(&m, &g.features);
+    kernels::force(Some(kernels::Lanes::Scalar));
+    let scalar = run_campaigns(&engine, &campaign_cfg(ChecksumScheme::Auto));
+    kernels::force(Some(kernels::Lanes::X8));
+    let x8 = run_campaigns(&engine, &campaign_cfg(ChecksumScheme::Auto));
+    kernels::force(None);
+    assert_eq!(scalar.per_threshold, x8.per_threshold);
+    assert_eq!(scalar.timeline_ops, x8.timeline_ops);
+    assert_eq!(scalar.critical, x8.critical);
+}
